@@ -1,0 +1,96 @@
+//! §Discussion (c) extension: automatic switching from FS (strong early
+//! progress from approximate global views) to SQM (second-order
+//! convergence near the optimum). Compares pure FS, pure SQM and the
+//! auto-switching driver on the same cluster and prints where the
+//! switch paid off.
+//!
+//! ```bash
+//! cargo run --release --example autoswitch
+//! ```
+
+use psgd::algo::autoswitch::{AutoSwitchConfig, AutoSwitchDriver};
+use psgd::algo::fs::{FsConfig, FsDriver};
+use psgd::algo::sqm::{SqmConfig, SqmDriver};
+use psgd::algo::{Driver, StopRule};
+use psgd::bench::plot::AsciiPlot;
+use psgd::cluster::{Cluster, CostModel};
+use psgd::data::partition::Partition;
+use psgd::data::synth::SynthConfig;
+use psgd::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let nodes = args.usize("nodes", 8);
+    let iters = args.usize("iters", 50);
+    let data = SynthConfig {
+        n_examples: args.usize("examples", 20_000),
+        n_features: args.usize("features", 5_000),
+        nnz_per_example: 12,
+        ..SynthConfig::default()
+    }
+    .generate(42);
+    let lam = 1e-5 * data.n_examples() as f64;
+    let part = Partition::shuffled(data.n_examples(), nodes, 3);
+    let make = || Cluster::partition_with(data.clone(), &part, CostModel::default());
+
+    // high-accuracy reference
+    let mut ref_cluster = Cluster::partition(data.clone(), 1, CostModel::free());
+    let mut rcfg = SqmConfig { lam, ..Default::default() };
+    rcfg.tron.eps = 1e-12;
+    let fstar = SqmDriver::new(rcfg)
+        .run(&mut ref_cluster, None, &StopRule::iters(300))
+        .f;
+
+    let stop = StopRule::iters(iters);
+    let mut traces = Vec::new();
+    {
+        let mut c = make();
+        let run = FsDriver::new(FsConfig { lam, epochs: 2, ..Default::default() })
+            .run(&mut c, None, &stop);
+        traces.push(run.trace);
+    }
+    {
+        let mut c = make();
+        let run = SqmDriver::new(SqmConfig { lam, ..Default::default() })
+            .run(&mut c, None, &stop);
+        traces.push(run.trace);
+    }
+    {
+        let mut c = make();
+        let mut cfg = AutoSwitchConfig::default();
+        cfg.fs = FsConfig { lam, epochs: 2, ..Default::default() };
+        cfg.switch_gnorm = args.f64("switch-gnorm", 3e-2);
+        let run = AutoSwitchDriver::new(cfg).run(&mut c, None, &stop);
+        traces.push(run.trace);
+    }
+
+    println!("f* = {fstar:.8e}\n");
+    println!("method      final-gap    passes   sim-seconds");
+    for t in &traces {
+        let last = t.points.last().unwrap();
+        println!(
+            "{:<11} {:10.3e} {:9} {:10.2}",
+            t.label,
+            (last.f - fstar) / fstar,
+            last.comm_passes,
+            last.seconds
+        );
+    }
+    let series: Vec<(String, Vec<(f64, f64)>)> = traces
+        .iter()
+        .map(|t| {
+            (
+                t.label.clone(),
+                t.points
+                    .iter()
+                    .map(|p| (p.comm_passes, (p.f - fstar) / fstar))
+                    .filter(|&(_, g)| g > 0.0)
+                    .collect(),
+            )
+        })
+        .collect();
+    println!(
+        "\n{}",
+        AsciiPlot::default().render("(f - f*)/f* vs communication passes", &series)
+    );
+}

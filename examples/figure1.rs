@@ -1,0 +1,79 @@
+//! Figure-1 reproduction driver: FS-s vs SQM vs Hybrid on
+//! kdd2010-shaped data, emitting all three panels (gap vs comm passes,
+//! gap vs simulated time, AUPRC vs time) for a node count, as CSV files
+//! plus terminal ASCII plots.
+//!
+//! ```bash
+//! cargo run --release --example figure1 -- --nodes 25
+//! cargo run --release --example figure1 -- --nodes 100 --full  # repro scale
+//! ```
+
+use psgd::bench::figure1::{self, Figure1Config, Panel};
+use psgd::bench::plot::AsciiPlot;
+use psgd::util::cli::Args;
+use psgd::util::csv::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let nodes = args.usize("nodes", 25);
+    let mut cfg = if args.bool("full", false) {
+        Figure1Config::full(nodes)
+    } else {
+        Figure1Config::small(nodes)
+    };
+    cfg.examples = args.usize("examples", cfg.examples);
+    cfg.features = args.usize("features", cfg.features);
+    cfg.iters = args.usize("iters", cfg.iters);
+    cfg.seed = args.usize("seed", 42) as u64;
+    let out_dir = args.get_or("out-dir", "results").to_string();
+
+    eprintln!("figure1: {cfg:?}");
+    let t0 = std::time::Instant::now();
+    let out = figure1::run(&cfg);
+    eprintln!(
+        "completed in {:.1}s wall ({})",
+        t0.elapsed().as_secs_f64(),
+        out.config_label
+    );
+    println!("f* = {:.8e}", out.f_star);
+
+    // CSV per method
+    for trace in &out.traces {
+        let path = format!("{out_dir}/fig1_{nodes}nodes_{}.csv", trace.label);
+        trace.to_table(out.f_star).save(&path).expect("write csv");
+        println!("wrote {path}");
+    }
+    // combined per-panel CSV (label, x, y) for external plotting
+    for (panel, name) in [
+        (Panel::GapVsPasses, "gap_vs_passes"),
+        (Panel::GapVsTime, "gap_vs_time"),
+        (Panel::AuprcVsTime, "auprc_vs_time"),
+    ] {
+        let mut t = Table::new(&["series", "x", "y"]);
+        for (si, trace) in out.traces.iter().enumerate() {
+            for (x, y) in panel.series(trace, out.f_star) {
+                t.push(vec![si as f64, x, y]);
+            }
+        }
+        let path = format!("{out_dir}/fig1_{nodes}nodes_{name}.csv");
+        t.save(&path).expect("write panel csv");
+        println!("wrote {path}  (series ids: {:?})",
+            out.traces.iter().map(|t| t.label.clone()).collect::<Vec<_>>());
+    }
+
+    // terminal panels
+    for panel in [Panel::GapVsPasses, Panel::GapVsTime, Panel::AuprcVsTime] {
+        let series: Vec<(String, Vec<(f64, f64)>)> = out
+            .traces
+            .iter()
+            .map(|t| (t.label.clone(), panel.series(t, out.f_star)))
+            .collect();
+        let plot = AsciiPlot { log_y: panel.log_y(), ..Default::default() };
+        println!(
+            "\n=== {} — {} ===\n{}",
+            panel.title(),
+            out.config_label,
+            plot.render(panel.title(), &series)
+        );
+    }
+}

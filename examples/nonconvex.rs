@@ -1,0 +1,209 @@
+//! §Discussion (a) extension: non-convex point losses. The paper notes
+//! that replacing L_p by a convex approximation keeps convergence
+//! provable, and that *practically* one can run the non-convex f̂_p
+//! directly as long as the inner optimization is stopped early enough
+//! that d_p stays a descent direction.
+//!
+//! This example uses the sigmoid-like smoothed ramp loss
+//! l(z, y) = 1/(1 + e^{yz}) (bounded, non-convex) and shows:
+//! (1) FS-style outer iterations with early-stopped inner solves still
+//!     monotonically decrease the (non-convex) objective — the line
+//!     search + safeguard make that unconditional;
+//! (2) warm-started from a few convex (logistic) FS iterations — the
+//!     practical recipe — the ramp refinement keeps/improves AUPRC
+//!     while shrinking the bounded non-convex risk.
+//!
+//! The non-convex loss lives here (not in `loss::LossKind`) exactly
+//! because the core library's convex drivers must not accept it.
+//!
+//! ```bash
+//! cargo run --release --example nonconvex
+//! ```
+
+use psgd::cluster::{Cluster, CostModel};
+use psgd::data::synth::SynthConfig;
+use psgd::linalg::dense;
+use psgd::metrics::auprc::auprc;
+use psgd::opt::linesearch::{strong_wolfe, WolfeParams};
+use psgd::util::cli::Args;
+use psgd::util::rng::Rng;
+
+/// smoothed ramp (sigmoid) loss: l = σ(−yz), l' = −y σ(−yz)(1−σ(−yz))
+fn sig(t: f64) -> f64 {
+    if t >= 0.0 {
+        1.0 / (1.0 + (-t).exp())
+    } else {
+        let e = t.exp();
+        e / (1.0 + e)
+    }
+}
+
+fn loss_val(z: f64, y: f64) -> f64 {
+    sig(-y * z)
+}
+
+fn loss_deriv(z: f64, y: f64) -> f64 {
+    let s = sig(-y * z);
+    -y * s * (1.0 - s)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let nodes = args.usize("nodes", 6);
+    let iters = args.usize("iters", 25);
+    // a *noisy* problem where the bounded ramp loss shines (outliers)
+    let data = SynthConfig {
+        n_examples: 10_000,
+        n_features: 15_000,
+        nnz_per_example: 20,
+        label_noise: 0.10,
+        ..SynthConfig::default()
+    }
+    .generate(11);
+    let (train, test) = data.split(0.9, 5);
+    let lam = 1e-5 * train.n_examples() as f64;
+    let mut cluster = Cluster::partition(train, nodes, CostModel::default());
+    let dim = cluster.dim;
+
+    // objective diagnostics over all shards
+    let f_of = |c: &Cluster, w: &[f64]| -> f64 {
+        let mut v = 0.5 * lam * dense::norm_sq(w);
+        for s in &c.shards {
+            for i in 0..s.x.n_rows() {
+                v += loss_val(s.x.row_dot(i, w), s.y[i]);
+            }
+        }
+        v
+    };
+
+    // warm start: a few convex FS iterations (paper's practical advice:
+    // non-convex f̂_p needs care; a convex head start is the cheap fix)
+    let mut w = {
+        use psgd::algo::fs::{FsConfig, FsDriver};
+        use psgd::algo::{Driver, StopRule};
+        use psgd::loss::LossKind;
+        let run = FsDriver::new(FsConfig {
+            loss: LossKind::Logistic,
+            lam,
+            epochs: 2,
+            ..Default::default()
+        })
+        .run(&mut cluster, Some(&test), &StopRule::iters(12));
+        println!(
+            "warm start: 12 convex FS iters -> f_log {:.4e}, AUPRC {:.4}\n",
+            run.f,
+            run.trace.last().unwrap().auprc
+        );
+        run.w
+    };
+    let mut rng = Rng::new(3);
+    println!("iter        f        ‖g‖       step    AUPRC  safeguarded");
+    for r in 0..iters {
+        // global gradient
+        let mut g = vec![0.0; dim];
+        for s in &cluster.shards {
+            for i in 0..s.x.n_rows() {
+                let rr = loss_deriv(s.x.row_dot(i, &w), s.y[i]);
+                if rr != 0.0 {
+                    s.x.add_row_scaled(i, rr, &mut g);
+                }
+            }
+        }
+        dense::axpy(lam, &w, &mut g);
+        cluster.ledger.comm_passes += 2.0;
+        let gnorm = dense::norm(&g);
+
+        // per-node EARLY-STOPPED inner solves on the non-convex f̂_p:
+        // a few plain SGD steps (early stopping is what keeps d_p
+        // descent-ish, per the paper's discussion)
+        let mut dirs: Vec<Vec<f64>> = Vec::new();
+        for (p, s) in cluster.shards.iter().enumerate() {
+            let n_p = s.x.n_rows();
+            // tilt = g − λw − ∇L_p(w)
+            let mut gl = vec![0.0; dim];
+            for i in 0..n_p {
+                let rr = loss_deriv(s.x.row_dot(i, &w), s.y[i]);
+                if rr != 0.0 {
+                    s.x.add_row_scaled(i, rr, &mut gl);
+                }
+            }
+            let tilt: Vec<f64> =
+                (0..dim).map(|j| g[j] - lam * w[j] - gl[j]).collect();
+            let mut wp = w.clone();
+            let mut srng = rng.fork(p as u64 + (r as u64) << 8);
+            let lr = 2.0 / (1.0 + lam);
+            // HALF an epoch: early stopping
+            for _ in 0..(3 * n_p) / 4 {
+                let i = srng.below(n_p);
+                let zi = s.x.row_dot(i, &wp);
+                let rr = loss_deriv(zi, s.y[i]);
+                // dense part (λw + tilt) applied sparsely-ish: cheap
+                // two-term axpy since dim is small here
+                for j in 0..dim {
+                    wp[j] -= lr / n_p as f64 * (lam * wp[j] + tilt[j]);
+                }
+                if rr != 0.0 {
+                    s.x.add_row_scaled(i, -lr * rr, &mut wp);
+                }
+            }
+            dirs.push(dense::sub(&wp, &w));
+        }
+        // safeguard (step 6) — essential in the non-convex case
+        let mut safeguarded = 0;
+        for dp in dirs.iter_mut() {
+            if dense::dot(dp, &g) >= 0.0 {
+                dp.iter_mut().zip(&g).for_each(|(v, gj)| *v = -gj);
+                safeguarded += 1;
+            }
+        }
+        let mut dir = vec![0.0; dim];
+        for dp in &dirs {
+            dense::axpy(1.0 / dirs.len() as f64, dp, &mut dir);
+        }
+        cluster.ledger.comm_passes += 2.0;
+
+        // Armijo–Wolfe line search on the true (non-convex) objective
+        let mut z: Vec<Vec<f64>> = Vec::new();
+        let mut dz: Vec<Vec<f64>> = Vec::new();
+        for s in &cluster.shards {
+            let mut a = vec![0.0; s.x.n_rows()];
+            let mut b = vec![0.0; s.x.n_rows()];
+            s.x.matvec(&w, &mut a);
+            s.x.matvec(&dir, &mut b);
+            z.push(a);
+            dz.push(b);
+        }
+        let wd = dense::dot(&w, &dir);
+        let dd = dense::norm_sq(&dir);
+        let ww = dense::norm_sq(&w);
+        let phi = |t: f64| {
+            let mut v = 0.5 * lam * (ww + 2.0 * t * wd + t * t * dd);
+            let mut dv = lam * (wd + t * dd);
+            for (s, (zs, dzs)) in cluster.shards.iter().zip(z.iter().zip(&dz)) {
+                for i in 0..s.x.n_rows() {
+                    let zt = zs[i] + t * dzs[i];
+                    v += loss_val(zt, s.y[i]);
+                    dv += dzs[i] * loss_deriv(zt, s.y[i]);
+                }
+            }
+            (v, dv)
+        };
+        let t = strong_wolfe(phi, &WolfeParams::default())
+            .map(|r| r.t)
+            .unwrap_or(0.0);
+        dense::axpy(t, &dir, &mut w);
+
+        // test AUPRC
+        let mut scores = vec![0.0; test.n_examples()];
+        test.x.matvec(&w, &mut scores);
+        let a = auprc(&scores, &test.y);
+        println!(
+            "{r:4} {:10.4e} {gnorm:9.3e} {t:9.4} {a:8.4} {safeguarded:6}",
+            f_of(&cluster, &w)
+        );
+    }
+    println!(
+        "\nnon-convex ramp loss trained by FS-style outer iterations; \
+         monotone descent held via Armijo–Wolfe + safeguard."
+    );
+}

@@ -1,0 +1,33 @@
+"""Layer-1 Pallas kernels for the parallel-SGD dense hot path.
+
+Each kernel is written for TPU-shaped execution (VMEM tiles feeding the
+MXU via BlockSpec) but lowered with ``interpret=True`` so the CPU PJRT
+client can execute the resulting HLO (see DESIGN.md §8).
+
+Public API (all shapes are padded internally to block multiples):
+
+- :func:`margins` — z = X @ w, the per-example margin tile-matvec.
+- :func:`xt_r` — g = Xᵀ r, the gradient scatter-accumulate.
+- :func:`dloss` — elementwise point-loss derivative r_i = l'(z_i, y_i).
+- :func:`vr_residual` — fused variance-reduced residual
+  r_i = l'(z_i, y_i) − l'(z0_i, y_i) used by the SVRG inner step.
+- :func:`loss_grad_fused` — single-pass (Σ l, Xᵀ l') given margins —
+  the §Perf replacement for the point_loss + dloss + xt_r chain.
+"""
+
+from .margins import margins
+from .xtr import xt_r
+from .dloss import dloss, vr_residual, point_loss, LOSSES
+from .fused import loss_grad_fused
+from .margins_multi import margins_multi
+
+__all__ = [
+    "margins",
+    "xt_r",
+    "dloss",
+    "vr_residual",
+    "point_loss",
+    "LOSSES",
+    "loss_grad_fused",
+    "margins_multi",
+]

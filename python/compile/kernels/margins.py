@@ -1,0 +1,74 @@
+"""Tiled margin kernel: z = X @ w.
+
+TPU mapping (DESIGN.md §8): the example-tile × feature-tile product is
+the MXU workload. The grid walks (example blocks, feature blocks); each
+step loads an (BN, BD) tile of X and a (BD, 1) slice of w into VMEM and
+accumulates into the (BN, 1) output block. The feature axis is the
+reduction axis, so the output BlockSpec maps every j to the same block
+and we zero it on j == 0 — the canonical Pallas reduction idiom.
+
+Block defaults are MXU-native (128) on the example axis and 512 on the
+feature (lane-reduction) axis; both are clamped and the inputs padded so
+any shape works.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile: 128×512 f32 = 256 KiB for X, well under the
+# ~16 MiB VMEM budget even with double-buffering.
+BLOCK_N = 128
+BLOCK_D = 512
+
+
+def _margins_kernel(x_ref, w_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BN, BD) @ (BD, 1): MXU matmul, accumulating at (at least) f32.
+    acc = jnp.promote_types(o_ref.dtype, jnp.float32)
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=acc
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(a, axis, mult):
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d"))
+def margins(x, w, *, block_n: int = BLOCK_N, block_d: int = BLOCK_D):
+    """Compute z = X @ w for X: (n, d), w: (d,) → z: (n,).
+
+    Pads to block multiples, runs the Pallas tile-matvec, slices back.
+    """
+    n, d = x.shape
+    bn = min(block_n, max(n, 1))
+    bd = min(block_d, max(d, 1))
+    xp = _pad_to(_pad_to(x, 0, bn), 1, bd)
+    wp = _pad_to(w.reshape(-1, 1), 0, bd)
+    np_, dp = xp.shape
+    out = pl.pallas_call(
+        _margins_kernel,
+        grid=(np_ // bn, dp // bd),
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 1), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:n, 0]

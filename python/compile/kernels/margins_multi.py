@@ -1,0 +1,69 @@
+"""Multi-RHS margin kernel: Z = X @ W for W = [w₁ … w_k].
+
+The §Perf L1 finding (see ``compile.vmem``): a linear model's hot spot
+is a mat*vec* — arithmetic intensity ~2 flops/byte, so the kernel is
+HBM-bandwidth-bound and MXU utilization is structurally irrelevant. The
+lever that *does* matter is streaming X fewer times. The SVRG inner
+step needs margins against both the iterate w and the anchor w₀ on the
+same minibatch; the line search needs X·w and X·d on the same shard.
+Computing them as one X @ [w₁, w₂] halves the dominant X traffic and
+doubles the MXU's (tiny) occupancy for free.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+BLOCK_D = 512
+
+
+def _pad(a, axis, mult):
+    rem = (-a.shape[axis]) % mult
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths)
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.promote_types(o_ref.dtype, jnp.float32)
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=acc
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d"))
+def margins_multi(x, ws, *, block_n: int = BLOCK_N, block_d: int = BLOCK_D):
+    """Z = X @ W for X: (n, d), W: (d, k) → Z: (n, k).
+
+    One HBM pass over X regardless of k (vs k passes of :func:`margins`).
+    """
+    n, d = x.shape
+    k = ws.shape[1]
+    bn = min(block_n, max(n, 1))
+    bd = min(block_d, max(d, 1))
+    xp = _pad(_pad(x, 0, bn), 1, bd)
+    wp = _pad(ws, 0, bd)
+    np_, dp = xp.shape
+    out = pl.pallas_call(
+        _kernel,
+        grid=(np_ // bn, dp // bd),
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, k), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:n, :]

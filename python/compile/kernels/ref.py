@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for every Pallas kernel — the correctness ground truth.
+
+No Pallas, no tiling, no padding: straight dense jnp expressions. The
+pytest suite asserts ``assert_allclose(kernel(...), ref(...))`` over a
+hypothesis sweep of shapes and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def margins_ref(x, w):
+    return x @ w
+
+
+def xt_r_ref(x, r):
+    return x.T @ r
+
+
+def point_loss_ref(z, y, loss: str = "logistic"):
+    if loss == "logistic":
+        return jnp.logaddexp(0.0, -y * z)
+    if loss == "squared_hinge":
+        m = jnp.maximum(0.0, 1.0 - y * z)
+        return m * m
+    if loss == "least_squares":
+        return 0.5 * (z - y) ** 2
+    raise ValueError(loss)
+
+
+def dloss_ref(z, y, loss: str = "logistic"):
+    if loss == "logistic":
+        return -y * jax.scipy.special.expit(-y * z)
+    if loss == "squared_hinge":
+        return -2.0 * y * jnp.maximum(0.0, 1.0 - y * z)
+    if loss == "least_squares":
+        return z - y
+    raise ValueError(loss)
+
+
+def vr_residual_ref(z, z0, y, loss: str = "logistic"):
+    return dloss_ref(z, y, loss) - dloss_ref(z0, y, loss)
+
+
+def shard_loss_grad_ref(w, x, y, loss: str = "logistic"):
+    """Un-regularized shard objective: (Σ l_i, ∇Σ l_i)."""
+    z = x @ w
+    val = point_loss_ref(z, y, loss).sum()
+    grad = x.T @ dloss_ref(z, y, loss)
+    return val, grad
+
+
+def svrg_epoch_ref(w, x, y, tilt, lam, lr, perm, batch, loss="logistic"):
+    """Reference SVRG epoch on the tilted local objective f̂_p.
+
+    f̂_p(w) = (λ/2)‖w‖² + Σ_i l(w·x_i, y_i) + tilt·(w − w_r)
+    Anchor w0 = w at epoch start; μ = ∇f̂_p(w0). For each minibatch B
+    (rows perm[k·b : (k+1)·b]):
+
+        g = (n/|B|) Σ_B [∇l_i(w) − ∇l_i(w0)] + μ + λ(w − w0)
+        w ← w − lr·g
+
+    (The λ(w−w0) term keeps the regularizer exact rather than anchored.)
+    Plain python loop — the oracle for both the Pallas-backed L2 scan
+    and the Rust dense SVRG.
+    """
+    n = x.shape[0]
+    w0 = w
+    _, gsum0 = shard_loss_grad_ref(w0, x, y, loss)
+    mu = lam * w0 + gsum0 + tilt
+    nb = n // batch
+    for k in range(nb):
+        idx = perm[k * batch : (k + 1) * batch]
+        xb, yb = x[idx], y[idx]
+        rb = vr_residual_ref(xb @ w, xb @ w0, yb, loss)
+        g = (n / batch) * (xb.T @ rb) + mu + lam * (w - w0)
+        w = w - lr * g
+    return w

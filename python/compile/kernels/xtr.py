@@ -1,0 +1,64 @@
+"""Gradient scatter kernel: g = Xᵀ r.
+
+The transpose-matvec that turns per-example residuals into a feature-
+space gradient. Grid walks (feature blocks, example blocks); the example
+axis is the reduction axis. The (BN, BD) X tile is the same VMEM layout
+the margins kernel uses, so on real TPU both kernels share an HBM→VMEM
+schedule and X streams through once per pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 512
+BLOCK_D = 128
+
+
+def _xtr_kernel(x_ref, r_ref, o_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BD,) += (1, BN) @ (BN, BD): residual row-vector against the tile.
+    acc = jnp.promote_types(o_ref.dtype, jnp.float32)
+    o_ref[...] += jnp.dot(
+        r_ref[...].T, x_ref[...], preferred_element_type=acc
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(a, axis, mult):
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d"))
+def xt_r(x, r, *, block_n: int = BLOCK_N, block_d: int = BLOCK_D):
+    """Compute g = Xᵀ r for X: (n, d), r: (n,) → g: (d,)."""
+    n, d = x.shape
+    bn = min(block_n, max(n, 1))
+    bd = min(block_d, max(d, 1))
+    xp = _pad_to(_pad_to(x, 0, bn), 1, bd)
+    rp = _pad_to(r.reshape(-1, 1), 0, bn)
+    np_, dp = xp.shape
+    out = pl.pallas_call(
+        _xtr_kernel,
+        grid=(dp // bd, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda j, i: (i, j)),
+            pl.BlockSpec((bn, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), x.dtype),
+        interpret=True,
+    )(xp, rp)
+    return out[0, :d]

@@ -1,0 +1,106 @@
+"""Layer-2 JAX compute graph for the parallel-SGD method.
+
+The per-node compute of Algorithm 1, expressed in JAX on top of the
+Layer-1 Pallas kernels (``kernels.*``):
+
+- :func:`shard_loss_grad` — step 1's per-node gradient component
+  (Σ l_i, ∇Σ l_i) over the node's shard; the master adds the λ terms
+  and all-reduces.
+- :func:`svrg_epoch` — step 5's inner solver: one SVRG epoch on the
+  gradient-consistent tilted objective f̂_p, as a ``lax.scan`` over
+  minibatches so XLA fuses the whole epoch into one executable.
+- :func:`predict_margins` — margins for the line-search by-products
+  (z_i = w·x_i, d·x_i) and for AUPRC evaluation.
+- :func:`objective` — full regularized risk for a shard (testing).
+
+Everything here is lowered ONCE by ``aot.py`` to HLO text; Rust executes
+the artifacts via PJRT on the request path. The λ, lr and tilt inputs
+are runtime arguments so a single artifact serves every outer iteration.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (margins, margins_multi, xt_r, dloss, point_loss,
+                      vr_residual, loss_grad_fused)
+
+
+def shard_loss_grad(w, x, y, *, loss: str = "logistic", fused: bool = True):
+    """Un-regularized shard loss and gradient: (Σ l_i, Xᵀ l'(z)).
+
+    The by-product z = X·w (paper step 1) is returned too so the caller
+    can reuse it for the line search. ``fused=True`` (default, §Perf)
+    computes loss+gradient in one Pallas pass; ``fused=False`` keeps the
+    original three-kernel chain (the tests assert both agree).
+    """
+    z = margins(x, w)
+    if fused:
+        val, grad = loss_grad_fused(x, z, y, loss=loss)
+        return val, grad, z
+    val = jnp.sum(point_loss(z, y, loss=loss))
+    r = dloss(z, y, loss=loss)
+    grad = xt_r(x, r)
+    return val, grad, z
+
+
+def objective(w, x, y, lam, *, loss: str = "logistic"):
+    """Full regularized risk over one shard: (λ/2)‖w‖² + Σ l_i."""
+    val, _, _ = shard_loss_grad(w, x, y, loss=loss)
+    return 0.5 * lam * jnp.vdot(w, w) + val
+
+
+def tilted_grad(w, x, y, w_r, g_r, lam, *, loss: str = "logistic"):
+    """∇f̂_p(w) for the gradient-consistent local approximation (eq. 2).
+
+    tilt = g_r − λ w_r − ∇L_p(w_r);  ∇f̂_p(w) = λw + ∇L_p(w) + tilt.
+    By construction ∇f̂_p(w_r) = g_r exactly — asserted in the tests.
+    """
+    _, gl_r, _ = shard_loss_grad(w_r, x, y, loss=loss)
+    tilt = g_r - lam * w_r - gl_r
+    _, gl, _ = shard_loss_grad(w, x, y, loss=loss)
+    return lam * w + gl + tilt
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "loss"))
+def svrg_epoch(w, x, y, tilt, lam, lr, perm, *, batch: int, loss: str = "logistic"):
+    """One SVRG epoch on f̂_p(w) = (λ/2)‖w‖² + Σ l_i + tilt·(w − w_r).
+
+    Anchor w0 = entry w; μ = ∇f̂_p(w0) (the full tilted gradient — the
+    expensive pass SVRG amortizes). The epoch scans ⌊n/batch⌋
+    minibatches in the order given by ``perm`` (supplied by the caller,
+    reshuffled per epoch on the Rust side), each step applying the
+    variance-reduced update
+
+        g = (n/b)·X_Bᵀ[l'(z_B(w)) − l'(z_B(w0))] + μ + λ(w − w0)
+        w ← w − lr·g
+
+    Matches ``ref.svrg_epoch_ref`` bit-for-bit in f64 and to allclose
+    tolerance in f32.
+    """
+    n = x.shape[0]
+    nb = n // batch
+    w0 = w
+    _, gsum0, _ = shard_loss_grad(w0, x, y, loss=loss)
+    mu = lam * w0 + gsum0 + tilt
+    scale = jnp.asarray(n / batch, dtype=w.dtype)
+
+    idx_blocks = perm[: nb * batch].reshape(nb, batch)
+
+    def step(wc, idx):
+        xb = jnp.take(x, idx, axis=0)
+        yb = jnp.take(y, idx, axis=0)
+        # one X_B stream for both margins (§Perf: bandwidth-bound kernel)
+        zz = margins_multi(xb, jnp.stack([wc, w0], axis=1))
+        rb = vr_residual(zz[:, 0], zz[:, 1], yb, loss=loss)
+        g = scale * xt_r(xb, rb) + mu + lam * (wc - w0)
+        return wc - lr * g, None
+
+    w_out, _ = jax.lax.scan(step, w, idx_blocks)
+    return w_out
+
+
+def predict_margins(x, w):
+    """z = X·w — line-search by-products and test-set scoring."""
+    return margins(x, w)

@@ -1,0 +1,98 @@
+"""L1 perf analysis: VMEM footprint + MXU utilization estimates.
+
+Pallas under ``interpret=True`` gives CPU-numpy timings only — not a TPU
+proxy — so the L1 performance pass (DESIGN.md §9) optimizes *structure*:
+for each kernel's BlockSpec we bound the VMEM working set (inputs +
+outputs + double-buffering) against the ~16 MiB budget and estimate MXU
+utilization from tile-dimension alignment to the 128×128 systolic array.
+
+Run ``python -m compile.vmem`` to print the table recorded in
+EXPERIMENTS.md §Perf; the pytest suite asserts every production block
+shape fits VMEM and keeps MXU utilization ≥ 50 %.
+"""
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU = 128
+
+
+@dataclass
+class KernelSpec:
+    name: str
+    # list of (rows, cols, dtype_bytes) VMEM-resident blocks per grid step
+    blocks: list
+    # (m, k, n) of the per-step matmul fed to the MXU; None = VPU-only
+    matmul: tuple | None
+
+
+def vmem_bytes(spec: KernelSpec, double_buffered: bool = True) -> int:
+    total = sum(r * c * b for (r, c, b) in spec.blocks)
+    return total * (2 if double_buffered else 1)
+
+
+def mxu_utilization(spec: KernelSpec) -> float:
+    """Fraction of the 128×128 array's MACs doing useful work per step,
+    taking the contraction dimension's 128-chunking into account."""
+    if spec.matmul is None:
+        return 0.0
+    m, k, n = spec.matmul
+
+    def eff(dim):
+        # a dim of 300 uses ceil(300/128)=3 passes at 300/384 efficiency
+        import math
+
+        passes = math.ceil(dim / MXU)
+        return dim / (passes * MXU)
+
+    return eff(m) * eff(k) * eff(n)
+
+
+def production_specs(
+    bn_margins=128, bd_margins=512, bn_xtr=512, bd_xtr=128, f32=4
+):
+    """The block shapes the shipped kernels use (see kernels/*.py)."""
+    return [
+        KernelSpec(
+            "margins (X@w)",
+            blocks=[(bn_margins, bd_margins, f32), (bd_margins, 1, f32),
+                    (bn_margins, 1, f32)],
+            matmul=(bn_margins, bd_margins, 1),
+        ),
+        KernelSpec(
+            "xt_r (Xᵀr)",
+            blocks=[(bn_xtr, bd_xtr, f32), (bn_xtr, 1, f32),
+                    (1, bd_xtr, f32)],
+            matmul=(1, bn_xtr, bd_xtr),
+        ),
+        KernelSpec(
+            "loss_grad_fused",
+            blocks=[(bn_xtr, bd_xtr, f32)] + [(bn_xtr, 1, f32)] * 3
+            + [(1, 1, f32), (1, bd_xtr, f32)],
+            matmul=(1, bn_xtr, bd_xtr),
+        ),
+        KernelSpec(
+            "dloss/vr_residual (elementwise)",
+            blocks=[(1024, 1, f32)] * 4,
+            matmul=None,
+        ),
+    ]
+
+
+def report(specs=None) -> str:
+    specs = specs or production_specs()
+    lines = [
+        f"{'kernel':<34} {'VMEM (dbl-buf)':>14} {'of 16MiB':>9} {'MXU util':>9}"
+    ]
+    for s in specs:
+        v = vmem_bytes(s)
+        u = mxu_utilization(s)
+        lines.append(
+            f"{s.name:<34} {v / 1024:>11.1f}KiB {v / VMEM_BYTES:>8.2%} "
+            f"{u:>8.1%}" + ("  (VPU)" if s.matmul is None else "")
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

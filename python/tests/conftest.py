@@ -1,0 +1,12 @@
+"""Enable x64 so float64 hypothesis sweeps actually run in f64, and
+make `compile.*` importable whether pytest runs from python/ or the
+repo root."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

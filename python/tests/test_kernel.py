@@ -1,0 +1,214 @@
+"""Pallas kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes (including non-block-multiple, degenerate and
+single-row cases) and dtypes; every kernel must match ``ref.py`` to
+dtype-appropriate tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    margins,
+    xt_r,
+    dloss,
+    point_loss,
+    vr_residual,
+    LOSSES,
+)
+from compile.kernels import ref
+
+DTYPES = [np.float32, np.float64]
+
+
+def _tol(dtype):
+    return dict(rtol=3e-4, atol=3e-4) if dtype == np.float32 else dict(
+        rtol=1e-10, atol=1e-10
+    )
+
+
+def _mat(rng, n, d, dtype):
+    return jnp.asarray(rng.normal(size=(n, d)), dtype=dtype)
+
+
+def _vec(rng, n, dtype, scale=1.0):
+    return jnp.asarray(rng.normal(size=(n,)) * scale, dtype=dtype)
+
+
+def _labels(rng, n, dtype):
+    return jnp.asarray(rng.choice([-1.0, 1.0], size=(n,)), dtype=dtype)
+
+
+shapes = st.tuples(st.integers(1, 400), st.integers(1, 300))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from(DTYPES))
+def test_margins_matches_ref(shape, seed, dtype):
+    n, d = shape
+    rng = np.random.default_rng(seed)
+    x, w = _mat(rng, n, d, dtype), _vec(rng, d, dtype)
+    np.testing.assert_allclose(
+        margins(x, w), ref.margins_ref(x, w), **_tol(dtype)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from(DTYPES))
+def test_xt_r_matches_ref(shape, seed, dtype):
+    n, d = shape
+    rng = np.random.default_rng(seed)
+    x, r = _mat(rng, n, d, dtype), _vec(rng, n, dtype)
+    np.testing.assert_allclose(
+        xt_r(x, r), ref.xt_r_ref(x, r), **_tol(dtype)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 3000), seed=st.integers(0, 2**31 - 1),
+       loss=st.sampled_from(LOSSES), dtype=st.sampled_from(DTYPES))
+def test_dloss_and_point_loss_match_ref(n, seed, loss, dtype):
+    rng = np.random.default_rng(seed)
+    z, y = _vec(rng, n, dtype, scale=3.0), _labels(rng, n, dtype)
+    np.testing.assert_allclose(
+        dloss(z, y, loss=loss), ref.dloss_ref(z, y, loss), **_tol(dtype)
+    )
+    np.testing.assert_allclose(
+        point_loss(z, y, loss=loss), ref.point_loss_ref(z, y, loss),
+        **_tol(dtype),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 2000), seed=st.integers(0, 2**31 - 1),
+       loss=st.sampled_from(LOSSES))
+def test_vr_residual_matches_ref(n, seed, loss):
+    rng = np.random.default_rng(seed)
+    z = _vec(rng, n, np.float32, 3.0)
+    z0 = _vec(rng, n, np.float32, 3.0)
+    y = _labels(rng, n, np.float32)
+    np.testing.assert_allclose(
+        vr_residual(z, z0, y, loss=loss),
+        ref.vr_residual_ref(z, z0, y, loss),
+        rtol=3e-4, atol=3e-4,
+    )
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_dloss_is_derivative_of_point_loss(loss):
+    """Finite-difference check that l' really is dl/dz."""
+    rng = np.random.default_rng(7)
+    z = _vec(rng, 200, np.float64, 2.0)
+    y = _labels(rng, 200, np.float64)
+    eps = 1e-6
+    fd = (
+        np.asarray(ref.point_loss_ref(z + eps, y, loss))
+        - np.asarray(ref.point_loss_ref(z - eps, y, loss))
+    ) / (2 * eps)
+    np.testing.assert_allclose(
+        np.asarray(dloss(z, y, loss=loss)), fd, rtol=1e-4, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize(
+    "block_n,block_d", [(8, 8), (32, 16), (128, 512), (256, 64)]
+)
+def test_margins_block_shape_invariance(block_n, block_d):
+    """Tiling must never change the numbers — only the schedule."""
+    rng = np.random.default_rng(3)
+    x, w = _mat(rng, 257, 129, np.float32), _vec(rng, 129, np.float32)
+    base = ref.margins_ref(x, w)
+    np.testing.assert_allclose(
+        margins(x, w, block_n=block_n, block_d=block_d),
+        base, rtol=3e-4, atol=3e-4,
+    )
+
+
+@pytest.mark.parametrize(
+    "block_n,block_d", [(8, 8), (64, 32), (512, 128)]
+)
+def test_xtr_block_shape_invariance(block_n, block_d):
+    rng = np.random.default_rng(4)
+    x, r = _mat(rng, 201, 77, np.float32), _vec(rng, 201, np.float32)
+    np.testing.assert_allclose(
+        xt_r(x, r, block_n=block_n, block_d=block_d),
+        ref.xt_r_ref(x, r), rtol=3e-4, atol=3e-4,
+    )
+
+
+def test_zero_inputs():
+    """All-zero inputs give exactly-zero outputs (padding is inert)."""
+    x = jnp.zeros((5, 7), jnp.float32)
+    w = jnp.zeros((7,), jnp.float32)
+    r = jnp.zeros((5,), jnp.float32)
+    assert np.all(np.asarray(margins(x, w)) == 0)
+    assert np.all(np.asarray(xt_r(x, r)) == 0)
+
+
+def test_squared_hinge_flat_region():
+    """Squared hinge must be exactly 0 (value and grad) when y·z ≥ 1."""
+    z = jnp.asarray([2.0, 5.0, -3.0], jnp.float32)
+    y = jnp.asarray([1.0, 1.0, -1.0], jnp.float32)
+    assert np.all(np.asarray(point_loss(z, y, loss="squared_hinge")) == 0)
+    assert np.all(np.asarray(dloss(z, y, loss="squared_hinge")) == 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1),
+       loss=st.sampled_from(LOSSES))
+def test_fused_loss_grad_matches_chain(shape, seed, loss):
+    """The fused single-pass kernel ≡ point_loss + dloss + xt_r."""
+    from compile.kernels import loss_grad_fused
+
+    n, d = shape
+    rng = np.random.default_rng(seed)
+    x = _mat(rng, n, d, np.float32)
+    w = _vec(rng, d, np.float32, 0.3)
+    y = _labels(rng, n, np.float32)
+    z = ref.margins_ref(x, w)
+    ls, g = loss_grad_fused(x, z, y, loss=loss)
+    np.testing.assert_allclose(
+        ls, np.sum(np.asarray(ref.point_loss_ref(z, y, loss))),
+        rtol=3e-4, atol=3e-4,
+    )
+    np.testing.assert_allclose(
+        g, ref.xt_r_ref(x, ref.dloss_ref(z, y, loss)),
+        rtol=3e-3, atol=3e-3,
+    )
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_model_shard_loss_grad_fused_flag(fused):
+    from compile import model
+
+    rng = np.random.default_rng(5)
+    x = _mat(rng, 120, 40, np.float32)
+    w = _vec(rng, 40, np.float32, 0.2)
+    y = _labels(rng, 120, np.float32)
+    val, grad, z = model.shard_loss_grad(w, x, y, loss="logistic",
+                                         fused=fused)
+    vw, gw = ref.shard_loss_grad_ref(w, x, y, "logistic")
+    np.testing.assert_allclose(val, vw, rtol=3e-4)
+    np.testing.assert_allclose(grad, gw, rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(z, ref.margins_ref(x, w), rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=shapes, k=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_margins_multi_matches_stacked_single(shape, k, seed):
+    from compile.kernels import margins_multi
+
+    n, d = shape
+    rng = np.random.default_rng(seed)
+    x = _mat(rng, n, d, np.float32)
+    ws = jnp.stack([_vec(rng, d, np.float32) for _ in range(k)], axis=1)
+    got = margins_multi(x, ws)
+    assert got.shape == (n, k)
+    for c in range(k):
+        np.testing.assert_allclose(
+            got[:, c], ref.margins_ref(x, ws[:, c]), rtol=3e-4, atol=3e-4
+        )

@@ -1,0 +1,106 @@
+"""L2 model graph: gradients vs jax.grad, SVRG epoch vs oracle,
+gradient consistency of the tilted approximation (the paper's eq. 2)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, LOSSES
+
+
+def _problem(seed, n=64, d=24, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype=dtype)
+    w = jnp.asarray(rng.normal(size=(d,)) * 0.3, dtype=dtype)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=(n,)), dtype=dtype)
+    return x, w, y, rng
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_shard_loss_grad_matches_autodiff(loss):
+    x, w, y, _ = _problem(0, dtype=np.float64)
+
+    def total(w):
+        return jnp.sum(ref.point_loss_ref(x @ w, y, loss))
+
+    val, grad, z = model.shard_loss_grad(w, x, y, loss=loss)
+    np.testing.assert_allclose(val, total(w), rtol=1e-10)
+    np.testing.assert_allclose(grad, jax.grad(total)(w), rtol=1e-8,
+                               atol=1e-10)
+    np.testing.assert_allclose(z, x @ w, rtol=1e-10)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_tilted_gradient_consistency(loss):
+    """∇f̂_p(wʳ) = gʳ exactly — the heart of the method (eq. 2)."""
+    x, w_r, y, rng = _problem(1, dtype=np.float64)
+    g_r = jnp.asarray(rng.normal(size=w_r.shape), dtype=np.float64)
+    lam = 0.05
+    g_hat = model.tilted_grad(w_r, x, y, w_r, g_r, lam, loss=loss)
+    np.testing.assert_allclose(g_hat, g_r, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.sampled_from([32, 64, 96]),
+       batch=st.sampled_from([8, 16, 32]),
+       loss=st.sampled_from(LOSSES))
+def test_svrg_epoch_matches_oracle(seed, n, batch, loss):
+    rng = np.random.default_rng(seed)
+    d = 20
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype=np.float32)
+    w = jnp.asarray(rng.normal(size=(d,)) * 0.2, dtype=np.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=(n,)), dtype=np.float32)
+    tilt = jnp.asarray(rng.normal(size=(d,)) * 0.01, dtype=np.float32)
+    perm = jnp.asarray(rng.permutation(n), dtype=jnp.int32)
+    lam, lr = 0.1, 1e-3
+    got = model.svrg_epoch(
+        w, x, y, tilt, jnp.float32(lam), jnp.float32(lr), perm,
+        batch=batch, loss=loss,
+    )
+    want = ref.svrg_epoch_ref(
+        np.asarray(w), np.asarray(x), np.asarray(y), np.asarray(tilt),
+        lam, lr, np.asarray(perm), batch, loss,
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_svrg_epoch_descends_on_tilted_objective():
+    """One epoch with a sane lr must decrease f̂_p from wʳ (the descent
+    property Algorithm 1 step 6 relies on)."""
+    x, w_r, y, rng = _problem(5, n=128, d=16, dtype=np.float64)
+    lam = 0.1
+    # Global gradient stand-in from a second shard.
+    x2 = jnp.asarray(rng.normal(size=(128, 16)), dtype=np.float64)
+    y2 = jnp.asarray(rng.choice([-1.0, 1.0], size=(128,)), dtype=np.float64)
+    _, gl1, _ = model.shard_loss_grad(w_r, x, y, loss="logistic")
+    _, gl2, _ = model.shard_loss_grad(w_r, x2, y2, loss="logistic")
+    g_r = lam * w_r + gl1 + gl2
+    tilt = g_r - lam * w_r - gl1
+
+    def f_hat(w):
+        base = 0.5 * lam * jnp.vdot(w, w) + jnp.sum(
+            ref.point_loss_ref(x @ w, y, "logistic")
+        )
+        return base + jnp.vdot(tilt, w - w_r)
+
+    perm = jnp.asarray(np.random.default_rng(0).permutation(128),
+                       dtype=jnp.int32)
+    w1 = model.svrg_epoch(
+        w_r, x, y, tilt, jnp.float64(lam), jnp.float64(1e-4), perm,
+        batch=32, loss="logistic",
+    )
+    assert float(f_hat(w1)) < float(f_hat(w_r))
+
+
+def test_objective_value():
+    x, w, y, _ = _problem(9, dtype=np.float64)
+    lam = 0.3
+    got = model.objective(w, x, y, lam, loss="least_squares")
+    want = 0.5 * lam * float(jnp.vdot(w, w)) + float(
+        jnp.sum(ref.point_loss_ref(x @ w, y, "least_squares"))
+    )
+    np.testing.assert_allclose(float(got), want, rtol=1e-12)

@@ -1,0 +1,37 @@
+"""L1 structural perf guards (DESIGN.md §9): every production block
+shape must fit the 16 MiB VMEM budget with double buffering, and the
+analysis must flag the matvec kernels as bandwidth-bound (low MXU
+occupancy is structural, not a bug — see kernels/margins_multi.py)."""
+
+from compile import vmem
+
+
+def test_all_production_kernels_fit_vmem():
+    for spec in vmem.production_specs():
+        v = vmem.vmem_bytes(spec, double_buffered=True)
+        assert v < vmem.VMEM_BYTES * 0.5, f"{spec.name}: {v} bytes"
+
+
+def test_mxu_utilization_reported():
+    specs = vmem.production_specs()
+    utils = {s.name: vmem.mxu_utilization(s) for s in specs}
+    # matvec kernels: tiny but nonzero; elementwise: exactly zero
+    assert utils["dloss/vr_residual (elementwise)"] == 0.0
+    assert 0.0 < utils["margins (X@w)"] < 0.05
+    # aligned tiles reach full efficiency on the contraction dims
+    full = vmem.KernelSpec(
+        "dense128", blocks=[(128, 128, 4)] * 3, matmul=(128, 128, 128)
+    )
+    assert abs(vmem.mxu_utilization(full) - 1.0) < 1e-12
+
+
+def test_misaligned_tiles_lose_efficiency():
+    bad = vmem.KernelSpec(
+        "misaligned", blocks=[(130, 130, 4)], matmul=(130, 130, 130)
+    )
+    u = vmem.mxu_utilization(bad)
+    assert u < 0.2  # 130/256 per dim ≈ 0.51³
+
+def test_report_renders():
+    r = vmem.report()
+    assert "margins" in r and "MXU util" in r

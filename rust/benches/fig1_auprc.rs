@@ -1,0 +1,57 @@
+//! Bench: regenerate Figure 1's RIGHT panels — test AUPRC versus
+//! simulated time, for 25 and 100 nodes. The paper's observation:
+//! FS reaches stable generalization much quicker than SQM/Hybrid.
+
+use psgd::bench::figure1::{self, Figure1Config, Panel};
+use psgd::bench::plot::AsciiPlot;
+
+fn main() {
+    for nodes in [25usize, 100] {
+        let cfg = Figure1Config::small(nodes);
+        let out = figure1::run(&cfg);
+        println!("\n### Figure 1 (right, {} nodes): AUPRC vs time", nodes);
+        println!("[{}]", out.config_label);
+        println!("{:<10} {:>10} {:>8}", "method", "sim_sec", "auprc");
+        for trace in &out.traces {
+            for (x, y) in Panel::AuprcVsTime.series(trace, out.f_star) {
+                if !y.is_nan() {
+                    println!("{:<10} {:>10.3} {:>8.4}", trace.label, x, y);
+                }
+            }
+        }
+        // time for each method to reach 99% of its own final AUPRC —
+        // the "reaches stable generalization quicker" claim, quantified
+        println!("\n{:<10} {:>22}", "method", "sec to 99% final AUPRC");
+        for trace in &out.traces {
+            let series = Panel::AuprcVsTime.series(trace, out.f_star);
+            let last = series
+                .iter()
+                .rev()
+                .find(|(_, a)| !a.is_nan())
+                .map(|&(_, a)| a)
+                .unwrap_or(f64::NAN);
+            let t99 = series
+                .iter()
+                .find(|(_, a)| *a >= 0.99 * last)
+                .map(|&(t, _)| t)
+                .unwrap_or(f64::NAN);
+            println!("{:<10} {:>22.3}", trace.label, t99);
+        }
+        let series: Vec<(String, Vec<(f64, f64)>)> = out
+            .traces
+            .iter()
+            .map(|t| {
+                (
+                    t.label.clone(),
+                    Panel::AuprcVsTime
+                        .series(t, out.f_star)
+                        .into_iter()
+                        .filter(|(_, y)| !y.is_nan())
+                        .collect(),
+                )
+            })
+            .collect();
+        let plot = AsciiPlot { log_y: false, ..Default::default() };
+        println!("{}", plot.render(Panel::AuprcVsTime.title(), &series));
+    }
+}

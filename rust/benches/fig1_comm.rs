@@ -1,0 +1,45 @@
+//! Bench: regenerate Figure 1's LEFT panels — (f − f*)/f* (log scale)
+//! versus number of communication passes, for 25 and 100 nodes.
+//! Prints the series the paper plots; CSV lands in results/.
+
+use psgd::bench::figure1::{self, Figure1Config, Panel};
+use psgd::bench::plot::AsciiPlot;
+
+fn main() {
+    for nodes in [25usize, 100] {
+        let cfg = Figure1Config::small(nodes);
+        let out = figure1::run(&cfg);
+        println!(
+            "\n### Figure 1 (left, {} nodes): gap vs communication passes",
+            nodes
+        );
+        println!("f* = {:.6e}   [{}]", out.f_star, out.config_label);
+        println!("{:<10} {:>8} {:>12}", "method", "passes", "rel_gap");
+        for trace in &out.traces {
+            for (x, y) in Panel::GapVsPasses.series(trace, out.f_star) {
+                println!("{:<10} {:>8.0} {:>12.4e}", trace.label, x, y);
+            }
+            let path =
+                format!("results/bench_fig1_comm_{nodes}n_{}.csv", trace.label);
+            let _ = trace.to_table(out.f_star).save(&path);
+        }
+        let series: Vec<(String, Vec<(f64, f64)>)> = out
+            .traces
+            .iter()
+            .map(|t| {
+                (
+                    t.label.clone(),
+                    Panel::GapVsPasses
+                        .series(t, out.f_star)
+                        .into_iter()
+                        .filter(|&(_, y)| y > 0.0)
+                        .collect(),
+                )
+            })
+            .collect();
+        println!(
+            "{}",
+            AsciiPlot::default().render(Panel::GapVsPasses.title(), &series)
+        );
+    }
+}

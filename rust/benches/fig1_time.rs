@@ -1,0 +1,46 @@
+//! Bench: regenerate Figure 1's MIDDLE panels — (f − f*)/f* (log scale)
+//! versus simulated time, for 25 and 100 nodes. Simulated time =
+//! measured per-node compute (max over concurrent nodes per phase) +
+//! the AllReduce-tree cost model (DESIGN.md §2).
+
+use psgd::bench::figure1::{self, Figure1Config, Panel};
+use psgd::bench::plot::AsciiPlot;
+
+fn main() {
+    for nodes in [25usize, 100] {
+        let cfg = Figure1Config::small(nodes);
+        let out = figure1::run(&cfg);
+        println!(
+            "\n### Figure 1 (middle, {} nodes): gap vs simulated seconds",
+            nodes
+        );
+        println!("f* = {:.6e}   [{}]", out.f_star, out.config_label);
+        println!("{:<10} {:>10} {:>12}", "method", "sim_sec", "rel_gap");
+        for trace in &out.traces {
+            for (x, y) in Panel::GapVsTime.series(trace, out.f_star) {
+                println!("{:<10} {:>10.3} {:>12.4e}", trace.label, x, y);
+            }
+            let path =
+                format!("results/bench_fig1_time_{nodes}n_{}.csv", trace.label);
+            let _ = trace.to_table(out.f_star).save(&path);
+        }
+        let series: Vec<(String, Vec<(f64, f64)>)> = out
+            .traces
+            .iter()
+            .map(|t| {
+                (
+                    t.label.clone(),
+                    Panel::GapVsTime
+                        .series(t, out.f_star)
+                        .into_iter()
+                        .filter(|&(_, y)| y > 0.0)
+                        .collect(),
+                )
+            })
+            .collect();
+        println!(
+            "{}",
+            AsciiPlot::default().render(Panel::GapVsTime.title(), &series)
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Microbenchmarks over the L3 hot-path primitives (in-tree harness,
+//! DESIGN.md §3): sparse matvec / transposed matvec, the lazy SVRG
+//! epoch vs its dense reference, tree reduction, AUPRC, and the dense
+//! vector kernels. These are the §Perf baseline numbers.
+
+use psgd::bench::{run, BenchConfig};
+use psgd::cluster::allreduce::tree_sum;
+use psgd::data::synth::SynthConfig;
+use psgd::linalg::dense;
+use psgd::loss::LossKind;
+use psgd::metrics::auprc::auprc;
+use psgd::objective::{shard_loss_grad, LocalApprox};
+use psgd::opt::svrg::{svrg_epochs, svrg_epochs_dense, SvrgParams};
+use psgd::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let mut results = Vec::new();
+
+    // --- data: one "node shard" at repro scale ---
+    let shard = SynthConfig {
+        n_examples: 8_000,
+        n_features: 100_000,
+        nnz_per_example: 35,
+        ..SynthConfig::default()
+    }
+    .generate(1);
+    let d = shard.n_features();
+    let mut rng = Rng::new(2);
+    let w: Vec<f64> = (0..d).map(|_| rng.normal() * 0.01).collect();
+    let r: Vec<f64> = (0..shard.n_examples()).map(|_| rng.normal()).collect();
+
+    let mut z = vec![0.0; shard.n_examples()];
+    results.push(run("csr_matvec 8k x 100k (280k nnz)", &cfg, || {
+        shard.x.matvec(&w, &mut z);
+        z[0]
+    }));
+    let mut g = vec![0.0; d];
+    results.push(run("csr_tmatvec same", &cfg, || {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        shard.x.tmatvec(&r, &mut g);
+        g[0]
+    }));
+    results.push(run("shard_loss_grad (fused pass)", &cfg, || {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        shard_loss_grad(&shard.x, &shard.y, &w, LossKind::Logistic, &mut g, None)
+    }));
+    // the FS driver's cached-margin gradient pass (§Perf): margins held
+    // from the previous line search, so no X·w matvec
+    let mut zc = vec![0.0; shard.n_examples()];
+    shard.x.matvec(&w, &mut zc);
+    results.push(run("grad pass w/ cached margins", &cfg, || {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        let mut val = 0.0;
+        for i in 0..shard.x.n_rows() {
+            val += LossKind::Logistic.value(zc[i], shard.y[i]);
+            let r = LossKind::Logistic.deriv(zc[i], shard.y[i]);
+            if r != 0.0 {
+                shard.x.add_row_scaled(i, r, &mut g);
+            }
+        }
+        val
+    }));
+
+    // --- SVRG epoch: lazy vs dense reference ---
+    let lam = 1e-5 * shard.n_examples() as f64;
+    let mut grad_lp = vec![0.0; d];
+    shard_loss_grad(
+        &shard.x, &shard.y, &w, LossKind::Logistic, &mut grad_lp, None,
+    );
+    let mut g_r = grad_lp.clone();
+    dense::axpy(lam, &w, &mut g_r);
+    let approx = LocalApprox::new(
+        &shard.x, &shard.y, LossKind::Logistic, lam, &w, &g_r, &grad_lp,
+    );
+    let macro_cfg = BenchConfig::macro_bench();
+    results.push(run("svrg_epoch lazy (per-example, 1 epoch)", &macro_cfg, || {
+        svrg_epochs(&approx, &w, &SvrgParams { epochs: 1, ..Default::default() }).0[0]
+    }));
+    results.push(run("svrg_epoch dense-ref (batch 256)", &macro_cfg, || {
+        svrg_epochs_dense(
+            &approx,
+            &w,
+            &SvrgParams { epochs: 1, batch: 256, ..Default::default() },
+        )
+        .0[0]
+    }));
+
+    // --- reduction + metrics + dense kernels ---
+    let parts: Vec<Vec<f64>> = (0..25)
+        .map(|_| (0..d).map(|_| rng.normal()).collect())
+        .collect();
+    results.push(run("tree_sum 25 nodes x 100k", &cfg, || {
+        tree_sum(&parts)[0]
+    }));
+    let scores: Vec<f64> = (0..100_000).map(|_| rng.normal()).collect();
+    let labels: Vec<f64> = (0..100_000).map(|_| rng.sign()).collect();
+    results.push(run("auprc 100k examples", &cfg, || {
+        auprc(&scores, &labels)
+    }));
+    let a: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    results.push(run("dense dot 100k", &cfg, || dense::dot(&a, &b)));
+    let mut y = b.clone();
+    results.push(run("dense axpy 100k", &cfg, || {
+        dense::axpy(0.5, &a, &mut y);
+        y[0]
+    }));
+
+    println!("\n### micro benches (psgd in-tree harness)");
+    for s in &results {
+        println!("{}", s.report());
+    }
+}

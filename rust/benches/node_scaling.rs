@@ -1,0 +1,71 @@
+//! Node-scaling bench (paper: "When the number of nodes is increased,
+//! SQM and Hybrid come closer to our method"): sweep P and report
+//! passes-to-target for FS-2/FS-8 vs SQM, showing the narrowing gap —
+//! f̂_p approximates f worse as shards shrink.
+
+use psgd::algo::fs::{FsConfig, FsDriver};
+use psgd::algo::sqm::{SqmConfig, SqmDriver};
+use psgd::algo::{Driver, RunResult, StopRule};
+use psgd::cluster::{Cluster, CostModel};
+use psgd::data::partition::Partition;
+use psgd::data::synth::SynthConfig;
+
+fn passes_to(run: &RunResult, target: f64) -> f64 {
+    run.trace
+        .points
+        .iter()
+        .find(|p| p.f <= target)
+        .map(|p| p.comm_passes)
+        .unwrap_or(f64::NAN)
+}
+
+fn main() {
+    let data = SynthConfig {
+        n_examples: 20_000,
+        n_features: 1_000,
+        nnz_per_example: 10,
+        ..SynthConfig::default()
+    }
+    .generate(42);
+    let lam = 1e-5 * data.n_examples() as f64;
+
+    let mut rc = Cluster::partition(data.clone(), 1, CostModel::free());
+    let mut rcfg = SqmConfig { lam, ..Default::default() };
+    rcfg.tron.eps = 1e-12;
+    let fstar = SqmDriver::new(rcfg).run(&mut rc, None, &StopRule::iters(400)).f;
+    let target = fstar * (1.0 + 1e-4);
+
+    println!("### node scaling, target gap 1e-4, λ={lam:.2e}");
+    println!(
+        "{:>5} {:>12} {:>12} {:>12} {:>14}",
+        "P", "fs-2 passes", "fs-8 passes", "sqm passes", "fs8/sqm ratio"
+    );
+    for nodes in [5usize, 10, 25, 50, 100] {
+        let part = Partition::shuffled(data.n_examples(), nodes, 3);
+        let fresh = || Cluster::partition_with(data.clone(), &part, CostModel::free());
+        let fs2 = FsDriver::new(FsConfig { lam, epochs: 2, ..Default::default() })
+            .run(&mut fresh(), None, &StopRule::iters(120).with_target(target));
+        let fs8 = FsDriver::new(FsConfig { lam, epochs: 8, ..Default::default() })
+            .run(&mut fresh(), None, &StopRule::iters(120).with_target(target));
+        let sqm = SqmDriver::new(SqmConfig { lam, ..Default::default() })
+            .run(&mut fresh(), None, &StopRule::iters(120));
+        let (p2, p8, ps) = (
+            passes_to(&fs2, target),
+            passes_to(&fs8, target),
+            passes_to(&sqm, target),
+        );
+        println!(
+            "{:>5} {:>12.0} {:>12.0} {:>12.0} {:>14.3}",
+            nodes,
+            p2,
+            p8,
+            ps,
+            p8 / ps
+        );
+    }
+    println!(
+        "\nreading: SQM's pass count is P-independent (CG structure), \
+         while FS needs more outer iterations as P grows — the gap \
+         narrows, matching the paper's 25- vs 100-node panels."
+    );
+}

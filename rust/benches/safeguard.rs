@@ -1,0 +1,74 @@
+//! Theorem-2 bench: how often does the step-6 safeguard trigger, as a
+//! function of (a) the inner solver's convergence strength (SVRG vs
+//! plain SGD) and (b) the epoch count s? The theory predicts
+//! Prob(∠(−gʳ, d_p) ≥ θ) < γ with s = O(log 1/γ) for strongly
+//! convergent sgd — so SVRG's trigger rate should be ~0 even at s = 1,
+//! while plain SGD (no strong convergence, optimizes the *untilted*
+//! f̃_p) should trip it visibly. Also sweeps θ.
+
+use psgd::algo::fs::{FsConfig, FsDriver, InnerSolver};
+use psgd::algo::safeguard::Safeguard;
+use psgd::algo::{Driver, StopRule};
+use psgd::cluster::{Cluster, CostModel};
+use psgd::data::partition::Partition;
+use psgd::data::synth::SynthConfig;
+
+fn main() {
+    let data = SynthConfig {
+        n_examples: 6_000,
+        n_features: 1_500,
+        nnz_per_example: 10,
+        skew: 1.5, // heterogeneous shards stress the safeguard
+        ..SynthConfig::default()
+    }
+    .generate(42);
+    let lam = 1e-5 * data.n_examples() as f64;
+    let nodes = 12;
+    let part = Partition::contiguous(data.n_examples(), nodes);
+    let iters = 15;
+
+    println!("### safeguard trigger frequency ({nodes} nodes, {iters} iters)");
+    println!(
+        "{:>7} {:>4} {:>10} {:>16} {:>12}",
+        "inner", "s", "θ (deg)", "hits/directions", "final f"
+    );
+    for (inner, name) in
+        [(InnerSolver::Svrg, "svrg"), (InnerSolver::Sgd, "sgd")]
+    {
+        for s in [1usize, 4] {
+            for theta_deg in [89.99f64, 60.0, 30.0] {
+                let mut cluster = Cluster::partition_with(
+                    data.clone(),
+                    &part,
+                    CostModel::free(),
+                );
+                let run = FsDriver::new(FsConfig {
+                    lam,
+                    epochs: s,
+                    inner,
+                    lr: if inner == InnerSolver::Sgd {
+                        Some(0.05)
+                    } else {
+                        None
+                    },
+                    safeguard: Safeguard::from_degrees(theta_deg),
+                    ..Default::default()
+                })
+                .run(&mut cluster, None, &StopRule::iters(iters));
+                let hits: usize =
+                    run.trace.points.iter().map(|p| p.safeguard_hits).sum();
+                let total = nodes * run.trace.points.len().max(1);
+                println!(
+                    "{:>7} {:>4} {:>10.2} {:>9}/{:<6} {:>12.5e}",
+                    name, s, theta_deg, hits, total, run.f
+                );
+            }
+        }
+    }
+    println!(
+        "\nreading: SVRG (strong stochastic convergence, Thm 2) almost \
+         never trips the safeguard; plain SGD on the untilted objective \
+         trips it increasingly as θ tightens — and still converges, \
+         because the safeguard replaces bad directions with −gʳ."
+    );
+}

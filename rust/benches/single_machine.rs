@@ -1,0 +1,154 @@
+//! The introduction's motivating claim: "example-wise methods such as
+//! SGD ... and dual coordinate ascent are much faster than batch
+//! gradient-based methods for reaching weights with sufficient training
+//! optimality". Single machine, one pass-budget axis: epochs (data
+//! passes) to reach a moderate relative gap, for DCA [4], SVRG [3] and
+//! batch TRON / L-BFGS.
+
+use psgd::data::synth::SynthConfig;
+use psgd::linalg::dense;
+use psgd::loss::LossKind;
+use psgd::objective::{shard_loss_grad, LocalApprox, Objective, RegularizedLoss};
+use psgd::opt::dca::{self, DcaParams};
+use psgd::opt::lbfgs::{self, LbfgsParams};
+use psgd::opt::svrg::{svrg_epochs, SvrgParams};
+use psgd::opt::tron::{self, TronParams};
+use std::time::Instant;
+
+fn main() {
+    let data = SynthConfig {
+        n_examples: 30_000,
+        n_features: 5_000,
+        nnz_per_example: 15,
+        ..SynthConfig::default()
+    }
+    .generate(42);
+    let lam = 1e-3 * data.n_examples() as f64; // C ≈ 0.03 regime
+    let loss = LossKind::SquaredHinge;
+    let dim = data.n_features();
+    let obj = RegularizedLoss { x: &data.x, y: &data.y, loss, lam };
+
+    // high-accuracy reference
+    let fstar = tron::minimize(&obj, &vec![0.0; dim], &TronParams {
+        eps: 1e-12,
+        max_iter: 400,
+        ..Default::default()
+    })
+    .f;
+    let target = fstar * (1.0 + 1e-3);
+    let gap = |w: &[f64]| (obj.value(w) - fstar) / fstar;
+
+    println!("### single-machine: epochs (data passes) to 1e-3 rel gap");
+    println!("{:<22} {:>8} {:>12} {:>10}", "method", "passes", "gap", "wall s");
+
+    // --- DCA: one epoch = one data pass ---
+    {
+        let t0 = Instant::now();
+        let mut passes = 0;
+        let mut g = f64::INFINITY;
+        for epochs in 1..=60 {
+            let r = dca::solve(&data.x, &data.y, loss, lam,
+                               &DcaParams { epochs, seed: 1 });
+            passes = epochs;
+            g = gap(&r.w);
+            if obj.value(&r.w) <= target {
+                break;
+            }
+        }
+        println!(
+            "{:<22} {:>8} {:>12.3e} {:>10.2}",
+            "dca (example-wise)", passes, g, t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // --- SVRG on the untilted objective (single machine: tilt = 0,
+    //     LocalApprox with the exact gradient) ---
+    {
+        let t0 = Instant::now();
+        let w0 = vec![0.0; dim];
+        let mut grad_lp = vec![0.0; dim];
+        shard_loss_grad(&data.x, &data.y, &w0, loss, &mut grad_lp, None);
+        let mut g_r = grad_lp.clone();
+        dense::axpy(lam, &w0, &mut g_r);
+        let approx =
+            LocalApprox::new(&data.x, &data.y, loss, lam, &w0, &g_r, &grad_lp);
+        let mut passes = 0;
+        let mut g = f64::INFINITY;
+        for epochs in [1usize, 2, 4, 8, 16, 32] {
+            // batch 64: at n = 30k the per-example (b = 1) scaled
+            // estimator has stochastic Lipschitz ~n·l''·‖x‖², far above
+            // the full-gradient L the auto-lr targets — minibatching
+            // restores the stability margin on a single machine
+            let (w, _) = svrg_epochs(&approx, &w0, &SvrgParams {
+                epochs,
+                batch: 64,
+                ..Default::default()
+            });
+            passes = epochs * 2; // anchor pass + stochastic pass
+            g = gap(&w);
+            if obj.value(&w) <= target {
+                break;
+            }
+        }
+        println!(
+            "{:<22} {:>8} {:>12.3e} {:>10.2}",
+            "svrg (example-wise)", passes, g, t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // --- batch TRON: one iteration ≈ 1 grad pass + cg_iters Hv passes ---
+    {
+        let t0 = Instant::now();
+        let trace = std::cell::RefCell::new((0usize, f64::INFINITY));
+        let r = tron::minimize_cb(
+            &obj,
+            &vec![0.0; dim],
+            &TronParams { eps: 1e-10, max_iter: 200, ..Default::default() },
+            |it, w_now| {
+                let mut t = trace.borrow_mut();
+                if t.1 > 0.0 && obj.value(w_now) > target {
+                    t.0 += 1 + it.cg_iters; // data passes this iter
+                }
+                t.1 = it.gnorm;
+            },
+        );
+        let passes = trace.borrow().0;
+        println!(
+            "{:<22} {:>8} {:>12.3e} {:>10.2}",
+            "tron (batch)", passes, gap(&r.w), t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // --- batch L-BFGS: one iteration ≈ ls_evals grad passes ---
+    {
+        let t0 = Instant::now();
+        let passes = std::cell::Cell::new(0usize);
+        let done = std::cell::Cell::new(false);
+        let r = lbfgs::minimize_cb(
+            &obj,
+            &vec![0.0; dim],
+            &LbfgsParams { eps: 1e-10, max_iter: 400, ..Default::default() },
+            |it, w_now| {
+                if !done.get() {
+                    passes.set(passes.get() + it.ls_evals + 1);
+                    if obj.value(w_now) <= target {
+                        done.set(true);
+                    }
+                }
+            },
+        );
+        println!(
+            "{:<22} {:>8} {:>12.3e} {:>10.2}",
+            "lbfgs (batch)",
+            passes.get(),
+            gap(&r.w),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!(
+        "\nreading: the example-wise methods reach moderate optimality in \
+         a handful of data passes; the batch methods burn many passes — \
+         the single-machine fact that motivates parallelizing SGD rather \
+         than abandoning it (paper, introduction)."
+    );
+}

@@ -1,0 +1,70 @@
+//! Cluster-substrate ablation: tree vs ring reduction topology, and the
+//! straggler knob. The pass COUNT (the paper's metric) is topology-
+//! independent; modeled TIME is not — the ring amortizes bandwidth at
+//! large P while the tree pays log₂P full-size hops. Also quantifies
+//! how a 4× straggler on every 4th node stretches FS's compute phases.
+
+use psgd::algo::fs::{FsConfig, FsDriver};
+use psgd::algo::{Driver, StopRule};
+use psgd::bench::figure1::kdd_equivalent_cost;
+use psgd::cluster::cost::Topology;
+use psgd::cluster::{Cluster, CostModel};
+use psgd::data::partition::Partition;
+use psgd::data::synth::SynthConfig;
+
+fn main() {
+    let data = SynthConfig {
+        n_examples: 20_000,
+        n_features: 1_000,
+        nnz_per_example: 10,
+        ..SynthConfig::default()
+    }
+    .generate(42);
+    let lam = 1e-5 * data.n_examples() as f64;
+
+    println!("### reduction topology (time model only; passes identical)");
+    println!(
+        "{:>5} {:>14} {:>14} {:>10}",
+        "P", "tree sim-sec", "ring sim-sec", "ring/tree"
+    );
+    for nodes in [8usize, 25, 100] {
+        let part = Partition::shuffled(data.n_examples(), nodes, 3);
+        let mut secs = Vec::new();
+        for topo in [Topology::Tree, Topology::Ring] {
+            let cost = CostModel { topology: topo, ..kdd_equivalent_cost(1_000) };
+            let mut cluster =
+                Cluster::partition_with(data.clone(), &part, cost);
+            let run = FsDriver::new(FsConfig {
+                lam,
+                epochs: 2,
+                ..Default::default()
+            })
+            .run(&mut cluster, None, &StopRule::iters(10));
+            secs.push(run.ledger.seconds());
+        }
+        println!(
+            "{:>5} {:>14.1} {:>14.1} {:>10.3}",
+            nodes,
+            secs[0],
+            secs[1],
+            secs[1] / secs[0]
+        );
+    }
+
+    println!("\n### straggler sensitivity (every 4th node slowed)");
+    println!("{:>10} {:>14}", "straggle", "sim-seconds");
+    for straggle in [0.0, 1.0, 3.0] {
+        let part = Partition::shuffled(data.n_examples(), 16, 3);
+        let cost = CostModel { straggle, ..kdd_equivalent_cost(1_000) };
+        let mut cluster = Cluster::partition_with(data.clone(), &part, cost);
+        let run = FsDriver::new(FsConfig { lam, epochs: 2, ..Default::default() })
+            .run(&mut cluster, None, &StopRule::iters(10));
+        println!("{:>10.1} {:>14.1}", straggle, run.ledger.seconds());
+    }
+    println!(
+        "\nreading: ring wins time at large P (bandwidth-optimal), the \
+         tree wins at small P (latency); stragglers stretch only the \
+         compute share — FS's comm-light design keeps the hit linear in \
+         the compute fraction."
+    );
+}

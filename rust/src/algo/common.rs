@@ -1,0 +1,292 @@
+//! Shared driver machinery: distributed value/gradient rounds, the
+//! master-side view of f as an [`Objective`] (for SQM's TRON/L-BFGS),
+//! and ledger-free diagnostics.
+
+use std::cell::RefCell;
+
+use crate::cluster::{Cluster, Shard};
+use crate::data::dataset::Dataset;
+use crate::linalg::dense;
+use crate::loss::LossKind;
+use crate::metrics::auprc::auprc;
+use crate::objective::{shard_loss_grad, Objective};
+
+/// One distributed value+gradient round at `w`:
+/// nodes compute (Σ_p l, ∇L_p) from their shard; the gradient parts are
+/// tree-reduced. Returns (f(w), ∇f(w), per-node ∇L_p, per-node margins).
+///
+/// Communication charged: `passes` (2 = allreduce, nodes keep gʳ — what
+/// FS needs for the tilt; 1 = master-only reduce — what SQM needs).
+/// The per-node margins zᵢ = w·xᵢ are the paper's step-1 by-product,
+/// kept node-local for the line search.
+pub fn global_value_grad(
+    cluster: &mut Cluster,
+    w: &[f64],
+    loss: LossKind,
+    lam: f64,
+    all: bool,
+) -> (f64, Vec<f64>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let dim = cluster.dim;
+    let parts: Vec<(f64, Vec<f64>, Vec<f64>)> = cluster.map_each(|_, shard| {
+        let mut grad = vec![0.0; dim];
+        let mut z = Vec::new();
+        let val =
+            shard_loss_grad(&shard.x, &shard.y, w, loss, &mut grad, Some(&mut z));
+        (val, grad, z)
+    });
+    let mut loss_sum = 0.0;
+    let mut grad_parts = Vec::with_capacity(parts.len());
+    let mut margins = Vec::with_capacity(parts.len());
+    for (v, g, z) in parts {
+        loss_sum += v;
+        grad_parts.push(g);
+        margins.push(z);
+    }
+    let mut g = cluster.reduce_parts(&grad_parts, all);
+    dense::axpy(lam, w, &mut g);
+    let f = loss_sum + 0.5 * lam * dense::norm_sq(w);
+    (f, g, grad_parts, margins)
+}
+
+/// Like [`global_value_grad`] but with the margins zᵢ = w·xᵢ already
+/// node-local (the FS driver maintains them incrementally across outer
+/// iterations: z ← z + t·(dʳ·x) after each line search). Skips the
+/// X·w matvec — one data pass instead of two (§Perf).
+pub fn global_value_grad_cached(
+    cluster: &mut Cluster,
+    margins: &[Vec<f64>],
+    w: &[f64],
+    loss: LossKind,
+    lam: f64,
+    all: bool,
+) -> (f64, Vec<f64>, Vec<Vec<f64>>) {
+    let dim = cluster.dim;
+    let parts: Vec<(f64, Vec<f64>)> = cluster.map_each(|p, shard| {
+        let z = &margins[p];
+        debug_assert_eq!(z.len(), shard.x.n_rows());
+        let mut grad = vec![0.0; dim];
+        let mut val = 0.0;
+        for i in 0..shard.x.n_rows() {
+            val += loss.value(z[i], shard.y[i]);
+            let r = loss.deriv(z[i], shard.y[i]);
+            if r != 0.0 {
+                shard.x.add_row_scaled(i, r, &mut grad);
+            }
+        }
+        (val, grad)
+    });
+    let mut loss_sum = 0.0;
+    let mut grad_parts = Vec::with_capacity(parts.len());
+    for (v, g) in parts {
+        loss_sum += v;
+        grad_parts.push(g);
+    }
+    let mut g = cluster.reduce_parts(&grad_parts, all);
+    dense::axpy(lam, w, &mut g);
+    let f = loss_sum + 0.5 * lam * dense::norm_sq(w);
+    (f, g, grad_parts)
+}
+
+/// Ledger-free objective evaluation (plot diagnostics, f* computation).
+pub fn global_f_diagnostic(
+    cluster: &Cluster,
+    w: &[f64],
+    loss: LossKind,
+    lam: f64,
+) -> f64 {
+    let mut v = 0.5 * lam * dense::norm_sq(w);
+    for shard in &cluster.shards {
+        for i in 0..shard.x.n_rows() {
+            v += loss.value(shard.x.row_dot(i, w), shard.y[i]);
+        }
+    }
+    v
+}
+
+/// Test-set AUPRC — diagnostics, never charged.
+pub fn test_auprc(test: Option<&Dataset>, w: &[f64]) -> f64 {
+    match test {
+        None => f64::NAN,
+        Some(t) => {
+            let mut z = vec![0.0; t.n_examples()];
+            t.x.matvec(w, &mut z);
+            auprc(&z, &t.y)
+        }
+    }
+}
+
+/// Master-side view of the full distributed objective for TRON/L-BFGS:
+/// every `value_grad` costs a w-broadcast (1 pass) + gradient reduce
+/// (1 pass); every `hess_vec` costs a v-broadcast + Hv reduce (the SQM
+/// communication pattern the paper contrasts against).
+pub struct DistributedObjective<'a> {
+    pub cluster: RefCell<&'a mut Cluster>,
+    pub loss: LossKind,
+    pub lam: f64,
+}
+
+impl<'a> DistributedObjective<'a> {
+    pub fn new(
+        cluster: &'a mut Cluster,
+        loss: LossKind,
+        lam: f64,
+    ) -> DistributedObjective<'a> {
+        DistributedObjective { cluster: RefCell::new(cluster), loss, lam }
+    }
+}
+
+impl<'a> Objective for DistributedObjective<'a> {
+    fn dim(&self) -> usize {
+        self.cluster.borrow().dim
+    }
+
+    fn value(&self, w: &[f64]) -> f64 {
+        let mut out = vec![0.0; w.len()];
+        self.value_grad(w, &mut out)
+    }
+
+    fn grad(&self, w: &[f64], out: &mut [f64]) {
+        self.value_grad(w, out);
+    }
+
+    fn value_grad(&self, w: &[f64], out: &mut [f64]) -> f64 {
+        let cluster = &mut **self.cluster.borrow_mut();
+        cluster.broadcast_vec(); // master ships the trial w
+        let (f, g, _, _) =
+            global_value_grad(cluster, w, self.loss, self.lam, false);
+        out.copy_from_slice(&g);
+        f
+    }
+
+    /// H·v = λv + Σ_p X_pᵀ D_p X_p v, computed node-local and reduced.
+    fn hess_vec(&self, w: &[f64], v: &[f64], out: &mut [f64]) {
+        let cluster = &mut **self.cluster.borrow_mut();
+        cluster.broadcast_vec(); // ship v
+        let loss = self.loss;
+        let parts: Vec<Vec<f64>> = cluster.map_each(|_, shard: &Shard| {
+            let mut hv = vec![0.0; v.len()];
+            for i in 0..shard.x.n_rows() {
+                let zi = shard.x.row_dot(i, w);
+                let dii = loss.second_deriv(zi, shard.y[i]);
+                if dii != 0.0 {
+                    let xv = shard.x.row_dot(i, v);
+                    shard.x.add_row_scaled(i, dii * xv, &mut hv);
+                }
+            }
+            hv
+        });
+        let hv = cluster.reduce_parts(&parts, false);
+        out.copy_from_slice(&hv);
+        dense::axpy(self.lam, v, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+    use crate::data::synth::SynthConfig;
+    use crate::objective::RegularizedLoss;
+
+    fn setup() -> (Cluster, Dataset) {
+        let data = SynthConfig {
+            n_examples: 90,
+            n_features: 20,
+            nnz_per_example: 5,
+            ..SynthConfig::default()
+        }
+        .generate(4);
+        let test = SynthConfig {
+            n_examples: 50,
+            n_features: 20,
+            nnz_per_example: 5,
+            ..SynthConfig::default()
+        }
+        .generate(5);
+        (Cluster::partition(data, 3, CostModel::free()), test)
+    }
+
+    #[test]
+    fn distributed_value_grad_matches_single_machine() {
+        let (mut cluster, _) = setup();
+        // reassemble the full dataset for the oracle
+        let loss = LossKind::Logistic;
+        let lam = 0.2;
+        let w: Vec<f64> = (0..20).map(|j| (j as f64 * 0.07).sin()).collect();
+        let (f, g, grad_parts, margins) =
+            global_value_grad(&mut cluster, &w, loss, lam, true);
+
+        // oracle: stitch shards together
+        let mut val = 0.5 * lam * dense::norm_sq(&w);
+        let mut grad = vec![0.0; 20];
+        for shard in &cluster.shards {
+            let o = RegularizedLoss { x: &shard.x, y: &shard.y, loss, lam: 0.0 };
+            let mut gs = vec![0.0; 20];
+            val += o.value_grad(&w, &mut gs);
+            dense::axpy(1.0, &gs, &mut grad);
+        }
+        dense::axpy(lam, &w, &mut grad);
+        assert!((f - val).abs() < 1e-9);
+        assert!(dense::max_abs_diff(&g, &grad) < 1e-9);
+        assert_eq!(grad_parts.len(), 3);
+        assert_eq!(margins.len(), 3);
+        // margins really are the per-shard X·w
+        for (shard, z) in cluster.shards.iter().zip(&margins) {
+            for i in 0..shard.x.n_rows() {
+                assert!((z[i] - shard.x.row_dot(i, &w)).abs() < 1e-12);
+            }
+        }
+        assert_eq!(cluster.ledger.comm_passes, 2.0);
+    }
+
+    #[test]
+    fn distributed_objective_matches_and_charges() {
+        let (mut cluster, _) = setup();
+        let w: Vec<f64> = (0..20).map(|j| 0.05 * j as f64).collect();
+        let v: Vec<f64> = (0..20).map(|j| ((j * 13 % 7) as f64) - 3.0).collect();
+        // oracle over the stitched data
+        let shards = cluster.shards.clone();
+        let obj = DistributedObjective::new(&mut cluster, LossKind::Logistic, 0.3);
+        let mut g = vec![0.0; 20];
+        let f = obj.value_grad(&w, &mut g);
+        let mut hv = vec![0.0; 20];
+        obj.hess_vec(&w, &v, &mut hv);
+
+        let mut f_want = 0.5 * 0.3 * dense::norm_sq(&w);
+        let mut g_want = vec![0.0; 20];
+        let mut hv_want = vec![0.0; 20];
+        for s in &shards {
+            let o = RegularizedLoss {
+                x: &s.x,
+                y: &s.y,
+                loss: LossKind::Logistic,
+                lam: 0.0,
+            };
+            let mut gs = vec![0.0; 20];
+            f_want += o.value_grad(&w, &mut gs);
+            dense::axpy(1.0, &gs, &mut g_want);
+            let mut hvs = vec![0.0; 20];
+            o.hess_vec(&w, &v, &mut hvs);
+            dense::axpy(1.0, &hvs, &mut hv_want);
+        }
+        dense::axpy(0.3, &w, &mut g_want);
+        dense::axpy(0.3, &v, &mut hv_want);
+        assert!((f - f_want).abs() < 1e-9);
+        assert!(dense::max_abs_diff(&g, &g_want) < 1e-9);
+        assert!(dense::max_abs_diff(&hv, &hv_want) < 1e-9);
+        // 2 passes per value_grad (bcast + reduce), 2 per hess_vec
+        assert_eq!(cluster.ledger.comm_passes, 4.0);
+    }
+
+    #[test]
+    fn diagnostics_charge_nothing() {
+        let (cluster, test) = setup();
+        let w = vec![0.1; 20];
+        let f = global_f_diagnostic(&cluster, &w, LossKind::Logistic, 0.2);
+        assert!(f.is_finite() && f > 0.0);
+        let a = test_auprc(Some(&test), &w);
+        assert!((0.0..=1.0).contains(&a));
+        assert!(test_auprc(None, &w).is_nan());
+        assert_eq!(cluster.ledger.comm_passes, 0.0);
+    }
+}

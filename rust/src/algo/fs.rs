@@ -1,0 +1,510 @@
+//! **Algorithm 1** — the paper's parallel SGD method ("FS-s").
+//!
+//! Per outer iteration r:
+//! 1. distributed batch gradient gʳ at wʳ (margins zᵢ = wʳ·xᵢ kept
+//!    node-local as the by-product);
+//! 2. exit if gʳ = 0;
+//! 3–5. every node builds the gradient-consistent approximation f̂_p
+//!    (eq. 2) and runs s epochs of SVRG from wʳ → w_p, d_p = w_p − wʳ;
+//! 6. safeguard: ∠(−gʳ, d_p) ≥ θ ⇒ d_p ← −gʳ;
+//! 7. dʳ = convex combination of the d_p (simple average by default);
+//! 8. distributed Armijo–Wolfe line search on φ(t) = f(wʳ + t·dʳ),
+//!    each trial costing one *scalar* aggregation round (the margins
+//!    and dʳ·xᵢ are node-local) — the reason FS needs so few size-d
+//!    communication passes;
+//! 9. wʳ⁺¹ = wʳ + t·dʳ.
+//!
+//! Communication per iteration: one gradient allreduce (2 passes) + one
+//! direction allreduce (2 passes) = 4, versus SQM/TRON's 2 + 2·(CG
+//! iterations). That 4-vs-many gap is exactly Figure 1's left panels.
+
+use crate::algo::common::{global_value_grad, global_value_grad_cached, test_auprc};
+use crate::algo::safeguard::Safeguard;
+use crate::algo::{Driver, RunResult, StopRule};
+use crate::cluster::Cluster;
+use crate::data::dataset::Dataset;
+use crate::linalg::dense;
+use crate::loss::LossKind;
+use crate::metrics::trace::{Trace, TracePoint};
+use crate::objective::LocalApprox;
+use crate::opt::lbfgs::{self, LbfgsParams};
+use crate::opt::sag::{sag_epochs, SagParams};
+use crate::opt::linesearch::{strong_wolfe, MarginPhi, PhiLambda, WolfeParams};
+use crate::opt::sgd::{sgd_epochs, SgdParams};
+use crate::opt::svrg::{svrg_epochs, SvrgParams};
+use crate::opt::tron::{self, TronParams};
+
+/// Which local solver step 5 uses (paper §Discussion (b): SVRG is the
+/// paper's choice; L-BFGS/TRON are the "interesting possibilities";
+/// plain SGD deliberately lacks the strong-convergence property).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InnerSolver {
+    Svrg,
+    /// SAG [2] — the other strongly-convergent choice Theorem 2 covers
+    Sag,
+    Sgd,
+    Lbfgs,
+    Tron,
+}
+
+/// Step 7 policy. Any convex combination preserves descent; the paper
+/// recommends simple averaging. Size-weighting is the natural ablation
+/// when shards are unbalanced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Combine {
+    Average,
+    SizeWeighted,
+}
+
+#[derive(Clone, Debug)]
+pub struct FsConfig {
+    pub loss: LossKind,
+    pub lam: f64,
+    /// s — SGD epochs per node per outer iteration
+    pub epochs: usize,
+    pub batch: usize,
+    /// inner learning rate; None → 1/L̂ per shard
+    pub lr: Option<f64>,
+    pub safeguard: Safeguard,
+    pub combine: Combine,
+    pub wolfe: WolfeParams,
+    pub inner: InnerSolver,
+    pub seed: u64,
+}
+
+impl Default for FsConfig {
+    fn default() -> Self {
+        FsConfig {
+            loss: LossKind::Logistic,
+            lam: 1e-3,
+            epochs: 2,
+            batch: 64,
+            lr: None,
+            safeguard: Safeguard::default(),
+            combine: Combine::Average,
+            wolfe: WolfeParams::default(),
+            inner: InnerSolver::Svrg,
+            seed: 0,
+        }
+    }
+}
+
+pub struct FsDriver {
+    pub config: FsConfig,
+}
+
+impl FsDriver {
+    pub fn new(config: FsConfig) -> FsDriver {
+        FsDriver { config }
+    }
+
+    /// Run the local solver on f̂_p from wʳ; returns w_p.
+    fn solve_local(
+        &self,
+        approx: &LocalApprox,
+        w_r: &[f64],
+        node: usize,
+        iter: usize,
+    ) -> Vec<f64> {
+        let c = &self.config;
+        let seed = c
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((iter as u64) << 20)
+            .wrapping_add(node as u64);
+        match c.inner {
+            InnerSolver::Svrg => {
+                svrg_epochs(
+                    approx,
+                    w_r,
+                    &SvrgParams {
+                        epochs: c.epochs,
+                        batch: c.batch,
+                        lr: c.lr,
+                        seed,
+                    },
+                )
+                .0
+            }
+            InnerSolver::Sag => {
+                sag_epochs(
+                    approx,
+                    w_r,
+                    &SagParams { epochs: c.epochs, lr: c.lr, seed },
+                )
+            }
+            InnerSolver::Sgd => {
+                // plain SGD lacks the tilt machinery (it optimizes the
+                // *untilted* f̃_p of eq. 1) — the ablation showing why
+                // gradient consistency matters
+                sgd_epochs(
+                    approx.x,
+                    approx.y,
+                    c.loss,
+                    c.lam,
+                    w_r,
+                    &SgdParams {
+                        epochs: c.epochs,
+                        eta0: c.lr.unwrap_or(0.05),
+                        seed,
+                    },
+                )
+            }
+            InnerSolver::Lbfgs => {
+                lbfgs::minimize(
+                    approx,
+                    w_r,
+                    &LbfgsParams {
+                        max_iter: c.epochs.max(1) * 2,
+                        eps: 1e-10,
+                        ..Default::default()
+                    },
+                )
+                .w
+            }
+            InnerSolver::Tron => {
+                tron::minimize(
+                    approx,
+                    w_r,
+                    &TronParams {
+                        max_iter: c.epochs.max(1),
+                        eps: 1e-10,
+                        ..Default::default()
+                    },
+                )
+                .w
+            }
+        }
+    }
+}
+
+impl Driver for FsDriver {
+    fn name(&self) -> String {
+        let tag = match self.config.inner {
+            InnerSolver::Svrg => "fs",
+            InnerSolver::Sag => "fs+sag",
+            InnerSolver::Sgd => "fs+sgd",
+            InnerSolver::Lbfgs => "fs+lbfgs",
+            InnerSolver::Tron => "fs+tron",
+        };
+        format!("{}-{}", tag, self.config.epochs)
+    }
+
+    fn run(
+        &self,
+        cluster: &mut Cluster,
+        test: Option<&Dataset>,
+        stop: &StopRule,
+    ) -> RunResult {
+        let c = &self.config;
+        let dim = cluster.dim;
+        let mut w = vec![0.0; dim];
+        let mut trace = Trace::new(self.name());
+        cluster.broadcast_vec(); // ship w⁰
+        let mut gnorm0 = f64::INFINITY;
+        let mut f = f64::INFINITY;
+        let mut last_hits = 0usize;
+        // node-local margins zᵢ = w·xᵢ, maintained incrementally
+        // (z ← z + t·dz after each accepted step) so the gradient pass
+        // needs one data sweep, not two (§Perf)
+        let mut margins: Vec<Vec<f64>> = Vec::new();
+
+        for r in 0.. {
+            // --- step 1: gʳ (allreduce: nodes need it for the tilt) ---
+            let (f_r, g, grad_parts) = if margins.is_empty() {
+                let (f_r, g, gp, z) =
+                    global_value_grad(cluster, &w, c.loss, c.lam, true);
+                margins = z;
+                (f_r, g, gp)
+            } else {
+                global_value_grad_cached(
+                    cluster, &margins, &w, c.loss, c.lam, true,
+                )
+            };
+            f = f_r;
+            let gnorm = dense::norm(&g);
+            if r == 0 {
+                gnorm0 = gnorm;
+            }
+            trace.push(TracePoint {
+                iter: r,
+                f,
+                gnorm,
+                comm_passes: cluster.ledger.comm_passes,
+                seconds: cluster.ledger.seconds(),
+                auprc: test_auprc(test, &w),
+                safeguard_hits: last_hits,
+            });
+            // --- step 2 + stop rules ---
+            if gnorm == 0.0 || stop.should_stop(r, f, gnorm, gnorm0, &cluster.ledger) {
+                break;
+            }
+
+            // --- steps 3–5: parallel local solves on f̂_p ---
+            let w_ref = &w;
+            let g_ref = &g;
+            let gp_ref = &grad_parts;
+            let mut dirs: Vec<Vec<f64>> = cluster.map_each(|p, shard| {
+                let approx = LocalApprox::new(
+                    &shard.x, &shard.y, c.loss, c.lam, w_ref, g_ref, &gp_ref[p],
+                );
+                let w_p = self.solve_local(&approx, w_ref, p, r);
+                dense::sub(&w_p, w_ref)
+            });
+
+            // --- step 6: safeguard (node-local; nodes hold gʳ) ---
+            last_hits = c.safeguard.apply(&g, &mut dirs);
+
+            // --- step 7: convex combination via allreduce ---
+            let d = match c.combine {
+                Combine::Average => {
+                    let parts: Vec<Vec<f64>> = dirs
+                        .iter()
+                        .map(|d| {
+                            d.iter()
+                                .map(|x| x / cluster.n_nodes() as f64)
+                                .collect()
+                        })
+                        .collect();
+                    cluster.reduce_parts(&parts, true)
+                }
+                Combine::SizeWeighted => {
+                    let n_total: usize = cluster.n_examples();
+                    let parts: Vec<Vec<f64>> = dirs
+                        .iter()
+                        .zip(&cluster.shards)
+                        .map(|(d, s)| {
+                            let wgt = s.n_examples() as f64 / n_total as f64;
+                            d.iter().map(|x| x * wgt).collect()
+                        })
+                        .collect();
+                    cluster.reduce_parts(&parts, true)
+                }
+            };
+
+            // --- step 8: distributed line search on margins ---
+            // nodes compute dʳ·xᵢ locally (compute-only phase)
+            let d_ref = &d;
+            let dz_parts: Vec<Vec<f64>> = cluster.map_each(|_, shard| {
+                let mut dz = vec![0.0; shard.x.n_rows()];
+                shard.x.matvec(d_ref, &mut dz);
+                dz
+            });
+            let lam_part = PhiLambda::new(c.lam, &w, &d);
+            let loss_kind = c.loss;
+            let margins_ref = &margins;
+            let dz_ref = &dz_parts;
+            let ls = strong_wolfe(
+                |t| {
+                    let [lsum, dlsum] =
+                        cluster.map_reduce_scalars(|p, shard| {
+                            let phi = MarginPhi {
+                                z: &margins_ref[p],
+                                dz: &dz_ref[p],
+                                y: &shard.y,
+                                loss: loss_kind,
+                            };
+                            let (a, b) = phi.partial(t);
+                            [a, b]
+                        });
+                    lam_part.compose(t, lsum, dlsum)
+                },
+                &c.wolfe,
+            );
+            let t = match ls {
+                Ok(res) => {
+                    f = res.phi_t;
+                    res.t
+                }
+                Err(_) => {
+                    // dʳ not descent (can only happen when every node's
+                    // safeguarded −gʳ got averaged into numerically
+                    // nothing) — bail out rather than loop forever
+                    break;
+                }
+            };
+            // --- step 9 (nodes reconstruct wʳ⁺¹ locally from t) ---
+            dense::axpy(t, &d, &mut w);
+            // nodes update their margin cache: z ← z + t·dz (O(n_p))
+            for (z, dz) in margins.iter_mut().zip(&dz_parts) {
+                dense::axpy(t, dz, z);
+            }
+        }
+        RunResult { w, f, trace, ledger: cluster.ledger.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::common::global_f_diagnostic;
+    use crate::cluster::CostModel;
+    use crate::data::synth::SynthConfig;
+    use crate::objective::RegularizedLoss;
+    use crate::opt::tron::TronParams;
+
+    fn make_cluster(nodes: usize, seed: u64) -> (Cluster, Dataset) {
+        let data = SynthConfig {
+            n_examples: 400,
+            n_features: 60,
+            nnz_per_example: 8,
+            skew: 1.0,
+            ..SynthConfig::default()
+        }
+        .generate(seed);
+        let (train, test) = data.split(0.8, 1);
+        (Cluster::partition(train, nodes, CostModel::free()), test)
+    }
+
+    fn f_star(cluster: &Cluster, loss: LossKind, lam: f64) -> f64 {
+        // stitch shards → exact optimum via TRON
+        let mut rows = Vec::new();
+        for s in &cluster.shards {
+            for i in 0..s.x.n_rows() {
+                let (cols, vals) = s.x.row(i);
+                rows.push((
+                    cols.iter()
+                        .zip(vals)
+                        .map(|(&c, &v)| (c, v))
+                        .collect::<Vec<_>>(),
+                    s.y[i],
+                ));
+            }
+        }
+        let x = crate::linalg::Csr::from_rows(
+            cluster.dim,
+            &rows.iter().map(|(r, _)| r.clone()).collect::<Vec<_>>(),
+        );
+        let y: Vec<f64> = rows.iter().map(|(_, y)| *y).collect();
+        let obj = RegularizedLoss { x: &x, y: &y, loss, lam };
+        tron::minimize(&obj, &vec![0.0; cluster.dim], &TronParams {
+            eps: 1e-12,
+            max_iter: 200,
+            ..Default::default()
+        })
+        .f
+    }
+
+    #[test]
+    fn monotone_descent_and_convergence() {
+        let (mut cluster, test) = make_cluster(4, 2);
+        let cfg = FsConfig { lam: 0.5, epochs: 2, ..Default::default() };
+        let fstar = f_star(&cluster, cfg.loss, cfg.lam);
+        let driver = FsDriver::new(cfg);
+        let run = driver.run(&mut cluster, Some(&test), &StopRule::iters(60));
+        // monotone decrease of f across outer iterations
+        for k in 1..run.trace.points.len() {
+            assert!(
+                run.trace.points[k].f <= run.trace.points[k - 1].f + 1e-10,
+                "f increased at iter {k}"
+            );
+        }
+        // reaches small relative gap
+        let gap = (run.f - fstar) / fstar;
+        assert!(gap < 1e-4, "gap={gap}");
+        // AUPRC recorded and sane
+        let a = run.trace.last().unwrap().auprc;
+        assert!((0.0..=1.0).contains(&a));
+    }
+
+    #[test]
+    fn linear_rate_theorem1() {
+        // Theorem 1: (f(w^{r+1}) − f*)/(f(w^r) − f*) ≤ δ < 1 ∀r
+        let (mut cluster, _) = make_cluster(5, 3);
+        let cfg = FsConfig { lam: 1.0, epochs: 2, ..Default::default() };
+        let fstar = f_star(&cluster, cfg.loss, cfg.lam);
+        let run = FsDriver::new(cfg)
+            .run(&mut cluster, None, &StopRule::iters(15));
+        let gaps: Vec<f64> = run
+            .trace
+            .points
+            .iter()
+            .map(|p| p.f - fstar)
+            .filter(|g| *g > 1e-13)
+            .collect();
+        let mut worst: f64 = 0.0;
+        for k in 1..gaps.len() {
+            worst = worst.max(gaps[k] / gaps[k - 1]);
+        }
+        assert!(worst < 1.0, "no linear contraction: worst ratio {worst}");
+    }
+
+    #[test]
+    fn four_passes_per_iteration() {
+        let (mut cluster, _) = make_cluster(4, 5);
+        let run = FsDriver::new(FsConfig { lam: 0.5, ..Default::default() })
+            .run(&mut cluster, None, &StopRule::iters(6));
+        let pts = &run.trace.points;
+        // first point: 1 (w⁰ bcast) + 2 (grad allreduce)
+        assert_eq!(pts[0].comm_passes, 3.0);
+        for k in 1..pts.len() {
+            assert_eq!(
+                pts[k].comm_passes - pts[k - 1].comm_passes,
+                4.0,
+                "iteration {k} should cost exactly 4 passes"
+            );
+        }
+    }
+
+    #[test]
+    fn more_epochs_fewer_outer_iterations() {
+        // the role of s the paper highlights: larger s → better local
+        // solves → fewer outer iterations to a fixed gap
+        let (mut c1, _) = make_cluster(4, 7);
+        let (mut c8, _) = make_cluster(4, 7);
+        let fstar = f_star(&c1, LossKind::Logistic, 0.5);
+        let target = fstar * (1.0 + 1e-5);
+        let stop = StopRule::iters(60).with_target(target);
+        let r1 = FsDriver::new(FsConfig { lam: 0.5, epochs: 1, ..Default::default() })
+            .run(&mut c1, None, &stop);
+        let r8 = FsDriver::new(FsConfig { lam: 0.5, epochs: 8, ..Default::default() })
+            .run(&mut c8, None, &stop);
+        assert!(r1.f <= target * 1.01 || r8.f <= target * 1.01);
+        assert!(
+            r8.trace.points.len() <= r1.trace.points.len(),
+            "s=8 took {} iters vs s=1 {}",
+            r8.trace.points.len(),
+            r1.trace.points.len()
+        );
+    }
+
+    #[test]
+    fn single_node_still_works() {
+        let (mut cluster, _) = make_cluster(1, 9);
+        let run = FsDriver::new(FsConfig { lam: 0.5, ..Default::default() })
+            .run(&mut cluster, None, &StopRule::iters(10));
+        let f_end = global_f_diagnostic(
+            &cluster,
+            &run.w,
+            LossKind::Logistic,
+            0.5,
+        );
+        assert!((f_end - run.f).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inner_solver_variants_all_descend() {
+        for inner in [
+            InnerSolver::Svrg,
+            InnerSolver::Sag,
+            InnerSolver::Sgd,
+            InnerSolver::Lbfgs,
+            InnerSolver::Tron,
+        ] {
+            let (mut cluster, _) = make_cluster(3, 11);
+            let cfg = FsConfig {
+                lam: 0.5,
+                inner,
+                lr: if inner == InnerSolver::Sgd { Some(0.01) } else { None },
+                ..Default::default()
+            };
+            let run =
+                FsDriver::new(cfg).run(&mut cluster, None, &StopRule::iters(6));
+            let pts = &run.trace.points;
+            assert!(
+                pts.last().unwrap().f < pts[0].f,
+                "{inner:?} failed to descend"
+            );
+        }
+    }
+}

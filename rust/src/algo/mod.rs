@@ -1,0 +1,136 @@
+//! The distributed training methods Figure 1 compares:
+//!
+//! - [`fs`] — **the paper's contribution** (Algorithm 1): batch descent
+//!   whose direction comes from parallel SVRG on gradient-consistent
+//!   local approximations. "FS-s" = s inner epochs.
+//! - [`sqm`] — the Statistical Query Model baseline [10, 8]:
+//!   distributed batch gradients feeding a master-side TRON (or L-BFGS).
+//! - [`hybrid`] — SQM initialized by one round of parameter mixing.
+//! - [`param_mix`] — iterative parameter mixing [5, 6] (the method the
+//!   introduction critiques).
+//! - [`autoswitch`] — the §Discussion (c) extension: FS early,
+//!   SQM near the optimum.
+//! - [`safeguard`] — Algorithm 1 step 6 (angle test vs −gʳ).
+
+pub mod autoswitch;
+pub mod common;
+pub mod fs;
+pub mod hybrid;
+pub mod param_mix;
+pub mod safeguard;
+pub mod sqm;
+pub mod theory;
+
+use crate::cluster::{Cluster, Ledger};
+use crate::data::dataset::Dataset;
+use crate::metrics::trace::Trace;
+
+/// Termination policy shared by every driver. Whichever bound trips
+/// first stops the run.
+#[derive(Clone, Debug)]
+pub struct StopRule {
+    pub max_outer_iters: usize,
+    /// stop when f ≤ target (used with a precomputed f* + ε)
+    pub target_f: Option<f64>,
+    /// stop when ‖g‖ ≤ rel·‖g⁰‖
+    pub gnorm_rel: f64,
+    pub max_comm_passes: f64,
+    pub max_seconds: f64,
+}
+
+impl StopRule {
+    /// Plain iteration budget.
+    pub fn iters(n: usize) -> StopRule {
+        StopRule {
+            max_outer_iters: n,
+            target_f: None,
+            gnorm_rel: 1e-12,
+            max_comm_passes: f64::INFINITY,
+            max_seconds: f64::INFINITY,
+        }
+    }
+
+    /// Budget on the paper's x-axes (passes and simulated seconds).
+    pub fn budget(passes: f64, seconds: f64) -> StopRule {
+        StopRule {
+            max_outer_iters: usize::MAX,
+            target_f: None,
+            gnorm_rel: 1e-12,
+            max_comm_passes: passes,
+            max_seconds: seconds,
+        }
+    }
+
+    pub fn with_target(mut self, f: f64) -> StopRule {
+        self.target_f = Some(f);
+        self
+    }
+
+    pub fn should_stop(
+        &self,
+        iter: usize,
+        f: f64,
+        gnorm: f64,
+        gnorm0: f64,
+        ledger: &Ledger,
+    ) -> bool {
+        iter >= self.max_outer_iters
+            || self.target_f.map(|t| f <= t).unwrap_or(false)
+            || gnorm <= self.gnorm_rel * gnorm0
+            || ledger.comm_passes >= self.max_comm_passes
+            || ledger.seconds() >= self.max_seconds
+    }
+}
+
+/// What every driver returns.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub w: Vec<f64>,
+    pub f: f64,
+    pub trace: Trace,
+    pub ledger: Ledger,
+}
+
+/// A distributed training method that can be driven over a cluster.
+/// `test` (optional) is scored for AUPRC each outer iteration —
+/// diagnostics only, never charged to the ledger.
+pub trait Driver {
+    fn name(&self) -> String;
+    fn run(
+        &self,
+        cluster: &mut Cluster,
+        test: Option<&Dataset>,
+        stop: &StopRule,
+    ) -> RunResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_rule_trips_on_each_bound() {
+        let l0 = Ledger::default();
+        let mut l_comm = Ledger::default();
+        l_comm.comm_passes = 100.0;
+        let mut l_time = Ledger::default();
+        l_time.comm_seconds = 50.0;
+
+        let r = StopRule::iters(10);
+        assert!(r.should_stop(10, 1.0, 1.0, 1.0, &l0));
+        assert!(!r.should_stop(9, 1.0, 1.0, 1.0, &l0));
+
+        let r = StopRule::budget(50.0, 10.0);
+        assert!(r.should_stop(0, 1.0, 1.0, 1.0, &l_comm));
+        assert!(r.should_stop(0, 1.0, 1.0, 1.0, &l_time));
+        assert!(!r.should_stop(0, 1.0, 1.0, 1.0, &l0));
+
+        let r = StopRule::iters(100).with_target(0.5);
+        assert!(r.should_stop(0, 0.4, 1.0, 1.0, &l0));
+        assert!(!r.should_stop(0, 0.6, 1.0, 1.0, &l0));
+
+        let mut r = StopRule::iters(100);
+        r.gnorm_rel = 1e-3;
+        assert!(r.should_stop(0, 1.0, 1e-4, 1.0, &l0));
+    }
+}

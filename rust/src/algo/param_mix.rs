@@ -1,0 +1,194 @@
+//! (Iterative) parameter mixing [5, 6, 7] — the method whose weak
+//! convergence motivates the paper. Each major iteration: every node
+//! runs SGD epochs on its *untilted* local view f̃_p (eq. 1) from the
+//! current iterate, and the results are averaged.
+//!
+//! The two failure modes the introduction describes are observable
+//! here: (a) node heterogeneity makes the average drift from w*;
+//! (b) large epoch counts make each node converge to argmin f̃_p,
+//! rendering the major iterations useless (no contraction).
+
+use crate::algo::common::{global_f_diagnostic, test_auprc};
+use crate::algo::{Driver, RunResult, StopRule};
+use crate::cluster::Cluster;
+use crate::data::dataset::Dataset;
+use crate::loss::LossKind;
+use crate::metrics::trace::{Trace, TracePoint};
+use crate::opt::sgd::{sgd_epochs, SgdParams};
+
+#[derive(Clone, Debug)]
+pub struct ParamMixConfig {
+    pub loss: LossKind,
+    pub lam: f64,
+    /// SGD epochs per node per major iteration
+    pub epochs: usize,
+    pub eta0: f64,
+    pub seed: u64,
+}
+
+impl Default for ParamMixConfig {
+    fn default() -> Self {
+        ParamMixConfig {
+            loss: LossKind::Logistic,
+            lam: 1e-3,
+            epochs: 1,
+            eta0: 0.05,
+            seed: 0,
+        }
+    }
+}
+
+pub struct ParamMixDriver {
+    pub config: ParamMixConfig,
+}
+
+impl ParamMixDriver {
+    pub fn new(config: ParamMixConfig) -> ParamMixDriver {
+        ParamMixDriver { config }
+    }
+
+    /// One mixing round from `w`: node-local SGD then average.
+    /// Charges 2 passes (allreduce of the w_p average).
+    pub fn round(&self, cluster: &mut Cluster, w: &[f64], iter: usize) -> Vec<f64> {
+        let c = &self.config;
+        let n_nodes = cluster.n_nodes() as f64;
+        let parts: Vec<Vec<f64>> = cluster.map_each(|p, shard| {
+            let seed = c
+                .seed
+                .wrapping_add((iter as u64) << 24)
+                .wrapping_add(p as u64);
+            let w_p = sgd_epochs(
+                &shard.x,
+                &shard.y,
+                c.loss,
+                c.lam,
+                w,
+                &SgdParams { epochs: c.epochs, eta0: c.eta0, seed },
+            );
+            w_p.iter().map(|x| x / n_nodes).collect()
+        });
+        cluster.reduce_parts(&parts, true)
+    }
+}
+
+impl Driver for ParamMixDriver {
+    fn name(&self) -> String {
+        format!("parammix-{}", self.config.epochs)
+    }
+
+    fn run(
+        &self,
+        cluster: &mut Cluster,
+        test: Option<&Dataset>,
+        stop: &StopRule,
+    ) -> RunResult {
+        let dim = cluster.dim;
+        let mut w = vec![0.0; dim];
+        let mut trace = Trace::new(self.name());
+        cluster.broadcast_vec(); // w⁰
+        let mut f = global_f_diagnostic(cluster, &w, self.config.loss, self.config.lam);
+        for r in 0.. {
+            trace.push(TracePoint {
+                iter: r,
+                f,
+                gnorm: f64::NAN, // gradient never formed — that's the point
+                comm_passes: cluster.ledger.comm_passes,
+                seconds: cluster.ledger.seconds(),
+                auprc: test_auprc(test, &w),
+                safeguard_hits: 0,
+            });
+            if stop.should_stop(r, f, f64::INFINITY, 1.0, &cluster.ledger) {
+                break;
+            }
+            w = self.round(cluster, &w, r);
+            f = global_f_diagnostic(cluster, &w, self.config.loss, self.config.lam);
+        }
+        RunResult { w, f, trace, ledger: cluster.ledger.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+    use crate::data::synth::SynthConfig;
+
+    fn make_cluster(nodes: usize, skew: f64) -> Cluster {
+        let data = SynthConfig {
+            n_examples: 300,
+            n_features: 40,
+            nnz_per_example: 6,
+            skew,
+            ..SynthConfig::default()
+        }
+        .generate(31);
+        Cluster::partition(data, nodes, CostModel::free())
+    }
+
+    #[test]
+    fn mixing_improves_over_zero_initially() {
+        let mut cluster = make_cluster(4, 0.5);
+        let run = ParamMixDriver::new(ParamMixConfig {
+            lam: 0.5,
+            ..Default::default()
+        })
+        .run(&mut cluster, None, &StopRule::iters(5));
+        let pts = &run.trace.points;
+        assert!(pts.last().unwrap().f < pts[0].f);
+    }
+
+    #[test]
+    fn two_passes_per_round() {
+        let mut cluster = make_cluster(4, 0.5);
+        let run = ParamMixDriver::new(ParamMixConfig::default())
+            .run(&mut cluster, None, &StopRule::iters(4));
+        let pts = &run.trace.points;
+        for k in 1..pts.len() {
+            assert_eq!(pts[k].comm_passes - pts[k - 1].comm_passes, 2.0);
+        }
+    }
+
+    #[test]
+    fn stalls_above_true_optimum_with_heterogeneous_shards() {
+        // the paper's issue (a)/(b): with skewed shards and many local
+        // epochs, iterative mixing plateaus above f*
+        use crate::objective::RegularizedLoss;
+        use crate::opt::tron::{self, TronParams};
+
+        let mut cluster = make_cluster(6, 3.0);
+        // exact optimum on the stitched data
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for s in &cluster.shards {
+            for i in 0..s.x.n_rows() {
+                let (c, v) = s.x.row(i);
+                rows.push(c.iter().zip(v).map(|(&a, &b)| (a, b)).collect());
+                ys.push(s.y[i]);
+            }
+        }
+        let x = crate::linalg::Csr::from_rows(cluster.dim, &rows);
+        let obj = RegularizedLoss {
+            x: &x,
+            y: &ys,
+            loss: LossKind::Logistic,
+            lam: 0.5,
+        };
+        let fstar = tron::minimize(
+            &obj,
+            &vec![0.0; cluster.dim],
+            &TronParams { eps: 1e-12, ..Default::default() },
+        )
+        .f;
+        let run = ParamMixDriver::new(ParamMixConfig {
+            lam: 0.5,
+            epochs: 8, // many local epochs — converges to local minima
+            ..Default::default()
+        })
+        .run(&mut cluster, None, &StopRule::iters(25));
+        let gap = (run.f - fstar) / fstar;
+        assert!(
+            gap > 1e-4,
+            "parameter mixing should NOT reach the optimum here (gap={gap})"
+        );
+    }
+}

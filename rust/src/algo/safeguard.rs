@@ -1,0 +1,110 @@
+//! Algorithm 1 step 6 — the "safe artifact" step: if the angle between
+//! d_p and −gʳ reaches θ, replace d_p by −gʳ. Theorems 1–2 need
+//! θ < π/2 (and θ > cos⁻¹(λ/L) for the probability bound); the paper's
+//! practical recommendation is to accept anything that is a strict
+//! descent direction, which corresponds to θ → π/2⁻ here.
+
+use crate::linalg::dense;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Safeguard {
+    /// threshold θ in radians, 0 ≤ θ < π/2 ... π/2 itself encodes the
+    /// practical "any descent direction" policy
+    pub theta: f64,
+}
+
+impl Default for Safeguard {
+    fn default() -> Self {
+        // practical setting: accept strict descent directions
+        Safeguard { theta: std::f64::consts::FRAC_PI_2 }
+    }
+}
+
+impl Safeguard {
+    pub fn from_degrees(deg: f64) -> Safeguard {
+        Safeguard { theta: deg.to_radians() }
+    }
+
+    /// Returns true if d_p must be replaced by −gʳ:
+    /// ∠(−gʳ, d_p) ≥ θ, or d_p is numerically zero / non-descent.
+    pub fn rejects(&self, g: &[f64], d_p: &[f64]) -> bool {
+        let neg_g: Vec<f64> = g.iter().map(|x| -x).collect();
+        match dense::angle(&neg_g, d_p) {
+            None => true, // zero direction — replace
+            Some(a) => {
+                // at θ = π/2 exactly, demand strict descent (a < π/2)
+                a >= self.theta
+            }
+        }
+    }
+
+    /// Apply the step to a batch of directions; returns how many were
+    /// replaced (the `safeguard_hits` trace column).
+    pub fn apply(&self, g: &[f64], dirs: &mut [Vec<f64>]) -> usize {
+        let mut hits = 0;
+        for d in dirs.iter_mut() {
+            if self.rejects(g, d) {
+                for (dj, gj) in d.iter_mut().zip(g) {
+                    *dj = -gj;
+                }
+                hits += 1;
+            }
+        }
+        hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_negative_gradient_itself() {
+        let g = vec![1.0, -2.0, 0.5];
+        let d: Vec<f64> = g.iter().map(|x| -x).collect();
+        assert!(!Safeguard::default().rejects(&g, &d));
+        assert!(!Safeguard::from_degrees(10.0).rejects(&g, &d));
+    }
+
+    #[test]
+    fn rejects_ascent_and_orthogonal() {
+        let g = vec![1.0, 0.0];
+        let ascent = vec![1.0, 0.0]; // along +g
+        let orth = vec![0.0, 1.0];
+        let sg = Safeguard::default();
+        assert!(sg.rejects(&g, &ascent));
+        assert!(sg.rejects(&g, &orth)); // exactly π/2: not strict descent
+    }
+
+    #[test]
+    fn tighter_theta_rejects_more() {
+        let g = vec![1.0, 0.0];
+        // 45° off −g
+        let d = vec![-1.0, 1.0];
+        assert!(!Safeguard::default().rejects(&g, &d));
+        assert!(!Safeguard::from_degrees(46.0).rejects(&g, &d));
+        assert!(Safeguard::from_degrees(44.0).rejects(&g, &d));
+    }
+
+    #[test]
+    fn zero_direction_replaced() {
+        let g = vec![1.0, 1.0];
+        assert!(Safeguard::default().rejects(&g, &[0.0, 0.0]));
+    }
+
+    #[test]
+    fn apply_replaces_and_counts() {
+        let g = vec![1.0, 0.0];
+        let mut dirs = vec![
+            vec![-1.0, 0.1],  // fine
+            vec![1.0, 0.0],   // ascent → replaced
+            vec![0.0, 0.0],   // zero → replaced
+        ];
+        let hits = Safeguard::default().apply(&g, &mut dirs);
+        assert_eq!(hits, 2);
+        assert_eq!(dirs[1], vec![-1.0, 0.0]);
+        assert_eq!(dirs[2], vec![-1.0, 0.0]);
+        // replaced directions now pass the test
+        assert!(!Safeguard::default().rejects(&g, &dirs[1]));
+    }
+}

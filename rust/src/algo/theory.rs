@@ -1,0 +1,192 @@
+//! Theory-check instrumentation: the quantitative objects Theorems 1–2
+//! talk about, computed on a concrete problem so runs can *verify* the
+//! theory's premises instead of assuming them.
+//!
+//! - [`lipschitz_global`] — L̂, a power-iteration estimate of the
+//!   Lipschitz constant of ∇f over the whole cluster's data;
+//! - [`theta_bound`] — cos⁻¹(λ/L), Theorem 2's lower limit for θ;
+//! - [`DirectionAudit`] — per-iteration angles ∠(−gʳ, d_p), their
+//!   maximum, and whether the Theorem-2 condition θ > cos⁻¹(λ/L) held.
+
+use crate::cluster::Cluster;
+use crate::linalg::dense;
+use crate::loss::LossKind;
+
+/// Power-iteration estimate of λ_max(XᵀX) over ALL shards (the global
+/// data matrix), giving L̂ = λ + l''_max · λ_max.
+pub fn lipschitz_global(
+    cluster: &Cluster,
+    loss: LossKind,
+    lam: f64,
+    iters: usize,
+) -> f64 {
+    let d = cluster.dim;
+    let mut v = vec![0.0f64; d];
+    for shard in &cluster.shards {
+        for &j in &shard.x.indices {
+            v[j as usize] = 1.0;
+        }
+    }
+    let n0 = dense::norm(&v).max(f64::MIN_POSITIVE);
+    dense::scale(&mut v, 1.0 / n0);
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        let mut vnew = vec![0.0f64; d];
+        for shard in &cluster.shards {
+            let mut z = vec![0.0; shard.x.n_rows()];
+            shard.x.matvec(&v, &mut z);
+            shard.x.tmatvec(&z, &mut vnew);
+        }
+        sigma = dense::norm(&vnew);
+        if sigma <= f64::MIN_POSITIVE {
+            break;
+        }
+        dense::scale(&mut vnew, 1.0 / sigma);
+        v = vnew;
+    }
+    lam + loss.dd_max() * sigma
+}
+
+/// Theorem 2's angle threshold: θ must satisfy
+/// π/2 > θ > cos⁻¹(λ/L). Returns cos⁻¹(λ/L) in radians.
+pub fn theta_bound(lam: f64, lipschitz: f64) -> f64 {
+    (lam / lipschitz.max(lam)).clamp(-1.0, 1.0).acos()
+}
+
+/// Records the angles the safeguard would inspect, for post-hoc checks
+/// of the Theorem-2 story.
+#[derive(Clone, Debug, Default)]
+pub struct DirectionAudit {
+    /// per outer iteration: the max over nodes of ∠(−gʳ, d_p)
+    pub max_angles: Vec<f64>,
+}
+
+impl DirectionAudit {
+    /// Audit one iteration's directions against the gradient.
+    pub fn record(&mut self, g: &[f64], dirs: &[Vec<f64>]) {
+        let neg_g: Vec<f64> = g.iter().map(|x| -x).collect();
+        let worst = dirs
+            .iter()
+            .filter_map(|d| dense::angle(&neg_g, d))
+            .fold(0.0f64, f64::max);
+        self.max_angles.push(worst);
+    }
+
+    /// Fraction of iterations whose worst angle exceeded `theta`.
+    pub fn exceed_rate(&self, theta: f64) -> f64 {
+        if self.max_angles.is_empty() {
+            return 0.0;
+        }
+        self.max_angles.iter().filter(|&&a| a >= theta).count() as f64
+            / self.max_angles.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+    use crate::data::synth::SynthConfig;
+    use crate::util::rng::Rng;
+
+    fn cluster() -> Cluster {
+        let data = SynthConfig {
+            n_examples: 200,
+            n_features: 40,
+            nnz_per_example: 6,
+            ..SynthConfig::default()
+        }
+        .generate(5);
+        Cluster::partition(data, 4, CostModel::free())
+    }
+
+    #[test]
+    fn global_lipschitz_dominates_shard_estimates() {
+        let c = cluster();
+        let lam = 0.3;
+        let global = lipschitz_global(&c, LossKind::Logistic, lam, 25);
+        for shard in &c.shards {
+            let local = crate::opt::svrg::lipschitz_estimate(
+                &shard.x,
+                LossKind::Logistic.dd_max(),
+                lam,
+                25,
+            );
+            assert!(
+                global >= local * 0.999,
+                "global {global} < shard {local}"
+            );
+        }
+    }
+
+    #[test]
+    fn theta_bound_in_range_and_monotone() {
+        // λ → L gives bound → 0; λ → 0 gives bound → π/2
+        let b_tight = theta_bound(1.0, 1.0);
+        let b_loose = theta_bound(1e-6, 1.0);
+        assert!(b_tight < 1e-6);
+        assert!(b_loose > 1.57 && b_loose <= std::f64::consts::FRAC_PI_2);
+        assert!(theta_bound(0.5, 1.0) < theta_bound(0.1, 1.0));
+    }
+
+    #[test]
+    fn audit_counts_exceedances() {
+        let mut audit = DirectionAudit::default();
+        let g = vec![1.0, 0.0];
+        audit.record(&g, &[vec![-1.0, 0.0]]); // angle 0
+        audit.record(&g, &[vec![-1.0, 1.0]]); // 45°
+        audit.record(&g, &[vec![0.0, 1.0]]); // 90°
+        assert_eq!(audit.max_angles.len(), 3);
+        assert!((audit.exceed_rate(1.0) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(audit.exceed_rate(0.0), 1.0);
+    }
+
+    #[test]
+    fn fs_directions_respect_theorem2_bound_statistically() {
+        // run a few FS-like local solves and check the observed angles
+        // sit below cos⁻¹(λ/L̂) — the geometric heart of Theorem 2
+        use crate::objective::{shard_loss_grad, LocalApprox};
+        use crate::opt::svrg::{svrg_epochs, SvrgParams};
+
+        let c = cluster();
+        let lam = 2.0; // strong regularization → tight angle bound
+        let lhat = lipschitz_global(&c, LossKind::Logistic, lam, 30);
+        let bound = theta_bound(lam, lhat);
+        let dim = c.dim;
+        let mut rng = Rng::new(7);
+        let w_r: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.1).collect();
+        // global gradient
+        let mut g = vec![0.0; dim];
+        let mut parts = Vec::new();
+        for s in &c.shards {
+            let mut gl = vec![0.0; dim];
+            shard_loss_grad(&s.x, &s.y, &w_r, LossKind::Logistic, &mut gl, None);
+            dense::axpy(1.0, &gl, &mut g);
+            parts.push(gl);
+        }
+        dense::axpy(lam, &w_r, &mut g);
+        let mut audit = DirectionAudit::default();
+        let dirs: Vec<Vec<f64>> = c
+            .shards
+            .iter()
+            .zip(&parts)
+            .map(|(s, gl)| {
+                let approx = LocalApprox::new(
+                    &s.x, &s.y, LossKind::Logistic, lam, &w_r, &g, gl,
+                );
+                let (w_p, _) = svrg_epochs(
+                    &approx,
+                    &w_r,
+                    &SvrgParams { epochs: 12, ..Default::default() },
+                );
+                dense::sub(&w_p, &w_r)
+            })
+            .collect();
+        audit.record(&g, &dirs);
+        let worst = audit.max_angles[0];
+        assert!(
+            worst <= bound + 0.2,
+            "observed angle {worst} far above Theorem-2 bound {bound}"
+        );
+    }
+}

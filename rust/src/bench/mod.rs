@@ -1,0 +1,153 @@
+//! In-tree micro/macro benchmark harness (criterion is unavailable
+//! offline). `cargo bench` targets use `harness = false` and drive
+//! [`Bencher`] directly.
+//!
+//! Methodology: warmup runs, then timed iterations until both a minimum
+//! iteration count and a minimum total time are reached; reports mean,
+//! std-dev, median and p95 over per-iteration times.
+
+pub mod figure1;
+pub mod plot;
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub min_time: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: 3,
+            min_iters: 10,
+            min_time: Duration::from_millis(300),
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// quick config for expensive end-to-end benches
+impl BenchConfig {
+    pub fn macro_bench() -> BenchConfig {
+        BenchConfig {
+            warmup: 1,
+            min_iters: 3,
+            min_time: Duration::from_millis(100),
+            max_iters: 10,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {}  ±{}  median {}  p95 {}  min {}",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.std_s),
+            fmt_s(self.median_s),
+            fmt_s(self.p95_s),
+            fmt_s(self.min_s),
+        )
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Time `f` under `cfg`; a `black_box`-style sink prevents the closure
+/// result from being optimized away.
+pub fn run<T>(
+    name: &str,
+    cfg: &BenchConfig,
+    mut f: impl FnMut() -> T,
+) -> BenchStats {
+    for _ in 0..cfg.warmup {
+        sink(f());
+    }
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while (times.len() < cfg.min_iters || start.elapsed() < cfg.min_time)
+        && times.len() < cfg.max_iters
+    {
+        let t0 = Instant::now();
+        sink(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    stats_from(name, times)
+}
+
+fn stats_from(name: &str, mut times: Vec<f64>) -> BenchStats {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+        / n.max(2) as f64;
+    let p95_idx = ((n as f64 * 0.95) as usize).min(n - 1);
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        median_s: times[n / 2],
+        p95_s: times[p95_idx],
+        min_s: times[0],
+    }
+}
+
+/// prevent the optimizer from discarding a value
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_reasonable_stats() {
+        let cfg = BenchConfig {
+            warmup: 1,
+            min_iters: 20,
+            min_time: Duration::from_millis(1),
+            max_iters: 50,
+        };
+        let s = run("spin", &cfg, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.iters >= 20);
+        assert!(s.mean_s > 0.0);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.p95_s);
+        assert!(!s.report().is_empty());
+    }
+}

@@ -1,0 +1,132 @@
+//! ASCII line plots for terminal rendering of the figure panels —
+//! multi-series scatter on a character grid with optional log-y.
+
+pub struct AsciiPlot {
+    pub width: usize,
+    pub height: usize,
+    pub log_y: bool,
+}
+
+impl Default for AsciiPlot {
+    fn default() -> Self {
+        AsciiPlot { width: 72, height: 20, log_y: true }
+    }
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+impl AsciiPlot {
+    /// Render labeled series of (x, y) points.
+    pub fn render(&self, title: &str, series: &[(String, Vec<(f64, f64)>)]) -> String {
+        let mut pts: Vec<(f64, f64)> = Vec::new();
+        for (_, s) in series {
+            for &(x, y) in s {
+                if x.is_finite() && y.is_finite() && (!self.log_y || y > 0.0) {
+                    pts.push((x, y));
+                }
+            }
+        }
+        if pts.is_empty() {
+            return format!("{title}\n  (no finite data)\n");
+        }
+        let ty = |y: f64| if self.log_y { y.log10() } else { y };
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(ty(y));
+            y1 = y1.max(ty(y));
+        }
+        if (x1 - x0).abs() < 1e-300 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-300 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, s)) in series.iter().enumerate() {
+            let mark = MARKS[si % MARKS.len()];
+            for &(x, y) in s {
+                if !x.is_finite() || !y.is_finite() || (self.log_y && y <= 0.0) {
+                    continue;
+                }
+                let cx = ((x - x0) / (x1 - x0) * (self.width - 1) as f64)
+                    .round() as usize;
+                let cy = ((ty(y) - y0) / (y1 - y0) * (self.height - 1) as f64)
+                    .round() as usize;
+                let row = self.height - 1 - cy.min(self.height - 1);
+                grid[row][cx.min(self.width - 1)] = mark;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(title);
+        out.push('\n');
+        let ylab = |v: f64| {
+            if self.log_y {
+                format!("1e{v:>6.1}")
+            } else {
+                format!("{v:>8.3}")
+            }
+        };
+        for (r, row) in grid.iter().enumerate() {
+            let yv = y1 - (y1 - y0) * r as f64 / (self.height - 1) as f64;
+            let lab = if r % 4 == 0 { ylab(yv) } else { " ".repeat(8) };
+            out.push_str(&format!("{lab} |"));
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{} +{}\n{} {:<12.4} {:>width$.4}\n",
+            " ".repeat(8),
+            "-".repeat(self.width),
+            " ".repeat(8),
+            x0,
+            x1,
+            width = self.width - 8
+        ));
+        for (si, (label, _)) in series.iter().enumerate() {
+            out.push_str(&format!(
+                "    {} {label}\n",
+                MARKS[si % MARKS.len()]
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_basic_series() {
+        let s = vec![
+            (
+                "fs-2".to_string(),
+                vec![(0.0, 1.0), (10.0, 0.1), (20.0, 0.01)],
+            ),
+            ("sqm".to_string(), vec![(0.0, 1.0), (20.0, 0.5)]),
+        ];
+        let plot = AsciiPlot::default().render("gap vs passes", &s);
+        assert!(plot.contains("gap vs passes"));
+        assert!(plot.contains('*') && plot.contains('o'));
+        assert!(plot.contains("fs-2") && plot.contains("sqm"));
+    }
+
+    #[test]
+    fn handles_empty_and_degenerate() {
+        let plot = AsciiPlot::default().render("empty", &[]);
+        assert!(plot.contains("no finite data"));
+        let s = vec![("one".to_string(), vec![(1.0, 1.0)])];
+        let p = AsciiPlot::default().render("single", &s);
+        assert!(p.contains('*'));
+    }
+
+    #[test]
+    fn linear_scale_allows_zero() {
+        let plot = AsciiPlot { log_y: false, ..Default::default() };
+        let s = vec![("a".to_string(), vec![(0.0, 0.0), (1.0, 0.9)])];
+        assert!(plot.render("auprc", &s).contains('*'));
+    }
+}

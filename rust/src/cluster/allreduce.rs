@@ -1,0 +1,86 @@
+//! Tree-ordered reduction — the summation order a physical AllReduce
+//! binary tree produces. Using the *actual* tree order (rather than a
+//! left fold) keeps the simulation faithful to [8]'s arrangement and
+//! lets the property suite assert the floating-point discrepancy vs
+//! sequential summation stays within tolerance.
+
+/// Sum a set of equal-length vectors pairwise in binary-tree order.
+///
+/// §Perf: the first combine level reads the borrowed inputs directly
+/// (allocating only ⌈n/2⌉ pair buffers instead of cloning all n
+/// vectors); higher levels merge in place — halves peak allocation and
+/// removed the 20 MB memcpy the 25-node reduction was paying.
+pub fn tree_sum(vectors: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!vectors.is_empty(), "tree_sum of zero nodes");
+    let dim = vectors[0].len();
+    assert!(
+        vectors.iter().all(|v| v.len() == dim),
+        "ragged vectors in reduction"
+    );
+    // level 1: pair the borrowed inputs
+    let mut level: Vec<Vec<f64>> = vectors
+        .chunks(2)
+        .map(|pair| match pair {
+            [a, b] => a.iter().zip(b).map(|(x, y)| x + y).collect(),
+            [a] => a.clone(),
+            _ => unreachable!(),
+        })
+        .collect();
+    // higher levels: in-place pairwise merge
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                for (ai, bi) in a.iter_mut().zip(&b) {
+                    *ai += bi;
+                }
+            }
+            next.push(a);
+        }
+        level = next;
+    }
+    level.pop().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_sequential_sum() {
+        let mut rng = Rng::new(1);
+        for nodes in [1usize, 2, 3, 5, 8, 13, 25, 100] {
+            let vs: Vec<Vec<f64>> = (0..nodes)
+                .map(|_| (0..17).map(|_| rng.normal()).collect())
+                .collect();
+            let tree = tree_sum(&vs);
+            for j in 0..17 {
+                let seq: f64 = vs.iter().map(|v| v[j]).sum();
+                assert!(
+                    (tree[j] - seq).abs() < 1e-10 * (1.0 + seq.abs()),
+                    "nodes={nodes} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_is_identity() {
+        let v = vec![vec![1.0, 2.0, 3.0]];
+        assert_eq!(tree_sum(&v), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn rejects_ragged() {
+        tree_sum(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero nodes")]
+    fn rejects_empty() {
+        tree_sum(&[]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Communication cost model for the simulated AllReduce tree.
+//!
+//! Defaults model the paper's Hadoop-era gigabit cluster: 0.5 ms
+//! per-hop latency, 1 Gbit/s links. With kdd2010's d = 20.21M features
+//! a single f64 pass is ~162 MB ⇒ ~1.3 s/hop — communication dominates,
+//! exactly the regime that makes FS's few-passes-per-iteration design
+//! pay off. At the repro scale (d = 500k) a pass is ~4 MB ⇒ ~32 ms/hop.
+
+/// Physical reduction topology — affects modeled *time* only (the
+/// paper's communication-pass count is topology-independent: footnote 5
+/// counts size-d vector traversals).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// binary AllReduce tree (the paper's [8] arrangement)
+    #[default]
+    Tree,
+    /// bandwidth-optimal ring: reduce-scatter + all-gather, 2(P−1)
+    /// hops of d/P-sized chunks
+    Ring,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// per-hop latency α (seconds)
+    pub latency_s: f64,
+    /// link bandwidth (bytes/second)
+    pub bandwidth_bytes_per_s: f64,
+    /// wire size of one vector component (8 = f64)
+    pub bytes_per_scalar: usize,
+    /// multiplier applied to measured per-node compute seconds —
+    /// models nodes slower/faster than this machine's single core
+    pub compute_scale: f64,
+    /// physical reduction arrangement (time model only)
+    pub topology: Topology,
+    /// straggler factor: node p's compute is additionally scaled by
+    /// 1 + straggle·(p mod 4 == 0), a cheap heterogeneity knob for the
+    /// failure-injection tests (0 = homogeneous)
+    pub straggle: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            latency_s: 5e-4,
+            bandwidth_bytes_per_s: 125e6, // 1 Gbit/s
+            bytes_per_scalar: 8,
+            compute_scale: 1.0,
+            topology: Topology::Tree,
+            straggle: 0.0,
+        }
+    }
+}
+
+impl CostModel {
+    /// A zero-cost model: pure algorithmic accounting (tests).
+    pub fn free() -> CostModel {
+        CostModel {
+            latency_s: 0.0,
+            bandwidth_bytes_per_s: f64::INFINITY,
+            bytes_per_scalar: 8,
+            compute_scale: 0.0,
+            topology: Topology::Tree,
+            straggle: 0.0,
+        }
+    }
+
+    /// Seconds for one size-`dim` vector pass over one tree level.
+    pub fn pass_seconds(&self, dim: usize) -> f64 {
+        self.latency_s
+            + (dim * self.bytes_per_scalar) as f64 / self.bandwidth_bytes_per_s
+    }
+
+    /// Modeled seconds for ONE logical size-`dim` traversal (reduce or
+    /// broadcast) over `nodes` nodes under the configured topology.
+    pub fn traversal_seconds(&self, dim: usize, nodes: usize) -> f64 {
+        let bytes = (dim * self.bytes_per_scalar) as f64;
+        match self.topology {
+            Topology::Tree => {
+                let depth = (nodes.max(2) as f64).log2().ceil();
+                depth * self.pass_seconds(dim)
+            }
+            Topology::Ring => {
+                // (P−1) chunk hops of size d/P for one phase
+                // (reduce-scatter OR all-gather = one logical traversal)
+                let p = nodes.max(2) as f64;
+                (p - 1.0)
+                    * (self.latency_s + bytes / p / self.bandwidth_bytes_per_s)
+            }
+        }
+    }
+
+    /// Per-node compute multiplier under the straggler knob.
+    pub fn node_compute_scale(&self, node: usize) -> f64 {
+        let extra = if node % 4 == 0 { self.straggle } else { 0.0 };
+        self.compute_scale * (1.0 + extra)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_comm_bound_at_paper_scale() {
+        let c = CostModel::default();
+        // kdd2010-scale pass must dwarf latency
+        let t = c.pass_seconds(20_210_000);
+        assert!(t > 1.0, "pass at paper scale: {t}s");
+        assert!(c.pass_seconds(1) < 1e-3);
+    }
+
+    #[test]
+    fn free_model_costs_nothing() {
+        let c = CostModel::free();
+        assert_eq!(c.pass_seconds(1_000_000), 0.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! The run accounting every driver reports: communication passes
+//! (Figure 1's left panels), simulated seconds (middle/right panels),
+//! and the raw component breakdown.
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Ledger {
+    /// size-d vector traversals (paper footnote 5)
+    pub comm_passes: f64,
+    /// modeled communication seconds (tree hops × cost model)
+    pub comm_seconds: f64,
+    /// measured compute seconds (max over concurrent nodes per phase)
+    pub compute_seconds: f64,
+    /// scalar aggregation rounds (line-search trials etc.)
+    pub scalar_rounds: usize,
+}
+
+impl Ledger {
+    /// The simulated wall clock.
+    pub fn seconds(&self) -> f64 {
+        self.comm_seconds + self.compute_seconds
+    }
+
+    /// Snapshot for trace records.
+    pub fn snapshot(&self) -> (f64, f64) {
+        (self.comm_passes, self.seconds())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seconds_sum_components() {
+        let l = Ledger {
+            comm_passes: 4.0,
+            comm_seconds: 1.5,
+            compute_seconds: 2.5,
+            scalar_rounds: 3,
+        };
+        assert_eq!(l.seconds(), 4.0);
+        assert_eq!(l.snapshot(), (4.0, 4.0));
+    }
+}

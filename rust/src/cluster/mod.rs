@@ -1,0 +1,317 @@
+//! Simulated master–slave cluster with an AllReduce tree (the paper's
+//! experimental substrate was an AllReduce tree on a Hadoop cluster
+//! [8]; DESIGN.md §2 documents the substitution).
+//!
+//! The simulator executes the *actual* distributed protocol data-flow —
+//! per-node shards, per-node compute closures, tree-ordered reductions —
+//! and charges two ledgers:
+//!
+//! - **communication passes**: the paper's primary x-axis (footnote 5:
+//!   one pass = one size-d vector traversal between nodes). A broadcast
+//!   or a reduce is 1 pass; an allreduce is 2. Scalar rounds (line
+//!   search trials) cost time but no passes.
+//! - **simulated seconds**: measured per-node compute (max over nodes
+//!   per phase, as P nodes would run concurrently) + modeled tree
+//!   communication time (α per hop + bytes/bandwidth).
+
+pub mod allreduce;
+pub mod cost;
+pub mod ledger;
+pub mod node;
+
+pub use cost::CostModel;
+pub use ledger::Ledger;
+pub use node::Shard;
+
+use crate::data::dataset::Dataset;
+use crate::data::partition::Partition;
+use std::time::Instant;
+
+/// The simulated cluster: P shards + the accounting state.
+pub struct Cluster {
+    pub shards: Vec<Shard>,
+    pub cost: CostModel,
+    pub dim: usize,
+    pub ledger: Ledger,
+    /// worker threads for map phases (1 = sequential)
+    pub threads: usize,
+}
+
+impl Cluster {
+    /// Partition `data` over `n_nodes` contiguous shards.
+    pub fn partition(data: Dataset, n_nodes: usize, cost: CostModel) -> Cluster {
+        let part = Partition::contiguous(data_len(&data), n_nodes);
+        Self::partition_with(data, &part, cost)
+    }
+
+    pub fn partition_with(
+        data: Dataset,
+        partition: &Partition,
+        cost: CostModel,
+    ) -> Cluster {
+        let dim = data.n_features();
+        let shards = partition
+            .assignment
+            .iter()
+            .map(|rows| {
+                let sub = data.take(rows);
+                Shard { x: sub.x, y: sub.y }
+            })
+            .collect();
+        Cluster { shards, cost, dim, ledger: Ledger::default(), threads: 1 }
+    }
+
+    /// Same shards and cost model, fresh ledger — for computing
+    /// reference optima or re-running a second method on identical data
+    /// without inheriting the first run's accounting.
+    pub fn fork_fresh(&self) -> Cluster {
+        Cluster {
+            shards: self.shards.clone(),
+            cost: self.cost,
+            dim: self.dim,
+            ledger: Ledger::default(),
+            threads: self.threads,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.shards.iter().map(|s| s.x.n_rows()).sum()
+    }
+
+    /// Compute-only phase: run `f` on every node, charge the clock with
+    /// the max per-node elapsed time (nodes run concurrently in the
+    /// modeled cluster). No communication.
+    pub fn map_each<T: Send>(
+        &mut self,
+        f: impl Fn(usize, &Shard) -> T + Sync,
+    ) -> Vec<T> {
+        let (outs, times) = self.run_nodes(&f);
+        let max = times
+            .iter()
+            .enumerate()
+            .map(|(p, t)| t * self.cost.node_compute_scale(p))
+            .fold(0.0f64, f64::max);
+        self.ledger.compute_seconds += max;
+        outs
+    }
+
+    /// Compute phase followed by a size-d vector reduce (summed in tree
+    /// order) whose result the master keeps. Charges 1 pass.
+    pub fn map_reduce_vec(
+        &mut self,
+        f: impl Fn(usize, &Shard) -> Vec<f64> + Sync,
+    ) -> Vec<f64> {
+        let outs = self.map_each(f);
+        let sum = allreduce::tree_sum(&outs);
+        self.charge_vector_pass(1);
+        sum
+    }
+
+    /// Allreduce: every node ends up holding the sum. Charges 2 passes
+    /// (reduce up + broadcast down). The rust simulation returns the
+    /// single master copy; node-local copies are implied.
+    pub fn map_allreduce_vec(
+        &mut self,
+        f: impl Fn(usize, &Shard) -> Vec<f64> + Sync,
+    ) -> Vec<f64> {
+        let outs = self.map_each(f);
+        let sum = allreduce::tree_sum(&outs);
+        self.charge_vector_pass(2);
+        sum
+    }
+
+    /// Tree-sum vectors the nodes already produced (via [`map_each`])
+    /// and charge the passes: 1 for a master-only reduce, 2 for an
+    /// allreduce leaving every node with the sum. Lets drivers keep the
+    /// per-node parts (e.g. ∇L_p for the tilt) AND account the
+    /// aggregation.
+    pub fn reduce_parts(&mut self, parts: &[Vec<f64>], all: bool) -> Vec<f64> {
+        let sum = allreduce::tree_sum(parts);
+        self.charge_vector_pass(if all { 2 } else { 1 });
+        sum
+    }
+
+    /// Master → nodes broadcast of a size-d vector. Charges 1 pass.
+    /// (The data flow itself is implicit — nodes read the master copy —
+    /// but the cost is real.)
+    pub fn broadcast_vec(&mut self) {
+        self.charge_vector_pass(1);
+    }
+
+    /// Scalar aggregation round (line-search trial): each node returns
+    /// a handful of f64s which the tree sums. Costs latency-only time,
+    /// zero passes (paper footnote 5 counts size-d vectors).
+    pub fn map_reduce_scalars<const K: usize>(
+        &mut self,
+        f: impl Fn(usize, &Shard) -> [f64; K] + Sync,
+    ) -> [f64; K] {
+        let outs = self.map_each(f);
+        let mut acc = [0.0; K];
+        for o in outs {
+            for (a, v) in acc.iter_mut().zip(o) {
+                *a += v;
+            }
+        }
+        let hops = 2.0 * self.tree_depth() as f64;
+        self.ledger.comm_seconds += hops
+            * (self.cost.latency_s
+                + (K * 8) as f64 / self.cost.bandwidth_bytes_per_s);
+        self.ledger.scalar_rounds += 1;
+        acc
+    }
+
+    fn tree_depth(&self) -> u32 {
+        (self.n_nodes().max(2) as f64).log2().ceil() as u32
+    }
+
+    fn charge_vector_pass(&mut self, passes: usize) {
+        let per_pass = self.cost.traversal_seconds(self.dim, self.n_nodes());
+        self.ledger.comm_passes += passes as f64;
+        self.ledger.comm_seconds += passes as f64 * per_pass;
+    }
+
+    /// Run one closure per node, returning outputs and per-node seconds.
+    fn run_nodes<T: Send>(
+        &self,
+        f: &(impl Fn(usize, &Shard) -> T + Sync),
+    ) -> (Vec<T>, Vec<f64>) {
+        if self.threads <= 1 || self.n_nodes() == 1 {
+            let mut outs = Vec::with_capacity(self.n_nodes());
+            let mut times = Vec::with_capacity(self.n_nodes());
+            for (p, shard) in self.shards.iter().enumerate() {
+                let t0 = Instant::now();
+                outs.push(f(p, shard));
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            (outs, times)
+        } else {
+            let n = self.n_nodes();
+            let mut slots: Vec<Option<(T, f64)>> = (0..n).map(|_| None).collect();
+            let next = std::sync::atomic::AtomicUsize::new(0);
+            let slots_ptr = std::sync::Mutex::new(&mut slots);
+            std::thread::scope(|scope| {
+                for _ in 0..self.threads.min(n) {
+                    scope.spawn(|| loop {
+                        let p = next
+                            .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                        if p >= n {
+                            break;
+                        }
+                        let t0 = Instant::now();
+                        let out = f(p, &self.shards[p]);
+                        let dt = t0.elapsed().as_secs_f64();
+                        slots_ptr.lock().unwrap()[p] = Some((out, dt));
+                    });
+                }
+            });
+            let mut outs = Vec::with_capacity(n);
+            let mut times = Vec::with_capacity(n);
+            for s in slots {
+                let (o, t) = s.expect("node closure completed");
+                outs.push(o);
+                times.push(t);
+            }
+            (outs, times)
+        }
+    }
+}
+
+fn data_len(d: &Dataset) -> usize {
+    d.n_examples()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+
+    fn cluster(nodes: usize) -> Cluster {
+        let data = SynthConfig {
+            n_examples: 120,
+            n_features: 30,
+            nnz_per_example: 5,
+            ..SynthConfig::default()
+        }
+        .generate(1);
+        Cluster::partition(data, nodes, CostModel::default())
+    }
+
+    #[test]
+    fn partition_preserves_examples() {
+        let c = cluster(7);
+        assert_eq!(c.n_nodes(), 7);
+        assert_eq!(c.n_examples(), 120);
+        assert!(c.shards.iter().all(|s| s.x.n_rows() > 0));
+    }
+
+    #[test]
+    fn map_reduce_vec_sums_over_nodes() {
+        let mut c = cluster(5);
+        // per-node example counts, one-hot by node index
+        let v = c.map_reduce_vec(|p, shard| {
+            let mut out = vec![0.0; 30];
+            out[p] = shard.x.n_rows() as f64;
+            out
+        });
+        let total: f64 = v.iter().sum();
+        assert_eq!(total, 120.0);
+        assert_eq!(c.ledger.comm_passes, 1.0);
+    }
+
+    #[test]
+    fn allreduce_charges_two_passes() {
+        let mut c = cluster(4);
+        let _ = c.map_allreduce_vec(|_, _| vec![1.0; 30]);
+        assert_eq!(c.ledger.comm_passes, 2.0);
+        assert!(c.ledger.comm_seconds > 0.0);
+    }
+
+    #[test]
+    fn scalar_rounds_cost_no_passes() {
+        let mut c = cluster(4);
+        let [s] = c.map_reduce_scalars(|_, shard| [shard.x.n_rows() as f64]);
+        assert_eq!(s, 120.0);
+        assert_eq!(c.ledger.comm_passes, 0.0);
+        assert_eq!(c.ledger.scalar_rounds, 1);
+        assert!(c.ledger.comm_seconds > 0.0);
+    }
+
+    #[test]
+    fn compute_clock_takes_max_over_nodes() {
+        let mut c = cluster(3);
+        c.map_each(|p, _| {
+            // node 2 does 3x the work
+            let mut acc = 0.0f64;
+            let iters = if p == 2 { 300_000 } else { 100_000 };
+            for i in 0..iters {
+                acc += (i as f64).sqrt();
+            }
+            acc
+        });
+        assert!(c.ledger.compute_seconds > 0.0);
+    }
+
+    #[test]
+    fn threaded_map_matches_sequential() {
+        let mut c1 = cluster(6);
+        let seq = c1.map_each(|p, s| (p, s.x.nnz()));
+        let mut c2 = cluster(6);
+        c2.threads = 3;
+        let par = c2.map_each(|p, s| (p, s.x.nnz()));
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn more_nodes_means_deeper_tree_costs() {
+        let mut c4 = cluster(4);
+        let mut c16 = cluster(16);
+        c4.broadcast_vec();
+        c16.broadcast_vec();
+        assert!(c16.ledger.comm_seconds > c4.ledger.comm_seconds);
+        assert_eq!(c4.ledger.comm_passes, c16.ledger.comm_passes);
+    }
+}

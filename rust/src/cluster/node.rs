@@ -1,0 +1,29 @@
+//! Per-node state: the shard of examples node p owns (the paper's I_p).
+
+use crate::linalg::Csr;
+
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub x: Csr,
+    pub y: Vec<f64>,
+}
+
+impl Shard {
+    pub fn n_examples(&self) -> usize {
+        self.y.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_counts() {
+        let s = Shard {
+            x: Csr::from_rows(3, &[vec![(0, 1.0)], vec![(2, 2.0)]]),
+            y: vec![1.0, -1.0],
+        };
+        assert_eq!(s.n_examples(), 2);
+    }
+}

@@ -1,0 +1,104 @@
+//! A labeled sparse dataset: CSR features + ±1 labels.
+
+use crate::linalg::Csr;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub x: Csr,
+    /// labels in {−1, +1}
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(x: Csr, y: Vec<f64>) -> Dataset {
+        assert_eq!(x.n_rows(), y.len(), "feature/label count mismatch");
+        assert!(
+            y.iter().all(|&v| v == 1.0 || v == -1.0),
+            "labels must be ±1"
+        );
+        Dataset { x, y }
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.x.nnz()
+    }
+
+    /// Subset by row index (keeps order).
+    pub fn take(&self, rows: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.take_rows(rows),
+            y: rows.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Shuffled train/test split; `train_frac` in (0, 1].
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!(train_frac > 0.0 && train_frac <= 1.0);
+        let mut rng = Rng::new(seed);
+        let mut idx: Vec<usize> = (0..self.n_examples()).collect();
+        rng.shuffle(&mut idx);
+        let cut = ((self.n_examples() as f64) * train_frac).round() as usize;
+        let cut = cut.clamp(1, self.n_examples());
+        (self.take(&idx[..cut]), self.take(&idx[cut..]))
+    }
+
+    /// Fraction of +1 labels.
+    pub fn positive_rate(&self) -> f64 {
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64
+            / self.n_examples().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Csr;
+
+    fn tiny() -> Dataset {
+        let x = Csr::from_rows(
+            2,
+            &[
+                vec![(0, 1.0)],
+                vec![(1, 1.0)],
+                vec![(0, 1.0), (1, 1.0)],
+                vec![],
+            ],
+        );
+        Dataset::new(x, vec![1.0, -1.0, 1.0, -1.0])
+    }
+
+    #[test]
+    fn split_partitions_examples() {
+        let d = tiny();
+        let (tr, te) = d.split(0.5, 3);
+        assert_eq!(tr.n_examples() + te.n_examples(), 4);
+        assert_eq!(tr.n_examples(), 2);
+        assert_eq!(tr.n_features(), 2);
+    }
+
+    #[test]
+    fn positive_rate() {
+        assert_eq!(tiny().positive_rate(), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be ±1")]
+    fn rejects_bad_labels() {
+        Dataset::new(Csr::from_rows(1, &[vec![(0, 1.0)]]), vec![0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn rejects_length_mismatch() {
+        Dataset::new(Csr::from_rows(1, &[vec![(0, 1.0)]]), vec![1.0, -1.0]);
+    }
+}

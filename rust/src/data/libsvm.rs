@@ -1,0 +1,133 @@
+//! LIBSVM text format: `label idx:val idx:val ...` with 1-based feature
+//! indices — the format kdd2010 ships in, so a user with the real file
+//! can drop it straight in (`psgd train --data path.libsvm`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::data::dataset::Dataset;
+use crate::linalg::Csr;
+
+/// Parse from a reader. `n_features = 0` means "infer from max index".
+pub fn read(
+    reader: impl std::io::Read,
+    n_features: usize,
+) -> Result<Dataset, String> {
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut max_col = 0u32;
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line.map_err(|e| e.to_string())?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|e| format!("line {}: bad label: {e}", lineno + 1))?;
+        // normalize 0/1 labels to ±1 (some kdd2010 splits use 0/1)
+        let label = if label > 0.0 { 1.0 } else { -1.0 };
+        let mut row = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok.split_once(':').ok_or(format!(
+                "line {}: expected idx:val, got {tok:?}",
+                lineno + 1
+            ))?;
+            let idx: u32 = idx
+                .parse()
+                .map_err(|e| format!("line {}: bad index: {e}", lineno + 1))?;
+            if idx == 0 {
+                return Err(format!("line {}: libsvm indices are 1-based", lineno + 1));
+            }
+            let val: f32 = val
+                .parse()
+                .map_err(|e| format!("line {}: bad value: {e}", lineno + 1))?;
+            max_col = max_col.max(idx);
+            row.push((idx - 1, val));
+        }
+        rows.push(row);
+        labels.push(label);
+    }
+    let d = if n_features > 0 {
+        if (max_col as usize) > n_features {
+            return Err(format!(
+                "feature index {max_col} exceeds declared dimension {n_features}"
+            ));
+        }
+        n_features
+    } else {
+        max_col as usize
+    };
+    Ok(Dataset::new(Csr::from_rows(d.max(1), &rows), labels))
+}
+
+pub fn read_file(path: impl AsRef<Path>, n_features: usize) -> Result<Dataset, String> {
+    let f = std::fs::File::open(path.as_ref())
+        .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+    read(f, n_features)
+}
+
+/// Write in libsvm format (1-based indices).
+pub fn write(data: &Dataset, mut out: impl Write) -> std::io::Result<()> {
+    for i in 0..data.n_examples() {
+        let (cols, vals) = data.x.row(i);
+        write!(out, "{}", if data.y[i] > 0.0 { "+1" } else { "-1" })?;
+        for (c, v) in cols.iter().zip(vals) {
+            write!(out, " {}:{}", c + 1, v)?;
+        }
+        writeln!(out)?;
+    }
+    Ok(())
+}
+
+pub fn write_file(data: &Dataset, path: impl AsRef<Path>) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write(data, &mut f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "+1 3:0.5 1:1.0\n-1 2:2.0\n\n# comment\n+1 1:1\n";
+
+    #[test]
+    fn parses_sample() {
+        let d = read(SAMPLE.as_bytes(), 0).unwrap();
+        assert_eq!(d.n_examples(), 3);
+        assert_eq!(d.n_features(), 3);
+        assert_eq!(d.y, vec![1.0, -1.0, 1.0]);
+        // row 0 sorted: (0,1.0), (2,0.5)
+        assert_eq!(d.x.row(0).0, &[0, 2]);
+        assert_eq!(d.x.row(0).1, &[1.0, 0.5]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = read(SAMPLE.as_bytes(), 0).unwrap();
+        let mut buf = Vec::new();
+        write(&d, &mut buf).unwrap();
+        let d2 = read(buf.as_slice(), d.n_features()).unwrap();
+        assert_eq!(d.x, d2.x);
+        assert_eq!(d.y, d2.y);
+    }
+
+    #[test]
+    fn zero_one_labels_normalized() {
+        let d = read("1 1:1\n0 1:1\n".as_bytes(), 0).unwrap();
+        assert_eq!(d.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(read("+1 0:1\n".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn rejects_overflowing_declared_dim() {
+        assert!(read("+1 5:1\n".as_bytes(), 3).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Dataset substrate: storage ([`dataset`]), libsvm-format I/O
+//! ([`libsvm`]), the kdd2010-shaped synthetic generator ([`synth`]) and
+//! the example partitioner ([`partition`]).
+
+pub mod dataset;
+pub mod libsvm;
+pub mod partition;
+pub mod scale;
+pub mod stats;
+pub mod synth;

@@ -1,0 +1,104 @@
+//! Example partitioning over P nodes (the I_p of the paper).
+//!
+//! Two policies:
+//! - [`Partition::contiguous`] — block ranges in row order. With the
+//!   generator's `skew` knob this produces heterogeneous shards (nodes
+//!   see different feature neighborhoods), the regime the paper's
+//!   introduction worries about.
+//! - [`Partition::shuffled`] — random assignment, the homogeneous/iid
+//!   regime.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// node p owns rows `assignment[p]`
+    pub assignment: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn contiguous(n_examples: usize, n_nodes: usize) -> Partition {
+        assert!(n_nodes > 0 && n_nodes <= n_examples);
+        let base = n_examples / n_nodes;
+        let extra = n_examples % n_nodes;
+        let mut assignment = Vec::with_capacity(n_nodes);
+        let mut start = 0;
+        for p in 0..n_nodes {
+            let len = base + usize::from(p < extra);
+            assignment.push((start..start + len).collect());
+            start += len;
+        }
+        Partition { assignment }
+    }
+
+    pub fn shuffled(n_examples: usize, n_nodes: usize, seed: u64) -> Partition {
+        assert!(n_nodes > 0 && n_nodes <= n_examples);
+        let mut rng = Rng::new(seed);
+        let mut idx: Vec<usize> = (0..n_examples).collect();
+        rng.shuffle(&mut idx);
+        let mut part = Partition::contiguous(n_examples, n_nodes);
+        for rows in part.assignment.iter_mut() {
+            for r in rows.iter_mut() {
+                *r = idx[*r];
+            }
+        }
+        part
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Invariant: the shards form a disjoint cover of 0..n. Checked by
+    /// the property suite for both policies.
+    pub fn is_disjoint_cover(&self, n_examples: usize) -> bool {
+        let mut seen = vec![false; n_examples];
+        let mut count = 0;
+        for rows in &self.assignment {
+            for &r in rows {
+                if r >= n_examples || seen[r] {
+                    return false;
+                }
+                seen[r] = true;
+                count += 1;
+            }
+        }
+        count == n_examples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_covers_with_balanced_sizes() {
+        let p = Partition::contiguous(103, 10);
+        assert!(p.is_disjoint_cover(103));
+        let sizes: Vec<usize> = p.assignment.iter().map(|a| a.len()).collect();
+        assert!(sizes.iter().all(|&s| s == 10 || s == 11));
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+    }
+
+    #[test]
+    fn shuffled_covers_and_differs_from_contiguous() {
+        let p = Partition::shuffled(200, 7, 1);
+        assert!(p.is_disjoint_cover(200));
+        let c = Partition::contiguous(200, 7);
+        assert_ne!(p.assignment, c.assignment);
+    }
+
+    #[test]
+    fn shuffled_deterministic_in_seed() {
+        assert_eq!(
+            Partition::shuffled(50, 5, 3).assignment,
+            Partition::shuffled(50, 5, 3).assignment
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn more_nodes_than_examples_rejected() {
+        Partition::contiguous(3, 5);
+    }
+}

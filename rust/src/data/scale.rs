@@ -1,0 +1,148 @@
+//! Feature preprocessing for libsvm-style data — the transformations a
+//! real kdd2010 pipeline applies before training: L2 row normalization
+//! (what [8] uses), TF-IDF weighting for count features, and binary
+//! clipping.
+
+use crate::data::dataset::Dataset;
+use crate::linalg::Csr;
+
+/// Normalize every row to unit L2 norm (zero rows left untouched).
+/// With unit rows, per-example curvature is bounded by l''_max and the
+/// auto learning rates become shard-size-only dependent.
+pub fn l2_normalize_rows(data: &Dataset) -> Dataset {
+    let mut x = Csr::new(data.n_features());
+    for i in 0..data.n_examples() {
+        let (cols, vals) = data.x.row(i);
+        let norm: f64 =
+            vals.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        let row: Vec<(u32, f32)> = if norm > 0.0 {
+            cols.iter()
+                .zip(vals)
+                .map(|(&c, &v)| (c, (v as f64 / norm) as f32))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        x.push_row(row);
+    }
+    Dataset::new(x, data.y.clone())
+}
+
+/// Clip every value to {0, 1} presence indicators (kdd2010's features
+/// are mostly binary already; this makes synthetic count data match).
+pub fn binarize(data: &Dataset) -> Dataset {
+    let mut x = Csr::new(data.n_features());
+    for i in 0..data.n_examples() {
+        let (cols, vals) = data.x.row(i);
+        let row: Vec<(u32, f32)> = cols
+            .iter()
+            .zip(vals)
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(&c, _)| (c, 1.0))
+            .collect();
+        x.push_row(row);
+    }
+    Dataset::new(x, data.y.clone())
+}
+
+/// TF-IDF re-weighting: value ← value · ln(n / df(feature)), where df
+/// is the number of rows the feature occurs in. Features present in
+/// every row get weight 0 (standard smooth-less variant).
+pub fn tfidf(data: &Dataset) -> Dataset {
+    let n = data.n_examples();
+    let mut df = vec![0u32; data.n_features()];
+    for i in 0..n {
+        let (cols, _) = data.x.row(i);
+        for &c in cols {
+            df[c as usize] += 1;
+        }
+    }
+    let mut x = Csr::new(data.n_features());
+    for i in 0..n {
+        let (cols, vals) = data.x.row(i);
+        let row: Vec<(u32, f32)> = cols
+            .iter()
+            .zip(vals)
+            .map(|(&c, &v)| {
+                let idf = (n as f64 / df[c as usize].max(1) as f64).ln();
+                (c, (v as f64 * idf) as f32)
+            })
+            .filter(|(_, v)| *v != 0.0)
+            .collect();
+        x.push_row(row);
+    }
+    Dataset::new(x, data.y.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+
+    fn sample() -> Dataset {
+        SynthConfig {
+            n_examples: 80,
+            n_features: 60,
+            nnz_per_example: 6,
+            ..SynthConfig::default()
+        }
+        .generate(3)
+    }
+
+    #[test]
+    fn l2_rows_have_unit_norm() {
+        let d = l2_normalize_rows(&sample());
+        for (i, nsq) in d.x.row_norms_sq().iter().enumerate() {
+            if d.x.row(i).0.is_empty() {
+                continue;
+            }
+            assert!((nsq - 1.0).abs() < 1e-6, "row {i}: {nsq}");
+        }
+        // labels unchanged
+        assert_eq!(d.y, sample().y);
+    }
+
+    #[test]
+    fn binarize_gives_unit_values() {
+        let d = binarize(&sample());
+        assert!(d.x.values.iter().all(|&v| v == 1.0));
+        assert_eq!(d.n_examples(), 80);
+    }
+
+    #[test]
+    fn tfidf_downweights_ubiquitous_features() {
+        // construct: feature 0 in every row, feature 1 in one row
+        let x = Csr::from_rows(
+            2,
+            &[
+                vec![(0, 1.0), (1, 1.0)],
+                vec![(0, 1.0)],
+                vec![(0, 1.0)],
+            ],
+        );
+        let d = Dataset::new(x, vec![1.0, -1.0, 1.0]);
+        let t = tfidf(&d);
+        // feature 0: idf = ln(3/3) = 0 → dropped entirely
+        for i in 0..3 {
+            assert!(!t.x.row(i).0.contains(&0), "row {i} kept idf-0 feature");
+        }
+        // feature 1: idf = ln 3
+        let (c, v) = t.x.row(0);
+        assert_eq!(c, &[1]);
+        assert!((v[0] as f64 - 3.0f64.ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn training_works_after_preprocessing() {
+        use crate::algo::fs::{FsConfig, FsDriver};
+        use crate::algo::{Driver, StopRule};
+        use crate::cluster::{Cluster, CostModel};
+
+        let d = l2_normalize_rows(&sample());
+        let mut cluster = Cluster::partition(d, 4, CostModel::free());
+        let run = FsDriver::new(FsConfig { lam: 0.3, ..Default::default() })
+            .run(&mut cluster, None, &StopRule::iters(5));
+        assert!(run.f.is_finite());
+        assert!(run.trace.points.last().unwrap().f <= run.trace.points[0].f);
+    }
+}

@@ -1,0 +1,70 @@
+//! Dataset summary statistics — what `psgd gen-data --stats` prints and
+//! what EXPERIMENTS.md records next to each run.
+
+use crate::data::dataset::Dataset;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataStats {
+    pub n_examples: usize,
+    pub n_features: usize,
+    pub nnz: usize,
+    pub mean_nnz_per_example: f64,
+    pub max_nnz_per_example: usize,
+    pub positive_rate: f64,
+    /// number of features that never occur
+    pub unused_features: usize,
+}
+
+impl DataStats {
+    pub fn compute(d: &Dataset) -> DataStats {
+        let mut used = vec![false; d.n_features()];
+        let mut max_row = 0;
+        for i in 0..d.n_examples() {
+            let (cols, _) = d.x.row(i);
+            max_row = max_row.max(cols.len());
+            for &c in cols {
+                used[c as usize] = true;
+            }
+        }
+        DataStats {
+            n_examples: d.n_examples(),
+            n_features: d.n_features(),
+            nnz: d.nnz(),
+            mean_nnz_per_example: d.nnz() as f64 / d.n_examples().max(1) as f64,
+            max_nnz_per_example: max_row,
+            positive_rate: d.positive_rate(),
+            unused_features: used.iter().filter(|&&u| !u).count(),
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "examples={} features={} nnz={} mean_nnz/ex={:.1} max_nnz/ex={} pos_rate={:.3} unused_features={}",
+            self.n_examples,
+            self.n_features,
+            self.nnz,
+            self.mean_nnz_per_example,
+            self.max_nnz_per_example,
+            self.positive_rate,
+            self.unused_features
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+
+    #[test]
+    fn stats_consistent() {
+        let d = SynthConfig::small().generate(5);
+        let s = DataStats::compute(&d);
+        assert_eq!(s.n_examples, d.n_examples());
+        assert_eq!(s.nnz, d.nnz());
+        assert!(s.mean_nnz_per_example > 1.0);
+        assert!(s.max_nnz_per_example >= s.mean_nnz_per_example as usize);
+        assert!(s.unused_features < s.n_features);
+        assert!(!s.render().is_empty());
+    }
+}

@@ -1,0 +1,66 @@
+//! # psgd — "A Parallel SGD Method with Strong Convergence"
+//!
+//! Full-system reproduction of Mahajan, Sundararajan, Keerthi & Bottou
+//! (cs.LG 2013). The paper's contribution — Algorithm 1, a batch
+//! descent method whose search direction comes from *parallel SGD runs
+//! on gradient-consistent local approximations* — lives in
+//! [`algo::fs`]; everything else is the substrate it needs:
+//!
+//! - [`linalg`] — CSR sparse matrix + dense vector kernels.
+//! - [`data`] — libsvm I/O, the kdd2010-shaped synthetic generator,
+//!   example partitioning.
+//! - [`loss`] — the differentiable convex losses the theory covers.
+//! - [`objective`] — regularized risk, shard-local views, the tilted
+//!   approximation f̂_p (eq. 2).
+//! - [`opt`] — inner/core optimizers: SVRG, SGD, TRON, L-BFGS, CG and
+//!   the distributed Armijo–Wolfe line search.
+//! - [`cluster`] — the simulated AllReduce-tree cluster with an
+//!   explicit communication cost model (passes + modeled seconds).
+//! - [`algo`] — FS-s (Algorithm 1), SQM, Hybrid, parameter mixing and
+//!   the auto-switching extension.
+//! - [`metrics`] — AUPRC, convergence traces, run recording.
+//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); the dense three-layer path.
+//! - [`util`], [`bench`] — in-tree CLI/config/JSON/RNG/property-test/
+//!   bench-harness substrates (offline registry: see Cargo.toml).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the -Wl,-rpath flag the
+//! # // workspace builds use, so the xla runtime .so can't be loaded.
+//! use psgd::prelude::*;
+//!
+//! let data = psgd::data::synth::SynthConfig::small().generate(42);
+//! let (train, test) = data.split(0.9, 7);
+//! let lam = 1e-5 * train.n_examples() as f64;
+//! let mut cluster = Cluster::partition(train, 4, CostModel::default());
+//! let fs = FsDriver::new(FsConfig { lam, epochs: 2, ..Default::default() });
+//! let run = fs.run(&mut cluster, Some(&test), &StopRule::iters(5));
+//! println!("f = {}, {} comm passes", run.f, run.ledger.comm_passes);
+//! ```
+
+pub mod algo;
+pub mod bench;
+pub mod cluster;
+pub mod data;
+pub mod linalg;
+pub mod loss;
+pub mod metrics;
+pub mod objective;
+pub mod opt;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for the common driver workflow.
+pub mod prelude {
+    pub use crate::algo::fs::{FsConfig, FsDriver};
+    pub use crate::algo::hybrid::HybridDriver;
+    pub use crate::algo::param_mix::ParamMixDriver;
+    pub use crate::algo::sqm::{SqmConfig, SqmDriver};
+    pub use crate::algo::{Driver, RunResult, StopRule};
+    pub use crate::cluster::{Cluster, CostModel};
+    pub use crate::data::dataset::Dataset;
+    pub use crate::loss::LossKind;
+    pub use crate::metrics::trace::Trace;
+}

@@ -1,0 +1,238 @@
+//! Compressed-sparse-row matrix — the storage format for every data
+//! shard. kdd2010-class data is ~15 nnz/row over 20M columns, so all
+//! per-example work is nnz-proportional:
+//!
+//! - [`Csr::row_dot`] — zᵢ = xᵢ·w (margins)
+//! - [`Csr::add_row_scaled`] — g += α·xᵢ (gradient scatter)
+//! - [`Csr::matvec`] / [`Csr::tmatvec`] — full-shard X·w and Xᵀ·r
+//!
+//! Column indices are u32 (kdd2010's 20.21M features fit comfortably),
+//! values f32, offsets usize.
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csr {
+    pub n_cols: usize,
+    /// row i occupies indices[offsets[i]..offsets[i+1]]
+    pub offsets: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn new(n_cols: usize) -> Csr {
+        Csr { n_cols, offsets: vec![0], indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// Build from row triplets; each row is a (sorted-or-not) list of
+    /// (col, val). Duplicates within a row are summed.
+    pub fn from_rows(n_cols: usize, rows: &[Vec<(u32, f32)>]) -> Csr {
+        let mut m = Csr::new(n_cols);
+        for row in rows {
+            m.push_row(row.clone());
+        }
+        m
+    }
+
+    /// Append one row, sorting and merging duplicate columns.
+    pub fn push_row(&mut self, mut entries: Vec<(u32, f32)>) {
+        entries.sort_unstable_by_key(|&(c, _)| c);
+        let mut merged: Vec<(u32, f32)> = Vec::with_capacity(entries.len());
+        for (c, v) in entries {
+            assert!((c as usize) < self.n_cols, "col {c} out of bounds");
+            match merged.last_mut() {
+                Some((lc, lv)) if *lc == c => *lv += v,
+                _ => merged.push((c, v)),
+            }
+        }
+        for (c, v) in merged {
+            self.indices.push(c);
+            self.values.push(v);
+        }
+        self.offsets.push(self.indices.len());
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// (column indices, values) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.offsets[i], self.offsets[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// zᵢ = xᵢ·w
+    ///
+    /// §Perf: column indices are validated once at construction
+    /// (`push_row` asserts c < n_cols), so the hot loop uses unchecked
+    /// indexing — bounds checks cost ~15% on the scatter/gather paths.
+    #[inline]
+    pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
+        debug_assert!(w.len() >= self.n_cols);
+        let (cols, vals) = self.row(i);
+        let mut s = 0.0;
+        for (c, v) in cols.iter().zip(vals) {
+            // SAFETY: c < n_cols ≤ w.len(), enforced by push_row
+            s += *v as f64 * unsafe { *w.get_unchecked(*c as usize) };
+        }
+        s
+    }
+
+    /// g ← g + α·xᵢ (the nnz-sparse gradient scatter)
+    #[inline]
+    pub fn add_row_scaled(&self, i: usize, alpha: f64, g: &mut [f64]) {
+        debug_assert!(g.len() >= self.n_cols);
+        let (cols, vals) = self.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            // SAFETY: c < n_cols ≤ g.len(), enforced by push_row
+            unsafe {
+                *g.get_unchecked_mut(*c as usize) += alpha * *v as f64;
+            }
+        }
+    }
+
+    /// z = X·w over the whole shard (reuses `z`; z.len() == n_rows).
+    pub fn matvec(&self, w: &[f64], z: &mut [f64]) {
+        debug_assert_eq!(z.len(), self.n_rows());
+        for i in 0..self.n_rows() {
+            z[i] = self.row_dot(i, w);
+        }
+    }
+
+    /// g = Xᵀ·r accumulated into `g` (g.len() == n_cols).
+    pub fn tmatvec(&self, r: &[f64], g: &mut [f64]) {
+        debug_assert_eq!(r.len(), self.n_rows());
+        for i in 0..self.n_rows() {
+            let ri = r[i];
+            if ri != 0.0 {
+                self.add_row_scaled(i, ri, g);
+            }
+        }
+    }
+
+    /// ‖xᵢ‖² per row — used for Lipschitz/learning-rate estimates.
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        (0..self.n_rows())
+            .map(|i| {
+                let (_, vals) = self.row(i);
+                vals.iter().map(|v| (*v as f64).powi(2)).sum()
+            })
+            .collect()
+    }
+
+    /// Extract the sub-matrix of the given rows (shard construction).
+    pub fn take_rows(&self, rows: &[usize]) -> Csr {
+        let mut out = Csr::new(self.n_cols);
+        out.indices.reserve(rows.iter().map(|&i| self.offsets[i + 1] - self.offsets[i]).sum());
+        for &i in rows {
+            let (lo, hi) = (self.offsets[i], self.offsets[i + 1]);
+            out.indices.extend_from_slice(&self.indices[lo..hi]);
+            out.values.extend_from_slice(&self.values[lo..hi]);
+            out.offsets.push(out.indices.len());
+        }
+        out
+    }
+
+    /// Dense copy (tests and the PJRT dense path).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut out = vec![vec![0.0; self.n_cols]; self.n_rows()];
+        for i in 0..self.n_rows() {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                out[i][*c as usize] += *v as f64;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[1, 0, 2], [0, 3, 0], [0, 0, 0], [4, 5, 6]]
+        Csr::from_rows(
+            3,
+            &[
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(1, 3.0)],
+                vec![],
+                vec![(2, 6.0), (0, 4.0), (1, 5.0)], // unsorted on purpose
+            ],
+        )
+    }
+
+    #[test]
+    fn shape_and_nnz() {
+        let m = sample();
+        assert_eq!(m.n_rows(), 4);
+        assert_eq!(m.n_cols, 3);
+        assert_eq!(m.nnz(), 6);
+    }
+
+    #[test]
+    fn rows_sorted_and_duplicates_merged() {
+        let mut m = Csr::new(4);
+        m.push_row(vec![(2, 1.0), (0, 1.0), (2, 3.0)]);
+        let (cols, vals) = m.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = sample();
+        let w = vec![0.5, -1.0, 2.0];
+        let mut z = vec![0.0; 4];
+        m.matvec(&w, &mut z);
+        let dense = m.to_dense();
+        for i in 0..4 {
+            let want: f64 = dense[i].iter().zip(&w).map(|(a, b)| a * b).sum();
+            assert!((z[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tmatvec_matches_dense() {
+        let m = sample();
+        let r = vec![1.0, -2.0, 7.0, 0.5];
+        let mut g = vec![0.0; 3];
+        m.tmatvec(&r, &mut g);
+        let dense = m.to_dense();
+        for c in 0..3 {
+            let want: f64 = (0..4).map(|i| dense[i][c] * r[i]).sum();
+            assert!((g[c] - want).abs() < 1e-12, "col {c}");
+        }
+    }
+
+    #[test]
+    fn take_rows_subsets() {
+        let m = sample();
+        let s = m.take_rows(&[3, 1]);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.row(0).0, &[0, 1, 2]);
+        assert_eq!(s.row(1), ( &[1u32][..], &[3.0f32][..]));
+    }
+
+    #[test]
+    fn row_norms() {
+        let m = sample();
+        let n = m.row_norms_sq();
+        assert_eq!(n, vec![5.0, 9.0, 0.0, 77.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn col_bounds_enforced() {
+        let mut m = Csr::new(2);
+        m.push_row(vec![(2, 1.0)]);
+    }
+}

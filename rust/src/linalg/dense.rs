@@ -1,0 +1,140 @@
+//! Dense f64 vector kernels — the coordinator's hot loop primitives.
+//! Kept free-standing (not methods on a Vector newtype) so the
+//! optimizers read like the math in the paper.
+
+/// a·b
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane manual unroll: keeps the compiler on the vectorized path
+    // even at opt-level where autovectorization of the naive loop is
+    // blocked by float reassociation rules.
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// ‖a‖²
+#[inline]
+pub fn norm_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// ‖a‖₂
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    norm_sq(a).sqrt()
+}
+
+/// y ← y + αx
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y ← x + αy  (useful for CG's direction update)
+#[inline]
+pub fn xpay(x: &[f64], alpha: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = xi + alpha * *yi;
+    }
+}
+
+/// a ← αa
+#[inline]
+pub fn scale(a: &mut [f64], alpha: f64) {
+    for ai in a {
+        *ai *= alpha;
+    }
+}
+
+/// out ← a + αb (allocating)
+pub fn add_scaled(a: &[f64], alpha: f64, b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(ai, bi)| ai + alpha * bi).collect()
+}
+
+/// Elementwise a − b (allocating)
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(ai, bi)| ai - bi).collect()
+}
+
+/// Angle between a and b in radians, in [0, π]. Returns `None` when
+/// either vector is (numerically) zero — callers decide the policy
+/// (Algorithm 1 step 6 treats that as "replace by −g").
+pub fn angle(a: &[f64], b: &[f64]) -> Option<f64> {
+    let na = norm(a);
+    let nb = norm(b);
+    if na <= f64::EPSILON || nb <= f64::EPSILON {
+        return None;
+    }
+    let c = (dot(a, b) / (na * nb)).clamp(-1.0, 1.0);
+    Some(c.acos())
+}
+
+/// max_i |a_i − b_i|
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..103).map(|i| i as f64 * 0.1).collect();
+        let b: Vec<f64> = (0..103).map(|i| (103 - i) as f64 * 0.01).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_and_friends() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        xpay(&x, 0.5, &mut y);
+        assert_eq!(y, vec![7.0, 14.0, 21.0]);
+        scale(&mut y, 2.0);
+        assert_eq!(y, vec![14.0, 28.0, 42.0]);
+        assert_eq!(sub(&y, &y), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn angle_basics() {
+        let e1 = [1.0, 0.0];
+        let e2 = [0.0, 1.0];
+        let neg = [-1.0, 0.0];
+        assert!((angle(&e1, &e2).unwrap() - std::f64::consts::FRAC_PI_2).abs() < 1e-12);
+        assert!(angle(&e1, &e1).unwrap() < 1e-8);
+        assert!((angle(&e1, &neg).unwrap() - std::f64::consts::PI).abs() < 1e-12);
+        assert_eq!(angle(&e1, &[0.0, 0.0]), None);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(norm_sq(&[3.0, 4.0]), 25.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Linear-algebra substrate: dense f64 vector kernels and the CSR
+//! sparse matrix every shard is stored as. Weights are f64 (the
+//! optimizer's working precision); feature values are f32 (what
+//! kdd2010-class data actually needs), promoted at multiply time.
+
+pub mod csr;
+pub mod dense;
+
+pub use csr::Csr;

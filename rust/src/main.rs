@@ -1,0 +1,282 @@
+//! `psgd` — the launcher. Subcommands:
+//!
+//! ```text
+//! psgd gen-data  --out data.libsvm --examples 200000 --features 500000
+//! psgd train     --method fs --nodes 25 --epochs 2 --lambda 1e-3 ...
+//! psgd figure1   --nodes 25 --out-dir results/
+//! psgd info      [--artifacts artifacts/]
+//! ```
+//!
+//! `train` accepts either `--data file.libsvm` or synthetic-generator
+//! knobs, and either CLI flags or `--config exp.toml` (CLI wins).
+
+use psgd::algo::autoswitch::{AutoSwitchConfig, AutoSwitchDriver};
+use psgd::algo::fs::{FsConfig, FsDriver, InnerSolver};
+use psgd::algo::hybrid::{HybridConfig, HybridDriver};
+use psgd::algo::param_mix::{ParamMixConfig, ParamMixDriver};
+use psgd::algo::safeguard::Safeguard;
+use psgd::algo::sqm::{CoreOpt, SqmConfig, SqmDriver};
+use psgd::algo::{Driver, StopRule};
+use psgd::cluster::{Cluster, CostModel};
+use psgd::data::dataset::Dataset;
+use psgd::data::stats::DataStats;
+use psgd::data::synth::SynthConfig;
+use psgd::data::libsvm;
+use psgd::loss::LossKind;
+use psgd::bench::figure1::{self, Figure1Config, Panel};
+use psgd::bench::plot::AsciiPlot;
+use psgd::util::cli::Args;
+use psgd::util::config::Config;
+
+const USAGE: &str = "\
+psgd — A Parallel SGD Method with Strong Convergence (reproduction)
+
+USAGE: psgd <command> [flags]
+
+COMMANDS
+  gen-data   generate kdd2010-shaped synthetic data (libsvm format)
+               --out PATH --examples N --features D --nnz K --skew S
+               --seed S [--stats]
+  train      run one distributed training method
+               --method fs|sqm|sqm-lbfgs|hybrid|parammix|autoswitch
+               --nodes P --lambda L --loss logistic|squared_hinge|least_squares
+               --epochs s --batch B --iters N --theta-deg T
+               --inner svrg|sgd|lbfgs|tron
+               [--data FILE | --examples N --features D --skew S]
+               [--config exp.toml] [--trace out.csv] [--fstar]
+               [--test-frac F] [--seed S] [--threads T]
+  figure1    regenerate the paper's Figure 1 panels for one node count
+               --nodes P [--full] [--out-dir results/] [--iters N]
+  info       show the AOT artifact manifest and PJRT platform
+               [--artifacts DIR]
+  help       this message
+";
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("gen-data") => gen_data(&args),
+        Some("train") => train(&args),
+        Some("figure1") => figure1_cmd(&args),
+        Some("info") => info(&args),
+        _ => print!("{USAGE}"),
+    }
+}
+
+fn figure1_cmd(args: &Args) {
+    let nodes = args.usize("nodes", 25);
+    let mut cfg = if args.bool("full", false) {
+        Figure1Config::full(nodes)
+    } else {
+        Figure1Config::small(nodes)
+    };
+    cfg.iters = args.usize("iters", cfg.iters);
+    cfg.seed = args.usize("seed", 42) as u64;
+    let out_dir = args.get_or("out-dir", "results");
+    eprintln!("running {cfg:?}");
+    let out = figure1::run(&cfg);
+    println!("f* = {:.8e}", out.f_star);
+    for trace in &out.traces {
+        let path = format!("{out_dir}/fig1_{nodes}nodes_{}.csv", trace.label);
+        trace.to_table(out.f_star).save(&path).expect("write csv");
+        println!("wrote {path}");
+    }
+    for panel in [Panel::GapVsPasses, Panel::GapVsTime, Panel::AuprcVsTime] {
+        let series: Vec<(String, Vec<(f64, f64)>)> = out
+            .traces
+            .iter()
+            .map(|t| {
+                (
+                    t.label.clone(),
+                    panel
+                        .series(t, out.f_star)
+                        .into_iter()
+                        .filter(|&(_, y)| !panel.log_y() || y > 0.0)
+                        .collect(),
+                )
+            })
+            .collect();
+        let plot = AsciiPlot { log_y: panel.log_y(), ..Default::default() };
+        println!("\n{}", plot.render(panel.title(), &series));
+    }
+}
+
+fn gen_data(args: &Args) {
+    let cfg = SynthConfig {
+        n_examples: args.usize("examples", 10_000),
+        n_features: args.usize("features", 50_000),
+        nnz_per_example: args.usize("nnz", 35),
+        skew: args.f64("skew", 0.5),
+        label_noise: args.f64("noise", 0.05),
+        ..SynthConfig::default()
+    };
+    let seed = args.usize("seed", 42) as u64;
+    eprintln!("generating {cfg:?} (seed {seed})...");
+    let data = cfg.generate(seed);
+    if args.bool("stats", false) {
+        println!("{}", DataStats::compute(&data).render());
+    }
+    let out = args.get_or("out", "data.libsvm");
+    libsvm::write_file(&data, out).expect("write dataset");
+    eprintln!("wrote {out}");
+}
+
+fn load_data(args: &Args, cfg: &Config) -> Dataset {
+    if let Some(path) = args.get("data") {
+        eprintln!("loading {path}...");
+        libsvm::read_file(path, args.usize("declared-features", 0))
+            .expect("parse libsvm")
+    } else {
+        let synth = SynthConfig {
+            n_examples: args
+                .usize("examples", cfg.usize("data", "examples", 20_000)),
+            n_features: args
+                .usize("features", cfg.usize("data", "features", 100_000)),
+            nnz_per_example: args.usize("nnz", cfg.usize("data", "nnz", 35)),
+            skew: args.f64("skew", cfg.f64("data", "skew", 0.5)),
+            ..SynthConfig::default()
+        };
+        synth.generate(args.usize("seed", 42) as u64)
+    }
+}
+
+fn train(args: &Args) {
+    let cfg = match args.get("config") {
+        Some(p) => Config::load(p).expect("config file"),
+        None => Config::default(),
+    };
+    let loss = LossKind::parse(
+        args.get_or("loss", cfg.get("train", "loss").unwrap_or("logistic")),
+    )
+    .expect("unknown loss");
+    let lam = args.f64("lambda", cfg.f64("train", "lambda", 1e-3));
+    let nodes = args.usize("nodes", cfg.usize("train", "nodes", 4));
+    let epochs = args.usize("epochs", cfg.usize("train", "epochs", 2));
+    let batch = args.usize("batch", cfg.usize("train", "batch", 64));
+    let iters = args.usize("iters", cfg.usize("train", "iters", 30));
+    let seed = args.usize("seed", 42) as u64;
+    let test_frac = args.f64("test-frac", 0.1);
+
+    let data = load_data(args, &cfg);
+    eprintln!("data: {}", DataStats::compute(&data).render());
+    let (train_set, test_set) = data.split(1.0 - test_frac, seed ^ 1);
+    let mut cluster = Cluster::partition(train_set, nodes, CostModel::default());
+    cluster.threads = args.usize("threads", 1);
+
+    let method = args.get_or("method", "fs");
+    let inner = match args.get_or("inner", "svrg") {
+        "svrg" => InnerSolver::Svrg,
+        "sgd" => InnerSolver::Sgd,
+        "lbfgs" => InnerSolver::Lbfgs,
+        "tron" => InnerSolver::Tron,
+        other => panic!("unknown inner solver {other:?}"),
+    };
+    let fs_config = FsConfig {
+        loss,
+        lam,
+        epochs,
+        batch,
+        inner,
+        safeguard: match args.get("theta-deg") {
+            Some(_) => Safeguard::from_degrees(args.f64("theta-deg", 90.0)),
+            None => Safeguard::default(),
+        },
+        seed,
+        ..Default::default()
+    };
+    let driver: Box<dyn Driver> = match method {
+        "fs" => Box::new(FsDriver::new(fs_config)),
+        "sqm" => Box::new(SqmDriver::new(SqmConfig {
+            loss,
+            lam,
+            ..Default::default()
+        })),
+        "sqm-lbfgs" => Box::new(SqmDriver::new(SqmConfig {
+            loss,
+            lam,
+            core: CoreOpt::Lbfgs,
+            ..Default::default()
+        })),
+        "hybrid" => {
+            let mut h = HybridConfig::default();
+            h.sqm.loss = loss;
+            h.sqm.lam = lam;
+            Box::new(HybridDriver::with_objective(h))
+        }
+        "parammix" => Box::new(ParamMixDriver::new(ParamMixConfig {
+            loss,
+            lam,
+            epochs,
+            seed,
+            ..Default::default()
+        })),
+        "autoswitch" => {
+            let mut a = AutoSwitchConfig::default();
+            a.fs = fs_config;
+            Box::new(AutoSwitchDriver::new(a))
+        }
+        other => panic!("unknown method {other:?}"),
+    };
+
+    eprintln!(
+        "running {} on {} nodes (loss={}, λ={lam}, s={epochs})",
+        driver.name(),
+        cluster.n_nodes(),
+        loss.name()
+    );
+    let test_opt = if test_set.n_examples() > 0 { Some(&test_set) } else { None };
+    let run = driver.run(&mut cluster, test_opt, &StopRule::iters(iters));
+
+    // optional high-accuracy f* for relative gaps
+    let f_star = if args.bool("fstar", false) {
+        eprintln!("computing f* to high accuracy (TRON)...");
+        let mut fresh = cluster.fork_fresh();
+        let sqm = SqmDriver::new(SqmConfig { loss, lam, ..Default::default() });
+        let mut stop = StopRule::iters(500);
+        stop.gnorm_rel = 1e-12;
+        sqm.run(&mut fresh, None, &stop).f
+    } else {
+        run.f
+    };
+
+    println!("method,iters,f,comm_passes,sim_seconds,auprc");
+    let last = run.trace.last().cloned().unwrap_or_default();
+    println!(
+        "{},{},{:.8e},{},{:.3},{:.4}",
+        driver.name(),
+        run.trace.points.len(),
+        run.f,
+        last.comm_passes,
+        last.seconds,
+        last.auprc
+    );
+    if let Some(path) = args.get("trace") {
+        run.trace.to_table(f_star).save(path).expect("write trace");
+        eprintln!("trace written to {path}");
+    }
+}
+
+fn info(args: &Args) {
+    let dir = args.get_or("artifacts", "artifacts");
+    match psgd::runtime::DenseRuntime::load(dir) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            println!(
+                "artifact shapes: n={} d={} batch={} loss={} dtype={}",
+                rt.manifest.n,
+                rt.manifest.d,
+                rt.manifest.batch,
+                rt.manifest.loss,
+                rt.manifest.dtype
+            );
+            for (name, path) in &rt.manifest.artifacts {
+                println!("  {name}: {}", path.display());
+            }
+        }
+        Err(e) => {
+            eprintln!("could not load runtime from {dir}: {e:#}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+    }
+}

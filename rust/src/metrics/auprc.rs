@@ -1,0 +1,118 @@
+//! Area under the precision–recall curve, computed exactly by the
+//! standard score-sweep (ties handled as a block, AP-style
+//! interpolation: area = Σ_k (R_k − R_{k−1})·P_k over distinct
+//! thresholds).
+
+/// `scores[i]` is the classifier margin for example i, `labels[i]` ±1.
+/// Returns AUPRC in [0, 1]; 0/0-degenerate inputs (no positives) give 0.
+pub fn auprc(scores: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    if n_pos == 0 || scores.is_empty() {
+        return 0.0;
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).expect("NaN score")
+    });
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut area = 0.0;
+    let mut prev_recall = 0.0;
+    let mut k = 0;
+    while k < idx.len() {
+        // consume the whole tie block at this threshold
+        let threshold = scores[idx[k]];
+        while k < idx.len() && scores[idx[k]] == threshold {
+            if labels[idx[k]] > 0.0 {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+            k += 1;
+        }
+        let recall = tp as f64 / n_pos as f64;
+        let precision = tp as f64 / (tp + fp) as f64;
+        area += (recall - prev_recall) * precision;
+        prev_recall = recall;
+    }
+    area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn perfect_ranking_gives_one() {
+        let scores = vec![3.0, 2.0, 1.0, -1.0, -2.0];
+        let labels = vec![1.0, 1.0, 1.0, -1.0, -1.0];
+        assert!((auprc(&scores, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_ranking_is_poor() {
+        let scores = vec![-2.0, -1.0, 1.0, 2.0];
+        let labels = vec![1.0, 1.0, -1.0, -1.0];
+        let a = auprc(&scores, &labels);
+        assert!(a < 0.5, "a={a}");
+    }
+
+    #[test]
+    fn random_scores_approach_positive_rate() {
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let scores: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let labels: Vec<f64> =
+            (0..n).map(|_| if rng.bernoulli(0.3) { 1.0 } else { -1.0 }).collect();
+        let a = auprc(&scores, &labels);
+        let base = labels.iter().filter(|&&y| y > 0.0).count() as f64 / n as f64;
+        assert!((a - base).abs() < 0.03, "a={a} base={base}");
+    }
+
+    #[test]
+    fn ties_handled_as_block() {
+        // all scores equal → single PR point (recall 1, precision = base)
+        let scores = vec![0.5; 6];
+        let labels = vec![1.0, -1.0, 1.0, -1.0, -1.0, -1.0];
+        let a = auprc(&scores, &labels);
+        assert!((a - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_positives_is_zero() {
+        assert_eq!(auprc(&[1.0, 2.0], &[-1.0, -1.0]), 0.0);
+        assert_eq!(auprc(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        // brute force: AP = mean over positives, of precision at that
+        // positive's rank (equivalent for distinct scores)
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let n = 3 + rng.below(60);
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let labels: Vec<f64> =
+                (0..n).map(|_| rng.sign()).collect();
+            if !labels.iter().any(|&y| y > 0.0) {
+                continue;
+            }
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            let mut tp = 0.0;
+            let mut ap = 0.0;
+            let npos = labels.iter().filter(|&&y| y > 0.0).count() as f64;
+            for (rank, &i) in idx.iter().enumerate() {
+                if labels[i] > 0.0 {
+                    tp += 1.0;
+                    ap += tp / (rank as f64 + 1.0);
+                }
+            }
+            ap /= npos;
+            let a = auprc(&scores, &labels);
+            assert!((a - ap).abs() < 1e-12, "a={a} ap={ap}");
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation metrics and run recording: AUPRC (the paper's
+//! generalization criterion), relative objective gap, and the per-
+//! iteration trace each driver emits.
+
+pub mod auprc;
+pub mod report;
+pub mod trace;
+
+pub use auprc::auprc;
+pub use trace::{Trace, TracePoint};

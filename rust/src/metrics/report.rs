@@ -1,0 +1,133 @@
+//! Experiment report generation: turn a set of traces into the
+//! markdown tables EXPERIMENTS.md records — passes/time to target gaps,
+//! final metrics, safeguard counts.
+
+use crate::metrics::trace::Trace;
+use std::fmt::Write as _;
+
+/// Comparison report over several method traces against a shared f*.
+pub struct Report<'a> {
+    pub traces: &'a [Trace],
+    pub f_star: f64,
+    /// relative-gap milestones for the to-target table
+    pub targets: Vec<f64>,
+}
+
+impl<'a> Report<'a> {
+    pub fn new(traces: &'a [Trace], f_star: f64) -> Report<'a> {
+        Report { traces, f_star, targets: vec![1e-1, 1e-2, 1e-3, 1e-4] }
+    }
+
+    /// First (passes, seconds) at which a trace's relative gap ≤ t.
+    fn first_at(&self, trace: &Trace, t: f64) -> Option<(f64, f64)> {
+        trace
+            .points
+            .iter()
+            .find(|p| (p.f - self.f_star) / self.f_star.abs() <= t)
+            .map(|p| (p.comm_passes, p.seconds))
+    }
+
+    /// Markdown: comm passes to reach each milestone, per method.
+    pub fn passes_table(&self) -> String {
+        let mut out = String::from("| method |");
+        for t in &self.targets {
+            let _ = write!(out, " gap ≤ {t:.0e} |");
+        }
+        out.push('\n');
+        out.push_str("|---|");
+        out.push_str(&"---|".repeat(self.targets.len()));
+        out.push('\n');
+        for trace in self.traces {
+            let _ = write!(out, "| {} |", trace.label);
+            for &t in &self.targets {
+                match self.first_at(trace, t) {
+                    Some((p, _)) => {
+                        let _ = write!(out, " {p:.0} |");
+                    }
+                    None => out.push_str(" — |"),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Markdown: final state of each method.
+    pub fn summary_table(&self) -> String {
+        let mut out = String::from(
+            "| method | iters | final gap | passes | sim-sec | auprc | safeguard hits |\n|---|---|---|---|---|---|---|\n",
+        );
+        for trace in self.traces {
+            if let Some(p) = trace.points.last() {
+                let gap = (p.f - self.f_star) / self.f_star.abs();
+                let hits: usize =
+                    trace.points.iter().map(|q| q.safeguard_hits).sum();
+                let _ = writeln!(
+                    out,
+                    "| {} | {} | {:.3e} | {:.0} | {:.1} | {:.4} | {} |",
+                    trace.label,
+                    trace.points.len(),
+                    gap,
+                    p.comm_passes,
+                    p.seconds,
+                    p.auprc,
+                    hits
+                );
+            }
+        }
+        out
+    }
+
+    pub fn render(&self, title: &str) -> String {
+        format!(
+            "## {title}\n\nf* = {:.8e}\n\n### passes to target gap\n\n{}\n### final state\n\n{}",
+            self.f_star,
+            self.passes_table(),
+            self.summary_table()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::trace::TracePoint;
+
+    fn trace(label: &str, gaps: &[f64]) -> Trace {
+        let mut t = Trace::new(label);
+        for (i, g) in gaps.iter().enumerate() {
+            t.push(TracePoint {
+                iter: i,
+                f: 1.0 + g,
+                gnorm: 1.0,
+                comm_passes: 4.0 * (i as f64 + 1.0),
+                seconds: 0.5 * (i as f64 + 1.0),
+                auprc: 0.7,
+                safeguard_hits: usize::from(i == 0),
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn passes_table_finds_milestones() {
+        let traces =
+            vec![trace("fs-2", &[0.5, 0.05, 0.005]), trace("sqm", &[0.5, 0.2, 0.05])];
+        let r = Report::new(&traces, 1.0);
+        let table = r.passes_table();
+        // fs reaches 1e-2 at point index 2 → 12 passes
+        assert!(table.contains("| fs-2 | 8 | 12 |"), "{table}");
+        // sqm never reaches 1e-3
+        assert!(table.lines().last().unwrap().contains("—"), "{table}");
+    }
+
+    #[test]
+    fn summary_has_all_methods() {
+        let traces = vec![trace("a", &[0.1]), trace("b", &[0.2, 0.1])];
+        let r = Report::new(&traces, 1.0);
+        let s = r.summary_table();
+        assert!(s.contains("| a |") && s.contains("| b |"));
+        let full = r.render("test run");
+        assert!(full.contains("## test run"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Convergence traces: one point per outer iteration, carrying exactly
+//! the quantities Figure 1 plots — objective value against both
+//! communication passes and simulated time, plus test AUPRC.
+
+use crate::util::csv::Table;
+use crate::util::json::Value;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TracePoint {
+    pub iter: usize,
+    pub f: f64,
+    pub gnorm: f64,
+    pub comm_passes: f64,
+    pub seconds: f64,
+    /// test-set AUPRC if evaluated this iteration (NaN = skipped)
+    pub auprc: f64,
+    /// Algorithm 1 step 6: how many nodes' d_p were replaced by −gʳ
+    pub safeguard_hits: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub points: Vec<TracePoint>,
+    /// name of the method that produced this trace (plot label)
+    pub label: String,
+}
+
+impl Trace {
+    pub fn new(label: impl Into<String>) -> Trace {
+        Trace { points: Vec::new(), label: label.into() }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn last(&self) -> Option<&TracePoint> {
+        self.points.last()
+    }
+
+    /// Relative objective gap series (f − f*)/f* against a reference
+    /// optimum (Figure 1's y-axis, log scale).
+    pub fn rel_gap(&self, f_star: f64) -> Vec<f64> {
+        self.points
+            .iter()
+            .map(|p| (p.f - f_star) / f_star.abs().max(f64::MIN_POSITIVE))
+            .collect()
+    }
+
+    /// Figure-1-shaped table: iter, comm passes, seconds, f, relgap, auprc.
+    pub fn to_table(&self, f_star: f64) -> Table {
+        let mut t = Table::new(&[
+            "iter", "comm_passes", "seconds", "f", "rel_gap", "auprc",
+            "safeguard_hits",
+        ]);
+        for (p, gap) in self.points.iter().zip(self.rel_gap(f_star)) {
+            t.push(vec![
+                p.iter as f64,
+                p.comm_passes,
+                p.seconds,
+                p.f,
+                gap,
+                p.auprc,
+                p.safeguard_hits as f64,
+            ]);
+        }
+        t
+    }
+
+    pub fn to_json(&self, f_star: f64) -> Value {
+        Value::obj(vec![
+            ("label", Value::Str(self.label.clone())),
+            ("f_star", Value::Num(f_star)),
+            (
+                "points",
+                Value::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Value::obj(vec![
+                                ("iter", Value::Num(p.iter as f64)),
+                                ("f", Value::Num(p.f)),
+                                ("gnorm", Value::Num(p.gnorm)),
+                                ("comm_passes", Value::Num(p.comm_passes)),
+                                ("seconds", Value::Num(p.seconds)),
+                                ("auprc", Value::Num(p.auprc)),
+                                (
+                                    "safeguard_hits",
+                                    Value::Num(p.safeguard_hits as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut t = Trace::new("fs-2");
+        for i in 0..3 {
+            t.push(TracePoint {
+                iter: i,
+                f: 10.0 / (i + 1) as f64,
+                gnorm: 1.0,
+                comm_passes: 4.0 * i as f64,
+                seconds: 0.5 * i as f64,
+                auprc: 0.8,
+                safeguard_hits: 0,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn rel_gap_decreasing() {
+        let t = sample();
+        let g = t.rel_gap(1.0);
+        assert_eq!(g.len(), 3);
+        assert!(g[0] > g[1] && g[1] > g[2]);
+        assert!((g[0] - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_has_figure1_columns() {
+        let t = sample().to_table(1.0);
+        assert_eq!(t.columns[1], "comm_passes");
+        assert_eq!(t.rows.len(), 3);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = sample().to_json(1.0);
+        let parsed =
+            crate::util::json::parse(&j.to_json(2)).expect("valid json");
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("fs-2"));
+    }
+}

@@ -1,0 +1,326 @@
+//! Objectives: the regularized risk f(w) and the paper's
+//! gradient-consistent local approximation f̂_p (eq. 2).
+//!
+//! `f(w) = (λ/2)‖w‖² + Σ_i l(w·x_i, y_i)` — note the paper uses the
+//! *sum* of losses, not the mean; λ is scaled accordingly by callers.
+
+use crate::linalg::{dense, Csr};
+use crate::loss::LossKind;
+
+/// A differentiable objective on R^d. Implemented by the full
+/// regularized risk (single-machine view) and by the tilted local
+/// approximation each node optimizes in Algorithm 1 step 5.
+pub trait Objective {
+    fn dim(&self) -> usize;
+    fn value(&self, w: &[f64]) -> f64;
+    /// out ← ∇f(w)
+    fn grad(&self, w: &[f64], out: &mut [f64]);
+    /// Fused value+gradient (one pass over the data).
+    fn value_grad(&self, w: &[f64], out: &mut [f64]) -> f64 {
+        self.grad(w, out);
+        self.value(w)
+    }
+    /// out ← ∇²f(w)·v — needed by TRON; optional elsewhere.
+    fn hess_vec(&self, _w: &[f64], _v: &[f64], _out: &mut [f64]) {
+        unimplemented!("Hessian-vector product not provided")
+    }
+}
+
+/// Shard-level loss pass: returns Σ l_i and accumulates Xᵀ l' into
+/// `grad` (which the caller zeroes); also exposes the margin by-product
+/// z_i = w·x_i the paper reuses for its line search (step 1).
+pub fn shard_loss_grad(
+    x: &Csr,
+    y: &[f64],
+    w: &[f64],
+    loss: LossKind,
+    grad: &mut [f64],
+    margins_out: Option<&mut Vec<f64>>,
+) -> f64 {
+    debug_assert_eq!(x.n_rows(), y.len());
+    let mut val = 0.0;
+    if let Some(z) = margins_out {
+        z.resize(x.n_rows(), 0.0);
+        for i in 0..x.n_rows() {
+            let zi = x.row_dot(i, w);
+            z[i] = zi;
+            val += loss.value(zi, y[i]);
+            let r = loss.deriv(zi, y[i]);
+            if r != 0.0 {
+                x.add_row_scaled(i, r, grad);
+            }
+        }
+    } else {
+        for i in 0..x.n_rows() {
+            let zi = x.row_dot(i, w);
+            val += loss.value(zi, y[i]);
+            let r = loss.deriv(zi, y[i]);
+            if r != 0.0 {
+                x.add_row_scaled(i, r, grad);
+            }
+        }
+    }
+    val
+}
+
+/// The full regularized risk over one dataset (single-machine view and
+/// per-test oracle): f(w) = (λ/2)‖w‖² + Σ l(w·xᵢ, yᵢ).
+pub struct RegularizedLoss<'a> {
+    pub x: &'a Csr,
+    pub y: &'a [f64],
+    pub loss: LossKind,
+    pub lam: f64,
+}
+
+impl<'a> Objective for RegularizedLoss<'a> {
+    fn dim(&self) -> usize {
+        self.x.n_cols
+    }
+
+    fn value(&self, w: &[f64]) -> f64 {
+        let mut v = 0.5 * self.lam * dense::norm_sq(w);
+        for i in 0..self.x.n_rows() {
+            v += self.loss.value(self.x.row_dot(i, w), self.y[i]);
+        }
+        v
+    }
+
+    fn grad(&self, w: &[f64], out: &mut [f64]) {
+        out.iter_mut().for_each(|g| *g = 0.0);
+        shard_loss_grad(self.x, self.y, w, self.loss, out, None);
+        dense::axpy(self.lam, w, out);
+    }
+
+    fn value_grad(&self, w: &[f64], out: &mut [f64]) -> f64 {
+        out.iter_mut().for_each(|g| *g = 0.0);
+        let lv = shard_loss_grad(self.x, self.y, w, self.loss, out, None);
+        dense::axpy(self.lam, w, out);
+        lv + 0.5 * self.lam * dense::norm_sq(w)
+    }
+
+    /// H·v = λv + Xᵀ D X v, D_ii = l''(zᵢ, yᵢ)
+    fn hess_vec(&self, w: &[f64], v: &[f64], out: &mut [f64]) {
+        out.iter_mut().for_each(|g| *g = 0.0);
+        for i in 0..self.x.n_rows() {
+            let zi = self.x.row_dot(i, w);
+            let dii = self.loss.second_deriv(zi, self.y[i]);
+            if dii != 0.0 {
+                let xv = self.x.row_dot(i, v);
+                self.x.add_row_scaled(i, dii * xv, out);
+            }
+        }
+        dense::axpy(self.lam, v, out);
+    }
+}
+
+/// The paper's eq. (2): the gradient-consistent local approximation
+///
+/// f̂_p(w) = (λ/2)‖w‖² + L_p(w) + tilt·(w − wʳ),
+/// tilt = gʳ − λwʳ − ∇L_p(wʳ)
+///
+/// so ∇f̂_p(wʳ) = gʳ exactly. Owns copies of wʳ/tilt (they change every
+/// outer iteration), borrows the immutable shard.
+pub struct LocalApprox<'a> {
+    pub x: &'a Csr,
+    pub y: &'a [f64],
+    pub loss: LossKind,
+    pub lam: f64,
+    pub w_r: Vec<f64>,
+    pub tilt: Vec<f64>,
+}
+
+impl<'a> LocalApprox<'a> {
+    /// Build from the global iterate and gradient. `grad_lp_wr` is
+    /// ∇L_p(wʳ) (the shard's loss-gradient at wʳ, no λ term).
+    pub fn new(
+        x: &'a Csr,
+        y: &'a [f64],
+        loss: LossKind,
+        lam: f64,
+        w_r: &[f64],
+        g_r: &[f64],
+        grad_lp_wr: &[f64],
+    ) -> LocalApprox<'a> {
+        let tilt: Vec<f64> = (0..w_r.len())
+            .map(|j| g_r[j] - lam * w_r[j] - grad_lp_wr[j])
+            .collect();
+        LocalApprox { x, y, loss, lam, w_r: w_r.to_vec(), tilt }
+    }
+}
+
+impl<'a> Objective for LocalApprox<'a> {
+    fn dim(&self) -> usize {
+        self.x.n_cols
+    }
+
+    fn value(&self, w: &[f64]) -> f64 {
+        let mut v = 0.5 * self.lam * dense::norm_sq(w);
+        for i in 0..self.x.n_rows() {
+            v += self.loss.value(self.x.row_dot(i, w), self.y[i]);
+        }
+        // tilt·(w − wʳ)
+        v + dense::dot(&self.tilt, w) - dense::dot(&self.tilt, &self.w_r)
+    }
+
+    fn grad(&self, w: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(&self.tilt);
+        shard_loss_grad(self.x, self.y, w, self.loss, out, None);
+        dense::axpy(self.lam, w, out);
+    }
+
+    fn hess_vec(&self, w: &[f64], v: &[f64], out: &mut [f64]) {
+        // the tilt is linear — same Hessian as the untilted local risk
+        RegularizedLoss { x: self.x, y: self.y, loss: self.loss, lam: self.lam }
+            .hess_vec(w, v, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+    use crate::loss::ALL_LOSSES;
+    use crate::util::rng::Rng;
+
+    fn fd_grad(obj: &impl Objective, w: &[f64]) -> Vec<f64> {
+        let eps = 1e-6;
+        let mut g = vec![0.0; w.len()];
+        let mut wp = w.to_vec();
+        for j in 0..w.len() {
+            wp[j] = w[j] + eps;
+            let fp = obj.value(&wp);
+            wp[j] = w[j] - eps;
+            let fm = obj.value(&wp);
+            wp[j] = w[j];
+            g[j] = (fp - fm) / (2.0 * eps);
+        }
+        g
+    }
+
+    fn tiny_problem() -> (crate::data::dataset::Dataset, Vec<f64>) {
+        let d = SynthConfig {
+            n_examples: 40,
+            n_features: 12,
+            nnz_per_example: 4,
+            ..SynthConfig::default()
+        }
+        .generate(11);
+        let mut rng = Rng::new(3);
+        let w: Vec<f64> = (0..12).map(|_| rng.normal() * 0.3).collect();
+        (d, w)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (d, w) = tiny_problem();
+        for loss in ALL_LOSSES {
+            let obj = RegularizedLoss { x: &d.x, y: &d.y, loss, lam: 0.3 };
+            let mut g = vec![0.0; 12];
+            obj.grad(&w, &mut g);
+            let fd = fd_grad(&obj, &w);
+            assert!(
+                dense::max_abs_diff(&g, &fd) < 1e-4,
+                "{loss:?}: {g:?} vs {fd:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn value_grad_consistent_with_parts() {
+        let (d, w) = tiny_problem();
+        let obj = RegularizedLoss {
+            x: &d.x,
+            y: &d.y,
+            loss: LossKind::Logistic,
+            lam: 0.1,
+        };
+        let mut g1 = vec![0.0; 12];
+        let v1 = obj.value_grad(&w, &mut g1);
+        let mut g2 = vec![0.0; 12];
+        obj.grad(&w, &mut g2);
+        assert!((v1 - obj.value(&w)).abs() < 1e-12);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn hess_vec_matches_gradient_difference() {
+        let (d, w) = tiny_problem();
+        for loss in [LossKind::Logistic, LossKind::LeastSquares] {
+            let obj = RegularizedLoss { x: &d.x, y: &d.y, loss, lam: 0.2 };
+            let mut rng = Rng::new(5);
+            let v: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+            let eps = 1e-6;
+            let wp = dense::add_scaled(&w, eps, &v);
+            let wm = dense::add_scaled(&w, -eps, &v);
+            let mut gp = vec![0.0; 12];
+            let mut gm = vec![0.0; 12];
+            obj.grad(&wp, &mut gp);
+            obj.grad(&wm, &mut gm);
+            let fd: Vec<f64> = gp
+                .iter()
+                .zip(&gm)
+                .map(|(a, b)| (a - b) / (2.0 * eps))
+                .collect();
+            let mut hv = vec![0.0; 12];
+            obj.hess_vec(&w, &v, &mut hv);
+            assert!(
+                dense::max_abs_diff(&hv, &fd) < 1e-4,
+                "{loss:?}: {hv:?} vs {fd:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn local_approx_gradient_consistency_at_wr() {
+        // ∇f̂_p(wʳ) = gʳ for any shard and any claimed global gradient —
+        // the identity the whole method rests on.
+        let (d, w_r) = tiny_problem();
+        let mut rng = Rng::new(8);
+        let g_r: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        for loss in ALL_LOSSES {
+            let lam = 0.15;
+            let mut grad_lp = vec![0.0; 12];
+            shard_loss_grad(&d.x, &d.y, &w_r, loss, &mut grad_lp, None);
+            let approx =
+                LocalApprox::new(&d.x, &d.y, loss, lam, &w_r, &g_r, &grad_lp);
+            let mut g = vec![0.0; 12];
+            approx.grad(&w_r, &mut g);
+            assert!(
+                dense::max_abs_diff(&g, &g_r) < 1e-10,
+                "{loss:?}: consistency violated"
+            );
+        }
+    }
+
+    #[test]
+    fn local_approx_value_grad_fd() {
+        let (d, w_r) = tiny_problem();
+        let mut rng = Rng::new(9);
+        let g_r: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let w: Vec<f64> = (0..12).map(|_| rng.normal() * 0.5).collect();
+        let mut grad_lp = vec![0.0; 12];
+        shard_loss_grad(
+            &d.x, &d.y, &w_r, LossKind::Logistic, &mut grad_lp, None,
+        );
+        let approx = LocalApprox::new(
+            &d.x, &d.y, LossKind::Logistic, 0.15, &w_r, &g_r, &grad_lp,
+        );
+        let mut g = vec![0.0; 12];
+        approx.grad(&w, &mut g);
+        let fd = fd_grad(&approx, &w);
+        assert!(dense::max_abs_diff(&g, &fd) < 1e-4);
+    }
+
+    #[test]
+    fn margins_byproduct_correct() {
+        let (d, w) = tiny_problem();
+        let mut grad = vec![0.0; 12];
+        let mut z = Vec::new();
+        shard_loss_grad(
+            &d.x, &d.y, &w, LossKind::Logistic, &mut grad, Some(&mut z),
+        );
+        for i in 0..d.n_examples() {
+            assert!((z[i] - d.x.row_dot(i, &w)).abs() < 1e-14);
+        }
+    }
+}

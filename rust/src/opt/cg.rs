@@ -1,0 +1,206 @@
+//! Conjugate gradient: a plain SPD solver (tests, diagnostics) and the
+//! Steihaug trust-region variant TRON's subproblem needs.
+
+use crate::linalg::dense;
+
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iters: usize,
+    pub residual_norm: f64,
+    /// Steihaug: stopped on the trust-region boundary
+    pub hit_boundary: bool,
+    /// encountered a direction of non-positive curvature
+    pub neg_curvature: bool,
+}
+
+/// Solve A x = b for SPD A given `apply(v, out)` computing out = A·v.
+pub fn solve(
+    mut apply: impl FnMut(&[f64], &mut [f64]),
+    b: &[f64],
+    tol: f64,
+    max_iter: usize,
+) -> CgResult {
+    let n = b.len();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec(); // r = b − A·0
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let mut rs = dense::norm_sq(&r);
+    let stop = tol * tol * dense::norm_sq(b).max(f64::MIN_POSITIVE);
+    let mut iters = 0;
+    while rs > stop && iters < max_iter {
+        apply(&p, &mut ap);
+        let pap = dense::dot(&p, &ap);
+        if pap <= 0.0 {
+            return CgResult {
+                x, iters, residual_norm: rs.sqrt(),
+                hit_boundary: false, neg_curvature: true,
+            };
+        }
+        let alpha = rs / pap;
+        dense::axpy(alpha, &p, &mut x);
+        dense::axpy(-alpha, &ap, &mut r);
+        let rs_new = dense::norm_sq(&r);
+        dense::xpay(&r, rs_new / rs, &mut p);
+        rs = rs_new;
+        iters += 1;
+    }
+    CgResult {
+        x, iters, residual_norm: rs.sqrt(),
+        hit_boundary: false, neg_curvature: false,
+    }
+}
+
+/// Steihaug-Toint CG: approximately minimize m(p) = gᵀp + ½ pᵀHp
+/// subject to ‖p‖ ≤ delta. Stops at the boundary, on negative
+/// curvature, or when the residual drops below `tol·‖g‖`.
+pub fn steihaug(
+    mut apply: impl FnMut(&[f64], &mut [f64]),
+    g: &[f64],
+    delta: f64,
+    tol: f64,
+    max_iter: usize,
+) -> CgResult {
+    let n = g.len();
+    let mut p = vec![0.0; n];
+    let mut r: Vec<f64> = g.iter().map(|x| -x).collect(); // r = −g − H·0
+    let mut d = r.clone();
+    let mut hd = vec![0.0; n];
+    let gnorm = dense::norm(g);
+    let stop = (tol * gnorm).max(f64::MIN_POSITIVE);
+    let mut iters = 0;
+
+    /// largest τ ≥ 0 with ‖p + τ d‖ = delta
+    fn boundary_tau(p: &[f64], d: &[f64], delta: f64) -> f64 {
+        let pp = dense::norm_sq(p);
+        let pd = dense::dot(p, d);
+        let dd = dense::norm_sq(d).max(f64::MIN_POSITIVE);
+        let disc = (pd * pd + dd * (delta * delta - pp)).max(0.0);
+        (-pd + disc.sqrt()) / dd
+    }
+
+    loop {
+        if dense::norm(&r) <= stop || iters >= max_iter {
+            return CgResult {
+                x: p, iters, residual_norm: dense::norm(&r),
+                hit_boundary: false, neg_curvature: false,
+            };
+        }
+        apply(&d, &mut hd);
+        let dhd = dense::dot(&d, &hd);
+        if dhd <= 0.0 {
+            // follow d to the boundary
+            let tau = boundary_tau(&p, &d, delta);
+            dense::axpy(tau, &d, &mut p);
+            return CgResult {
+                x: p, iters, residual_norm: dense::norm(&r),
+                hit_boundary: true, neg_curvature: true,
+            };
+        }
+        let rs = dense::norm_sq(&r);
+        let alpha = rs / dhd;
+        // would the step leave the region?
+        let pp = dense::norm_sq(&p);
+        let pd = dense::dot(&p, &d);
+        let dd = dense::norm_sq(&d);
+        if pp + 2.0 * alpha * pd + alpha * alpha * dd >= delta * delta {
+            let tau = boundary_tau(&p, &d, delta);
+            dense::axpy(tau, &d, &mut p);
+            return CgResult {
+                x: p, iters: iters + 1, residual_norm: dense::norm(&r),
+                hit_boundary: true, neg_curvature: false,
+            };
+        }
+        dense::axpy(alpha, &d, &mut p);
+        dense::axpy(-alpha, &hd, &mut r);
+        let rs_new = dense::norm_sq(&r);
+        dense::xpay(&r, rs_new / rs, &mut d);
+        iters += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// dense symmetric apply for tests
+    fn apply_mat(a: &[Vec<f64>]) -> impl FnMut(&[f64], &mut [f64]) + '_ {
+        move |v, out| {
+            for (i, row) in a.iter().enumerate() {
+                out[i] = dense::dot(row, v);
+            }
+        }
+    }
+
+    fn spd3() -> Vec<Vec<f64>> {
+        vec![
+            vec![4.0, 1.0, 0.0],
+            vec![1.0, 3.0, 1.0],
+            vec![0.0, 1.0, 5.0],
+        ]
+    }
+
+    #[test]
+    fn solves_spd_system() {
+        let a = spd3();
+        let b = vec![1.0, 2.0, 3.0];
+        let r = solve(apply_mat(&a), &b, 1e-12, 100);
+        let mut ax = vec![0.0; 3];
+        apply_mat(&a)(&r.x, &mut ax);
+        assert!(dense::max_abs_diff(&ax, &b) < 1e-9);
+        assert!(!r.neg_curvature);
+        assert!(r.iters <= 3 + 1, "CG must converge in ≤ n iters");
+    }
+
+    #[test]
+    fn steihaug_interior_matches_newton_step() {
+        let a = spd3();
+        let g = vec![1.0, -2.0, 0.5];
+        // huge radius → unconstrained Newton step −A⁻¹g
+        let r = steihaug(apply_mat(&a), &g, 1e6, 1e-12, 100);
+        assert!(!r.hit_boundary);
+        let minus_g: Vec<f64> = g.iter().map(|x| -x).collect();
+        let newton = solve(apply_mat(&a), &minus_g, 1e-12, 100).x;
+        assert!(dense::max_abs_diff(&r.x, &newton) < 1e-8);
+    }
+
+    #[test]
+    fn steihaug_respects_radius() {
+        let a = spd3();
+        let g = vec![10.0, -20.0, 5.0];
+        let delta = 0.1;
+        let r = steihaug(apply_mat(&a), &g, delta, 1e-12, 100);
+        assert!(r.hit_boundary);
+        assert!((dense::norm(&r.x) - delta).abs() < 1e-10);
+        // model decreased: gᵀp + ½pᵀHp < 0
+        let mut hp = vec![0.0; 3];
+        apply_mat(&a)(&r.x, &mut hp);
+        let m = dense::dot(&g, &r.x) + 0.5 * dense::dot(&r.x, &hp);
+        assert!(m < 0.0);
+    }
+
+    #[test]
+    fn steihaug_negative_curvature_goes_to_boundary() {
+        // indefinite matrix
+        let a = vec![
+            vec![1.0, 0.0, 0.0],
+            vec![0.0, -2.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ];
+        let g = vec![0.0, 1.0, 0.0];
+        let r = steihaug(apply_mat(&a), &g, 2.0, 1e-10, 100);
+        assert!(r.hit_boundary);
+        assert!(r.neg_curvature);
+        assert!((dense::norm(&r.x) - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn zero_gradient_returns_zero_step() {
+        let a = spd3();
+        let g = vec![0.0; 3];
+        let r = steihaug(apply_mat(&a), &g, 1.0, 0.1, 100);
+        assert_eq!(r.x, vec![0.0; 3]);
+        assert_eq!(r.iters, 0);
+    }
+}

@@ -1,0 +1,251 @@
+//! L-BFGS with strong-Wolfe line search — the core optimizer of the
+//! terascale system [8] that SQM derives from, and an alternative inner
+//! solver for step 5 (paper §Discussion (b)).
+
+use crate::linalg::dense;
+use crate::objective::Objective;
+use crate::opt::linesearch::{strong_wolfe, WolfeParams};
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug)]
+pub struct LbfgsParams {
+    pub memory: usize,
+    /// relative gradient stop ‖g‖ ≤ eps·max(1, ‖g⁰‖)
+    pub eps: f64,
+    pub max_iter: usize,
+    pub wolfe: WolfeParams,
+}
+
+impl Default for LbfgsParams {
+    fn default() -> Self {
+        LbfgsParams {
+            memory: 10,
+            eps: 1e-10,
+            max_iter: 200,
+            wolfe: WolfeParams::default(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LbfgsIter {
+    pub f: f64,
+    pub gnorm: f64,
+    /// φ evaluations the line search spent (each costs a full
+    /// value+grad pass — the driver charges comm accordingly)
+    pub ls_evals: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct LbfgsResult {
+    pub w: Vec<f64>,
+    pub f: f64,
+    pub gnorm: f64,
+    pub iters: Vec<LbfgsIter>,
+    pub converged: bool,
+}
+
+/// Two-loop recursion: r = H_k·q given curvature pairs (s, y).
+fn two_loop(
+    q: &[f64],
+    pairs: &VecDeque<(Vec<f64>, Vec<f64>, f64)>, // (s, y, 1/yᵀs)
+) -> Vec<f64> {
+    let mut r = q.to_vec();
+    let mut alphas = Vec::with_capacity(pairs.len());
+    for (s, y, rho) in pairs.iter().rev() {
+        let a = rho * dense::dot(s, &r);
+        dense::axpy(-a, y, &mut r);
+        alphas.push(a);
+    }
+    // initial scaling γ = sᵀy / yᵀy of the newest pair
+    if let Some((s, y, _)) = pairs.back() {
+        let gamma = dense::dot(s, y) / dense::norm_sq(y).max(f64::MIN_POSITIVE);
+        dense::scale(&mut r, gamma);
+    }
+    for ((s, y, rho), a) in pairs.iter().zip(alphas.iter().rev()) {
+        let b = rho * dense::dot(y, &r);
+        dense::axpy(a - b, s, &mut r);
+    }
+    r
+}
+
+pub fn minimize(
+    obj: &impl Objective,
+    w0: &[f64],
+    params: &LbfgsParams,
+) -> LbfgsResult {
+    minimize_cb(obj, w0, params, |_, _| {})
+}
+
+/// [`minimize`] with a per-iteration hook `(iter_stats, new w)` for
+/// distributed drivers that snapshot comm ledgers between iterations.
+pub fn minimize_cb(
+    obj: &impl Objective,
+    w0: &[f64],
+    params: &LbfgsParams,
+    mut on_iter: impl FnMut(&LbfgsIter, &[f64]),
+) -> LbfgsResult {
+    let n = obj.dim();
+    let mut w = w0.to_vec();
+    let mut g = vec![0.0; n];
+    let mut f = obj.value_grad(&w, &mut g);
+    let gnorm0 = dense::norm(&g).max(1.0);
+    let mut pairs: VecDeque<(Vec<f64>, Vec<f64>, f64)> = VecDeque::new();
+    let mut iters = Vec::new();
+
+    for k in 0..params.max_iter {
+        let gnorm = dense::norm(&g);
+        if gnorm <= params.eps * gnorm0 {
+            return LbfgsResult { w, f, gnorm, iters, converged: true };
+        }
+        let mut dir = two_loop(&g, &pairs);
+        dense::scale(&mut dir, -1.0);
+        if dense::dot(&dir, &g) >= 0.0 {
+            // safeguard: fall back to steepest descent
+            dir = g.iter().map(|x| -x).collect();
+            pairs.clear();
+        }
+        // line search on φ(t) = f(w + t·dir)
+        let mut g_trial = vec![0.0; n];
+        let mut w_trial = vec![0.0; n];
+        let t_init = if k == 0 { (1.0 / gnorm).min(1.0) } else { 1.0 };
+        let ls = strong_wolfe(
+            |t| {
+                for j in 0..n {
+                    w_trial[j] = w[j] + t * dir[j];
+                }
+                let v = obj.value_grad(&w_trial, &mut g_trial);
+                (v, dense::dot(&g_trial, &dir))
+            },
+            &WolfeParams { t_init, ..params.wolfe },
+        );
+        let ls = match ls {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        if ls.t <= 0.0 || !ls.phi_t.is_finite() {
+            break;
+        }
+        // w_trial/g_trial hold the *last evaluated* t, which the Wolfe
+        // search guarantees is the accepted one.
+        let w_new: Vec<f64> =
+            (0..n).map(|j| w[j] + ls.t * dir[j]).collect();
+        let mut g_new = vec![0.0; n];
+        let f_new = obj.value_grad(&w_new, &mut g_new);
+
+        let s: Vec<f64> = dense::sub(&w_new, &w);
+        let yv: Vec<f64> = dense::sub(&g_new, &g);
+        let ys = dense::dot(&yv, &s);
+        if ys > 1e-12 * dense::norm(&yv) * dense::norm(&s) {
+            if pairs.len() == params.memory {
+                pairs.pop_front();
+            }
+            pairs.push_back((s, yv, 1.0 / ys));
+        }
+        let it = LbfgsIter { f, gnorm, ls_evals: ls.evals };
+        on_iter(&it, &w_new);
+        iters.push(it);
+        w = w_new;
+        g = g_new;
+        f = f_new;
+    }
+    let gnorm = dense::norm(&g);
+    let converged = gnorm <= params.eps * gnorm0;
+    LbfgsResult { w, f, gnorm, iters, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+    use crate::loss::LossKind;
+    use crate::objective::RegularizedLoss;
+    use crate::opt::tron::{self, TronParams};
+
+    struct Rosenbrock;
+
+    impl Objective for Rosenbrock {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn value(&self, w: &[f64]) -> f64 {
+            let (x, y) = (w[0], w[1]);
+            (1.0 - x).powi(2) + 100.0 * (y - x * x).powi(2)
+        }
+        fn grad(&self, w: &[f64], out: &mut [f64]) {
+            let (x, y) = (w[0], w[1]);
+            out[0] = -2.0 * (1.0 - x) - 400.0 * x * (y - x * x);
+            out[1] = 200.0 * (y - x * x);
+        }
+    }
+
+    #[test]
+    fn rosenbrock_converges() {
+        let r = minimize(
+            &Rosenbrock,
+            &[-1.2, 1.0],
+            &LbfgsParams { eps: 1e-8, max_iter: 500, ..Default::default() },
+        );
+        assert!(r.converged, "gnorm={}", r.gnorm);
+        assert!((r.w[0] - 1.0).abs() < 1e-5 && (r.w[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn matches_tron_on_logistic_regression() {
+        let d = SynthConfig {
+            n_examples: 120,
+            n_features: 20,
+            nnz_per_example: 5,
+            ..SynthConfig::default()
+        }
+        .generate(3);
+        let obj = RegularizedLoss {
+            x: &d.x,
+            y: &d.y,
+            loss: LossKind::Logistic,
+            lam: 0.3,
+        };
+        let lb = minimize(&obj, &vec![0.0; 20], &LbfgsParams {
+            eps: 1e-7,
+            ..Default::default()
+        });
+        let tr = tron::minimize(&obj, &vec![0.0; 20], &TronParams {
+            eps: 1e-7,
+            ..Default::default()
+        });
+        assert!(lb.converged && tr.converged);
+        assert!(
+            (lb.f - tr.f).abs() < 1e-6 * lb.f.abs().max(1.0),
+            "lbfgs {} vs tron {}",
+            lb.f,
+            tr.f
+        );
+    }
+
+    #[test]
+    fn monotone_decrease() {
+        let d = SynthConfig {
+            n_examples: 80,
+            n_features: 15,
+            nnz_per_example: 4,
+            ..SynthConfig::default()
+        }
+        .generate(4);
+        let obj = RegularizedLoss {
+            x: &d.x,
+            y: &d.y,
+            loss: LossKind::SquaredHinge,
+            lam: 0.2,
+        };
+        let r = minimize(&obj, &vec![0.0; 15], &LbfgsParams::default());
+        for k in 1..r.iters.len() {
+            assert!(r.iters[k].f <= r.iters[k - 1].f + 1e-12);
+        }
+    }
+
+    #[test]
+    fn reports_line_search_evals() {
+        let r = minimize(&Rosenbrock, &[-1.2, 1.0], &LbfgsParams::default());
+        assert!(r.iters.iter().all(|it| it.ls_evals >= 1));
+    }
+}

@@ -1,0 +1,366 @@
+//! Strong-Wolfe line search (Nocedal & Wright Alg. 3.5/3.6) and the
+//! margin-based 1-D restriction the paper's step 8 evaluates cheaply.
+//!
+//! Acceptance conditions are exactly the paper's (3)+(4):
+//!   Armijo:  φ(t) ≤ φ(0) + α·t·φ'(0)
+//!   Wolfe:   φ'(t) ≥ β·φ'(0)
+//! with defaults α = 1e-4, β = 0.9 (the paper's recommended values).
+
+use crate::linalg::dense;
+use crate::loss::LossKind;
+
+#[derive(Clone, Copy, Debug)]
+pub struct WolfeParams {
+    pub alpha: f64,
+    pub beta: f64,
+    pub t_init: f64,
+    pub max_evals: usize,
+}
+
+impl Default for WolfeParams {
+    fn default() -> Self {
+        WolfeParams { alpha: 1e-4, beta: 0.9, t_init: 1.0, max_evals: 50 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LineSearchResult {
+    pub t: f64,
+    pub phi_t: f64,
+    pub dphi_t: f64,
+    /// number of φ evaluations — the driver charges one (scalar)
+    /// aggregation round per eval
+    pub evals: usize,
+    /// both Wolfe conditions verified
+    pub satisfied: bool,
+}
+
+/// Strong-Wolfe search on φ; `eval(t)` returns (φ(t), φ'(t)).
+/// Requires φ'(0) < 0 (descent); returns an error otherwise.
+pub fn strong_wolfe(
+    mut eval: impl FnMut(f64) -> (f64, f64),
+    params: &WolfeParams,
+) -> Result<LineSearchResult, String> {
+    let (phi0, dphi0) = eval(0.0);
+    if dphi0 >= 0.0 {
+        return Err(format!("not a descent direction: φ'(0) = {dphi0}"));
+    }
+    let mut evals = 1usize;
+    let armijo =
+        |t: f64, phi: f64| phi <= phi0 + params.alpha * t * dphi0;
+    let wolfe = |dphi: f64| dphi >= params.beta * dphi0;
+
+    let mut t_prev = 0.0;
+    let mut phi_prev = phi0;
+    let mut dphi_prev = dphi0;
+    let mut t = params.t_init;
+    let t_max = 1e10;
+
+    // Bracketing phase (N&W Algorithm 3.5).
+    for _ in 0..params.max_evals {
+        let (phi_t, dphi_t) = eval(t);
+        evals += 1;
+        if !armijo(t, phi_t) || (phi_t >= phi_prev && evals > 2) {
+            return zoom(
+                &mut eval, phi0, dphi0, t_prev, phi_prev, dphi_prev, t,
+                phi_t, dphi_t, params, &mut evals,
+            );
+        }
+        if wolfe(dphi_t) {
+            return Ok(LineSearchResult {
+                t, phi_t, dphi_t, evals, satisfied: true,
+            });
+        }
+        if dphi_t >= 0.0 {
+            return zoom(
+                &mut eval, phi0, dphi0, t, phi_t, dphi_t, t_prev, phi_prev,
+                dphi_prev, params, &mut evals,
+            );
+        }
+        t_prev = t;
+        phi_prev = phi_t;
+        dphi_prev = dphi_t;
+        t = (2.0 * t).min(t_max);
+    }
+    Err(format!("line search failed after {evals} evaluations"))
+}
+
+/// Zoom phase (N&W Algorithm 3.6): lo satisfies Armijo, the interval
+/// [lo, hi] brackets a Wolfe point. Cubic interpolation with bisection
+/// fallback.
+#[allow(clippy::too_many_arguments)]
+fn zoom(
+    eval: &mut impl FnMut(f64) -> (f64, f64),
+    phi0: f64,
+    dphi0: f64,
+    mut t_lo: f64,
+    mut phi_lo: f64,
+    mut dphi_lo: f64,
+    mut t_hi: f64,
+    mut phi_hi: f64,
+    mut _dphi_hi: f64,
+    params: &WolfeParams,
+    evals: &mut usize,
+) -> Result<LineSearchResult, String> {
+    let armijo =
+        |t: f64, phi: f64| phi <= phi0 + params.alpha * t * dphi0;
+    let wolfe = |dphi: f64| dphi >= params.beta * dphi0;
+    for _ in 0..params.max_evals {
+        // cubic minimizer of the (lo, hi) Hermite data; fall back to
+        // bisection when it lands outside the safeguarded interior
+        let t = {
+            let d1 = dphi_lo + _dphi_hi
+                - 3.0 * (phi_lo - phi_hi) / (t_lo - t_hi);
+            let disc = d1 * d1 - dphi_lo * _dphi_hi;
+            let mut cand = if disc >= 0.0 {
+                let d2 = disc.sqrt() * (t_hi - t_lo).signum();
+                t_hi
+                    - (t_hi - t_lo) * (_dphi_hi + d2 - d1)
+                        / (_dphi_hi - dphi_lo + 2.0 * d2)
+            } else {
+                f64::NAN
+            };
+            let (a, b) = if t_lo < t_hi { (t_lo, t_hi) } else { (t_hi, t_lo) };
+            let margin = 0.1 * (b - a);
+            if !cand.is_finite() || cand < a + margin || cand > b - margin {
+                cand = 0.5 * (t_lo + t_hi);
+            }
+            cand
+        };
+        let (phi_t, dphi_t) = eval(t);
+        *evals += 1;
+        if !armijo(t, phi_t) || phi_t >= phi_lo {
+            t_hi = t;
+            phi_hi = phi_t;
+            _dphi_hi = dphi_t;
+        } else {
+            if wolfe(dphi_t) {
+                return Ok(LineSearchResult {
+                    t, phi_t, dphi_t, evals: *evals, satisfied: true,
+                });
+            }
+            if dphi_t * (t_hi - t_lo) >= 0.0 {
+                t_hi = t_lo;
+                phi_hi = phi_lo;
+                _dphi_hi = dphi_lo;
+            }
+            t_lo = t;
+            phi_lo = phi_t;
+            dphi_lo = dphi_t;
+        }
+        if (t_hi - t_lo).abs() < 1e-16 * t_lo.abs().max(1.0) {
+            break;
+        }
+    }
+    // Interval collapsed: return the best Armijo point we hold. This is
+    // the standard safeguard (e.g. at a kink of squared hinge where φ'
+    // jumps); Armijo alone still guarantees sufficient decrease.
+    Ok(LineSearchResult {
+        t: t_lo,
+        phi_t: phi_lo,
+        dphi_t: dphi_lo,
+        evals: *evals,
+        satisfied: wolfe(dphi_lo),
+    })
+}
+
+/// The paper's cheap distributed line search: with by-products
+/// z = X·w and dz = X·d in hand, φ(t) and φ'(t) need only elementwise
+/// passes over (z, dz) plus three scalars for the λ-term:
+///
+///   φ(t)  = (λ/2)(w·w + 2t w·d + t² d·d) + Σᵢ l(zᵢ + t·dzᵢ, yᵢ)
+///   φ'(t) = λ(w·d + t d·d) + Σᵢ dzᵢ · l'(zᵢ + t·dzᵢ, yᵢ)
+///
+/// In the cluster this struct lives on each node with its shard's
+/// (z, dz, y); the master sums the per-node partials and adds the
+/// λ-part (a scalar aggregation per trial t — NOT a size-d pass).
+pub struct MarginPhi<'a> {
+    pub z: &'a [f64],
+    pub dz: &'a [f64],
+    pub y: &'a [f64],
+    pub loss: LossKind,
+}
+
+impl<'a> MarginPhi<'a> {
+    /// (Σ l, Σ dz·l') at step t — the node-local partials.
+    pub fn partial(&self, t: f64) -> (f64, f64) {
+        let mut v = 0.0;
+        let mut dv = 0.0;
+        for i in 0..self.z.len() {
+            let zt = self.z[i] + t * self.dz[i];
+            v += self.loss.value(zt, self.y[i]);
+            dv += self.dz[i] * self.loss.deriv(zt, self.y[i]);
+        }
+        (v, dv)
+    }
+}
+
+/// Master-side composition of [`MarginPhi::partial`] sums with the λ
+/// terms. `ww = w·w`, `wd = w·d`, `dd = d·d`.
+pub struct PhiLambda {
+    pub lam: f64,
+    pub ww: f64,
+    pub wd: f64,
+    pub dd: f64,
+}
+
+impl PhiLambda {
+    pub fn new(lam: f64, w: &[f64], d: &[f64]) -> PhiLambda {
+        PhiLambda {
+            lam,
+            ww: dense::norm_sq(w),
+            wd: dense::dot(w, d),
+            dd: dense::norm_sq(d),
+        }
+    }
+
+    /// Combine loss partials into (φ(t), φ'(t)).
+    pub fn compose(&self, t: f64, loss_sum: f64, dloss_sum: f64) -> (f64, f64) {
+        let phi = 0.5 * self.lam * (self.ww + 2.0 * t * self.wd + t * t * self.dd)
+            + loss_sum;
+        let dphi = self.lam * (self.wd + t * self.dd) + dloss_sum;
+        (phi, dphi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1-D strongly convex quadratic: φ(t) = (t-3)², φ'(t) = 2(t-3).
+    #[test]
+    fn quadratic_finds_wolfe_point() {
+        let r = strong_wolfe(
+            |t| ((t - 3.0) * (t - 3.0), 2.0 * (t - 3.0)),
+            &WolfeParams::default(),
+        )
+        .unwrap();
+        assert!(r.satisfied);
+        // Wolfe region for this quadratic with β=0.9: t ≥ 0.3·3
+        assert!(r.t > 0.3 && r.t < 6.0, "t={}", r.t);
+        // conditions hold
+        let phi0 = 9.0;
+        let dphi0 = -6.0;
+        assert!(r.phi_t <= phi0 + 1e-4 * r.t * dphi0);
+        assert!(r.dphi_t >= 0.9 * dphi0);
+    }
+
+    #[test]
+    fn rejects_ascent_direction() {
+        assert!(strong_wolfe(
+            |t| (t * t + t, 2.0 * t + 1.0),
+            &WolfeParams::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn handles_far_minimum_via_doubling() {
+        // minimum at t = 1000
+        let r = strong_wolfe(
+            |t| {
+                let u = t - 1000.0;
+                (u * u, 2.0 * u)
+            },
+            &WolfeParams::default(),
+        )
+        .unwrap();
+        assert!(r.satisfied);
+        // Wolfe region for this quadratic: φ'(t) ≥ 0.9·φ'(0) ⇔ t ≥ 100
+        assert!(r.t >= 100.0, "t={}", r.t);
+    }
+
+    #[test]
+    fn nonconvex_with_multiple_dips() {
+        // φ(t) = −sin(t) + t²/10: φ'(0) = −1, several local dips.
+        let eval = |t: f64| (-t.sin() + t * t / 10.0, -t.cos() + t / 5.0);
+        let r = strong_wolfe(
+            &mut { eval },
+            &WolfeParams { t_init: 0.5, ..Default::default() },
+        )
+        .unwrap();
+        assert!(r.satisfied);
+        let (phi0, dphi0) = (0.0, -1.0);
+        assert!(r.phi_t <= phi0 + 1e-4 * r.t * dphi0);
+        assert!(r.dphi_t >= 0.9 * dphi0);
+    }
+
+    #[test]
+    fn margin_phi_matches_direct_evaluation() {
+        use crate::data::synth::SynthConfig;
+        use crate::objective::{Objective, RegularizedLoss};
+        use crate::util::rng::Rng;
+
+        let d = SynthConfig {
+            n_examples: 60,
+            n_features: 15,
+            nnz_per_example: 5,
+            ..SynthConfig::default()
+        }
+        .generate(4);
+        let mut rng = Rng::new(1);
+        let w: Vec<f64> = (0..15).map(|_| rng.normal() * 0.2).collect();
+        let dir: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let lam = 0.2;
+        let loss = LossKind::Logistic;
+
+        let mut z = vec![0.0; 60];
+        let mut dz = vec![0.0; 60];
+        d.x.matvec(&w, &mut z);
+        d.x.matvec(&dir, &mut dz);
+        let phi = MarginPhi { z: &z, dz: &dz, y: &d.y, loss };
+        let lam_part = PhiLambda::new(lam, &w, &dir);
+
+        let obj = RegularizedLoss { x: &d.x, y: &d.y, loss, lam };
+        for &t in &[0.0, 0.1, 0.7, 2.5] {
+            let (ls, dls) = phi.partial(t);
+            let (phi_t, dphi_t) = lam_part.compose(t, ls, dls);
+            // direct: f(w + t d) and ∇f(w+td)·d
+            let wt: Vec<f64> = w
+                .iter()
+                .zip(&dir)
+                .map(|(wi, di)| wi + t * di)
+                .collect();
+            let mut g = vec![0.0; 15];
+            let v = obj.value_grad(&wt, &mut g);
+            assert!((phi_t - v).abs() < 1e-9, "t={t}");
+            assert!(
+                (dphi_t - dense::dot(&g, &dir)).abs() < 1e-9,
+                "t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn wolfe_on_margin_phi_decreases_objective() {
+        use crate::data::synth::SynthConfig;
+        use crate::objective::{Objective, RegularizedLoss};
+
+        let d = SynthConfig::small().generate(6);
+        let dim = d.n_features();
+        let w = vec![0.0; dim];
+        let lam = 1.0;
+        let loss = LossKind::SquaredHinge;
+        let obj = RegularizedLoss { x: &d.x, y: &d.y, loss, lam };
+        let mut g = vec![0.0; dim];
+        obj.grad(&w, &mut g);
+        let dir: Vec<f64> = g.iter().map(|gi| -gi).collect();
+
+        let mut z = vec![0.0; d.n_examples()];
+        let mut dz = vec![0.0; d.n_examples()];
+        d.x.matvec(&w, &mut z);
+        d.x.matvec(&dir, &mut dz);
+        let phi = MarginPhi { z: &z, dz: &dz, y: &d.y, loss };
+        let lam_part = PhiLambda::new(lam, &w, &dir);
+
+        let r = strong_wolfe(
+            |t| {
+                let (ls, dls) = phi.partial(t);
+                lam_part.compose(t, ls, dls)
+            },
+            &WolfeParams::default(),
+        )
+        .unwrap();
+        assert!(r.phi_t < obj.value(&w));
+    }
+}

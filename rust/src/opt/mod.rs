@@ -1,0 +1,24 @@
+//! Optimizers.
+//!
+//! Inner solvers for Algorithm 1 step 5 (per-node, on f̂_p):
+//! - [`svrg`] — the paper's choice [3]: strongly convergent SGD.
+//! - [`sgd`] — plain Bottou SGD (used by Hybrid/ParamMix init).
+//!
+//! Core batch optimizers (the SQM baseline and inner-solver swaps):
+//! - [`tron`] — trust-region Newton-CG (LIBLINEAR-style), the paper's
+//!   SQM core.
+//! - [`lbfgs`] — limited-memory BFGS (the [8] variant).
+//! - [`cg`] — linear CG + Steihaug trust-region CG.
+//!
+//! Shared machinery:
+//! - [`linesearch`] — strong-Wolfe (Armijo (3) + Wolfe (4)) search, and
+//!   the margin-based 1-D evaluator the paper's step 8 uses.
+
+pub mod cg;
+pub mod dca;
+pub mod lbfgs;
+pub mod linesearch;
+pub mod sag;
+pub mod sgd;
+pub mod svrg;
+pub mod tron;

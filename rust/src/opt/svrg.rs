@@ -1,0 +1,474 @@
+//! SVRG (Johnson & Zhang [3]) on the tilted local objective f̂_p — the
+//! paper's inner solver for Algorithm 1 step 5. SVRG is the reason
+//! Theorem 2 applies: it has the *strong stochastic convergence*
+//! property E‖w_s − ŵ*‖² ≤ K·αˢ‖w⁰ − ŵ*‖² the safeguard analysis needs.
+//!
+//! Epoch structure (matches `python/compile/model.py::svrg_epoch` and
+//! `ref.svrg_epoch_ref` — cross-checked in the integration tests):
+//! anchor w₀ = epoch-entry iterate, μ = ∇f̂_p(w₀); for each minibatch B
+//!
+//!   g = (n/|B|) Σ_{i∈B} [l'(w·xᵢ) − l'(w₀·xᵢ)]·xᵢ + μ + λ(w − w₀)
+//!   w ← w − η·g
+//!
+//! The minibatch update splits into an O(d) dense part (μ, λ-term) and
+//! an O(nnz_B) sparse part, so epoch cost is (n/b)·O(d) + O(nnz_p).
+
+use crate::linalg::{dense, Csr};
+use crate::objective::{LocalApprox, Objective};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SvrgParams {
+    /// s in the paper: number of epochs (local passes)
+    pub epochs: usize,
+    /// 1 = the paper's per-example SVRG [3]; larger batches trade inner
+    /// progress for throughput (the dense/PJRT path uses 256)
+    pub batch: usize,
+    /// None → 1/L̂ with L̂ from [`lipschitz_estimate`]
+    pub lr: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for SvrgParams {
+    fn default() -> Self {
+        SvrgParams { epochs: 2, batch: 1, lr: None, seed: 0 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SvrgStats {
+    pub epochs_run: usize,
+    pub lr_used: f64,
+    /// full-gradient (anchor) passes — one per epoch
+    pub full_grad_passes: usize,
+}
+
+/// Estimate L = λ + l''_max · σ_max(XᵀX) by power iteration on XᵀX.
+/// σ_max here is the largest *eigenvalue* (sum over all rows), which is
+/// the Lipschitz constant of w ↦ ∇Σᵢ l(w·xᵢ) up to the l'' bound.
+pub fn lipschitz_estimate(x: &Csr, dd_max: f64, lam: f64, iters: usize) -> f64 {
+    let d = x.n_cols;
+    let n = x.n_rows();
+    if n == 0 || x.nnz() == 0 {
+        return lam.max(f64::MIN_POSITIVE);
+    }
+    let mut v = vec![0.0f64; d];
+    // deterministic start touching every used column
+    for &j in &x.indices {
+        v[j as usize] = 1.0;
+    }
+    let norm0 = dense::norm(&v);
+    dense::scale(&mut v, 1.0 / norm0.max(f64::MIN_POSITIVE));
+    let mut z = vec![0.0; n];
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        x.matvec(&v, &mut z);
+        let mut vnew = vec![0.0; d];
+        x.tmatvec(&z, &mut vnew);
+        sigma = dense::norm(&vnew);
+        if sigma <= f64::MIN_POSITIVE {
+            break;
+        }
+        dense::scale(&mut vnew, 1.0 / sigma);
+        v = vnew;
+    }
+    lam + dd_max * sigma
+}
+
+/// Run `params.epochs` SVRG epochs on f̂_p starting from `w0`
+/// (Algorithm 1 sets w0 = wʳ). Returns the output point w_p.
+///
+/// Hot-path implementation (EXPERIMENTS.md §Perf): the per-step update
+///
+///   w ← w − η(μ + λ(w − w₀) + (n/b)·Σ_B rᵢxᵢ)
+///     = a·w + b_vec − η(n/b)·Σ_B rᵢxᵢ,   a = 1 − ηλ,  b = η(λw₀ − μ)
+///
+/// has an *affine* dense part that is constant within an epoch, so
+/// coordinates untouched by the sparse term are fast-forwarded lazily:
+/// after k silent steps, w_j ← aᵏw_j + ((1 − aᵏ)/(1 − a))·b_j. Epoch
+/// cost drops from O(steps·d) to O(nnz + d) — the difference between
+/// per-example SVRG being usable at kdd2010 dimensionality or not.
+pub fn svrg_epochs(
+    approx: &LocalApprox,
+    w0: &[f64],
+    params: &SvrgParams,
+) -> (Vec<f64>, SvrgStats) {
+    let x = approx.x;
+    let n = x.n_rows();
+    let d = x.n_cols;
+    if n == 0 || params.epochs == 0 {
+        return (w0.to_vec(), SvrgStats::default());
+    }
+    let lr = params.lr.unwrap_or_else(|| {
+        1.0 / lipschitz_estimate(x, approx.loss.dd_max(), approx.lam, 12)
+    });
+    let batch = params.batch.clamp(1, n);
+    let mut rng = Rng::new(params.seed);
+    let mut w = w0.to_vec();
+    let mut mu = vec![0.0; d];
+    let mut z0 = vec![0.0; n];
+    let mut anchor = vec![0.0; d];
+    // lazy bookkeeping: b_j and the step index of w_j's last update
+    let mut bvec = vec![0.0; d];
+    let mut last = vec![0u32; d];
+    let mut stats = SvrgStats { epochs_run: 0, lr_used: lr, full_grad_passes: 0 };
+
+    for _ in 0..params.epochs {
+        // --- anchor pass: μ = ∇f̂_p(w) and margins z0 = X·w ---
+        anchor.copy_from_slice(&w);
+        approx.grad(&anchor, &mut mu);
+        x.matvec(&anchor, &mut z0);
+        stats.full_grad_passes += 1;
+
+        let a = 1.0 - lr * approx.lam;
+        debug_assert!(a > 0.0, "lr·λ ≥ 1: unstable epoch (lr {lr})");
+        for j in 0..d {
+            bvec[j] = lr * (approx.lam * anchor[j] - mu[j]);
+        }
+        last.iter_mut().for_each(|t| *t = 0);
+
+        // §Perf: precompute (aᵏ, (1−aᵏ)/(1−a)) for every possible lag —
+        // the per-nnz a.powi(lag) was the epoch's top cost (~40% of
+        // wall); a table lookup replaces it. λ=0 ⇒ a=1 ⇒ (1, k).
+        let max_steps = n / batch + 2;
+        let geom_table: Vec<(f64, f64)> = {
+            let mut t = Vec::with_capacity(max_steps);
+            let (mut ak, mut s) = (1.0f64, 0.0f64);
+            for _ in 0..max_steps {
+                t.push((ak, s));
+                s += ak;
+                ak *= a;
+            }
+            t
+        };
+        let geom = |k: u32| -> (f64, f64) { geom_table[k as usize] };
+
+        let order = rng.permutation(n);
+        let scale = n as f64 / batch as f64;
+        let nb = (n / batch).max(1);
+        let mut step = 0u32; // steps completed so far this epoch
+        for k in 0..nb {
+            let lo = k * batch;
+            let hi = (lo + batch).min(n);
+            // ---- compute residuals at CURRENT w (after fast-forward) ----
+            // then apply: one dense-affine step + the sparse scatter
+            let mut updates: Vec<(usize, f64)> = Vec::new();
+            for &oi in &order[lo..hi] {
+                let i = oi as usize;
+                let (cols, vals) = x.row(i);
+                let mut zi = 0.0;
+                for (c, v) in cols.iter().zip(vals) {
+                    let j = *c as usize;
+                    let lag = step - last[j];
+                    if lag > 0 {
+                        let (ak, s) = geom(lag);
+                        w[j] = ak * w[j] + s * bvec[j];
+                        last[j] = step;
+                    }
+                    zi += *v as f64 * w[j];
+                }
+                let r = approx.loss.deriv(zi, approx.y[i])
+                    - approx.loss.deriv(z0[i], approx.y[i]);
+                if r != 0.0 {
+                    for (c, v) in cols.iter().zip(vals) {
+                        updates.push((*c as usize, r * *v as f64));
+                    }
+                }
+            }
+            // the affine step happens "now": touched coordinates take
+            // it explicitly (they are already current at `step` from
+            // the residual pass), everyone else catches up lazily.
+            // Duplicate j (several examples sharing a feature in one
+            // minibatch) are merged so the affine part applies once.
+            updates.sort_unstable_by_key(|&(j, _)| j);
+            let mut m = 0;
+            while m < updates.len() {
+                let (j, mut ru) = updates[m];
+                m += 1;
+                while m < updates.len() && updates[m].0 == j {
+                    ru += updates[m].1;
+                    m += 1;
+                }
+                w[j] = a * w[j] + bvec[j] - lr * scale * ru;
+                last[j] = step + 1;
+            }
+            step += 1;
+        }
+        // ---- epoch flush: fast-forward every coordinate to `step` ----
+        for j in 0..d {
+            let lag = step - last[j];
+            if lag > 0 {
+                let (ak, s) = geom(lag);
+                w[j] = ak * w[j] + s * bvec[j];
+            }
+        }
+        stats.epochs_run += 1;
+    }
+    (w, stats)
+}
+
+/// Straightforward O(steps·d) reference implementation (no lazy
+/// fast-forward) — kept for the equivalence tests and as documentation
+/// of the update rule.
+pub fn svrg_epochs_dense(
+    approx: &LocalApprox,
+    w0: &[f64],
+    params: &SvrgParams,
+) -> (Vec<f64>, SvrgStats) {
+    let x = approx.x;
+    let n = x.n_rows();
+    let d = x.n_cols;
+    if n == 0 || params.epochs == 0 {
+        return (w0.to_vec(), SvrgStats::default());
+    }
+    let lr = params.lr.unwrap_or_else(|| {
+        1.0 / lipschitz_estimate(x, approx.loss.dd_max(), approx.lam, 12)
+    });
+    let batch = params.batch.clamp(1, n);
+    let mut rng = Rng::new(params.seed);
+    let mut w = w0.to_vec();
+    let mut mu = vec![0.0; d];
+    let mut z0 = vec![0.0; n];
+    let mut anchor = vec![0.0; d];
+    let mut stats = SvrgStats { epochs_run: 0, lr_used: lr, full_grad_passes: 0 };
+    for _ in 0..params.epochs {
+        anchor.copy_from_slice(&w);
+        approx.grad(&anchor, &mut mu);
+        x.matvec(&anchor, &mut z0);
+        stats.full_grad_passes += 1;
+        let order = rng.permutation(n);
+        let scale = n as f64 / batch as f64;
+        let nb = (n / batch).max(1);
+        for k in 0..nb {
+            let lo = k * batch;
+            let hi = (lo + batch).min(n);
+            // residuals at current w first (matching the lazy path)
+            let rs: Vec<(usize, f64)> = order[lo..hi]
+                .iter()
+                .map(|&oi| {
+                    let i = oi as usize;
+                    let zi = x.row_dot(i, &w);
+                    (
+                        i,
+                        approx.loss.deriv(zi, approx.y[i])
+                            - approx.loss.deriv(z0[i], approx.y[i]),
+                    )
+                })
+                .collect();
+            for j in 0..d {
+                w[j] -= lr * (mu[j] + approx.lam * (w[j] - anchor[j]));
+            }
+            for (i, r) in rs {
+                if r != 0.0 {
+                    x.add_row_scaled(i, -lr * scale * r, &mut w);
+                }
+            }
+        }
+        stats.epochs_run += 1;
+    }
+    (w, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+    use crate::loss::LossKind;
+    use crate::objective::shard_loss_grad;
+    use crate::opt::tron::{self, TronParams};
+
+    #[test]
+    fn lazy_matches_dense_reference() {
+        for (batch, seed) in [(1usize, 1u64), (4, 2), (16, 3), (100, 4)] {
+            let data = SynthConfig {
+                n_examples: 120,
+                n_features: 50,
+                nnz_per_example: 6,
+                ..SynthConfig::default()
+            }
+            .generate(seed);
+            let dim = data.n_features();
+            let w_r: Vec<f64> = (0..dim).map(|j| (j as f64 * 0.1).sin() * 0.1).collect();
+            let lam = 0.3;
+            let loss = LossKind::Logistic;
+            let mut grad_lp = vec![0.0; dim];
+            shard_loss_grad(&data.x, &data.y, &w_r, loss, &mut grad_lp, None);
+            let mut g_r = grad_lp.clone();
+            dense::axpy(lam, &w_r, &mut g_r);
+            // perturb to exercise a nonzero tilt
+            g_r[0] += 0.5;
+            let approx =
+                LocalApprox::new(&data.x, &data.y, loss, lam, &w_r, &g_r, &grad_lp);
+            let params = SvrgParams { epochs: 3, batch, lr: None, seed: 7 };
+            let (w_lazy, _) = svrg_epochs(&approx, &w_r, &params);
+            let (w_dense, _) = svrg_epochs_dense(&approx, &w_r, &params);
+            let err = dense::max_abs_diff(&w_lazy, &w_dense);
+            assert!(
+                err < 1e-10,
+                "batch={batch}: lazy vs dense deviation {err}"
+            );
+        }
+    }
+
+    fn make_approx<'a>(
+        d: &'a crate::data::dataset::Dataset,
+        w_r: &[f64],
+        lam: f64,
+        loss: LossKind,
+    ) -> LocalApprox<'a> {
+        // single-shard setting: g_r is the *true* global gradient of
+        // this shard's regularized risk, so tilt = 0; heterogeneous
+        // tilts are exercised in the algo::fs tests.
+        let dim = d.n_features();
+        let mut grad_lp = vec![0.0; dim];
+        shard_loss_grad(&d.x, &d.y, w_r, loss, &mut grad_lp, None);
+        let mut g_r = grad_lp.clone();
+        dense::axpy(lam, w_r, &mut g_r);
+        LocalApprox::new(&d.x, &d.y, loss, lam, w_r, &g_r, &grad_lp)
+    }
+
+    #[test]
+    fn lipschitz_estimate_bounds_rayleigh_quotients() {
+        let d = SynthConfig {
+            n_examples: 80,
+            n_features: 25,
+            nnz_per_example: 6,
+            ..SynthConfig::default()
+        }
+        .generate(1);
+        let lam = 0.1;
+        let lhat = lipschitz_estimate(&d.x, 1.0, lam, 30);
+        // check v̂ᵀ XᵀX v̂ ≤ σ̂ for a few random unit vectors
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            let v: Vec<f64> = (0..25).map(|_| rng.normal()).collect();
+            let vn = dense::norm(&v);
+            let mut z = vec![0.0; 80];
+            d.x.matvec(&v, &mut z);
+            let quad = dense::norm_sq(&z) / (vn * vn);
+            assert!(
+                quad <= (lhat - lam) * 1.001 + 1e-9,
+                "rayleigh {quad} > estimate {}",
+                lhat - lam
+            );
+        }
+    }
+
+    #[test]
+    fn epoch_descends_fhat() {
+        let d = SynthConfig {
+            n_examples: 200,
+            n_features: 40,
+            nnz_per_example: 6,
+            ..SynthConfig::default()
+        }
+        .generate(3);
+        let w_r = vec![0.0; 40];
+        let approx = make_approx(&d, &w_r, 0.5, LossKind::Logistic);
+        let (w1, stats) = svrg_epochs(
+            &approx,
+            &w_r,
+            &SvrgParams { epochs: 1, batch: 32, lr: None, seed: 4 },
+        );
+        assert_eq!(stats.epochs_run, 1);
+        assert!(approx.value(&w1) < approx.value(&w_r));
+    }
+
+    #[test]
+    fn strong_convergence_contracts_distance_to_minimizer() {
+        // the Theorem-2 hypothesis: E‖w_s − ŵ*‖² shrinks geometrically.
+        // deterministic proxy: distance after s epochs strictly shrinks.
+        let d = SynthConfig {
+            n_examples: 150,
+            n_features: 30,
+            nnz_per_example: 5,
+            ..SynthConfig::default()
+        }
+        .generate(5);
+        let w_r = vec![0.1; 30];
+        let lam = 1.0;
+        let approx = make_approx(&d, &w_r, lam, LossKind::Logistic);
+        // ground-truth minimizer of f̂_p via TRON
+        let wstar = tron::minimize(&approx, &w_r, &TronParams {
+            eps: 1e-12,
+            ..Default::default()
+        })
+        .w;
+        let mut dists = vec![dense::norm(&dense::sub(&w_r, &wstar))];
+        for s in [1usize, 3, 6, 10] {
+            let (ws, _) = svrg_epochs(
+                &approx,
+                &w_r,
+                &SvrgParams { epochs: s, batch: 16, lr: None, seed: 6 },
+            );
+            dists.push(dense::norm(&dense::sub(&ws, &wstar)));
+        }
+        for k in 1..dists.len() {
+            assert!(
+                dists[k] < dists[k - 1],
+                "no contraction: {dists:?}"
+            );
+        }
+        // 10 epochs should get close
+        assert!(dists.last().unwrap() / dists[0] < 0.2, "{dists:?}");
+    }
+
+    #[test]
+    fn direction_aligns_with_negative_gradient_under_tilt() {
+        // two heterogeneous shards; node 0's tilted optimization from
+        // w_r must produce a descent direction of the *global* f
+        // (paper: d_p descent ⟺ f̂_p(w_p) < f̂_p(w_r))
+        let data = SynthConfig {
+            n_examples: 300,
+            n_features: 35,
+            nnz_per_example: 6,
+            skew: 2.0,
+            ..SynthConfig::default()
+        }
+        .generate(7);
+        let rows0: Vec<usize> = (0..150).collect();
+        let rows1: Vec<usize> = (150..300).collect();
+        let d0 = data.take(&rows0);
+        let d1 = data.take(&rows1);
+        let dim = data.n_features();
+        let lam = 0.5;
+        let loss = LossKind::Logistic;
+        let mut rng = Rng::new(8);
+        let w_r: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.05).collect();
+        // global gradient
+        let mut g_r = vec![0.0; dim];
+        let mut gl0 = vec![0.0; dim];
+        let mut gl1 = vec![0.0; dim];
+        shard_loss_grad(&d0.x, &d0.y, &w_r, loss, &mut gl0, None);
+        shard_loss_grad(&d1.x, &d1.y, &w_r, loss, &mut gl1, None);
+        for j in 0..dim {
+            g_r[j] = lam * w_r[j] + gl0[j] + gl1[j];
+        }
+        let approx = LocalApprox::new(&d0.x, &d0.y, loss, lam, &w_r, &g_r, &gl0);
+        let (w_p, _) = svrg_epochs(
+            &approx,
+            &w_r,
+            &SvrgParams { epochs: 2, batch: 16, lr: None, seed: 9 },
+        );
+        // descent of f̂_p...
+        assert!(approx.value(&w_p) < approx.value(&w_r));
+        // ...and therefore d_p is a global descent direction
+        let d_p = dense::sub(&w_p, &w_r);
+        assert!(dense::dot(&d_p, &g_r) < 0.0);
+    }
+
+    #[test]
+    fn zero_epochs_is_identity() {
+        let d = SynthConfig::small().generate(10);
+        let dim = d.n_features();
+        let w_r = vec![0.3; dim];
+        let approx = make_approx(&d, &w_r, 0.2, LossKind::LeastSquares);
+        let (w, stats) = svrg_epochs(
+            &approx,
+            &w_r,
+            &SvrgParams { epochs: 0, ..Default::default() },
+        );
+        assert_eq!(w, w_r);
+        assert_eq!(stats.epochs_run, 0);
+    }
+}

@@ -1,0 +1,140 @@
+//! The dense three-layer execution path: compiled-once PJRT
+//! executables for the L2 graph (which embeds the L1 Pallas kernels),
+//! called from the coordinator per node-shard.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::runtime::manifest::Manifest;
+
+/// Owns the PJRT client plus the compiled executables for every
+/// artifact in the manifest. One instance per process; executables are
+/// compiled once and reused across all outer iterations and nodes.
+pub struct DenseRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    value_grad: xla::PjRtLoadedExecutable,
+    svrg_epoch: xla::PjRtLoadedExecutable,
+    margins: xla::PjRtLoadedExecutable,
+}
+
+/// Output of one `value_grad` call: shard loss-sum, shard loss-gradient
+/// and the margin by-products (paper step 1).
+#[derive(Clone, Debug)]
+pub struct ValueGrad {
+    pub loss_sum: f64,
+    pub grad: Vec<f32>,
+    pub margins: Vec<f32>,
+}
+
+impl DenseRuntime {
+    /// Load every artifact from `dir` (default `artifacts/`) and
+    /// compile on the CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<DenseRuntime> {
+        let manifest = Manifest::load(&dir)
+            .map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest
+                .path(name)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        Ok(DenseRuntime {
+            value_grad: compile("value_grad")?,
+            svrg_epoch: compile("svrg_epoch")?,
+            margins: compile("margins")?,
+            manifest,
+            client,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn check(&self, what: &str, len: usize, want: usize) -> Result<()> {
+        anyhow::ensure!(
+            len == want,
+            "{what}: length {len} does not match artifact shape {want} \
+             (shapes are baked at AOT time — see artifacts/manifest.json)"
+        );
+        Ok(())
+    }
+
+    /// (Σ l_i, ∇Σ l_i, z = X·w) over one dense shard.
+    /// `x` is row-major (n × d), `w` length d, `y` length n (±1).
+    pub fn value_grad(&self, w: &[f32], x: &[f32], y: &[f32]) -> Result<ValueGrad> {
+        let (n, d) = (self.manifest.n, self.manifest.d);
+        self.check("w", w.len(), d)?;
+        self.check("x", x.len(), n * d)?;
+        self.check("y", y.len(), n)?;
+        let lw = xla::Literal::vec1(w);
+        let lx = xla::Literal::vec1(x).reshape(&[n as i64, d as i64])?;
+        let ly = xla::Literal::vec1(y);
+        let out = self.value_grad.execute::<xla::Literal>(&[lw, lx, ly])?
+            [0][0]
+            .to_literal_sync()?;
+        let (val, grad, z) = out.to_tuple3()?;
+        Ok(ValueGrad {
+            loss_sum: val.get_first_element::<f32>()? as f64,
+            grad: grad.to_vec::<f32>()?,
+            margins: z.to_vec::<f32>()?,
+        })
+    }
+
+    /// One SVRG epoch on the tilted local objective (L2's `svrg_epoch`,
+    /// whose inner kernels are the L1 Pallas tiles). `perm` is this
+    /// epoch's example order (length n, a permutation of 0..n).
+    #[allow(clippy::too_many_arguments)]
+    pub fn svrg_epoch(
+        &self,
+        w: &[f32],
+        x: &[f32],
+        y: &[f32],
+        tilt: &[f32],
+        lam: f32,
+        lr: f32,
+        perm: &[i32],
+    ) -> Result<Vec<f32>> {
+        let (n, d) = (self.manifest.n, self.manifest.d);
+        self.check("w", w.len(), d)?;
+        self.check("x", x.len(), n * d)?;
+        self.check("y", y.len(), n)?;
+        self.check("tilt", tilt.len(), d)?;
+        self.check("perm", perm.len(), n)?;
+        let args = [
+            xla::Literal::vec1(w),
+            xla::Literal::vec1(x).reshape(&[n as i64, d as i64])?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(tilt),
+            xla::Literal::scalar(lam),
+            xla::Literal::scalar(lr),
+            xla::Literal::vec1(perm),
+        ];
+        let out = self.svrg_epoch.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// z = X·w (margins / test scoring).
+    pub fn margins(&self, x: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let (n, d) = (self.manifest.n, self.manifest.d);
+        self.check("w", w.len(), d)?;
+        self.check("x", x.len(), n * d)?;
+        let lx = xla::Literal::vec1(x).reshape(&[n as i64, d as i64])?;
+        let lw = xla::Literal::vec1(w);
+        let out = self.margins.execute::<xla::Literal>(&[lx, lw])?[0][0]
+            .to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+}
+
+// No unit tests here: exercising the runtime needs the artifacts, which
+// are a build product. The gated integration suite lives in
+// rust/tests/runtime_roundtrip.rs (skips with a notice if artifacts/ is
+// absent) and compares every executable against the Rust oracle.

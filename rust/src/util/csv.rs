@@ -1,0 +1,105 @@
+//! CSV emission for experiment series (the figure-regeneration benches
+//! write their panel data through this).
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// A rectangular table with a header row; numeric cells formatted with
+/// full precision so downstream plotting is lossless.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Table {
+        Table {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row arity must match header"
+        );
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            let mut first = true;
+            for v in row {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                let _ = write!(out, "{v}");
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Parse a numeric CSV produced by [`Table::to_csv`].
+pub fn parse(src: &str) -> Result<Table, String> {
+    let mut lines = src.lines();
+    let header = lines.next().ok_or("empty csv")?;
+    let columns: Vec<String> =
+        header.split(',').map(|s| s.to_string()).collect();
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row: Result<Vec<f64>, _> =
+            line.split(',').map(|c| c.trim().parse::<f64>()).collect();
+        rows.push(row.map_err(|e| format!("row {}: {e}", i + 2))?);
+        if rows.last().unwrap().len() != columns.len() {
+            return Err(format!("row {} arity mismatch", i + 2));
+        }
+    }
+    Ok(Table { columns, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = Table::new(&["pass", "relgap"]);
+        t.push(vec![1.0, 0.5]);
+        t.push(vec![2.0, 0.125]);
+        let parsed = parse(&t.to_csv()).unwrap();
+        assert_eq!(parsed.columns, t.columns);
+        assert_eq!(parsed.rows, t.rows);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec![1.0]);
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        assert!(parse("a,b\n1,x\n").is_err());
+    }
+}

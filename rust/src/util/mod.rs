@@ -1,0 +1,12 @@
+//! In-tree substrates that a networked build would pull from crates.io:
+//! RNG, CLI parsing, config files, JSON/CSV emission, property testing.
+//! (The image's offline cargo registry has none of rand/clap/serde/
+//! proptest — DESIGN.md §3.)
+
+pub mod cli;
+pub mod config;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;

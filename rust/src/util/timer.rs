@@ -1,0 +1,53 @@
+//! Wall-clock scoping helpers used by the cluster simulator to measure
+//! per-node compute phases.
+
+use std::time::{Duration, Instant};
+
+/// Accumulates named durations; the cluster's "compute clock" per node.
+#[derive(Clone, Debug, Default)]
+pub struct Stopwatch {
+    total: Duration,
+}
+
+impl Stopwatch {
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.total += t0.elapsed();
+        out
+    }
+
+    pub fn add(&mut self, d: Duration) {
+        self.total += d;
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn reset(&mut self) -> Duration {
+        std::mem::take(&mut self.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut sw = Stopwatch::default();
+        sw.add(Duration::from_millis(5));
+        sw.add(Duration::from_millis(7));
+        assert!((sw.seconds() - 0.012).abs() < 1e-9);
+        assert_eq!(sw.reset(), Duration::from_millis(12));
+        assert_eq!(sw.seconds(), 0.0);
+    }
+
+    #[test]
+    fn times_closures() {
+        let mut sw = Stopwatch::default();
+        let x = sw.time(|| 21 * 2);
+        assert_eq!(x, 42);
+    }
+}

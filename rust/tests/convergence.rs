@@ -1,0 +1,221 @@
+//! Empirical checks of the paper's theory on mid-size problems:
+//! Theorem 1 (global linear rate), the safeguard probability behaviour
+//! behind Theorem 2, and the Figure-1 orderings (FS beats SQM/Hybrid on
+//! communication passes; the gap narrows as nodes increase).
+
+use psgd::algo::fs::{FsConfig, FsDriver};
+use psgd::algo::hybrid::{HybridConfig, HybridDriver};
+use psgd::algo::param_mix::{ParamMixConfig, ParamMixDriver};
+use psgd::algo::sqm::{SqmConfig, SqmDriver};
+use psgd::algo::{Driver, StopRule};
+use psgd::cluster::{Cluster, CostModel};
+use psgd::data::dataset::Dataset;
+use psgd::data::synth::SynthConfig;
+use psgd::loss::LossKind;
+
+const LAM: f64 = 0.5;
+
+fn data(seed: u64) -> Dataset {
+    SynthConfig {
+        n_examples: 1_000,
+        n_features: 120,
+        nnz_per_example: 10,
+        skew: 1.0,
+        ..SynthConfig::default()
+    }
+    .generate(seed)
+}
+
+fn cluster(d: &Dataset, nodes: usize) -> Cluster {
+    Cluster::partition(d.clone(), nodes, CostModel::free())
+}
+
+/// High-accuracy reference optimum via distributed TRON.
+fn f_star(d: &Dataset, loss: LossKind) -> f64 {
+    let mut c = cluster(d, 1);
+    let mut cfg = SqmConfig { loss, lam: LAM, ..Default::default() };
+    cfg.tron.eps = 1e-13;
+    cfg.tron.max_iter = 300;
+    SqmDriver::new(cfg).run(&mut c, None, &StopRule::iters(300)).f
+}
+
+#[test]
+fn theorem1_global_linear_rate_across_losses() {
+    // (f(w^{r+1}) − f*) ≤ δ (f(w^r) − f*) with a uniform δ < 1
+    for loss in [LossKind::Logistic, LossKind::SquaredHinge, LossKind::LeastSquares] {
+        let d = data(1);
+        let fstar = f_star(&d, loss);
+        let mut c = cluster(&d, 5);
+        let run = FsDriver::new(FsConfig {
+            loss,
+            lam: LAM,
+            epochs: 2,
+            ..Default::default()
+        })
+        .run(&mut c, None, &StopRule::iters(20));
+        let gaps: Vec<f64> = run
+            .trace
+            .points
+            .iter()
+            .map(|p| p.f - fstar)
+            .take_while(|g| *g > 1e-11)
+            .collect();
+        assert!(gaps.len() >= 4, "{loss:?}: trace too short ({gaps:?})");
+        let mut worst = 0.0f64;
+        for k in 1..gaps.len() {
+            worst = worst.max(gaps[k] / gaps[k - 1]);
+        }
+        assert!(
+            worst < 1.0,
+            "{loss:?}: worst contraction ratio {worst} (gaps {gaps:?})"
+        );
+    }
+}
+
+#[test]
+fn fs_beats_sqm_on_communication_passes() {
+    // Figure 1 left panels: to reach the same (moderate) relative gap,
+    // FS needs far fewer size-d passes than SQM. The regime that makes
+    // this vivid is the paper's: weak regularization (ill-conditioned ⇒
+    // many CG iterations per TRON step ⇒ many passes) and statistically
+    // similar shards (random example partition). SQM still wins *deep*
+    // accuracy — the paper says so too ("SQM and Hybrid also have the
+    // advantage of better convergence when coming close to the
+    // optimum").
+    let lam = 0.01;
+    let d = SynthConfig {
+        n_examples: 4_000,
+        n_features: 300,
+        nnz_per_example: 10,
+        skew: 0.5,
+        ..SynthConfig::default()
+    }
+    .generate(2);
+    // reference optimum
+    let mut c0 = Cluster::partition(d.clone(), 1, CostModel::free());
+    let mut rcfg = SqmConfig { lam, ..Default::default() };
+    rcfg.tron.eps = 1e-13;
+    rcfg.tron.max_iter = 500;
+    let fstar = SqmDriver::new(rcfg)
+        .run(&mut c0, None, &StopRule::iters(500))
+        .f;
+    let target = fstar * (1.0 + 1e-4);
+    let passes_to_target = |run: &psgd::algo::RunResult| -> f64 {
+        run.trace
+            .points
+            .iter()
+            .find(|p| p.f <= target)
+            .map(|p| p.comm_passes)
+            .unwrap_or(f64::INFINITY)
+    };
+    let part = psgd::data::partition::Partition::shuffled(d.n_examples(), 8, 5);
+
+    let mut c_fs = Cluster::partition_with(d.clone(), &part, CostModel::free());
+    let fs = FsDriver::new(FsConfig { lam, epochs: 8, ..Default::default() })
+        .run(&mut c_fs, None, &StopRule::iters(60));
+
+    let mut c_sqm = Cluster::partition_with(d.clone(), &part, CostModel::free());
+    let sqm = SqmDriver::new(SqmConfig { lam, ..Default::default() })
+        .run(&mut c_sqm, None, &StopRule::iters(60));
+
+    let fs_passes = passes_to_target(&fs);
+    let sqm_passes = passes_to_target(&sqm);
+    assert!(
+        fs_passes.is_finite() && sqm_passes.is_finite(),
+        "fs {fs_passes} sqm {sqm_passes}"
+    );
+    assert!(
+        fs_passes < 0.7 * sqm_passes,
+        "FS should win clearly on passes: fs={fs_passes} sqm={sqm_passes}"
+    );
+}
+
+#[test]
+fn hybrid_between_sqm_and_fs_early() {
+    // Hybrid's mixing init buys it a better start than cold SQM.
+    let d = data(3);
+    let mut c_sqm = cluster(&d, 8);
+    let mut c_hyb = cluster(&d, 8);
+    let sqm = SqmDriver::new(SqmConfig { lam: LAM, ..Default::default() })
+        .run(&mut c_sqm, None, &StopRule::iters(3));
+    let mut hcfg = HybridConfig::default();
+    hcfg.sqm.lam = LAM;
+    let hyb = HybridDriver::with_objective(hcfg)
+        .run(&mut c_hyb, None, &StopRule::iters(3));
+    assert!(
+        hyb.trace.points[0].f <= sqm.trace.points[0].f,
+        "hybrid {} vs sqm {}",
+        hyb.trace.points[0].f,
+        sqm.trace.points[0].f
+    );
+}
+
+#[test]
+fn node_scaling_does_not_shrink_fs_iterations() {
+    // paper: "When the number of nodes is increased, SQM and Hybrid
+    // come closer to our method" — because f̂_p approximates f worse,
+    // FS needs at least as many outer iterations at higher P.
+    let d = data(4);
+    let fstar = f_star(&d, LossKind::Logistic);
+    let target = fstar * (1.0 + 1e-5);
+    let iters_at = |nodes: usize| -> usize {
+        let mut c = cluster(&d, nodes);
+        let run = FsDriver::new(FsConfig {
+            lam: LAM,
+            epochs: 2,
+            ..Default::default()
+        })
+        .run(&mut c, None, &StopRule::iters(150).with_target(target));
+        run.trace.points.len()
+    };
+    let small = iters_at(2);
+    let large = iters_at(25);
+    assert!(
+        large >= small,
+        "FS outer iterations should not shrink with more nodes: P=2 → {small}, P=25 → {large}"
+    );
+}
+
+#[test]
+fn safeguard_rarely_triggers_with_svrg() {
+    // the Theorem-2 story: with a strongly convergent inner solver the
+    // safeguard is essentially never needed, even at small s
+    let d = data(5);
+    let mut c = cluster(&d, 6);
+    let run = FsDriver::new(FsConfig {
+        lam: LAM,
+        epochs: 1,
+        ..Default::default()
+    })
+    .run(&mut c, None, &StopRule::iters(25));
+    let total_hits: usize =
+        run.trace.points.iter().map(|p| p.safeguard_hits).sum();
+    let total_dirs = 6 * run.trace.points.len();
+    assert!(
+        (total_hits as f64) < 0.05 * total_dirs as f64,
+        "safeguard hit {total_hits}/{total_dirs} directions"
+    );
+}
+
+#[test]
+fn param_mix_converges_slower_than_fs_to_tight_gaps() {
+    let d = data(6);
+    let fstar = f_star(&d, LossKind::Logistic);
+    let target = fstar * (1.0 + 1e-6);
+    let mut c_fs = cluster(&d, 6);
+    let fs = FsDriver::new(FsConfig { lam: LAM, epochs: 2, ..Default::default() })
+        .run(&mut c_fs, None, &StopRule::iters(60).with_target(target));
+    let mut c_pm = cluster(&d, 6);
+    let pm = ParamMixDriver::new(ParamMixConfig {
+        lam: LAM,
+        epochs: 2,
+        ..Default::default()
+    })
+    .run(&mut c_pm, None, &StopRule::iters(60).with_target(target));
+    let fs_gap = (fs.f - fstar) / fstar;
+    let pm_gap = (pm.f - fstar) / fstar;
+    assert!(
+        fs_gap < pm_gap,
+        "FS gap {fs_gap} should beat parameter mixing {pm_gap}"
+    );
+}

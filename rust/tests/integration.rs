@@ -1,0 +1,239 @@
+//! End-to-end integration over the public API: every driver on a
+//! shared mid-size problem, trace/CSV/JSON plumbing, config loading,
+//! libsvm round trips, failure injection (degenerate shards, extreme λ,
+//! empty test sets).
+
+use psgd::algo::autoswitch::{AutoSwitchConfig, AutoSwitchDriver};
+use psgd::algo::fs::{Combine, FsConfig, FsDriver};
+use psgd::algo::hybrid::{HybridConfig, HybridDriver};
+use psgd::algo::param_mix::{ParamMixConfig, ParamMixDriver};
+use psgd::algo::sqm::{CoreOpt, SqmConfig, SqmDriver};
+use psgd::algo::{Driver, StopRule};
+use psgd::cluster::{Cluster, CostModel};
+use psgd::data::dataset::Dataset;
+use psgd::data::libsvm;
+use psgd::data::partition::Partition;
+use psgd::data::synth::SynthConfig;
+use psgd::loss::LossKind;
+use psgd::util::config::Config;
+use psgd::util::csv;
+
+fn problem() -> (Dataset, Dataset) {
+    SynthConfig {
+        n_examples: 600,
+        n_features: 80,
+        nnz_per_example: 8,
+        skew: 1.0,
+        ..SynthConfig::default()
+    }
+    .generate(77)
+    .split(0.85, 3)
+}
+
+fn drivers() -> Vec<Box<dyn Driver>> {
+    let lam = 0.5;
+    let mut hybrid = HybridConfig::default();
+    hybrid.sqm.lam = lam;
+    let mut autosw = AutoSwitchConfig::default();
+    autosw.fs.lam = lam;
+    autosw.switch_gnorm = 1e-2;
+    vec![
+        Box::new(FsDriver::new(FsConfig { lam, ..Default::default() })),
+        Box::new(FsDriver::new(FsConfig {
+            lam,
+            combine: Combine::SizeWeighted,
+            ..Default::default()
+        })),
+        Box::new(SqmDriver::new(SqmConfig { lam, ..Default::default() })),
+        Box::new(SqmDriver::new(SqmConfig {
+            lam,
+            core: CoreOpt::Lbfgs,
+            ..Default::default()
+        })),
+        Box::new(HybridDriver::with_objective(hybrid)),
+        Box::new(ParamMixDriver::new(ParamMixConfig {
+            lam,
+            ..Default::default()
+        })),
+        Box::new(AutoSwitchDriver::new(autosw)),
+    ]
+}
+
+#[test]
+fn every_driver_runs_and_descends() {
+    let (train, test) = problem();
+    for driver in drivers() {
+        let mut cluster =
+            Cluster::partition(train.clone(), 5, CostModel::default());
+        let run = driver.run(&mut cluster, Some(&test), &StopRule::iters(8));
+        let pts = &run.trace.points;
+        assert!(!pts.is_empty(), "{} produced no trace", driver.name());
+        assert!(
+            run.f <= pts[0].f,
+            "{} did not descend: {} -> {}",
+            driver.name(),
+            pts[0].f,
+            run.f
+        );
+        // ledger monotone along the trace
+        for k in 1..pts.len() {
+            assert!(pts[k].comm_passes >= pts[k - 1].comm_passes);
+            assert!(pts[k].seconds >= pts[k - 1].seconds - 1e-12);
+        }
+        // AUPRC recorded (test set given)
+        assert!(pts.iter().any(|p| !p.auprc.is_nan()));
+        // simulated time includes modeled comm (non-free cost model)
+        assert!(run.ledger.comm_seconds > 0.0);
+    }
+}
+
+#[test]
+fn trace_tables_roundtrip_through_csv_and_json() {
+    let (train, test) = problem();
+    let mut cluster = Cluster::partition(train, 4, CostModel::default());
+    let run = FsDriver::new(FsConfig { lam: 0.5, ..Default::default() })
+        .run(&mut cluster, Some(&test), &StopRule::iters(5));
+    let table = run.trace.to_table(run.f);
+    let parsed = csv::parse(&table.to_csv()).expect("csv parse");
+    assert_eq!(parsed.rows.len(), run.trace.points.len());
+    assert_eq!(parsed.columns[1], "comm_passes");
+    let json = run.trace.to_json(run.f).to_json(2);
+    let v = psgd::util::json::parse(&json).expect("json parse");
+    assert!(v.get("points").is_some());
+}
+
+#[test]
+fn libsvm_roundtrip_preserves_training_behaviour() {
+    let (train, _) = problem();
+    let mut buf = Vec::new();
+    libsvm::write(&train, &mut buf).unwrap();
+    let reloaded =
+        libsvm::read(buf.as_slice(), train.n_features()).expect("reload");
+    assert_eq!(train.n_examples(), reloaded.n_examples());
+    assert_eq!(train.nnz(), reloaded.nnz());
+    // identical FS run on both
+    let run = |d: Dataset| {
+        let mut c = Cluster::partition(d, 3, CostModel::free());
+        FsDriver::new(FsConfig { lam: 0.5, seed: 1, ..Default::default() })
+            .run(&mut c, None, &StopRule::iters(4))
+            .f
+    };
+    let a = run(train);
+    let b = run(reloaded);
+    assert!((a - b).abs() < 1e-6 * a.abs(), "{a} vs {b}");
+}
+
+#[test]
+fn config_file_drives_settings() {
+    let cfg = Config::parse(
+        "[train]\nlambda = 0.25\nepochs = 3\nnodes = 6\nloss = \"squared_hinge\"\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.f64("train", "lambda", 0.0), 0.25);
+    assert_eq!(cfg.usize("train", "epochs", 0), 3);
+    assert_eq!(
+        LossKind::parse(cfg.get("train", "loss").unwrap()),
+        Some(LossKind::SquaredHinge)
+    );
+}
+
+#[test]
+fn shuffled_vs_contiguous_partition_both_converge() {
+    let (train, _) = problem();
+    for shuffled in [false, true] {
+        let part = if shuffled {
+            Partition::shuffled(train.n_examples(), 5, 9)
+        } else {
+            Partition::contiguous(train.n_examples(), 5)
+        };
+        let mut cluster =
+            Cluster::partition_with(train.clone(), &part, CostModel::free());
+        let run = FsDriver::new(FsConfig { lam: 0.5, ..Default::default() })
+            .run(&mut cluster, None, &StopRule::iters(10));
+        let pts = &run.trace.points;
+        assert!(pts.last().unwrap().f < pts[0].f * 0.9);
+    }
+}
+
+// ---------- failure injection ----------
+
+#[test]
+fn survives_degenerate_single_class_shards() {
+    // all-positive labels on some shards (contiguous split of sorted
+    // labels) must not break anything
+    let mut data = SynthConfig {
+        n_examples: 200,
+        n_features: 40,
+        nnz_per_example: 5,
+        ..SynthConfig::default()
+    }
+    .generate(5);
+    // sort labels so shards are single-class
+    let mut idx: Vec<usize> = (0..data.n_examples()).collect();
+    idx.sort_by(|&a, &b| data.y[a].partial_cmp(&data.y[b]).unwrap());
+    data = data.take(&idx);
+    let mut cluster = Cluster::partition(data, 4, CostModel::free());
+    let run = FsDriver::new(FsConfig { lam: 0.5, ..Default::default() })
+        .run(&mut cluster, None, &StopRule::iters(6));
+    assert!(run.f.is_finite());
+    assert!(run.trace.points.last().unwrap().f <= run.trace.points[0].f);
+}
+
+#[test]
+fn survives_extreme_regularization() {
+    let (train, _) = problem();
+    for lam in [1e-9, 1e4] {
+        let mut cluster = Cluster::partition(train.clone(), 3, CostModel::free());
+        let run = FsDriver::new(FsConfig { lam, ..Default::default() })
+            .run(&mut cluster, None, &StopRule::iters(5));
+        assert!(run.f.is_finite(), "λ={lam}");
+        // at huge λ the solution collapses to ~0
+        if lam > 1.0 {
+            let wnorm = psgd::linalg::dense::norm(&run.w);
+            assert!(wnorm < 1.0, "λ={lam}, ‖w‖={wnorm}");
+        }
+    }
+}
+
+#[test]
+fn empty_test_set_yields_nan_auprc_not_panic() {
+    let (train, _) = problem();
+    let mut cluster = Cluster::partition(train, 3, CostModel::free());
+    let run = FsDriver::new(FsConfig { lam: 0.5, ..Default::default() })
+        .run(&mut cluster, None, &StopRule::iters(3));
+    assert!(run.trace.points.iter().all(|p| p.auprc.is_nan()));
+}
+
+#[test]
+fn stop_rule_budget_respected() {
+    let (train, _) = problem();
+    let mut cluster = Cluster::partition(train, 4, CostModel::default());
+    let run = FsDriver::new(FsConfig { lam: 0.5, ..Default::default() })
+        .run(&mut cluster, None, &StopRule::budget(12.0, f64::INFINITY));
+    // 3 passes at iter 0, +4 per iteration; budget 12 → stops once
+    // passes ≥ 12, i.e. ≤ 4 recorded points
+    assert!(
+        run.ledger.comm_passes <= 12.0 + 4.0,
+        "passes {}",
+        run.ledger.comm_passes
+    );
+}
+
+#[test]
+fn single_example_per_node_edge_case() {
+    let data = SynthConfig {
+        n_examples: 6,
+        n_features: 10,
+        nnz_per_example: 3,
+        ..SynthConfig::default()
+    }
+    .generate(8);
+    let mut cluster = Cluster::partition(data, 6, CostModel::free());
+    let run = FsDriver::new(FsConfig {
+        lam: 0.5,
+        batch: 1,
+        ..Default::default()
+    })
+    .run(&mut cluster, None, &StopRule::iters(4));
+    assert!(run.f.is_finite());
+}

@@ -1,0 +1,307 @@
+//! Property-based invariants (via the in-tree `util::prop` framework):
+//! the structural facts the system's correctness rests on, checked over
+//! randomized instances.
+
+use psgd::algo::safeguard::Safeguard;
+use psgd::cluster::allreduce::tree_sum;
+use psgd::data::partition::Partition;
+use psgd::data::synth::SynthConfig;
+use psgd::linalg::{dense, Csr};
+use psgd::loss::{LossKind, ALL_LOSSES};
+use psgd::objective::{shard_loss_grad, LocalApprox, Objective};
+use psgd::opt::linesearch::{strong_wolfe, MarginPhi, PhiLambda, WolfeParams};
+use psgd::opt::svrg::{svrg_epochs, SvrgParams};
+use psgd::util::prop::{check, check_msg};
+use psgd::util::rng::Rng;
+
+fn random_csr(rng: &mut Rng, n: usize, d: usize, nnz_per_row: usize) -> Csr {
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|_| {
+            (0..1 + rng.below(nnz_per_row))
+                .map(|_| (rng.below(d) as u32, rng.range(-2.0, 2.0) as f32))
+                .collect()
+        })
+        .collect();
+    Csr::from_rows(d, &rows)
+}
+
+#[test]
+fn prop_tree_sum_equals_sequential_sum() {
+    check_msg(
+        "tree reduction ≡ sequential sum",
+        60,
+        |rng| {
+            let nodes = 1 + rng.below(40);
+            let dim = 1 + rng.below(30);
+            let vs: Vec<Vec<f64>> = (0..nodes)
+                .map(|_| (0..dim).map(|_| rng.normal() * 10.0).collect())
+                .collect();
+            vs
+        },
+        |vs| {
+            let tree = tree_sum(vs);
+            for j in 0..tree.len() {
+                let seq: f64 = vs.iter().map(|v| v[j]).sum();
+                if (tree[j] - seq).abs() > 1e-9 * (1.0 + seq.abs()) {
+                    return Err(format!("component {j}: {} vs {seq}", tree[j]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partitions_are_disjoint_covers() {
+    check(
+        "partition is a disjoint cover",
+        80,
+        |rng| {
+            let n = 1 + rng.below(500);
+            let p = 1 + rng.below(n.min(32));
+            let shuffled = rng.bernoulli(0.5);
+            (n, p, shuffled, rng.next_u64())
+        },
+        |&(n, p, shuffled, seed)| {
+            let part = if shuffled {
+                Partition::shuffled(n, p, seed)
+            } else {
+                Partition::contiguous(n, p)
+            };
+            part.is_disjoint_cover(n) && part.n_nodes() == p
+        },
+    );
+}
+
+#[test]
+fn prop_tilted_gradient_consistency() {
+    // ∇f̂_p(wʳ) = gʳ for arbitrary shards, weights and claimed gradients
+    check_msg(
+        "∇f̂_p(wʳ) = gʳ",
+        40,
+        |rng| {
+            let d = 2 + rng.below(30);
+            let n = 1 + rng.below(60);
+            let x = random_csr(rng, n, d, 6);
+            let y: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+            let w_r: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let g_r: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let lam = rng.range(1e-4, 2.0);
+            let loss = ALL_LOSSES[rng.below(3)];
+            (x, y, w_r, g_r, lam, loss)
+        },
+        |(x, y, w_r, g_r, lam, loss)| {
+            let d = w_r.len();
+            let mut grad_lp = vec![0.0; d];
+            shard_loss_grad(x, y, w_r, *loss, &mut grad_lp, None);
+            let approx = LocalApprox::new(x, y, *loss, *lam, w_r, g_r, &grad_lp);
+            let mut g = vec![0.0; d];
+            approx.grad(w_r, &mut g);
+            let err = dense::max_abs_diff(&g, g_r);
+            if err < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("consistency error {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_line_search_satisfies_armijo_wolfe() {
+    // the paper's conditions (3) + (4) hold at the accepted step for
+    // random convex margin problems
+    check_msg(
+        "Armijo–Wolfe at accepted t",
+        30,
+        |rng| {
+            let d = 3 + rng.below(15);
+            let n = 5 + rng.below(80);
+            let x = random_csr(rng, n, d, 5);
+            let y: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+            let w: Vec<f64> = (0..d).map(|_| rng.normal() * 0.3).collect();
+            let lam = rng.range(0.01, 1.0);
+            let loss = ALL_LOSSES[rng.below(3)];
+            (x, y, w, lam, loss)
+        },
+        |(x, y, w, lam, loss)| {
+            let d_dim = w.len();
+            let n = y.len();
+            // steepest descent direction
+            let mut g = vec![0.0; d_dim];
+            shard_loss_grad(x, y, w, *loss, &mut g, None);
+            dense::axpy(*lam, w, &mut g);
+            let dir: Vec<f64> = g.iter().map(|v| -v).collect();
+            if dense::norm(&dir) < 1e-12 {
+                return Ok(()); // already optimal
+            }
+            let mut z = vec![0.0; n];
+            let mut dz = vec![0.0; n];
+            x.matvec(w, &mut z);
+            x.matvec(&dir, &mut dz);
+            let phi = MarginPhi { z: &z, dz: &dz, y, loss: *loss };
+            let lamp = PhiLambda::new(*lam, w, &dir);
+            let params = WolfeParams::default();
+            let eval = |t: f64| {
+                let (a, b) = phi.partial(t);
+                lamp.compose(t, a, b)
+            };
+            let res = strong_wolfe(eval, &params)
+                .map_err(|e| format!("line search failed: {e}"))?;
+            let (phi0, dphi0) = eval(0.0);
+            let armijo =
+                res.phi_t <= phi0 + params.alpha * res.t * dphi0 + 1e-12;
+            let wolfe = res.dphi_t >= params.beta * dphi0 - 1e-12;
+            if !armijo {
+                return Err(format!("Armijo violated at t={}", res.t));
+            }
+            if res.satisfied && !wolfe {
+                return Err(format!("Wolfe violated at t={}", res.t));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_safeguarded_combination_is_descent_direction() {
+    // after step 6 + step 7, dʳ·gʳ < 0 for any shard directions
+    check_msg(
+        "safeguarded average is descent",
+        50,
+        |rng| {
+            let d = 2 + rng.below(20);
+            let p = 1 + rng.below(10);
+            let g: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let dirs: Vec<Vec<f64>> = (0..p)
+                .map(|_| (0..d).map(|_| rng.normal() * 3.0).collect())
+                .collect();
+            (g, dirs)
+        },
+        |(g, dirs)| {
+            if dense::norm(g) < 1e-12 {
+                return Ok(());
+            }
+            let mut dirs = dirs.clone();
+            Safeguard::default().apply(g, &mut dirs);
+            // simple average
+            let d_dim = g.len();
+            let mut avg = vec![0.0; d_dim];
+            for dp in &dirs {
+                dense::axpy(1.0 / dirs.len() as f64, dp, &mut avg);
+            }
+            let dot = dense::dot(&avg, g);
+            if dot < 0.0 {
+                Ok(())
+            } else {
+                Err(format!("dʳ·g = {dot} ≥ 0"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_svrg_descends_fhat_from_wr() {
+    // descent property behind step 6's practical reading:
+    // f̂_p(w_p) < f̂_p(wʳ) (then d_p is a descent direction of f)
+    check_msg(
+        "SVRG descends the tilted objective",
+        15,
+        |rng| {
+            let d = 5 + rng.below(20);
+            let n = 40 + rng.below(100);
+            let x = random_csr(rng, n, d, 6);
+            let y: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+            let w_r: Vec<f64> = (0..d).map(|_| rng.normal() * 0.2).collect();
+            let g2: Vec<f64> = (0..d).map(|_| rng.normal() * 0.5).collect();
+            let lam = rng.range(0.05, 1.0);
+            let seed = rng.next_u64();
+            (x, y, w_r, g2, lam, seed)
+        },
+        |(x, y, w_r, g2, lam, seed)| {
+            let d = w_r.len();
+            let loss = LossKind::Logistic;
+            let mut grad_lp = vec![0.0; d];
+            shard_loss_grad(x, y, w_r, loss, &mut grad_lp, None);
+            // plausible global gradient: local + perturbation
+            let mut g_r = grad_lp.clone();
+            dense::axpy(*lam, w_r, &mut g_r);
+            dense::axpy(1.0, g2, &mut g_r);
+            let approx = LocalApprox::new(x, y, loss, *lam, w_r, &g_r, &grad_lp);
+            let (w_p, _) = svrg_epochs(
+                &approx,
+                w_r,
+                &SvrgParams { epochs: 2, batch: 16, lr: None, seed: *seed },
+            );
+            let before = approx.value(w_r);
+            let after = approx.value(&w_p);
+            if after < before {
+                Ok(())
+            } else {
+                Err(format!("f̂ went {before} → {after}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_csr_matvec_roundtrip_vs_dense() {
+    check_msg(
+        "CSR matvec/tmatvec vs dense",
+        40,
+        |rng| {
+            let n = 1 + rng.below(40);
+            let d = 1 + rng.below(30);
+            let x = random_csr(rng, n, d, 5);
+            let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let r: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (x, w, r)
+        },
+        |(x, w, r)| {
+            let n = x.n_rows();
+            let d = x.n_cols;
+            let dense_x = x.to_dense();
+            let mut z = vec![0.0; n];
+            x.matvec(w, &mut z);
+            for i in 0..n {
+                let want: f64 =
+                    dense_x[i].iter().zip(w).map(|(a, b)| a * b).sum();
+                if (z[i] - want).abs() > 1e-9 {
+                    return Err(format!("matvec row {i}"));
+                }
+            }
+            let mut g = vec![0.0; d];
+            x.tmatvec(r, &mut g);
+            for j in 0..d {
+                let want: f64 = (0..n).map(|i| dense_x[i][j] * r[i]).sum();
+                if (g[j] - want).abs() > 1e-9 {
+                    return Err(format!("tmatvec col {j}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_split_preserves_and_separates() {
+    check(
+        "train/test split partitions the dataset",
+        20,
+        |rng| {
+            let n = 10 + rng.below(300);
+            let cfg = SynthConfig {
+                n_examples: n,
+                n_features: 50,
+                nnz_per_example: 5,
+                ..SynthConfig::default()
+            };
+            (cfg.generate(rng.next_u64()), rng.range(0.2, 0.9), rng.next_u64())
+        },
+        |(data, frac, seed)| {
+            let (tr, te) = data.split(*frac, *seed);
+            tr.n_examples() + te.n_examples() == data.n_examples()
+                && tr.nnz() + te.nnz() == data.nnz()
+        },
+    );
+}

@@ -1,0 +1,230 @@
+//! The authoritative three-layer composition check: load the AOT
+//! artifacts (L2 JAX graph embedding the L1 Pallas kernels) through the
+//! PJRT runtime and compare every executable against the L3 Rust
+//! oracle on random data at the manifest's baked shapes.
+//!
+//! Requires `make artifacts` to have run; skips (with a notice) when
+//! artifacts/ is absent so `cargo test` works on a fresh checkout.
+
+use psgd::linalg::Csr;
+use psgd::loss::LossKind;
+use psgd::runtime::DenseRuntime;
+use psgd::util::rng::Rng;
+
+fn runtime() -> Option<DenseRuntime> {
+    match DenseRuntime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime tests (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+struct DenseProblem {
+    n: usize,
+    d: usize,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    w: Vec<f32>,
+}
+
+fn problem(rt: &DenseRuntime, seed: u64) -> DenseProblem {
+    let (n, d) = (rt.manifest.n, rt.manifest.d);
+    let mut rng = Rng::new(seed);
+    DenseProblem {
+        n,
+        d,
+        x: (0..n * d).map(|_| (rng.normal() * 0.3) as f32).collect(),
+        y: (0..n).map(|_| rng.sign() as f32).collect(),
+        w: (0..d).map(|_| (rng.normal() * 0.05) as f32).collect(),
+    }
+}
+
+fn loss_kind(rt: &DenseRuntime) -> LossKind {
+    LossKind::parse(&rt.manifest.loss).expect("manifest loss")
+}
+
+/// Rust-side margins oracle in f64.
+fn margins_oracle(p: &DenseProblem) -> Vec<f64> {
+    (0..p.n)
+        .map(|i| {
+            (0..p.d)
+                .map(|j| p.x[i * p.d + j] as f64 * p.w[j] as f64)
+                .sum()
+        })
+        .collect()
+}
+
+#[test]
+fn margins_matches_oracle() {
+    let Some(rt) = runtime() else { return };
+    let p = problem(&rt, 1);
+    let got = rt.margins(&p.x, &p.w).expect("execute margins");
+    let want = margins_oracle(&p);
+    assert_eq!(got.len(), p.n);
+    for i in 0..p.n {
+        assert!(
+            (got[i] as f64 - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()),
+            "margin {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn value_grad_matches_oracle() {
+    let Some(rt) = runtime() else { return };
+    let loss = loss_kind(&rt);
+    let p = problem(&rt, 2);
+    let out = rt.value_grad(&p.w, &p.x, &p.y).expect("execute value_grad");
+
+    let z = margins_oracle(&p);
+    let want_val: f64 =
+        (0..p.n).map(|i| loss.value(z[i], p.y[i] as f64)).sum();
+    assert!(
+        (out.loss_sum - want_val).abs() < 1e-2 * (1.0 + want_val.abs()),
+        "loss {} vs {}",
+        out.loss_sum,
+        want_val
+    );
+    // gradient: Xᵀ l'(z)
+    let mut want_g = vec![0.0f64; p.d];
+    for i in 0..p.n {
+        let r = loss.deriv(z[i], p.y[i] as f64);
+        for j in 0..p.d {
+            want_g[j] += r * p.x[i * p.d + j] as f64;
+        }
+    }
+    assert_eq!(out.grad.len(), p.d);
+    for j in 0..p.d {
+        assert!(
+            (out.grad[j] as f64 - want_g[j]).abs()
+                < 2e-2 * (1.0 + want_g[j].abs()),
+            "grad {j}: {} vs {}",
+            out.grad[j],
+            want_g[j]
+        );
+    }
+    // the margin by-product too
+    for i in 0..p.n {
+        assert!((out.margins[i] as f64 - z[i]).abs() < 1e-3 * (1.0 + z[i].abs()));
+    }
+}
+
+#[test]
+fn svrg_epoch_matches_rust_svrg() {
+    // Run ONE SVRG epoch through the XLA executable and through the
+    // native Rust implementation with the same permutation and
+    // hyperparameters; the two layers must agree.
+    let Some(rt) = runtime() else { return };
+    let loss = loss_kind(&rt);
+    let p = problem(&rt, 3);
+    let (n, d, batch) = (rt.manifest.n, rt.manifest.d, rt.manifest.batch);
+    let mut rng = Rng::new(9);
+    let perm_u32 = rng.permutation(n);
+    let perm: Vec<i32> = perm_u32.iter().map(|&i| i as i32).collect();
+    let tilt: Vec<f32> = (0..d).map(|_| (rng.normal() * 0.01) as f32).collect();
+    let lam = 0.1f32;
+    let lr = 1e-4f32;
+
+    let got = rt
+        .svrg_epoch(&p.w, &p.x, &p.y, &tilt, lam, lr, &perm)
+        .expect("execute svrg_epoch");
+
+    // ---- Rust oracle: same update rule as model.svrg_epoch ----
+    let w0: Vec<f64> = p.w.iter().map(|&v| v as f64).collect();
+    let mut w = w0.clone();
+    // μ = λw0 + Σ ∇l_i(w0) + tilt
+    let z0 = margins_oracle(&p);
+    let mut mu: Vec<f64> = (0..d)
+        .map(|j| lam as f64 * w0[j] + tilt[j] as f64)
+        .collect();
+    for i in 0..n {
+        let r = loss.deriv(z0[i], p.y[i] as f64);
+        for j in 0..d {
+            mu[j] += r * p.x[i * p.d + j] as f64;
+        }
+    }
+    let nb = n / batch;
+    let scale = n as f64 / batch as f64;
+    for k in 0..nb {
+        let idx = &perm[k * batch..(k + 1) * batch];
+        let mut g: Vec<f64> = (0..d)
+            .map(|j| mu[j] + lam as f64 * (w[j] - w0[j]))
+            .collect();
+        for &ii in idx {
+            let i = ii as usize;
+            let zi: f64 = (0..d).map(|j| p.x[i * d + j] as f64 * w[j]).sum();
+            let z0i: f64 =
+                (0..d).map(|j| p.x[i * d + j] as f64 * w0[j]).sum();
+            let r = loss.deriv(zi, p.y[i] as f64)
+                - loss.deriv(z0i, p.y[i] as f64);
+            if r != 0.0 {
+                for j in 0..d {
+                    g[j] += scale * r * p.x[i * d + j] as f64;
+                }
+            }
+        }
+        for j in 0..d {
+            w[j] -= lr as f64 * g[j];
+        }
+    }
+
+    assert_eq!(got.len(), d);
+    let mut max_rel = 0.0f64;
+    for j in 0..d {
+        let rel = (got[j] as f64 - w[j]).abs() / (1.0 + w[j].abs());
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 5e-3, "max relative deviation {max_rel}");
+}
+
+#[test]
+fn svrg_epoch_through_runtime_descends_fhat() {
+    // end-to-end sanity: the executable's epoch output decreases the
+    // tilted objective it was built for
+    let Some(rt) = runtime() else { return };
+    let loss = loss_kind(&rt);
+    let p = problem(&rt, 4);
+    let (n, d) = (p.n, p.d);
+    let mut rng = Rng::new(11);
+    let perm: Vec<i32> =
+        rng.permutation(n).into_iter().map(|i| i as i32).collect();
+    let tilt = vec![0.0f32; d];
+    let lam = 0.1f32;
+    let lr = 1e-5f32; // conservative
+    let w1 = rt
+        .svrg_epoch(&p.w, &p.x, &p.y, &tilt, lam, lr, &perm)
+        .expect("svrg epoch");
+
+    // f̂ via a CSR-backed objective (tilt = 0)
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|i| (0..d).map(|j| (j as u32, p.x[i * d + j])).collect())
+        .collect();
+    let x = Csr::from_rows(d, &rows);
+    let y: Vec<f64> = p.y.iter().map(|&v| v as f64).collect();
+    let fhat = |w: &[f32]| -> f64 {
+        let wd: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+        let mut v = 0.5 * lam as f64 * wd.iter().map(|x| x * x).sum::<f64>();
+        for i in 0..n {
+            v += loss.value(x.row_dot(i, &wd), y[i]);
+        }
+        v
+    };
+    assert!(
+        fhat(&w1) < fhat(&p.w),
+        "epoch did not descend: {} -> {}",
+        fhat(&p.w),
+        fhat(&w1)
+    );
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes() {
+    let Some(rt) = runtime() else { return };
+    let p = problem(&rt, 5);
+    assert!(rt.margins(&p.x[..p.x.len() - 1], &p.w).is_err());
+    assert!(rt.value_grad(&p.w[..p.w.len() - 1], &p.x, &p.y).is_err());
+}
