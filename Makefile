@@ -1,0 +1,18 @@
+# Tier-1 verification — the invariant every PR must keep green.
+# Runs fully offline: no registry dependencies, no xla_extension .so
+# (the PJRT runtime is gated behind the off-by-default `xla` feature).
+verify:
+	cargo build --release && cargo test -q
+
+test:
+	cargo test
+
+bench:
+	cargo bench
+
+# AOT-compile the JAX/Pallas kernels to artifacts/*.hlo.txt for the
+# xla-feature runtime (needs the python toolchain; not part of tier-1).
+artifacts:
+	python3 python/compile/aot.py --out artifacts
+
+.PHONY: verify test bench artifacts

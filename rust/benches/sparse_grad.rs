@@ -1,0 +1,79 @@
+//! The sparse gradient pipeline at the paper's regime: per-node
+//! gradients supported on ~20k of d = 500k columns (kdd2010-shaped,
+//! ~10 nnz/row). Times the merge-by-index tree reduction against the
+//! dense tree_sum, and reports the modeled wire cost of one FS
+//! gradient allreduce on each format — the comm-seconds drop the
+//! sparse pipeline exists for.
+
+use psgd::algo::common::{global_value_grad, global_value_grad_auto};
+use psgd::bench::{run, BenchConfig};
+use psgd::cluster::allreduce::{tree_sum, tree_sum_sparse};
+use psgd::cluster::{Cluster, CostModel};
+use psgd::data::synth::SynthConfig;
+use psgd::linalg::SparseVec;
+use psgd::loss::LossKind;
+use psgd::util::rng::Rng;
+
+const D: usize = 500_000;
+const NODES: usize = 16;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    // per-node sparse gradients: ~2k rows × 10 nnz each
+    let parts_sparse: Vec<SparseVec> = (0..NODES)
+        .map(|_| {
+            let pairs: Vec<(u32, f64)> = (0..20_000)
+                .map(|_| (rng.below(D) as u32, rng.normal()))
+                .collect();
+            SparseVec::from_pairs(D, pairs)
+        })
+        .collect();
+    let parts_dense: Vec<Vec<f64>> =
+        parts_sparse.iter().map(|s| s.to_dense()).collect();
+
+    let cfg = BenchConfig::macro_bench();
+    let mut results = Vec::new();
+    results.push(run("tree_sum dense 16 x 500k", &cfg, || {
+        tree_sum(&parts_dense)[0]
+    }));
+    results.push(run("tree_sum_sparse 16 x ~20k nnz", &cfg, || {
+        tree_sum_sparse(&parts_sparse).0.nnz()
+    }));
+
+    // one FS gradient allreduce (the per-outer-iteration round) on each
+    // wire format, charged by the default Hadoop-era cost model
+    let data = SynthConfig {
+        n_examples: 32_000,
+        n_features: D,
+        nnz_per_example: 10,
+        ..SynthConfig::default()
+    }
+    .generate(3);
+    let c0 = Cluster::partition(data, NODES, CostModel::default());
+    let w = vec![0.0; D];
+    let mut c_dense = c0.fork_fresh();
+    let _ = global_value_grad(&mut c_dense, &w, LossKind::Logistic, 0.5, true);
+    let mut c_sparse = c0.fork_fresh();
+    let _ = global_value_grad_auto(
+        &mut c_sparse,
+        &w,
+        LossKind::Logistic,
+        0.5,
+        true,
+        true,
+    );
+
+    println!("\n### sparse_grad benches (d = {D}, {NODES} nodes)");
+    for s in &results {
+        println!("{}", s.report());
+    }
+    println!(
+        "\nFS gradient allreduce, modeled wire cost (default cost model):\n\
+         {:<8} {:>14} {:>16}\n\
+         {:<8} {:>14.0} {:>16.4}\n\
+         {:<8} {:>14.0} {:>16.4}",
+        "format", "payload bytes", "comm seconds",
+        "dense", c_dense.ledger.comm_bytes, c_dense.ledger.comm_seconds,
+        "sparse", c_sparse.ledger.comm_bytes, c_sparse.ledger.comm_seconds,
+    );
+}

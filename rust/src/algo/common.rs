@@ -7,9 +7,13 @@ use std::cell::RefCell;
 use crate::cluster::{Cluster, Shard};
 use crate::data::dataset::Dataset;
 use crate::linalg::dense;
+use crate::linalg::sparse::SparseVec;
 use crate::loss::LossKind;
 use crate::metrics::auprc::auprc;
-use crate::objective::{shard_loss_grad, Objective};
+use crate::objective::{
+    shard_loss_grad, shard_loss_grad_sparse, shard_loss_grad_sparse_cached,
+    Objective,
+};
 
 /// One distributed value+gradient round at `w`:
 /// nodes compute (Σ_p l, ∇L_p) from their shard; the gradient parts are
@@ -87,6 +91,121 @@ pub fn global_value_grad_cached(
     (f, g, grad_parts)
 }
 
+/// Per-node loss gradients from one distributed round — dense vectors
+/// on the dense path, index/value pairs restricted to each shard's
+/// support on the sparse path. FS only ever consumes these through
+/// [`LocalGrads::tilt`], so the wire format stays an implementation
+/// detail of the round.
+pub enum LocalGrads {
+    Dense(Vec<Vec<f64>>),
+    Sparse(Vec<SparseVec>),
+}
+
+impl LocalGrads {
+    pub fn len(&self) -> usize {
+        match self {
+            LocalGrads::Dense(v) => v.len(),
+            LocalGrads::Sparse(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Node p's tilt for the paper's eq. (2): gʳ − λwʳ − ∇L_p(wʳ).
+    pub fn tilt(&self, p: usize, lam: f64, w_r: &[f64], g_r: &[f64]) -> Vec<f64> {
+        let mut t: Vec<f64> =
+            w_r.iter().zip(g_r).map(|(w, g)| g - lam * w).collect();
+        match self {
+            LocalGrads::Dense(gs) => {
+                for (tj, gj) in t.iter_mut().zip(&gs[p]) {
+                    *tj -= gj;
+                }
+            }
+            LocalGrads::Sparse(gs) => gs[p].axpy_into(-1.0, &mut t),
+        }
+        t
+    }
+}
+
+/// [`global_value_grad`] with the gradient round routed through the
+/// sparse phases when `sparse` is set: each node ships its
+/// support-restricted ∇L_p as index/value pairs, the tree merges by
+/// column, and λw is applied at the master after the reduce. Identical
+/// math either way — only the wire format and its ledger charge differ.
+pub fn global_value_grad_auto(
+    cluster: &mut Cluster,
+    w: &[f64],
+    loss: LossKind,
+    lam: f64,
+    all: bool,
+    sparse: bool,
+) -> (f64, Vec<f64>, LocalGrads, Vec<Vec<f64>>) {
+    if !sparse {
+        let (f, g, parts, margins) =
+            global_value_grad(cluster, w, loss, lam, all);
+        return (f, g, LocalGrads::Dense(parts), margins);
+    }
+    let parts: Vec<(f64, SparseVec, Vec<f64>)> =
+        cluster.map_each(|_, shard| {
+            let mut z = Vec::new();
+            let (val, grad) = shard_loss_grad_sparse(
+                &shard.x, &shard.y, w, loss, &shard.map, Some(&mut z),
+            );
+            (val, grad, z)
+        });
+    let mut loss_sum = 0.0;
+    let mut grad_parts = Vec::with_capacity(parts.len());
+    let mut margins = Vec::with_capacity(parts.len());
+    for (v, g, z) in parts {
+        loss_sum += v;
+        grad_parts.push(g);
+        margins.push(z);
+    }
+    let mut g = cluster.reduce_parts_sparse(&grad_parts, all).into_dense();
+    dense::axpy(lam, w, &mut g);
+    let f = loss_sum + 0.5 * lam * dense::norm_sq(w);
+    (f, g, LocalGrads::Sparse(grad_parts), margins)
+}
+
+/// Cached-margin counterpart of [`global_value_grad_auto`].
+pub fn global_value_grad_cached_auto(
+    cluster: &mut Cluster,
+    margins: &[Vec<f64>],
+    w: &[f64],
+    loss: LossKind,
+    lam: f64,
+    all: bool,
+    sparse: bool,
+) -> (f64, Vec<f64>, LocalGrads) {
+    if !sparse {
+        let (f, g, parts) =
+            global_value_grad_cached(cluster, margins, w, loss, lam, all);
+        return (f, g, LocalGrads::Dense(parts));
+    }
+    let parts: Vec<(f64, SparseVec)> = cluster.map_each(|p, shard| {
+        debug_assert_eq!(margins[p].len(), shard.x.n_rows());
+        shard_loss_grad_sparse_cached(
+            &shard.x,
+            &shard.y,
+            &margins[p],
+            loss,
+            &shard.map,
+        )
+    });
+    let mut loss_sum = 0.0;
+    let mut grad_parts = Vec::with_capacity(parts.len());
+    for (v, g) in parts {
+        loss_sum += v;
+        grad_parts.push(g);
+    }
+    let mut g = cluster.reduce_parts_sparse(&grad_parts, all).into_dense();
+    dense::axpy(lam, w, &mut g);
+    let f = loss_sum + 0.5 * lam * dense::norm_sq(w);
+    (f, g, LocalGrads::Sparse(grad_parts))
+}
+
 /// Ledger-free objective evaluation (plot diagnostics, f* computation).
 pub fn global_f_diagnostic(
     cluster: &Cluster,
@@ -123,6 +242,9 @@ pub struct DistributedObjective<'a> {
     pub cluster: RefCell<&'a mut Cluster>,
     pub loss: LossKind,
     pub lam: f64,
+    /// route gradient/Hv rounds through the sparse phases (decided once
+    /// from the cluster's shard support density)
+    pub sparse: bool,
 }
 
 impl<'a> DistributedObjective<'a> {
@@ -131,7 +253,8 @@ impl<'a> DistributedObjective<'a> {
         loss: LossKind,
         lam: f64,
     ) -> DistributedObjective<'a> {
-        DistributedObjective { cluster: RefCell::new(cluster), loss, lam }
+        let sparse = cluster.prefer_sparse();
+        DistributedObjective { cluster: RefCell::new(cluster), loss, lam, sparse }
     }
 }
 
@@ -152,32 +275,67 @@ impl<'a> Objective for DistributedObjective<'a> {
     fn value_grad(&self, w: &[f64], out: &mut [f64]) -> f64 {
         let cluster = &mut **self.cluster.borrow_mut();
         cluster.broadcast_vec(); // master ships the trial w
-        let (f, g, _, _) =
-            global_value_grad(cluster, w, self.loss, self.lam, false);
+        let (f, g, _, _) = global_value_grad_auto(
+            cluster, w, self.loss, self.lam, false, self.sparse,
+        );
         out.copy_from_slice(&g);
         f
     }
 
     /// H·v = λv + Σ_p X_pᵀ D_p X_p v, computed node-local and reduced.
+    /// The loss part of each node's product is supported on the shard's
+    /// columns, so the sparse path ships it as index/value pairs. The
+    /// row math lives once in [`hess_rows`]; the branches differ only
+    /// in where each row's dᵢᵢ·(xᵢ·v) lands.
     fn hess_vec(&self, w: &[f64], v: &[f64], out: &mut [f64]) {
         let cluster = &mut **self.cluster.borrow_mut();
         cluster.broadcast_vec(); // ship v
         let loss = self.loss;
-        let parts: Vec<Vec<f64>> = cluster.map_each(|_, shard: &Shard| {
-            let mut hv = vec![0.0; v.len()];
-            for i in 0..shard.x.n_rows() {
-                let zi = shard.x.row_dot(i, w);
-                let dii = loss.second_deriv(zi, shard.y[i]);
-                if dii != 0.0 {
-                    let xv = shard.x.row_dot(i, v);
-                    shard.x.add_row_scaled(i, dii * xv, &mut hv);
-                }
-            }
-            hv
-        });
-        let hv = cluster.reduce_parts(&parts, false);
+        let hv = if self.sparse {
+            let parts: Vec<SparseVec> = cluster.map_each(|_, shard: &Shard| {
+                let mut vals = vec![0.0; shard.map.support.len()];
+                hess_rows(shard, loss, w, v, |i, a| {
+                    shard.map.add_row_scaled(&shard.x, i, a, &mut vals)
+                });
+                SparseVec::from_support(
+                    shard.x.n_cols,
+                    &shard.map.support,
+                    &vals,
+                )
+            });
+            cluster.reduce_parts_sparse(&parts, false).into_dense()
+        } else {
+            let parts: Vec<Vec<f64>> = cluster.map_each(|_, shard: &Shard| {
+                let mut hv = vec![0.0; v.len()];
+                hess_rows(shard, loss, w, v, |i, a| {
+                    shard.x.add_row_scaled(i, a, &mut hv)
+                });
+                hv
+            });
+            cluster.reduce_parts(&parts, false)
+        };
         out.copy_from_slice(&hv);
         dense::axpy(self.lam, v, out);
+    }
+}
+
+/// One shard's Hessian-vector row sweep: calls `add(i, dᵢᵢ·(xᵢ·v))`
+/// for every row with curvature, leaving the accumulation target
+/// (dense buffer vs support-restricted values) to the caller.
+fn hess_rows(
+    shard: &Shard,
+    loss: LossKind,
+    w: &[f64],
+    v: &[f64],
+    mut add: impl FnMut(usize, f64),
+) {
+    for i in 0..shard.x.n_rows() {
+        let zi = shard.x.row_dot(i, w);
+        let dii = loss.second_deriv(zi, shard.y[i]);
+        if dii != 0.0 {
+            let xv = shard.x.row_dot(i, v);
+            add(i, dii * xv);
+        }
     }
 }
 
@@ -276,6 +434,53 @@ mod tests {
         assert!(dense::max_abs_diff(&hv, &hv_want) < 1e-9);
         // 2 passes per value_grad (bcast + reduce), 2 per hess_vec
         assert_eq!(cluster.ledger.comm_passes, 4.0);
+    }
+
+    #[test]
+    fn sparse_auto_round_matches_dense_round() {
+        // high-d/low-nnz so the sparse path is a genuine restriction
+        let data = SynthConfig {
+            n_examples: 90,
+            n_features: 2_000,
+            nnz_per_example: 4,
+            ..SynthConfig::default()
+        }
+        .generate(6);
+        let c0 = Cluster::partition(data, 3, CostModel::default());
+        let mut c_dense = c0.fork_fresh();
+        let mut c_sparse = c0.fork_fresh();
+        assert!(c_sparse.prefer_sparse(), "density {}", c_sparse.support_density());
+        let w: Vec<f64> =
+            (0..2_000).map(|j| (j as f64 * 0.013).sin() * 0.2).collect();
+        let loss = LossKind::Logistic;
+        let (f_d, g_d, parts_d, z_d) =
+            global_value_grad(&mut c_dense, &w, loss, 0.3, true);
+        let (f_s, g_s, parts_s, z_s) =
+            global_value_grad_auto(&mut c_sparse, &w, loss, 0.3, true, true);
+        assert!((f_d - f_s).abs() < 1e-12 * (1.0 + f_d.abs()));
+        assert!(dense::max_abs_diff(&g_d, &g_s) < 1e-12);
+        assert_eq!(z_d, z_s);
+        // tilts agree between the dense and sparse representations
+        assert_eq!(parts_s.len(), parts_d.len());
+        let wrapped = LocalGrads::Dense(parts_d);
+        for p in 0..parts_s.len() {
+            let t_dense = wrapped.tilt(p, 0.3, &w, &g_d);
+            let t_sparse = parts_s.tilt(p, 0.3, &w, &g_s);
+            assert!(dense::max_abs_diff(&t_dense, &t_sparse) < 1e-12, "node {p}");
+        }
+        // same logical passes, fewer bytes and seconds on the wire
+        assert_eq!(
+            c_dense.ledger.comm_passes,
+            c_sparse.ledger.comm_passes
+        );
+        assert!(c_sparse.ledger.comm_bytes < c_dense.ledger.comm_bytes);
+        assert!(c_sparse.ledger.comm_seconds < c_dense.ledger.comm_seconds);
+        // cached round agrees too
+        let (fc, gc, _) = global_value_grad_cached_auto(
+            &mut c_sparse, &z_s, &w, loss, 0.3, true, true,
+        );
+        assert!((fc - f_s).abs() < 1e-12 * (1.0 + f_s.abs()));
+        assert!(dense::max_abs_diff(&gc, &g_s) < 1e-12);
     }
 
     #[test]

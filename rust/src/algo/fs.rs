@@ -18,12 +18,15 @@
 //! direction allreduce (2 passes) = 4, versus SQM/TRON's 2 + 2·(CG
 //! iterations). That 4-vs-many gap is exactly Figure 1's left panels.
 
-use crate::algo::common::{global_value_grad, global_value_grad_cached, test_auprc};
+use crate::algo::common::{
+    global_value_grad_auto, global_value_grad_cached_auto, test_auprc,
+};
 use crate::algo::safeguard::Safeguard;
 use crate::algo::{Driver, RunResult, StopRule};
 use crate::cluster::Cluster;
 use crate::data::dataset::Dataset;
 use crate::linalg::dense;
+use crate::linalg::sparse::SparseVec;
 use crate::loss::LossKind;
 use crate::metrics::trace::{Trace, TracePoint};
 use crate::objective::LocalApprox;
@@ -198,6 +201,11 @@ impl Driver for FsDriver {
     ) -> RunResult {
         let c = &self.config;
         let dim = cluster.dim;
+        // route gradient/direction rounds through the sparse phases
+        // when the shards' column supports are small relative to d (the
+        // paper's high-dimensional regime); dense-heavy shards keep the
+        // plain dense path
+        let sparse = cluster.prefer_sparse();
         let mut w = vec![0.0; dim];
         let mut trace = Trace::new(self.name());
         cluster.broadcast_vec(); // ship w⁰
@@ -212,13 +220,14 @@ impl Driver for FsDriver {
         for r in 0.. {
             // --- step 1: gʳ (allreduce: nodes need it for the tilt) ---
             let (f_r, g, grad_parts) = if margins.is_empty() {
-                let (f_r, g, gp, z) =
-                    global_value_grad(cluster, &w, c.loss, c.lam, true);
+                let (f_r, g, gp, z) = global_value_grad_auto(
+                    cluster, &w, c.loss, c.lam, true, sparse,
+                );
                 margins = z;
                 (f_r, g, gp)
             } else {
-                global_value_grad_cached(
-                    cluster, &margins, &w, c.loss, c.lam, true,
+                global_value_grad_cached_auto(
+                    cluster, &margins, &w, c.loss, c.lam, true, sparse,
                 )
             };
             f = f_r;
@@ -245,8 +254,9 @@ impl Driver for FsDriver {
             let g_ref = &g;
             let gp_ref = &grad_parts;
             let mut dirs: Vec<Vec<f64>> = cluster.map_each(|p, shard| {
-                let approx = LocalApprox::new(
-                    &shard.x, &shard.y, c.loss, c.lam, w_ref, g_ref, &gp_ref[p],
+                let tilt = gp_ref.tilt(p, c.lam, w_ref, g_ref);
+                let approx = LocalApprox::from_tilt(
+                    &shard.x, &shard.y, c.loss, c.lam, w_ref, tilt,
                 );
                 let w_p = self.solve_local(&approx, w_ref, p, r);
                 dense::sub(&w_p, w_ref)
@@ -256,30 +266,47 @@ impl Driver for FsDriver {
             last_hits = c.safeguard.apply(&g, &mut dirs);
 
             // --- step 7: convex combination via allreduce ---
-            let d = match c.combine {
+            let weights: Vec<f64> = match c.combine {
                 Combine::Average => {
-                    let parts: Vec<Vec<f64>> = dirs
-                        .iter()
-                        .map(|d| {
-                            d.iter()
-                                .map(|x| x / cluster.n_nodes() as f64)
-                                .collect()
-                        })
-                        .collect();
-                    cluster.reduce_parts(&parts, true)
+                    let n = cluster.n_nodes() as f64;
+                    vec![1.0 / n; dirs.len()]
                 }
                 Combine::SizeWeighted => {
-                    let n_total: usize = cluster.n_examples();
-                    let parts: Vec<Vec<f64>> = dirs
+                    let n_total = cluster.n_examples() as f64;
+                    cluster
+                        .shards
                         .iter()
-                        .zip(&cluster.shards)
-                        .map(|(d, s)| {
-                            let wgt = s.n_examples() as f64 / n_total as f64;
-                            d.iter().map(|x| x * wgt).collect()
-                        })
-                        .collect();
-                    cluster.reduce_parts(&parts, true)
+                        .map(|s| s.n_examples() as f64 / n_total)
+                        .collect()
                 }
+            };
+            // the d_p are dense in general (the tilt moves every
+            // coordinate), but early iterations and safeguarded −gʳ
+            // directions carry many exact zeros the sparse wire format
+            // drops — so go sparse only when the directions actually
+            // are, instead of paying O(P·d) conversion for a payload
+            // the accounting would cap at dense size anyway
+            let dirs_sparse = sparse && {
+                let nnz: usize = dirs
+                    .iter()
+                    .map(|dp| dp.iter().filter(|x| **x != 0.0).count())
+                    .sum();
+                2 * nnz < dirs.len() * dim
+            };
+            let d = if dirs_sparse {
+                let parts: Vec<SparseVec> = dirs
+                    .iter()
+                    .zip(&weights)
+                    .map(|(dp, &wgt)| SparseVec::from_dense_scaled(dp, wgt))
+                    .collect();
+                cluster.reduce_parts_sparse(&parts, true).into_dense()
+            } else {
+                let parts: Vec<Vec<f64>> = dirs
+                    .iter()
+                    .zip(&weights)
+                    .map(|(dp, &wgt)| dp.iter().map(|x| x * wgt).collect())
+                    .collect();
+                cluster.reduce_parts(&parts, true)
             };
 
             // --- step 8: distributed line search on margins ---

@@ -10,8 +10,9 @@
 
 use crate::algo::common::{global_f_diagnostic, test_auprc};
 use crate::algo::{Driver, RunResult, StopRule};
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Shard};
 use crate::data::dataset::Dataset;
+use crate::linalg::sparse::SparseVec;
 use crate::loss::LossKind;
 use crate::metrics::trace::{Trace, TracePoint};
 use crate::opt::sgd::{sgd_epochs, SgdParams};
@@ -48,26 +49,39 @@ impl ParamMixDriver {
     }
 
     /// One mixing round from `w`: node-local SGD then average.
-    /// Charges 2 passes (allreduce of the w_p average).
+    /// Charges 2 passes (allreduce of the w_p average). On sparse
+    /// clusters the w_p average ships as index/value pairs — starting
+    /// from a sparse iterate, each w_p is supported on w's support ∪
+    /// the shard's columns (λ-shrinkage never un-zeroes a coordinate),
+    /// so early rounds are cheap on the wire.
     pub fn round(&self, cluster: &mut Cluster, w: &[f64], iter: usize) -> Vec<f64> {
         let c = &self.config;
         let n_nodes = cluster.n_nodes() as f64;
-        let parts: Vec<Vec<f64>> = cluster.map_each(|p, shard| {
+        let local = |p: usize, shard: &Shard| -> Vec<f64> {
             let seed = c
                 .seed
                 .wrapping_add((iter as u64) << 24)
                 .wrapping_add(p as u64);
-            let w_p = sgd_epochs(
+            sgd_epochs(
                 &shard.x,
                 &shard.y,
                 c.loss,
                 c.lam,
                 w,
                 &SgdParams { epochs: c.epochs, eta0: c.eta0, seed },
-            );
-            w_p.iter().map(|x| x / n_nodes).collect()
-        });
-        cluster.reduce_parts(&parts, true)
+            )
+        };
+        if cluster.prefer_sparse() {
+            let parts: Vec<SparseVec> = cluster.map_each(|p, shard| {
+                SparseVec::from_dense_scaled(&local(p, shard), 1.0 / n_nodes)
+            });
+            cluster.reduce_parts_sparse(&parts, true).into_dense()
+        } else {
+            let parts: Vec<Vec<f64>> = cluster.map_each(|p, shard| {
+                local(p, shard).iter().map(|x| x / n_nodes).collect()
+            });
+            cluster.reduce_parts(&parts, true)
+        }
     }
 }
 

@@ -3,6 +3,16 @@
 //! left fold) keeps the simulation faithful to [8]'s arrangement and
 //! lets the property suite assert the floating-point discrepancy vs
 //! sequential summation stays within tolerance.
+//!
+//! [`tree_sum`] is the dense path; [`tree_sum_sparse`] merges
+//! index/value gradients by column at the leaves and auto-switches to a
+//! dense accumulator once the merged density crosses
+//! [`DENSE_SWITCH_DENSITY`] — the sound-combiner trick that makes the
+//! reduction cost follow the data's support instead of d.
+
+use crate::linalg::sparse::{
+    SparseVec, BYTES_PER_DENSE_SCALAR,
+};
 
 /// Sum a set of equal-length vectors pairwise in binary-tree order.
 ///
@@ -41,6 +51,133 @@ pub fn tree_sum(vectors: &[Vec<f64>]) -> Vec<f64> {
         level = next;
     }
     level.pop().unwrap()
+}
+
+/// Merged density at which [`tree_sum_sparse`] flips its accumulator to
+/// dense (wire break-even: nnz·12 B ≥ d·8 B at density 2/3).
+pub const DENSE_SWITCH_DENSITY: f64 = 2.0 / 3.0;
+
+/// Result of a sparse-aware reduction: stays index/value while the
+/// union support is small, dense once it crossed the switch threshold
+/// somewhere up the tree.
+#[derive(Clone, Debug)]
+pub enum Reduced {
+    Sparse(SparseVec),
+    Dense(Vec<f64>),
+}
+
+impl Reduced {
+    pub fn dim(&self) -> usize {
+        match self {
+            Reduced::Sparse(s) => s.dim,
+            Reduced::Dense(v) => v.len(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            Reduced::Sparse(s) => s.nnz(),
+            Reduced::Dense(v) => v.len(),
+        }
+    }
+
+    /// Bytes this payload occupies on the wire, in whichever encoding
+    /// is smaller (a real system sends the cheaper one).
+    pub fn wire_bytes(&self) -> usize {
+        let dense = self.dim() * BYTES_PER_DENSE_SCALAR;
+        match self {
+            Reduced::Sparse(s) => s.wire_bytes().min(dense),
+            Reduced::Dense(_) => dense,
+        }
+    }
+
+    pub fn into_dense(self) -> Vec<f64> {
+        match self {
+            Reduced::Sparse(s) => s.to_dense(),
+            Reduced::Dense(v) => v,
+        }
+    }
+}
+
+fn promote(s: SparseVec, switch_nnz: usize) -> Reduced {
+    if s.nnz() > switch_nnz {
+        Reduced::Dense(s.to_dense())
+    } else {
+        Reduced::Sparse(s)
+    }
+}
+
+fn merge_reduced(a: Reduced, b: Reduced, switch_nnz: usize) -> Reduced {
+    match (a, b) {
+        (Reduced::Sparse(a), Reduced::Sparse(b)) => {
+            promote(a.merge(&b), switch_nnz)
+        }
+        (Reduced::Sparse(s), Reduced::Dense(mut d))
+        | (Reduced::Dense(mut d), Reduced::Sparse(s)) => {
+            s.axpy_into(1.0, &mut d);
+            Reduced::Dense(d)
+        }
+        (Reduced::Dense(mut a), Reduced::Dense(b)) => {
+            for (ai, bi) in a.iter_mut().zip(&b) {
+                *ai += bi;
+            }
+            Reduced::Dense(a)
+        }
+    }
+}
+
+/// Sparse binary-tree reduction over per-node index/value gradients.
+///
+/// Returns the merged result plus, per tree level, the largest message
+/// (in wire bytes, cheaper of sparse/dense encoding) any node sent at
+/// that level — what the cluster charges the clock with, since sends
+/// within one level are concurrent. The merge order pairs nodes exactly
+/// like [`tree_sum`], so the two paths agree coordinate-for-coordinate
+/// up to the identity a + 0 = a.
+pub fn tree_sum_sparse(parts: &[SparseVec]) -> (Reduced, Vec<usize>) {
+    assert!(!parts.is_empty(), "tree_sum of zero nodes");
+    let dim = parts[0].dim;
+    assert!(
+        parts.iter().all(|p| p.dim == dim),
+        "ragged vectors in reduction"
+    );
+    let switch_nnz = (dim as f64 * DENSE_SWITCH_DENSITY) as usize;
+    let dense_bytes = dim * BYTES_PER_DENSE_SCALAR;
+    let mut level_bytes = Vec::new();
+    // level 1: merge the borrowed inputs pairwise
+    let mut sent = 0usize;
+    let mut level: Vec<Reduced> = parts
+        .chunks(2)
+        .map(|pair| match pair {
+            [a, b] => {
+                sent = sent.max(b.wire_bytes().min(dense_bytes));
+                promote(a.merge(b), switch_nnz)
+            }
+            [a] => promote((*a).clone(), switch_nnz),
+            _ => unreachable!(),
+        })
+        .collect();
+    if parts.len() > 1 {
+        level_bytes.push(sent);
+    }
+    // higher levels
+    while level.len() > 1 {
+        let mut sent = 0usize;
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => {
+                    sent = sent.max(b.wire_bytes());
+                    next.push(merge_reduced(a, b, switch_nnz));
+                }
+                None => next.push(a),
+            }
+        }
+        level_bytes.push(sent);
+        level = next;
+    }
+    (level.pop().unwrap(), level_bytes)
 }
 
 #[cfg(test)]
@@ -82,5 +219,76 @@ mod tests {
     #[should_panic(expected = "zero nodes")]
     fn rejects_empty() {
         tree_sum(&[]);
+    }
+
+    #[test]
+    fn sparse_tree_matches_dense_tree() {
+        let mut rng = Rng::new(4);
+        for nodes in [1usize, 2, 3, 5, 8, 13, 25] {
+            let dim = 37;
+            let dense_parts: Vec<Vec<f64>> = (0..nodes)
+                .map(|_| {
+                    (0..dim)
+                        .map(|_| {
+                            if rng.below(3) == 0 {
+                                rng.normal()
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let sparse_parts: Vec<SparseVec> =
+                dense_parts.iter().map(|p| SparseVec::from_dense(p)).collect();
+            let want = tree_sum(&dense_parts);
+            let (got, levels) = tree_sum_sparse(&sparse_parts);
+            let got = got.into_dense();
+            for j in 0..dim {
+                assert!(
+                    (want[j] - got[j]).abs() < 1e-12,
+                    "nodes={nodes} j={j}"
+                );
+            }
+            if nodes > 1 {
+                assert!(!levels.is_empty());
+                assert!(levels
+                    .iter()
+                    .all(|&b| b <= dim * BYTES_PER_DENSE_SCALAR));
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_reduction_switches_to_dense_accumulator() {
+        // two near-full sparse vectors: the merge crosses 2/3 density
+        let dim = 30;
+        let a = SparseVec::from_pairs(
+            dim,
+            (0..25u32).map(|c| (c, 1.0)).collect(),
+        );
+        let b = SparseVec::from_pairs(
+            dim,
+            (5..30u32).map(|c| (c, 2.0)).collect(),
+        );
+        let (out, _) = tree_sum_sparse(&[a.clone(), b.clone()]);
+        assert!(matches!(out, Reduced::Dense(_)), "should have promoted");
+        let mut want = a.to_dense();
+        b.axpy_into(1.0, &mut want);
+        assert_eq!(out.into_dense(), want);
+    }
+
+    #[test]
+    fn sparse_single_node_is_identity() {
+        let s = SparseVec::from_pairs(9, vec![(2, 1.0), (7, -3.0)]);
+        let (out, levels) = tree_sum_sparse(&[s.clone()]);
+        assert!(levels.is_empty());
+        assert_eq!(out.into_dense(), s.to_dense());
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn sparse_rejects_ragged() {
+        tree_sum_sparse(&[SparseVec::new(3), SparseVec::new(4)]);
     }
 }

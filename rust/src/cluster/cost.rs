@@ -70,9 +70,19 @@ impl CostModel {
             + (dim * self.bytes_per_scalar) as f64 / self.bandwidth_bytes_per_s
     }
 
+    /// Seconds for one tree hop carrying `bytes` of payload — the
+    /// building block the sparse phases charge per reduction level.
+    pub fn hop_seconds(&self, bytes: f64) -> f64 {
+        self.latency_s + bytes / self.bandwidth_bytes_per_s
+    }
+
     /// Modeled seconds for ONE logical size-`dim` traversal (reduce or
     /// broadcast) over `nodes` nodes under the configured topology.
+    /// A single-node cluster has no wire: zero seconds.
     pub fn traversal_seconds(&self, dim: usize, nodes: usize) -> f64 {
+        if nodes <= 1 {
+            return 0.0;
+        }
         let bytes = (dim * self.bytes_per_scalar) as f64;
         match self.topology {
             Topology::Tree => {
@@ -113,5 +123,14 @@ mod tests {
     fn free_model_costs_nothing() {
         let c = CostModel::free();
         assert_eq!(c.pass_seconds(1_000_000), 0.0);
+    }
+
+    #[test]
+    fn single_node_traversal_is_free() {
+        let c = CostModel::default();
+        assert_eq!(c.traversal_seconds(1_000_000, 1), 0.0);
+        assert!(c.traversal_seconds(1_000_000, 2) > 0.0);
+        let ring = CostModel { topology: Topology::Ring, ..c };
+        assert_eq!(ring.traversal_seconds(1_000_000, 1), 0.0);
     }
 }

@@ -8,6 +8,11 @@ pub struct Ledger {
     pub comm_passes: f64,
     /// modeled communication seconds (tree hops × cost model)
     pub comm_seconds: f64,
+    /// payload bytes per logical traversal, summed over traversals —
+    /// d·8 for a dense pass, min(nnz·12, d·8) for a sparse one. This is
+    /// where the sparse pipeline's wire win shows up even when the
+    /// logical pass count is identical.
+    pub comm_bytes: f64,
     /// measured compute seconds (max over concurrent nodes per phase)
     pub compute_seconds: f64,
     /// scalar aggregation rounds (line-search trials etc.)
@@ -35,6 +40,7 @@ mod tests {
         let l = Ledger {
             comm_passes: 4.0,
             comm_seconds: 1.5,
+            comm_bytes: 320.0,
             compute_seconds: 2.5,
             scalar_rounds: 3,
         };

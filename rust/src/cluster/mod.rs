@@ -25,6 +25,8 @@ pub use node::Shard;
 
 use crate::data::dataset::Dataset;
 use crate::data::partition::Partition;
+use crate::linalg::sparse::SparseVec;
+use self::allreduce::Reduced;
 use std::time::Instant;
 
 /// The simulated cluster: P shards + the accounting state.
@@ -55,7 +57,7 @@ impl Cluster {
             .iter()
             .map(|rows| {
                 let sub = data.take(rows);
-                Shard { x: sub.x, y: sub.y }
+                Shard::new(sub.x, sub.y)
             })
             .collect();
         Cluster { shards, cost, dim, ledger: Ledger::default(), threads: 1 }
@@ -80,6 +82,31 @@ impl Cluster {
 
     pub fn n_examples(&self) -> usize {
         self.shards.iter().map(|s| s.x.n_rows()).sum()
+    }
+
+    /// Mean over shards of the fraction of columns the shard touches —
+    /// the auto-switch signal for the sparse gradient pipeline.
+    pub fn support_density(&self) -> f64 {
+        if self.shards.is_empty() || self.dim == 0 {
+            return 1.0;
+        }
+        let sum: f64 = self
+            .shards
+            .iter()
+            .map(|s| s.map.support.len() as f64)
+            .sum();
+        sum / (self.shards.len() * self.dim) as f64
+    }
+
+    /// Should gradient rounds use the sparse phases? Sparse pays
+    /// 12 B/nnz vs 8 B/coordinate, so it wins well below the 2/3 wire
+    /// break-even; 0.5 leaves headroom for union growth up the tree.
+    /// Only on the Tree topology: [`reduce_parts_sparse`] models tree
+    /// hops, and silently swapping a Ring cluster's time model for a
+    /// tree one would corrupt Tree-vs-Ring comparisons.
+    pub fn prefer_sparse(&self) -> bool {
+        self.cost.topology == cost::Topology::Tree
+            && self.support_density() < 0.5
     }
 
     /// Compute-only phase: run `f` on every node, charge the clock with
@@ -135,6 +162,60 @@ impl Cluster {
         sum
     }
 
+    /// Compute phase followed by a sparse-aware tree reduce; the master
+    /// keeps the (possibly densified) sum. Charges 1 logical pass, with
+    /// comm-seconds and comm-bytes based on the actual index/value
+    /// payload (nnz·12 B vs d·8 B) each tree level moves.
+    pub fn map_reduce_sparse(
+        &mut self,
+        f: impl Fn(usize, &Shard) -> SparseVec + Sync,
+    ) -> Reduced {
+        let outs = self.map_each(f);
+        self.reduce_parts_sparse(&outs, false)
+    }
+
+    /// Sparse allreduce: reduce up + broadcast of the merged result
+    /// down. Charges 2 logical passes, seconds/bytes by actual payload.
+    pub fn map_allreduce_sparse(
+        &mut self,
+        f: impl Fn(usize, &Shard) -> SparseVec + Sync,
+    ) -> Reduced {
+        let outs = self.map_each(f);
+        self.reduce_parts_sparse(&outs, true)
+    }
+
+    /// Sparse analogue of [`Self::reduce_parts`]: tree-merge by column
+    /// index (dense accumulator past the density switch), charging the
+    /// clock by the bytes each tree level actually moves rather than
+    /// d·8. Modeled on the binary tree regardless of the configured
+    /// [`cost::Topology`] — a ring reduce-scatter of irregular sparse
+    /// payloads is not modeled.
+    pub fn reduce_parts_sparse(
+        &mut self,
+        parts: &[SparseVec],
+        all: bool,
+    ) -> Reduced {
+        let (out, level_bytes) = allreduce::tree_sum_sparse(parts);
+        let result_bytes = out.wire_bytes() as f64;
+        // up-sweep: one hop per level, payload = largest concurrent
+        // message at that level (level_bytes is empty on 1 node)
+        let mut secs: f64 = level_bytes
+            .iter()
+            .map(|&b| self.cost.hop_seconds(b as f64))
+            .sum();
+        let mut bytes = result_bytes;
+        if all {
+            // broadcast of the merged result back down the tree
+            // (tree_depth = 0 on a single node: no wire, no cost)
+            secs += self.tree_depth() as f64 * self.cost.hop_seconds(result_bytes);
+            bytes += result_bytes;
+        }
+        self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
+        self.ledger.comm_seconds += secs;
+        self.ledger.comm_bytes += bytes;
+        out
+    }
+
     /// Master → nodes broadcast of a size-d vector. Charges 1 pass.
     /// (The data flow itself is implicit — nodes read the master copy —
     /// but the cost is real.)
@@ -164,14 +245,23 @@ impl Cluster {
         acc
     }
 
+    /// Depth of the reduction tree: 0 on a single node (no wire at
+    /// all — charging a lone node per-hop latency was a bug).
     fn tree_depth(&self) -> u32 {
-        (self.n_nodes().max(2) as f64).log2().ceil() as u32
+        let n = self.n_nodes();
+        if n <= 1 {
+            0
+        } else {
+            (n as f64).log2().ceil() as u32
+        }
     }
 
     fn charge_vector_pass(&mut self, passes: usize) {
         let per_pass = self.cost.traversal_seconds(self.dim, self.n_nodes());
         self.ledger.comm_passes += passes as f64;
         self.ledger.comm_seconds += passes as f64 * per_pass;
+        self.ledger.comm_bytes +=
+            (passes * self.dim * self.cost.bytes_per_scalar) as f64;
     }
 
     /// Run one closure per node, returning outputs and per-node seconds.
@@ -303,6 +393,63 @@ mod tests {
         c2.threads = 3;
         let par = c2.map_each(|p, s| (p, s.x.nnz()));
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn single_node_charges_zero_comm_seconds() {
+        // regression: tree_depth used n.max(2), so a lone node paid two
+        // tree hops of latency per scalar round and per-pass traversal
+        // time it could never incur
+        let mut c = cluster(1);
+        let [s] = c.map_reduce_scalars(|_, shard| [shard.x.n_rows() as f64]);
+        assert_eq!(s, 120.0);
+        c.broadcast_vec();
+        let _ = c.map_reduce_vec(|_, _| vec![0.0; 30]);
+        let _ = c.reduce_parts_sparse(
+            &[SparseVec::from_pairs(30, vec![(3, 1.0)])],
+            true,
+        );
+        assert_eq!(
+            c.ledger.comm_seconds, 0.0,
+            "1-node cluster paid for communication"
+        );
+        // logical accounting is untouched
+        assert_eq!(c.ledger.scalar_rounds, 1);
+        assert!(c.ledger.comm_passes > 0.0);
+    }
+
+    #[test]
+    fn sparse_allreduce_matches_dense_and_moves_fewer_bytes() {
+        let mut c_dense = cluster(5);
+        let dim = c_dense.dim;
+        let dense = c_dense.map_allreduce_vec(|p, _| {
+            let mut v = vec![0.0; dim];
+            v[p] = 1.0 + p as f64;
+            v
+        });
+        let mut c_sparse = cluster(5);
+        let sparse = c_sparse
+            .map_allreduce_sparse(|p, _| {
+                SparseVec::from_pairs(dim, vec![(p as u32, 1.0 + p as f64)])
+            })
+            .into_dense();
+        assert_eq!(dense, sparse);
+        assert_eq!(c_sparse.ledger.comm_passes, 2.0);
+        assert!(
+            c_sparse.ledger.comm_bytes < c_dense.ledger.comm_bytes,
+            "sparse {} vs dense {}",
+            c_sparse.ledger.comm_bytes,
+            c_dense.ledger.comm_bytes
+        );
+        assert!(c_sparse.ledger.comm_seconds <= c_dense.ledger.comm_seconds);
+    }
+
+    #[test]
+    fn support_density_reflects_shard_sparsity() {
+        // 120 examples × ~5 nnz over 30 cols: dense-ish shards
+        let c = cluster(4);
+        assert!(c.support_density() > 0.5);
+        assert!(!c.prefer_sparse());
     }
 
     #[test]

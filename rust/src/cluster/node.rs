@@ -1,16 +1,33 @@
-//! Per-node state: the shard of examples node p owns (the paper's I_p).
+//! Per-node state: the shard of examples node p owns (the paper's I_p),
+//! plus the column-support index the sparse gradient pipeline uses.
 
+use crate::linalg::sparse::SupportMap;
 use crate::linalg::Csr;
 
 #[derive(Clone, Debug)]
 pub struct Shard {
     pub x: Csr,
     pub y: Vec<f64>,
+    /// sorted unique columns this shard touches + per-nnz positions —
+    /// built once at partition time, reused by every sparse gradient
+    /// pass
+    pub map: SupportMap,
 }
 
 impl Shard {
+    pub fn new(x: Csr, y: Vec<f64>) -> Shard {
+        let map = SupportMap::build(&x);
+        Shard { x, y, map }
+    }
+
     pub fn n_examples(&self) -> usize {
         self.y.len()
+    }
+
+    /// Fraction of the `dim` feature columns this shard's examples
+    /// touch.
+    pub fn support_density(&self, dim: usize) -> f64 {
+        self.map.density(dim)
     }
 }
 
@@ -19,11 +36,13 @@ mod tests {
     use super::*;
 
     #[test]
-    fn shard_counts() {
-        let s = Shard {
-            x: Csr::from_rows(3, &[vec![(0, 1.0)], vec![(2, 2.0)]]),
-            y: vec![1.0, -1.0],
-        };
+    fn shard_counts_and_support() {
+        let s = Shard::new(
+            Csr::from_rows(3, &[vec![(0, 1.0)], vec![(2, 2.0)]]),
+            vec![1.0, -1.0],
+        );
         assert_eq!(s.n_examples(), 2);
+        assert_eq!(s.map.support, vec![0, 2]);
+        assert!((s.support_density(3) - 2.0 / 3.0).abs() < 1e-15);
     }
 }

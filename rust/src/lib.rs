@@ -6,7 +6,9 @@
 //! on gradient-consistent local approximations* — lives in
 //! [`algo::fs`]; everything else is the substrate it needs:
 //!
-//! - [`linalg`] — CSR sparse matrix + dense vector kernels.
+//! - [`linalg`] — CSR sparse matrix, dense vector kernels, and the
+//!   [`linalg::sparse`] index/value vectors + per-shard support maps
+//!   the sparse gradient pipeline ships over the simulated wire.
 //! - [`data`] — libsvm I/O, the kdd2010-shaped synthetic generator,
 //!   example partitioning.
 //! - [`loss`] — the differentiable convex losses the theory covers.
@@ -15,12 +17,18 @@
 //! - [`opt`] — inner/core optimizers: SVRG, SGD, TRON, L-BFGS, CG and
 //!   the distributed Armijo–Wolfe line search.
 //! - [`cluster`] — the simulated AllReduce-tree cluster with an
-//!   explicit communication cost model (passes + modeled seconds).
+//!   explicit communication cost model (passes + modeled seconds +
+//!   payload bytes). Gradient rounds auto-route through sparse
+//!   merge-by-index reductions when shard supports are small relative
+//!   to d (`Cluster::prefer_sparse`), charging the ledger by actual
+//!   bytes moved (nnz·12 vs d·8).
 //! - [`algo`] — FS-s (Algorithm 1), SQM, Hybrid, parameter mixing and
 //!   the auto-switching extension.
 //! - [`metrics`] — AUPRC, convergence traces, run recording.
-//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
+//! - `runtime` — PJRT executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); the dense three-layer path.
+//!   Gated behind the off-by-default `xla` cargo feature so the
+//!   offline build never needs the xla_extension shared library.
 //! - [`util`], [`bench`] — in-tree CLI/config/JSON/RNG/property-test/
 //!   bench-harness substrates (offline registry: see Cargo.toml).
 //!
@@ -49,6 +57,7 @@ pub mod loss;
 pub mod metrics;
 pub mod objective;
 pub mod opt;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod util;
 

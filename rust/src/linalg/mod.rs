@@ -1,9 +1,12 @@
-//! Linear-algebra substrate: dense f64 vector kernels and the CSR
-//! sparse matrix every shard is stored as. Weights are f64 (the
-//! optimizer's working precision); feature values are f32 (what
+//! Linear-algebra substrate: dense f64 vector kernels, the CSR sparse
+//! matrix every shard is stored as, and the sparse index/value vectors
+//! the gradient pipeline ships over the simulated wire. Weights are f64
+//! (the optimizer's working precision); feature values are f32 (what
 //! kdd2010-class data actually needs), promoted at multiply time.
 
 pub mod csr;
 pub mod dense;
+pub mod sparse;
 
 pub use csr::Csr;
+pub use sparse::{SparseVec, SupportMap};

@@ -1,0 +1,348 @@
+//! Sparse f64 vectors for the gradient hot path.
+//!
+//! At the paper's scale (kdd2010: d ≈ 20.21M, ~15 nnz/row) a node's
+//! local loss-gradient ∇L_p is supported only on the columns its shard
+//! actually touches — a few hundred thousand out of tens of millions.
+//! Materializing it as a dense `Vec<f64>` of length d wastes O(P·d)
+//! memory and reduction time per outer iteration. [`SparseVec`] is the
+//! index/value wire format those gradients travel in, and
+//! [`SupportMap`] is the per-shard column index that lets gradient
+//! accumulation run over a compact support-length buffer.
+//!
+//! Wire accounting: one sparse component costs a u32 index + f64 value
+//! (12 B) versus 8 B for a dense coordinate, so the sparse encoding
+//! wins below density 2/3 — the cluster's cost model charges whichever
+//! encoding is smaller.
+
+use crate::linalg::csr::Csr;
+
+/// Wire size of one sparse component: u32 index + f64 value.
+pub const BYTES_PER_SPARSE_NNZ: usize = 12;
+/// Wire size of one dense component (f64).
+pub const BYTES_PER_DENSE_SCALAR: usize = 8;
+
+/// A sparse vector in R^dim: strictly increasing `idx` with aligned
+/// `val`. Exact zeros are dropped at construction (a sum is unchanged
+/// by omitting them, and they cost wire bytes).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    pub dim: usize,
+    /// strictly increasing column indices
+    pub idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+impl SparseVec {
+    pub fn new(dim: usize) -> SparseVec {
+        SparseVec { dim, idx: Vec::new(), val: Vec::new() }
+    }
+
+    /// Build from (col, val) pairs: sorts, merges duplicate columns,
+    /// drops exact zeros.
+    pub fn from_pairs(dim: usize, mut pairs: Vec<(u32, f64)>) -> SparseVec {
+        pairs.sort_unstable_by_key(|&(c, _)| c);
+        let mut out = SparseVec::new(dim);
+        for (c, v) in pairs {
+            assert!((c as usize) < dim, "col {c} out of bounds");
+            match out.idx.last() {
+                Some(&last) if last == c => {
+                    *out.val.last_mut().unwrap() += v;
+                }
+                _ => {
+                    out.idx.push(c);
+                    out.val.push(v);
+                }
+            }
+        }
+        out.drop_zeros();
+        out
+    }
+
+    /// Keep the nonzero coordinates of a dense vector.
+    pub fn from_dense(w: &[f64]) -> SparseVec {
+        SparseVec::from_dense_scaled(w, 1.0)
+    }
+
+    /// Sparsify α·w (exact zeros of w dropped).
+    pub fn from_dense_scaled(w: &[f64], alpha: f64) -> SparseVec {
+        let mut out = SparseVec::new(w.len());
+        for (j, &x) in w.iter().enumerate() {
+            if x != 0.0 {
+                out.idx.push(j as u32);
+                out.val.push(alpha * x);
+            }
+        }
+        out
+    }
+
+    /// Build from a sorted support + aligned values, dropping zeros.
+    /// `idx` must be strictly increasing (a [`SupportMap`] support is).
+    pub fn from_support(dim: usize, idx: &[u32], val: &[f64]) -> SparseVec {
+        debug_assert_eq!(idx.len(), val.len());
+        let mut out = SparseVec::new(dim);
+        for (&c, &v) in idx.iter().zip(val) {
+            if v != 0.0 {
+                out.idx.push(c);
+                out.val.push(v);
+            }
+        }
+        out
+    }
+
+    fn drop_zeros(&mut self) {
+        if self.val.iter().any(|&v| v == 0.0) {
+            let mut idx = Vec::with_capacity(self.idx.len());
+            let mut val = Vec::with_capacity(self.val.len());
+            for (&c, &v) in self.idx.iter().zip(&self.val) {
+                if v != 0.0 {
+                    idx.push(c);
+                    val.push(v);
+                }
+            }
+            self.idx = idx;
+            self.val = val;
+        }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.dim == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.dim as f64
+        }
+    }
+
+    /// Bytes this vector occupies in the sparse wire encoding.
+    pub fn wire_bytes(&self) -> usize {
+        self.nnz() * BYTES_PER_SPARSE_NNZ
+    }
+
+    /// self·w against a dense vector.
+    pub fn dot_dense(&self, w: &[f64]) -> f64 {
+        debug_assert!(w.len() >= self.dim);
+        self.idx
+            .iter()
+            .zip(&self.val)
+            .map(|(&c, &v)| v * w[c as usize])
+            .sum()
+    }
+
+    pub fn norm_sq(&self) -> f64 {
+        self.val.iter().map(|v| v * v).sum()
+    }
+
+    pub fn scale(&mut self, alpha: f64) {
+        for v in &mut self.val {
+            *v *= alpha;
+        }
+    }
+
+    /// out ← out + α·self (dense scatter).
+    pub fn axpy_into(&self, alpha: f64, out: &mut [f64]) {
+        debug_assert!(out.len() >= self.dim);
+        for (&c, &v) in self.idx.iter().zip(&self.val) {
+            out[c as usize] += alpha * v;
+        }
+    }
+
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim];
+        self.axpy_into(1.0, &mut out);
+        out
+    }
+
+    /// Union-sum of two sparse vectors (two-pointer merge). The
+    /// coordinate-wise addition order matches what a dense add of the
+    /// same two operands produces, so sparse and dense reductions agree
+    /// beyond mere tolerance.
+    pub fn merge(&self, other: &SparseVec) -> SparseVec {
+        debug_assert_eq!(self.dim, other.dim, "merging mismatched dims");
+        let mut out = SparseVec::new(self.dim);
+        out.idx.reserve(self.nnz() + other.nnz());
+        out.val.reserve(self.nnz() + other.nnz());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.nnz() && j < other.nnz() {
+            let (ci, cj) = (self.idx[i], other.idx[j]);
+            if ci < cj {
+                out.idx.push(ci);
+                out.val.push(self.val[i]);
+                i += 1;
+            } else if cj < ci {
+                out.idx.push(cj);
+                out.val.push(other.val[j]);
+                j += 1;
+            } else {
+                out.idx.push(ci);
+                out.val.push(self.val[i] + other.val[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+        while i < self.nnz() {
+            out.idx.push(self.idx[i]);
+            out.val.push(self.val[i]);
+            i += 1;
+        }
+        while j < other.nnz() {
+            out.idx.push(other.idx[j]);
+            out.val.push(other.val[j]);
+            j += 1;
+        }
+        out
+    }
+}
+
+/// Per-shard column-support index: the sorted unique columns a CSR
+/// shard touches plus, for every stored nnz, its position within that
+/// support. Built once at partition time; lets every gradient pass
+/// accumulate into a |support|-length buffer instead of a size-d dense
+/// vector (the O(P·d) → O(Σ|support_p|) win the sparse pipeline is
+/// about).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SupportMap {
+    /// sorted unique columns present in the shard
+    pub support: Vec<u32>,
+    /// position of csr.indices[k] within `support`, for every k
+    pub local: Vec<u32>,
+}
+
+impl SupportMap {
+    pub fn build(x: &Csr) -> SupportMap {
+        let mut support = x.indices.clone();
+        support.sort_unstable();
+        support.dedup();
+        let local = x
+            .indices
+            .iter()
+            .map(|c| support.binary_search(c).expect("col in support") as u32)
+            .collect();
+        SupportMap { support, local }
+    }
+
+    /// g_vals ← g_vals + α·xᵢ, with g_vals indexed by support position.
+    #[inline]
+    pub fn add_row_scaled(
+        &self,
+        x: &Csr,
+        i: usize,
+        alpha: f64,
+        g_vals: &mut [f64],
+    ) {
+        debug_assert_eq!(g_vals.len(), self.support.len());
+        let (lo, hi) = (x.offsets[i], x.offsets[i + 1]);
+        for k in lo..hi {
+            g_vals[self.local[k] as usize] += alpha * x.values[k] as f64;
+        }
+    }
+
+    /// Fraction of the `dim` columns this shard touches.
+    pub fn density(&self, dim: usize) -> f64 {
+        if dim == 0 {
+            0.0
+        } else {
+            self.support.len() as f64 / dim as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense;
+
+    #[test]
+    fn from_pairs_sorts_merges_and_drops_zeros() {
+        let s = SparseVec::from_pairs(
+            10,
+            vec![(7, 1.0), (2, 3.0), (7, -1.0), (4, 0.0), (1, 2.0)],
+        );
+        assert_eq!(s.idx, vec![1, 2]);
+        assert_eq!(s.val, vec![2.0, 3.0]);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.wire_bytes(), 24);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let w = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let s = SparseVec::from_dense(&w);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense(), w);
+        let scaled = SparseVec::from_dense_scaled(&w, 2.0);
+        assert_eq!(scaled.to_dense(), vec![0.0, 3.0, 0.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn dot_and_norm_match_dense() {
+        let w = vec![0.5, 0.0, -1.0, 2.0];
+        let s = SparseVec::from_dense(&w);
+        let v = vec![1.0, 7.0, 2.0, 0.5];
+        assert!((s.dot_dense(&v) - dense::dot(&w, &v)).abs() < 1e-15);
+        assert!((s.norm_sq() - dense::norm_sq(&w)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn merge_is_union_sum() {
+        let a = SparseVec::from_pairs(8, vec![(0, 1.0), (3, 2.0), (7, 1.0)]);
+        let b = SparseVec::from_pairs(8, vec![(3, 0.5), (5, -1.0)]);
+        let m = a.merge(&b);
+        assert_eq!(m.idx, vec![0, 3, 5, 7]);
+        assert_eq!(m.val, vec![1.0, 2.5, -1.0, 1.0]);
+        // commutes
+        assert_eq!(b.merge(&a).to_dense(), m.to_dense());
+        // identity
+        let empty = SparseVec::new(8);
+        assert_eq!(a.merge(&empty), a);
+    }
+
+    #[test]
+    fn axpy_scatters() {
+        let s = SparseVec::from_pairs(4, vec![(1, 2.0), (3, -1.0)]);
+        let mut out = vec![1.0; 4];
+        s.axpy_into(0.5, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn support_map_indexes_every_nnz() {
+        let x = Csr::from_rows(
+            6,
+            &[
+                vec![(5, 1.0), (0, 2.0)],
+                vec![(3, 1.0)],
+                vec![(0, 4.0), (3, -1.0)],
+            ],
+        );
+        let map = SupportMap::build(&x);
+        assert_eq!(map.support, vec![0, 3, 5]);
+        assert_eq!(map.local.len(), x.nnz());
+        // accumulate row 2 into a support-length buffer
+        let mut vals = vec![0.0; 3];
+        map.add_row_scaled(&x, 2, 2.0, &mut vals);
+        assert_eq!(vals, vec![8.0, -2.0, 0.0]);
+        assert!((map.density(6) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn from_support_drops_zero_values() {
+        let s = SparseVec::from_support(9, &[1, 4, 8], &[0.0, 2.0, 0.0]);
+        assert_eq!(s.idx, vec![4]);
+        assert_eq!(s.val, vec![2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn from_pairs_bounds_checked() {
+        SparseVec::from_pairs(3, vec![(3, 1.0)]);
+    }
+}

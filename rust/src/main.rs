@@ -256,6 +256,18 @@ fn train(args: &Args) {
     }
 }
 
+#[cfg(not(feature = "xla"))]
+fn info(_args: &Args) {
+    eprintln!(
+        "psgd was built without the `xla` feature: the PJRT runtime \
+         (and `psgd info`) is unavailable in the offline build.\n\
+         Rebuild with `cargo build --features xla` in an environment \
+         that provides the xla_extension runtime (see rust/Cargo.toml)."
+    );
+    std::process::exit(1);
+}
+
+#[cfg(feature = "xla")]
 fn info(args: &Args) {
     let dir = args.get_or("artifacts", "artifacts");
     match psgd::runtime::DenseRuntime::load(dir) {

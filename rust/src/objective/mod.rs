@@ -4,6 +4,7 @@
 //! `f(w) = (λ/2)‖w‖² + Σ_i l(w·x_i, y_i)` — note the paper uses the
 //! *sum* of losses, not the mean; λ is scaled accordingly by callers.
 
+use crate::linalg::sparse::{SparseVec, SupportMap};
 use crate::linalg::{dense, Csr};
 use crate::loss::LossKind;
 
@@ -61,6 +62,75 @@ pub fn shard_loss_grad(
         }
     }
     val
+}
+
+/// Sparse shard-level loss pass: like [`shard_loss_grad`] but the
+/// gradient is accumulated over the shard's column support only
+/// (O(|support|) memory instead of O(d)) and returned as index/value
+/// pairs ready for the sparse tree reduction. The λ term is NOT
+/// included — the master applies it lazily after the merge, which is
+/// exact because λw is common to every node.
+///
+/// Accumulation visits rows (and entries within a row) in the same
+/// order as the dense pass, so the two agree coordinate-for-coordinate,
+/// not just to rounding tolerance.
+pub fn shard_loss_grad_sparse(
+    x: &Csr,
+    y: &[f64],
+    w: &[f64],
+    loss: LossKind,
+    map: &SupportMap,
+    margins_out: Option<&mut Vec<f64>>,
+) -> (f64, SparseVec) {
+    debug_assert_eq!(x.n_rows(), y.len());
+    match margins_out {
+        Some(z) => {
+            z.resize(x.n_rows(), 0.0);
+            sparse_loss_pass(x, y, loss, map, |i| {
+                let zi = x.row_dot(i, w);
+                z[i] = zi;
+                zi
+            })
+        }
+        None => sparse_loss_pass(x, y, loss, map, |i| x.row_dot(i, w)),
+    }
+}
+
+/// Cached-margin variant of [`shard_loss_grad_sparse`] (FS keeps
+/// zᵢ = w·xᵢ node-local across outer iterations): one data pass, no
+/// X·w matvec.
+pub fn shard_loss_grad_sparse_cached(
+    x: &Csr,
+    y: &[f64],
+    z: &[f64],
+    loss: LossKind,
+    map: &SupportMap,
+) -> (f64, SparseVec) {
+    debug_assert_eq!(x.n_rows(), z.len());
+    sparse_loss_pass(x, y, loss, map, |i| z[i])
+}
+
+/// The shared sparse loss sweep: rows in order, margin supplied by the
+/// caller (computed, computed-and-recorded, or cached), gradient
+/// accumulated over the support coordinates.
+fn sparse_loss_pass(
+    x: &Csr,
+    y: &[f64],
+    loss: LossKind,
+    map: &SupportMap,
+    mut margin_of: impl FnMut(usize) -> f64,
+) -> (f64, SparseVec) {
+    let mut vals = vec![0.0; map.support.len()];
+    let mut val = 0.0;
+    for i in 0..x.n_rows() {
+        let zi = margin_of(i);
+        val += loss.value(zi, y[i]);
+        let r = loss.deriv(zi, y[i]);
+        if r != 0.0 {
+            map.add_row_scaled(x, i, r, &mut vals);
+        }
+    }
+    (val, SparseVec::from_support(x.n_cols, &map.support, &vals))
 }
 
 /// The full regularized risk over one dataset (single-machine view and
@@ -144,6 +214,21 @@ impl<'a> LocalApprox<'a> {
         let tilt: Vec<f64> = (0..w_r.len())
             .map(|j| g_r[j] - lam * w_r[j] - grad_lp_wr[j])
             .collect();
+        Self::from_tilt(x, y, loss, lam, w_r, tilt)
+    }
+
+    /// Build from a precomputed tilt vector. The sparse pipeline
+    /// computes tilts from index/value local gradients (see
+    /// `algo::common::LocalGrads::tilt`); [`Self::new`] is the dense
+    /// convenience wrapper over this.
+    pub fn from_tilt(
+        x: &'a Csr,
+        y: &'a [f64],
+        loss: LossKind,
+        lam: f64,
+        w_r: &[f64],
+        tilt: Vec<f64>,
+    ) -> LocalApprox<'a> {
         LocalApprox { x, y, loss, lam, w_r: w_r.to_vec(), tilt }
     }
 }
@@ -309,6 +394,32 @@ mod tests {
         approx.grad(&w, &mut g);
         let fd = fd_grad(&approx, &w);
         assert!(dense::max_abs_diff(&g, &fd) < 1e-4);
+    }
+
+    #[test]
+    fn sparse_shard_grad_matches_dense_exactly() {
+        let (d, w) = tiny_problem();
+        let map = crate::linalg::SupportMap::build(&d.x);
+        for loss in ALL_LOSSES {
+            let mut g_dense = vec![0.0; 12];
+            let mut z_dense = Vec::new();
+            let v_dense = shard_loss_grad(
+                &d.x, &d.y, &w, loss, &mut g_dense, Some(&mut z_dense),
+            );
+            let mut z_sparse = Vec::new();
+            let (v_sparse, g_sparse) = shard_loss_grad_sparse(
+                &d.x, &d.y, &w, loss, &map, Some(&mut z_sparse),
+            );
+            assert_eq!(v_dense, v_sparse, "{loss:?}");
+            assert_eq!(g_dense, g_sparse.to_dense(), "{loss:?}");
+            assert_eq!(z_dense, z_sparse, "{loss:?}");
+            // cached variant agrees given the same margins
+            let (v_cached, g_cached) = shard_loss_grad_sparse_cached(
+                &d.x, &d.y, &z_dense, loss, &map,
+            );
+            assert_eq!(v_dense, v_cached, "{loss:?}");
+            assert_eq!(g_sparse, g_cached, "{loss:?}");
+        }
     }
 
     #[test]

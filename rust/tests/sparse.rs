@@ -1,0 +1,223 @@
+//! Sparse-pipeline contract tests: the index/value gradient path must
+//! agree with the dense path to 1e-12 on arbitrary (skewed) shards —
+//! including an all-dense shard and a 1-nnz shard — and must charge the
+//! ledger fewer comm-seconds and bytes on high-d/low-nnz data while
+//! keeping the paper's logical pass counts intact.
+
+use psgd::algo::common::{global_value_grad, global_value_grad_auto};
+use psgd::algo::fs::{FsConfig, FsDriver};
+use psgd::algo::{Driver, StopRule};
+use psgd::cluster::allreduce::{tree_sum, tree_sum_sparse};
+use psgd::cluster::{Cluster, CostModel};
+use psgd::data::synth::SynthConfig;
+use psgd::linalg::{dense, Csr, SparseVec, SupportMap};
+use psgd::loss::{LossKind, ALL_LOSSES};
+use psgd::objective::{shard_loss_grad, shard_loss_grad_sparse};
+use psgd::util::prop::check_msg;
+
+type GradCase = (usize, Vec<Vec<(u32, f32)>>, Vec<f64>, Vec<f64>);
+
+fn compare_paths(
+    dim: usize,
+    rows: &[Vec<(u32, f32)>],
+    y: &[f64],
+    w: &[f64],
+) -> Result<(), String> {
+    let x = Csr::from_rows(dim, rows);
+    let map = SupportMap::build(&x);
+    for loss in ALL_LOSSES {
+        let mut g_dense = vec![0.0; dim];
+        let mut z_dense = Vec::new();
+        let v_dense =
+            shard_loss_grad(&x, y, w, loss, &mut g_dense, Some(&mut z_dense));
+        let mut z_sparse = Vec::new();
+        let (v_sparse, g_sparse) =
+            shard_loss_grad_sparse(&x, y, w, loss, &map, Some(&mut z_sparse));
+        if (v_dense - v_sparse).abs() > 1e-12 * (1.0 + v_dense.abs()) {
+            return Err(format!(
+                "loss value mismatch ({loss:?}): {v_dense} vs {v_sparse}"
+            ));
+        }
+        let diff = dense::max_abs_diff(&g_dense, &g_sparse.to_dense());
+        if diff > 1e-12 {
+            return Err(format!("gradient mismatch ({loss:?}): {diff}"));
+        }
+        if z_dense != z_sparse {
+            return Err(format!("margin mismatch ({loss:?})"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn sparse_and_dense_shard_gradients_agree() {
+    check_msg(
+        "sparse shard gradient == dense shard gradient",
+        40,
+        |rng| -> GradCase {
+            let dim = 8 + rng.below(120);
+            let n = 1 + rng.below(25);
+            let rows: Vec<Vec<(u32, f32)>> = (0..n)
+                .map(|_| {
+                    // skewed nnz: some rows near-empty, some near-dense
+                    let nnz = 1 + rng.below(dim.min(12));
+                    (0..nnz)
+                        .map(|_| {
+                            (rng.below(dim) as u32, rng.range(-2.0, 2.0) as f32)
+                        })
+                        .collect()
+                })
+                .collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+            let w: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.4).collect();
+            (dim, rows, y, w)
+        },
+        |(dim, rows, y, w)| compare_paths(*dim, rows, y, w),
+    );
+}
+
+#[test]
+fn edge_shards_all_dense_and_single_nnz() {
+    // all-dense shard: every row touches every column — the sparse path
+    // must degrade gracefully (support == all columns), not break
+    let dim = 12;
+    let rows: Vec<Vec<(u32, f32)>> = (0..6)
+        .map(|i| {
+            (0..dim as u32)
+                .map(|c| (c, (i + 1) as f32 * 0.1 + c as f32 * 0.03))
+                .collect()
+        })
+        .collect();
+    let y: Vec<f64> = (0..6).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let w: Vec<f64> = (0..dim).map(|j| (j as f64 * 0.4).cos() * 0.3).collect();
+    compare_paths(dim, &rows, &y, &w).unwrap();
+    let x = Csr::from_rows(dim, &rows);
+    assert_eq!(SupportMap::build(&x).density(dim), 1.0);
+
+    // 1-nnz shard: a single example touching a single column
+    let rows1 = vec![vec![(7u32, 1.5f32)]];
+    compare_paths(dim, &rows1, &[1.0], &w).unwrap();
+    let x1 = Csr::from_rows(dim, &rows1);
+    let map1 = SupportMap::build(&x1);
+    assert_eq!(map1.support, vec![7]);
+    let (_, g1) = shard_loss_grad_sparse(
+        &x1,
+        &[1.0],
+        &w,
+        LossKind::Logistic,
+        &map1,
+        None,
+    );
+    assert!(g1.nnz() <= 1);
+}
+
+#[test]
+fn sparse_tree_reduction_agrees_with_dense_on_skewed_parts() {
+    check_msg(
+        "tree_sum_sparse == tree_sum",
+        30,
+        |rng| {
+            let dim = 4 + rng.below(80);
+            let nodes = 1 + rng.below(13);
+            let parts: Vec<Vec<f64>> = (0..nodes)
+                .map(|_| {
+                    // mixed densities: some nodes near-empty, some full
+                    let keep = 1 + rng.below(4);
+                    (0..dim)
+                        .map(|_| {
+                            if rng.below(4) < keep {
+                                rng.normal()
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            parts
+        },
+        |parts| {
+            let want = tree_sum(parts);
+            let sparse_parts: Vec<SparseVec> =
+                parts.iter().map(|p| SparseVec::from_dense(p)).collect();
+            let (got, _levels) = tree_sum_sparse(&sparse_parts);
+            let diff = dense::max_abs_diff(&want, &got.into_dense());
+            if diff > 1e-12 {
+                return Err(format!("reduction mismatch: {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sparse_round_charges_fewer_comm_seconds_and_bytes() {
+    // kdd2010-shaped regime at repro scale: d ≫ per-shard support
+    let data = SynthConfig {
+        n_examples: 2_000,
+        n_features: 200_000,
+        nnz_per_example: 10,
+        ..SynthConfig::default()
+    }
+    .generate(9);
+    let c0 = Cluster::partition(data, 8, CostModel::default());
+    let mut c_dense = c0.fork_fresh();
+    let mut c_sparse = c0.fork_fresh();
+    assert!(
+        c_sparse.prefer_sparse(),
+        "support density {} should trigger the sparse path",
+        c_sparse.support_density()
+    );
+    let w = vec![0.0; c0.dim];
+    let loss = LossKind::Logistic;
+    let (f_d, g_d, _, _) = global_value_grad(&mut c_dense, &w, loss, 0.5, true);
+    let (f_s, g_s, _, _) =
+        global_value_grad_auto(&mut c_sparse, &w, loss, 0.5, true, true);
+    assert!((f_d - f_s).abs() < 1e-9 * (1.0 + f_d.abs()));
+    assert!(dense::max_abs_diff(&g_d, &g_s) < 1e-12);
+    // the paper's logical pass count is wire-format independent ...
+    assert_eq!(c_dense.ledger.comm_passes, c_sparse.ledger.comm_passes);
+    // ... but the sparse round moves far fewer bytes and seconds
+    assert!(
+        c_sparse.ledger.comm_bytes < 0.5 * c_dense.ledger.comm_bytes,
+        "bytes: sparse {} vs dense {}",
+        c_sparse.ledger.comm_bytes,
+        c_dense.ledger.comm_bytes
+    );
+    assert!(
+        c_sparse.ledger.comm_seconds < c_dense.ledger.comm_seconds,
+        "seconds: sparse {} vs dense {}",
+        c_sparse.ledger.comm_seconds,
+        c_dense.ledger.comm_seconds
+    );
+}
+
+#[test]
+fn fs_on_the_sparse_path_descends_with_the_paper_pass_profile() {
+    let data = SynthConfig {
+        n_examples: 240,
+        n_features: 4_000,
+        nnz_per_example: 5,
+        ..SynthConfig::default()
+    }
+    .generate(13);
+    let mut cluster = Cluster::partition(data, 4, CostModel::default());
+    assert!(cluster.prefer_sparse());
+    let run = FsDriver::new(FsConfig { lam: 0.5, ..Default::default() })
+        .run(&mut cluster, None, &StopRule::iters(6));
+    let pts = &run.trace.points;
+    assert!(pts.len() > 1);
+    assert!(run.f.is_finite());
+    assert!(pts.last().unwrap().f < pts[0].f, "no descent on sparse path");
+    // w⁰ broadcast + gradient allreduce, then 4 passes per iteration —
+    // unchanged by the sparse wire format
+    assert_eq!(pts[0].comm_passes, 3.0);
+    for k in 1..pts.len() {
+        assert_eq!(
+            pts[k].comm_passes - pts[k - 1].comm_passes,
+            4.0,
+            "iteration {k} pass profile changed"
+        );
+    }
+    assert!(cluster.ledger.comm_bytes > 0.0);
+}
