@@ -10,9 +10,19 @@ test:
 bench:
 	cargo bench
 
+# Fast bench smoke for CI: the sparse wire pipeline and the
+# compact-vs-full inner solve (the latter asserts compact is strictly
+# faster and ε-equivalent, so a perf/correctness regression fails CI).
+bench-smoke:
+	cargo bench --bench sparse_grad
+	cargo bench --bench compact_solve
+
+fmt-check:
+	cargo fmt --check
+
 # AOT-compile the JAX/Pallas kernels to artifacts/*.hlo.txt for the
 # xla-feature runtime (needs the python toolchain; not part of tier-1).
 artifacts:
 	python3 python/compile/aot.py --out artifacts
 
-.PHONY: verify test bench artifacts
+.PHONY: verify test bench bench-smoke fmt-check artifacts

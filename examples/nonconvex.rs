@@ -47,6 +47,29 @@ fn loss_deriv(z: f64, y: f64) -> f64 {
     -y * s * (1.0 - s)
 }
 
+/// zᵢ = xᵢ·w against a *global* w — shards store local column ids, so
+/// the example translates through the shard's support dictionary.
+fn row_dot_global(s: &psgd::cluster::Shard, i: usize, w: &[f64]) -> f64 {
+    let (cols, vals) = s.xl.row(i);
+    cols.iter()
+        .zip(vals)
+        .map(|(&c, &v)| v as f64 * w[s.map.support[c as usize] as usize])
+        .sum()
+}
+
+/// out ← out + α·xᵢ scattered to global coordinates.
+fn add_row_global(
+    s: &psgd::cluster::Shard,
+    i: usize,
+    alpha: f64,
+    out: &mut [f64],
+) {
+    let (cols, vals) = s.xl.row(i);
+    for (&c, &v) in cols.iter().zip(vals) {
+        out[s.map.support[c as usize] as usize] += alpha * v as f64;
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let nodes = args.usize("nodes", 6);
@@ -69,8 +92,8 @@ fn main() {
     let f_of = |c: &Cluster, w: &[f64]| -> f64 {
         let mut v = 0.5 * lam * dense::norm_sq(w);
         for s in &c.shards {
-            for i in 0..s.x.n_rows() {
-                v += loss_val(s.x.row_dot(i, w), s.y[i]);
+            for i in 0..s.xl.n_rows() {
+                v += loss_val(row_dot_global(s, i, w), s.y[i]);
             }
         }
         v
@@ -102,10 +125,10 @@ fn main() {
         // global gradient
         let mut g = vec![0.0; dim];
         for s in &cluster.shards {
-            for i in 0..s.x.n_rows() {
-                let rr = loss_deriv(s.x.row_dot(i, &w), s.y[i]);
+            for i in 0..s.xl.n_rows() {
+                let rr = loss_deriv(row_dot_global(s, i, &w), s.y[i]);
                 if rr != 0.0 {
-                    s.x.add_row_scaled(i, rr, &mut g);
+                    add_row_global(s, i, rr, &mut g);
                 }
             }
         }
@@ -118,13 +141,13 @@ fn main() {
         // descent-ish, per the paper's discussion)
         let mut dirs: Vec<Vec<f64>> = Vec::new();
         for (p, s) in cluster.shards.iter().enumerate() {
-            let n_p = s.x.n_rows();
+            let n_p = s.xl.n_rows();
             // tilt = g − λw − ∇L_p(w)
             let mut gl = vec![0.0; dim];
             for i in 0..n_p {
-                let rr = loss_deriv(s.x.row_dot(i, &w), s.y[i]);
+                let rr = loss_deriv(row_dot_global(s, i, &w), s.y[i]);
                 if rr != 0.0 {
-                    s.x.add_row_scaled(i, rr, &mut gl);
+                    add_row_global(s, i, rr, &mut gl);
                 }
             }
             let tilt: Vec<f64> =
@@ -135,7 +158,7 @@ fn main() {
             // HALF an epoch: early stopping
             for _ in 0..(3 * n_p) / 4 {
                 let i = srng.below(n_p);
-                let zi = s.x.row_dot(i, &wp);
+                let zi = row_dot_global(s, i, &wp);
                 let rr = loss_deriv(zi, s.y[i]);
                 // dense part (λw + tilt) applied sparsely-ish: cheap
                 // two-term axpy since dim is small here
@@ -143,7 +166,7 @@ fn main() {
                     wp[j] -= lr / n_p as f64 * (lam * wp[j] + tilt[j]);
                 }
                 if rr != 0.0 {
-                    s.x.add_row_scaled(i, -lr * rr, &mut wp);
+                    add_row_global(s, i, -lr * rr, &mut wp);
                 }
             }
             dirs.push(dense::sub(&wp, &w));
@@ -166,10 +189,12 @@ fn main() {
         let mut z: Vec<Vec<f64>> = Vec::new();
         let mut dz: Vec<Vec<f64>> = Vec::new();
         for s in &cluster.shards {
-            let mut a = vec![0.0; s.x.n_rows()];
-            let mut b = vec![0.0; s.x.n_rows()];
-            s.x.matvec(&w, &mut a);
-            s.x.matvec(&dir, &mut b);
+            let mut a = vec![0.0; s.xl.n_rows()];
+            let mut b = vec![0.0; s.xl.n_rows()];
+            for i in 0..s.xl.n_rows() {
+                a[i] = row_dot_global(s, i, &w);
+                b[i] = row_dot_global(s, i, &dir);
+            }
             z.push(a);
             dz.push(b);
         }
@@ -180,7 +205,7 @@ fn main() {
             let mut v = 0.5 * lam * (ww + 2.0 * t * wd + t * t * dd);
             let mut dv = lam * (wd + t * dd);
             for (s, (zs, dzs)) in cluster.shards.iter().zip(z.iter().zip(&dz)) {
-                for i in 0..s.x.n_rows() {
+                for i in 0..s.xl.n_rows() {
                     let zt = zs[i] + t * dzs[i];
                     v += loss_val(zt, s.y[i]);
                     dv += dzs[i] * loss_deriv(zt, s.y[i]);

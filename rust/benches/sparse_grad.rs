@@ -76,4 +76,10 @@ fn main() {
         "dense", c_dense.ledger.comm_bytes, c_dense.ledger.comm_seconds,
         "sparse", c_sparse.ledger.comm_bytes, c_sparse.ledger.comm_seconds,
     );
+    // per-tree-level wire profile of the sparse reduction (mean largest
+    // message per level, leaves → root): union growth up the tree
+    println!(
+        "sparse tree wire profile: {}",
+        c_sparse.ledger.level_profile()
+    );
 }

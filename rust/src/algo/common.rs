@@ -1,18 +1,26 @@
 //! Shared driver machinery: distributed value/gradient rounds, the
 //! master-side view of f as an [`Objective`] (for SQM's TRON/L-BFGS),
 //! and ledger-free diagnostics.
+//!
+//! Every per-node phase here runs in the shard's compact support
+//! coordinates: the global iterate is gathered onto the support
+//! (O(|support_p|)), the shard sweep accumulates into a support-aligned
+//! scratch buffer, and the result either scatters to a dense wire
+//! vector (dense regime — where the per-node O(d) wire buffer is the
+//! payload itself and support ≈ d anyway) or ships directly as
+//! index/value pairs (sparse regime, where no node touches a size-d
+//! buffer at all).
 
 use std::cell::RefCell;
 
 use crate::cluster::{Cluster, Shard};
 use crate::data::dataset::Dataset;
 use crate::linalg::dense;
-use crate::linalg::sparse::SparseVec;
+use crate::linalg::sparse::{SparseVec, SupportMap};
 use crate::loss::LossKind;
 use crate::metrics::auprc::auprc;
 use crate::objective::{
-    shard_loss_grad, shard_loss_grad_sparse, shard_loss_grad_sparse_cached,
-    Objective,
+    shard_loss_grad_compact, shard_loss_grad_compact_cached, Objective,
 };
 
 /// One distributed value+gradient round at `w`:
@@ -31,13 +39,22 @@ pub fn global_value_grad(
     all: bool,
 ) -> (f64, Vec<f64>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
     let dim = cluster.dim;
-    let parts: Vec<(f64, Vec<f64>, Vec<f64>)> = cluster.map_each(|_, shard| {
-        let mut grad = vec![0.0; dim];
-        let mut z = Vec::new();
-        let val =
-            shard_loss_grad(&shard.x, &shard.y, w, loss, &mut grad, Some(&mut z));
-        (val, grad, z)
-    });
+    let parts: Vec<(f64, Vec<f64>, Vec<f64>)> =
+        cluster.map_each_scratch(|_, shard, s| {
+            shard.map.gather(w, &mut s.wloc);
+            let mut z = Vec::new();
+            let val = shard_loss_grad_compact(
+                &shard.xl,
+                &shard.y,
+                &s.wloc,
+                loss,
+                &mut s.vals,
+                Some(&mut z),
+            );
+            let mut grad = vec![0.0; dim];
+            shard.map.scatter_add(&s.vals, 1.0, &mut grad);
+            (val, grad, z)
+        });
     let mut loss_sum = 0.0;
     let mut grad_parts = Vec::with_capacity(parts.len());
     let mut margins = Vec::with_capacity(parts.len());
@@ -55,7 +72,8 @@ pub fn global_value_grad(
 /// Like [`global_value_grad`] but with the margins zᵢ = w·xᵢ already
 /// node-local (the FS driver maintains them incrementally across outer
 /// iterations: z ← z + t·(dʳ·x) after each line search). Skips the
-/// X·w matvec — one data pass instead of two (§Perf).
+/// X·w matvec — one data pass instead of two (§Perf), and needs no
+/// gather of w at all.
 pub fn global_value_grad_cached(
     cluster: &mut Cluster,
     margins: &[Vec<f64>],
@@ -65,20 +83,21 @@ pub fn global_value_grad_cached(
     all: bool,
 ) -> (f64, Vec<f64>, Vec<Vec<f64>>) {
     let dim = cluster.dim;
-    let parts: Vec<(f64, Vec<f64>)> = cluster.map_each(|p, shard| {
-        let z = &margins[p];
-        debug_assert_eq!(z.len(), shard.x.n_rows());
-        let mut grad = vec![0.0; dim];
-        let mut val = 0.0;
-        for i in 0..shard.x.n_rows() {
-            val += loss.value(z[i], shard.y[i]);
-            let r = loss.deriv(z[i], shard.y[i]);
-            if r != 0.0 {
-                shard.x.add_row_scaled(i, r, &mut grad);
-            }
-        }
-        (val, grad)
-    });
+    let parts: Vec<(f64, Vec<f64>)> =
+        cluster.map_each_scratch(|p, shard, s| {
+            let z = &margins[p];
+            debug_assert_eq!(z.len(), shard.xl.n_rows());
+            let val = shard_loss_grad_compact_cached(
+                &shard.xl,
+                &shard.y,
+                z,
+                loss,
+                &mut s.vals,
+            );
+            let mut grad = vec![0.0; dim];
+            shard.map.scatter_add(&s.vals, 1.0, &mut grad);
+            (val, grad)
+        });
     let mut loss_sum = 0.0;
     let mut grad_parts = Vec::with_capacity(parts.len());
     for (v, g) in parts {
@@ -92,10 +111,9 @@ pub fn global_value_grad_cached(
 }
 
 /// Per-node loss gradients from one distributed round — dense vectors
-/// on the dense path, index/value pairs restricted to each shard's
-/// support on the sparse path. FS only ever consumes these through
-/// [`LocalGrads::tilt`], so the wire format stays an implementation
-/// detail of the round.
+/// on the dense path, support-aligned index/value pairs on the sparse
+/// path (node p's `idx` is exactly the shard support, zeros kept, so
+/// `val` doubles as the support-aligned ∇L_p the compact tilt needs).
 pub enum LocalGrads {
     Dense(Vec<Vec<f64>>),
     Sparse(Vec<SparseVec>),
@@ -113,7 +131,9 @@ impl LocalGrads {
         self.len() == 0
     }
 
-    /// Node p's tilt for the paper's eq. (2): gʳ − λwʳ − ∇L_p(wʳ).
+    /// Node p's tilt for the paper's eq. (2): gʳ − λwʳ − ∇L_p(wʳ),
+    /// materialized in full space (reference/tests; the drivers use
+    /// [`Self::support_vals`] and stay compact).
     pub fn tilt(&self, p: usize, lam: f64, w_r: &[f64], g_r: &[f64]) -> Vec<f64> {
         let mut t: Vec<f64> =
             w_r.iter().zip(g_r).map(|(w, g)| g - lam * w).collect();
@@ -126,6 +146,26 @@ impl LocalGrads {
             LocalGrads::Sparse(gs) => gs[p].axpy_into(-1.0, &mut t),
         }
         t
+    }
+
+    /// Node p's ∇L_p(wʳ) aligned to its shard support. Sparse parts are
+    /// stored support-aligned already; dense parts gather into `buf`.
+    pub fn support_vals<'a>(
+        &'a self,
+        p: usize,
+        map: &SupportMap,
+        buf: &'a mut Vec<f64>,
+    ) -> &'a [f64] {
+        match self {
+            LocalGrads::Sparse(gs) => {
+                debug_assert_eq!(gs[p].idx, map.support);
+                &gs[p].val
+            }
+            LocalGrads::Dense(gs) => {
+                map.gather(&gs[p], buf);
+                buf
+            }
+        }
     }
 }
 
@@ -147,13 +187,20 @@ pub fn global_value_grad_auto(
             global_value_grad(cluster, w, loss, lam, all);
         return (f, g, LocalGrads::Dense(parts), margins);
     }
+    let dim = cluster.dim;
     let parts: Vec<(f64, SparseVec, Vec<f64>)> =
-        cluster.map_each(|_, shard| {
+        cluster.map_each_scratch(|_, shard, s| {
+            shard.map.gather(w, &mut s.wloc);
             let mut z = Vec::new();
-            let (val, grad) = shard_loss_grad_sparse(
-                &shard.x, &shard.y, w, loss, &shard.map, Some(&mut z),
+            let val = shard_loss_grad_compact(
+                &shard.xl,
+                &shard.y,
+                &s.wloc,
+                loss,
+                &mut s.vals,
+                Some(&mut z),
             );
-            (val, grad, z)
+            (val, shard.map.to_sparse_aligned(dim, &s.vals), z)
         });
     let mut loss_sum = 0.0;
     let mut grad_parts = Vec::with_capacity(parts.len());
@@ -184,16 +231,19 @@ pub fn global_value_grad_cached_auto(
             global_value_grad_cached(cluster, margins, w, loss, lam, all);
         return (f, g, LocalGrads::Dense(parts));
     }
-    let parts: Vec<(f64, SparseVec)> = cluster.map_each(|p, shard| {
-        debug_assert_eq!(margins[p].len(), shard.x.n_rows());
-        shard_loss_grad_sparse_cached(
-            &shard.x,
-            &shard.y,
-            &margins[p],
-            loss,
-            &shard.map,
-        )
-    });
+    let dim = cluster.dim;
+    let parts: Vec<(f64, SparseVec)> =
+        cluster.map_each_scratch(|p, shard, s| {
+            debug_assert_eq!(margins[p].len(), shard.xl.n_rows());
+            let val = shard_loss_grad_compact_cached(
+                &shard.xl,
+                &shard.y,
+                &margins[p],
+                loss,
+                &mut s.vals,
+            );
+            (val, shard.map.to_sparse_aligned(dim, &s.vals))
+        });
     let mut loss_sum = 0.0;
     let mut grad_parts = Vec::with_capacity(parts.len());
     for (v, g) in parts {
@@ -214,9 +264,11 @@ pub fn global_f_diagnostic(
     lam: f64,
 ) -> f64 {
     let mut v = 0.5 * lam * dense::norm_sq(w);
+    let mut wl = Vec::new();
     for shard in &cluster.shards {
-        for i in 0..shard.x.n_rows() {
-            v += loss.value(shard.x.row_dot(i, w), shard.y[i]);
+        shard.map.gather(w, &mut wl);
+        for i in 0..shard.xl.n_rows() {
+            v += loss.value(shard.xl.row_dot(i, &wl), shard.y[i]);
         }
     }
     v
@@ -282,36 +334,35 @@ impl<'a> Objective for DistributedObjective<'a> {
         f
     }
 
-    /// H·v = λv + Σ_p X_pᵀ D_p X_p v, computed node-local and reduced.
-    /// The loss part of each node's product is supported on the shard's
-    /// columns, so the sparse path ships it as index/value pairs. The
-    /// row math lives once in [`hess_rows`]; the branches differ only
-    /// in where each row's dᵢᵢ·(xᵢ·v) lands.
+    /// H·v = λv + Σ_p X_pᵀ D_p X_p v, computed node-local over compact
+    /// support buffers and reduced. The loss part of each node's
+    /// product is supported on the shard's columns; the branches differ
+    /// only in whether the support-aligned values scatter to a dense
+    /// wire vector or ship as index/value pairs.
     fn hess_vec(&self, w: &[f64], v: &[f64], out: &mut [f64]) {
         let cluster = &mut **self.cluster.borrow_mut();
         cluster.broadcast_vec(); // ship v
         let loss = self.loss;
+        let dim = cluster.dim;
         let hv = if self.sparse {
-            let parts: Vec<SparseVec> = cluster.map_each(|_, shard: &Shard| {
-                let mut vals = vec![0.0; shard.map.support.len()];
-                hess_rows(shard, loss, w, v, |i, a| {
-                    shard.map.add_row_scaled(&shard.x, i, a, &mut vals)
+            let parts: Vec<SparseVec> =
+                cluster.map_each_scratch(|_, shard, s| {
+                    shard.map.gather(w, &mut s.wloc);
+                    shard.map.gather(v, &mut s.gloc);
+                    hess_vals(shard, loss, &s.wloc, &s.gloc, &mut s.vals);
+                    shard.map.to_sparse_aligned(dim, &s.vals)
                 });
-                SparseVec::from_support(
-                    shard.x.n_cols,
-                    &shard.map.support,
-                    &vals,
-                )
-            });
             cluster.reduce_parts_sparse(&parts, false).into_dense()
         } else {
-            let parts: Vec<Vec<f64>> = cluster.map_each(|_, shard: &Shard| {
-                let mut hv = vec![0.0; v.len()];
-                hess_rows(shard, loss, w, v, |i, a| {
-                    shard.x.add_row_scaled(i, a, &mut hv)
+            let parts: Vec<Vec<f64>> =
+                cluster.map_each_scratch(|_, shard, s| {
+                    shard.map.gather(w, &mut s.wloc);
+                    shard.map.gather(v, &mut s.gloc);
+                    hess_vals(shard, loss, &s.wloc, &s.gloc, &mut s.vals);
+                    let mut hv = vec![0.0; dim];
+                    shard.map.scatter_add(&s.vals, 1.0, &mut hv);
+                    hv
                 });
-                hv
-            });
             cluster.reduce_parts(&parts, false)
         };
         out.copy_from_slice(&hv);
@@ -319,22 +370,23 @@ impl<'a> Objective for DistributedObjective<'a> {
     }
 }
 
-/// One shard's Hessian-vector row sweep: calls `add(i, dᵢᵢ·(xᵢ·v))`
-/// for every row with curvature, leaving the accumulation target
-/// (dense buffer vs support-restricted values) to the caller.
-fn hess_rows(
+/// One shard's Hessian-vector row sweep over compact coordinates:
+/// vals ← Σᵢ dᵢᵢ·(xᵢ·v)·xᵢ accumulated support-aligned.
+fn hess_vals(
     shard: &Shard,
     loss: LossKind,
-    w: &[f64],
-    v: &[f64],
-    mut add: impl FnMut(usize, f64),
+    wl: &[f64],
+    vl: &[f64],
+    vals: &mut Vec<f64>,
 ) {
-    for i in 0..shard.x.n_rows() {
-        let zi = shard.x.row_dot(i, w);
+    vals.clear();
+    vals.resize(shard.xl.n_cols, 0.0);
+    for i in 0..shard.xl.n_rows() {
+        let zi = shard.xl.row_dot(i, wl);
         let dii = loss.second_deriv(zi, shard.y[i]);
         if dii != 0.0 {
-            let xv = shard.x.row_dot(i, v);
-            add(i, dii * xv);
+            let xv = shard.xl.row_dot(i, vl);
+            shard.xl.add_row_scaled(i, dii * xv, vals);
         }
     }
 }
@@ -344,6 +396,7 @@ mod tests {
     use super::*;
     use crate::cluster::CostModel;
     use crate::data::synth::SynthConfig;
+    use crate::linalg::Csr;
     use crate::objective::RegularizedLoss;
 
     fn setup() -> (Cluster, Dataset) {
@@ -378,7 +431,8 @@ mod tests {
         let mut val = 0.5 * lam * dense::norm_sq(&w);
         let mut grad = vec![0.0; 20];
         for shard in &cluster.shards {
-            let o = RegularizedLoss { x: &shard.x, y: &shard.y, loss, lam: 0.0 };
+            let x = shard.stitch(20);
+            let o = RegularizedLoss { x: &x, y: &shard.y, loss, lam: 0.0 };
             let mut gs = vec![0.0; 20];
             val += o.value_grad(&w, &mut gs);
             dense::axpy(1.0, &gs, &mut grad);
@@ -389,9 +443,11 @@ mod tests {
         assert_eq!(grad_parts.len(), 3);
         assert_eq!(margins.len(), 3);
         // margins really are the per-shard X·w
+        let mut wl = Vec::new();
         for (shard, z) in cluster.shards.iter().zip(&margins) {
-            for i in 0..shard.x.n_rows() {
-                assert!((z[i] - shard.x.row_dot(i, &w)).abs() < 1e-12);
+            shard.map.gather(&w, &mut wl);
+            for i in 0..shard.xl.n_rows() {
+                assert!((z[i] - shard.xl.row_dot(i, &wl)).abs() < 1e-12);
             }
         }
         assert_eq!(cluster.ledger.comm_passes, 2.0);
@@ -403,7 +459,11 @@ mod tests {
         let w: Vec<f64> = (0..20).map(|j| 0.05 * j as f64).collect();
         let v: Vec<f64> = (0..20).map(|j| ((j * 13 % 7) as f64) - 3.0).collect();
         // oracle over the stitched data
-        let shards = cluster.shards.clone();
+        let stitched: Vec<(Csr, Vec<f64>)> = cluster
+            .shards
+            .iter()
+            .map(|s| (s.stitch(20), s.y.clone()))
+            .collect();
         let obj = DistributedObjective::new(&mut cluster, LossKind::Logistic, 0.3);
         let mut g = vec![0.0; 20];
         let f = obj.value_grad(&w, &mut g);
@@ -413,10 +473,10 @@ mod tests {
         let mut f_want = 0.5 * 0.3 * dense::norm_sq(&w);
         let mut g_want = vec![0.0; 20];
         let mut hv_want = vec![0.0; 20];
-        for s in &shards {
+        for (x, y) in &stitched {
             let o = RegularizedLoss {
-                x: &s.x,
-                y: &s.y,
+                x,
+                y,
                 loss: LossKind::Logistic,
                 lam: 0.0,
             };
@@ -467,6 +527,13 @@ mod tests {
             let t_dense = wrapped.tilt(p, 0.3, &w, &g_d);
             let t_sparse = parts_s.tilt(p, 0.3, &w, &g_s);
             assert!(dense::max_abs_diff(&t_dense, &t_sparse) < 1e-12, "node {p}");
+            // ...and the support-aligned view matches the dense gather
+            let map = &c_sparse.shards[p].map;
+            let mut buf = Vec::new();
+            let sv = parts_s.support_vals(p, map, &mut buf);
+            let mut buf2 = Vec::new();
+            let dv = wrapped.support_vals(p, map, &mut buf2);
+            assert_eq!(sv, dv, "node {p} support values");
         }
         // same logical passes, fewer bytes and seconds on the wire
         assert_eq!(
@@ -475,12 +542,46 @@ mod tests {
         );
         assert!(c_sparse.ledger.comm_bytes < c_dense.ledger.comm_bytes);
         assert!(c_sparse.ledger.comm_seconds < c_dense.ledger.comm_seconds);
+        // the sparse round recorded its per-level wire profile
+        assert_eq!(c_sparse.ledger.sparse_reductions, 1);
+        assert!(!c_sparse.ledger.level_bytes.is_empty());
+        assert!(!c_sparse.ledger.level_profile().is_empty());
         // cached round agrees too
         let (fc, gc, _) = global_value_grad_cached_auto(
             &mut c_sparse, &z_s, &w, loss, 0.3, true, true,
         );
         assert!((fc - f_s).abs() < 1e-12 * (1.0 + f_s.abs()));
         assert!(dense::max_abs_diff(&gc, &g_s) < 1e-12);
+    }
+
+    #[test]
+    fn ring_and_tree_sparse_reductions_charge_same_bytes() {
+        // satellite: the ring path is charged by actual nnz payload —
+        // identical bytes to the tree (payload is payload), different
+        // (modeled) seconds, both far below the dense-pass charge
+        let data = SynthConfig {
+            n_examples: 400,
+            n_features: 50_000,
+            nnz_per_example: 6,
+            ..SynthConfig::default()
+        }
+        .generate(17);
+        let c0 = Cluster::partition(data, 8, CostModel::default());
+        let mut c_tree = c0.fork_fresh();
+        let mut c_ring = c0.fork_fresh();
+        c_ring.cost.topology = crate::cluster::cost::Topology::Ring;
+        assert!(c_tree.prefer_sparse() && c_ring.prefer_sparse());
+        let w = vec![0.0; c0.dim];
+        let loss = LossKind::Logistic;
+        let _ = global_value_grad_auto(&mut c_tree, &w, loss, 0.5, true, true);
+        let _ = global_value_grad_auto(&mut c_ring, &w, loss, 0.5, true, true);
+        assert_eq!(c_tree.ledger.comm_bytes, c_ring.ledger.comm_bytes);
+        assert!(c_ring.ledger.comm_seconds > 0.0);
+        // both beat the dense wire charge for the same round
+        let mut c_dense = c0.fork_fresh();
+        let _ = global_value_grad(&mut c_dense, &w, loss, 0.5, true);
+        assert!(c_tree.ledger.comm_bytes < c_dense.ledger.comm_bytes);
+        assert!(c_ring.ledger.comm_bytes < c_dense.ledger.comm_bytes);
     }
 
     #[test]

@@ -5,9 +5,15 @@
 //!    node-local as the by-product);
 //! 2. exit if gʳ = 0;
 //! 3–5. every node builds the gradient-consistent approximation f̂_p
-//!    (eq. 2) and runs s epochs of SVRG from wʳ → w_p, d_p = w_p − wʳ;
-//! 6. safeguard: ∠(−gʳ, d_p) ≥ θ ⇒ d_p ← −gʳ;
-//! 7. dʳ = convex combination of the d_p (simple average by default);
+//!    (eq. 2) **in its shard's compact support coordinates** (see
+//!    [`CompactApprox`]) and runs s epochs of SVRG from wʳ → w_p; the
+//!    deviation d_p = w_p − wʳ leaves the node as a hybrid
+//!    a_w·wʳ + a_g·gʳ + sparse-correction ([`HybridDir`]) — O(|S_p|)
+//!    buffers and wire bytes, never O(d) per node;
+//! 6. safeguard: ∠(−gʳ, d_p) ≥ θ ⇒ d_p ← −gʳ (computed from shared
+//!    scalars + sparse dots, no densification);
+//! 7. dʳ = convex combination of the d_p: coefficient sums + one sparse
+//!    allreduce of the corrections; the master materializes dʳ in O(d);
 //! 8. distributed Armijo–Wolfe line search on φ(t) = f(wʳ + t·dʳ),
 //!    each trial costing one *scalar* aggregation round (the margins
 //!    and dʳ·xᵢ are node-local) — the reason FS needs so few size-d
@@ -23,18 +29,19 @@ use crate::algo::common::{
 };
 use crate::algo::safeguard::Safeguard;
 use crate::algo::{Driver, RunResult, StopRule};
-use crate::cluster::Cluster;
+use crate::cluster::allreduce::Reduced;
+use crate::cluster::{Cluster, NodeScratch};
 use crate::data::dataset::Dataset;
 use crate::linalg::dense;
 use crate::linalg::sparse::SparseVec;
 use crate::loss::LossKind;
 use crate::metrics::trace::{Trace, TracePoint};
-use crate::objective::LocalApprox;
+use crate::objective::compact::{CompactApprox, GlobalDots, HybridDir};
 use crate::opt::lbfgs::{self, LbfgsParams};
-use crate::opt::sag::{sag_epochs, SagParams};
 use crate::opt::linesearch::{strong_wolfe, MarginPhi, PhiLambda, WolfeParams};
-use crate::opt::sgd::{sgd_epochs, SgdParams};
-use crate::opt::svrg::{svrg_epochs, SvrgParams};
+use crate::opt::sag::{sag_epochs_with, SagParams};
+use crate::opt::sgd::{sgd_epochs_shrink, SgdParams};
+use crate::opt::svrg::{svrg_epochs_with, SvrgParams};
 use crate::opt::tron::{self, TronParams};
 
 /// Which local solver step 5 uses (paper §Discussion (b): SVRG is the
@@ -96,19 +103,27 @@ pub struct FsDriver {
     pub config: FsConfig,
 }
 
+/// A compact local solve's raw outcome.
+enum SolveOut {
+    /// solver output point in compact coordinates (support + tail)
+    Point(Vec<f64>),
+    /// untilted SGD: support iterate + total off-support L2 shrink
+    Shrink(Vec<f64>, f64),
+}
+
 impl FsDriver {
     pub fn new(config: FsConfig) -> FsDriver {
         FsDriver { config }
     }
 
-    /// Run the local solver on f̂_p from wʳ; returns w_p.
+    /// Run the local solver on the compact f̂_p from its own wʳ.
     fn solve_local(
         &self,
-        approx: &LocalApprox,
-        w_r: &[f64],
+        approx: &CompactApprox,
         node: usize,
         iter: usize,
-    ) -> Vec<f64> {
+        scratch: &mut NodeScratch,
+    ) -> SolveOut {
         let c = &self.config;
         let seed = c
             .seed
@@ -116,67 +131,71 @@ impl FsDriver {
             .wrapping_add((iter as u64) << 20)
             .wrapping_add(node as u64);
         match c.inner {
-            InnerSolver::Svrg => {
-                svrg_epochs(
+            InnerSolver::Svrg => SolveOut::Point(
+                svrg_epochs_with(
                     approx,
-                    w_r,
+                    &approx.w_r,
                     &SvrgParams {
                         epochs: c.epochs,
                         batch: c.batch,
                         lr: c.lr,
                         seed,
                     },
+                    &mut scratch.svrg,
                 )
-                .0
-            }
-            InnerSolver::Sag => {
-                sag_epochs(
-                    approx,
-                    w_r,
-                    &SagParams { epochs: c.epochs, lr: c.lr, seed },
-                )
-            }
+                .0,
+            ),
+            InnerSolver::Sag => SolveOut::Point(sag_epochs_with(
+                approx,
+                &approx.w_r,
+                &SagParams { epochs: c.epochs, lr: c.lr, seed },
+                &mut scratch.sag,
+            )),
             InnerSolver::Sgd => {
                 // plain SGD lacks the tilt machinery (it optimizes the
                 // *untilted* f̃_p of eq. 1) — the ablation showing why
-                // gradient consistency matters
-                sgd_epochs(
+                // gradient consistency matters. Off-support coordinates
+                // only ever L2-shrink, so the scalar Π(1−η_tλ) carries
+                // the whole off-support story.
+                let m = approx.m;
+                let (w_c, shrink) = sgd_epochs_shrink(
                     approx.x,
                     approx.y,
                     c.loss,
                     c.lam,
-                    w_r,
+                    &approx.w_r[..m],
                     &SgdParams {
                         epochs: c.epochs,
                         eta0: c.lr.unwrap_or(0.05),
                         seed,
                     },
-                )
+                );
+                SolveOut::Shrink(w_c, shrink)
             }
-            InnerSolver::Lbfgs => {
+            InnerSolver::Lbfgs => SolveOut::Point(
                 lbfgs::minimize(
                     approx,
-                    w_r,
+                    &approx.w_r,
                     &LbfgsParams {
                         max_iter: c.epochs.max(1) * 2,
                         eps: 1e-10,
                         ..Default::default()
                     },
                 )
-                .w
-            }
-            InnerSolver::Tron => {
+                .w,
+            ),
+            InnerSolver::Tron => SolveOut::Point(
                 tron::minimize(
                     approx,
-                    w_r,
+                    &approx.w_r,
                     &TronParams {
                         max_iter: c.epochs.max(1),
                         eps: 1e-10,
                         ..Default::default()
                     },
                 )
-                .w
-            }
+                .w,
+            ),
         }
     }
 }
@@ -213,7 +232,7 @@ impl Driver for FsDriver {
         let mut f = f64::INFINITY;
         let mut last_hits = 0usize;
         // node-local margins zᵢ = w·xᵢ, maintained incrementally
-        // (z ← z + t·dz after each accepted step) so the gradient pass
+        // (z ← z + t·dz after each line search) so the gradient pass
         // needs one data sweep, not two (§Perf)
         let mut margins: Vec<Vec<f64>> = Vec::new();
 
@@ -249,23 +268,54 @@ impl Driver for FsDriver {
                 break;
             }
 
-            // --- steps 3–5: parallel local solves on f̂_p ---
+            // --- steps 3–5: parallel compact local solves on f̂_p ---
+            // shared O(d) dots once at the master; per node everything
+            // below is O(|support_p|)
+            let dots = GlobalDots::compute(&w, &g);
             let w_ref = &w;
             let g_ref = &g;
             let gp_ref = &grad_parts;
-            let mut dirs: Vec<Vec<f64>> = cluster.map_each(|p, shard| {
-                let tilt = gp_ref.tilt(p, c.lam, w_ref, g_ref);
-                let approx = LocalApprox::from_tilt(
-                    &shard.x, &shard.y, c.loss, c.lam, w_ref, tilt,
-                );
-                let w_p = self.solve_local(&approx, w_ref, p, r);
-                dense::sub(&w_p, w_ref)
-            });
+            let mut dirs: Vec<HybridDir> =
+                cluster.map_each_scratch(|p, shard, s| {
+                    shard.map.gather(w_ref, &mut s.wloc);
+                    shard.map.gather(g_ref, &mut s.gloc);
+                    let glp = gp_ref.support_vals(p, &shard.map, &mut s.vals);
+                    let approx = CompactApprox::build(
+                        &shard.xl, &shard.y, c.loss, c.lam, &dots, &s.wloc,
+                        &s.gloc, glp,
+                    );
+                    let out = self.solve_local(&approx, p, r, s);
+                    match out {
+                        SolveOut::Point(w_p) => {
+                            let (a_w, a_g) = approx.off_support_coeffs(&w_p);
+                            HybridDir::from_compact(
+                                &shard.map,
+                                dim,
+                                a_w,
+                                a_g,
+                                &w_p,
+                                &approx.w_r[..approx.m],
+                                &s.gloc,
+                            )
+                        }
+                        SolveOut::Shrink(w_c, shrink) => {
+                            HybridDir::from_compact(
+                                &shard.map,
+                                dim,
+                                shrink - 1.0,
+                                0.0,
+                                &w_c,
+                                &approx.w_r[..approx.m],
+                                &s.gloc,
+                            )
+                        }
+                    }
+                });
 
-            // --- step 6: safeguard (node-local; nodes hold gʳ) ---
-            last_hits = c.safeguard.apply(&g, &mut dirs);
+            // --- step 6: safeguard on shared scalars + sparse dots ---
+            last_hits = c.safeguard.apply_hybrid(&dots, &w, &g, &mut dirs);
 
-            // --- step 7: convex combination via allreduce ---
+            // --- step 7: convex combination ---
             let weights: Vec<f64> = match c.combine {
                 Combine::Average => {
                     let n = cluster.n_nodes() as f64;
@@ -280,43 +330,64 @@ impl Driver for FsDriver {
                         .collect()
                 }
             };
-            // the d_p are dense in general (the tilt moves every
-            // coordinate), but early iterations and safeguarded −gʳ
-            // directions carry many exact zeros the sparse wire format
-            // drops — so go sparse only when the directions actually
-            // are, instead of paying O(P·d) conversion for a payload
-            // the accounting would cap at dense size anyway
-            let dirs_sparse = sparse && {
-                let nnz: usize = dirs
+            // sparse regime: sum the affine coefficients (two scalars
+            // per node on the wire) and sparse-allreduce the weighted
+            // corrections; every node can rebuild dʳ from its own
+            // (wʳ, gʳ) copies, the master materializes it in O(d).
+            // dense regime: materialize the weighted d_p per node and
+            // run the classic dense allreduce (same accounting as the
+            // dense gradient path).
+            let d: Vec<f64> = if sparse {
+                let mut a_w_sum = 0.0;
+                let mut a_g_sum = 0.0;
+                let mut parts: Vec<SparseVec> = Vec::with_capacity(dirs.len());
+                for (dp, &cw) in dirs.into_iter().zip(&weights) {
+                    a_w_sum += cw * dp.a_w;
+                    a_g_sum += cw * dp.a_g;
+                    // scale in place — the direction set is consumed
+                    // here, so no support-sized copies
+                    let mut sv = dp.corr;
+                    sv.scale(cw);
+                    parts.push(sv);
+                }
+                // the (a_w, a_g) pair each node contributes rides a
+                // scalar aggregation round alongside the corr reduce
+                cluster.charge_scalar_round(2);
+                let reduced = cluster.reduce_parts_sparse(&parts, true);
+                let mut d: Vec<f64> = w
                     .iter()
-                    .map(|dp| dp.iter().filter(|x| **x != 0.0).count())
-                    .sum();
-                2 * nnz < dirs.len() * dim
-            };
-            let d = if dirs_sparse {
-                let parts: Vec<SparseVec> = dirs
-                    .iter()
-                    .zip(&weights)
-                    .map(|(dp, &wgt)| SparseVec::from_dense_scaled(dp, wgt))
+                    .zip(&g)
+                    .map(|(wj, gj)| a_w_sum * wj + a_g_sum * gj)
                     .collect();
-                cluster.reduce_parts_sparse(&parts, true).into_dense()
+                match reduced {
+                    Reduced::Sparse(sv) => sv.axpy_into(1.0, &mut d),
+                    Reduced::Dense(v) => dense::axpy(1.0, &v, &mut d),
+                }
+                d
             } else {
                 let parts: Vec<Vec<f64>> = dirs
-                    .iter()
+                    .into_iter()
                     .zip(&weights)
-                    .map(|(dp, &wgt)| dp.iter().map(|x| x * wgt).collect())
+                    .map(|(dp, &cw)| {
+                        let mut dd = dp.to_dense(&w, &g);
+                        dense::scale(&mut dd, cw);
+                        dd
+                    })
                     .collect();
                 cluster.reduce_parts(&parts, true)
             };
 
             // --- step 8: distributed line search on margins ---
-            // nodes compute dʳ·xᵢ locally (compute-only phase)
+            // nodes compute dʳ·xᵢ locally (compute-only phase, compact
+            // gather of dʳ onto the support)
             let d_ref = &d;
-            let dz_parts: Vec<Vec<f64>> = cluster.map_each(|_, shard| {
-                let mut dz = vec![0.0; shard.x.n_rows()];
-                shard.x.matvec(d_ref, &mut dz);
-                dz
-            });
+            let dz_parts: Vec<Vec<f64>> =
+                cluster.map_each_scratch(|_, shard, s| {
+                    shard.map.gather(d_ref, &mut s.buf);
+                    let mut dz = vec![0.0; shard.xl.n_rows()];
+                    shard.xl.matvec(&s.buf, &mut dz);
+                    dz
+                });
             let lam_part = PhiLambda::new(c.lam, &w, &d);
             let loss_kind = c.loss;
             let margins_ref = &margins;
@@ -386,24 +457,15 @@ mod tests {
     fn f_star(cluster: &Cluster, loss: LossKind, lam: f64) -> f64 {
         // stitch shards → exact optimum via TRON
         let mut rows = Vec::new();
+        let mut ys = Vec::new();
         for s in &cluster.shards {
-            for i in 0..s.x.n_rows() {
-                let (cols, vals) = s.x.row(i);
-                rows.push((
-                    cols.iter()
-                        .zip(vals)
-                        .map(|(&c, &v)| (c, v))
-                        .collect::<Vec<_>>(),
-                    s.y[i],
-                ));
+            for i in 0..s.xl.n_rows() {
+                rows.push(s.row_global(i));
+                ys.push(s.y[i]);
             }
         }
-        let x = crate::linalg::Csr::from_rows(
-            cluster.dim,
-            &rows.iter().map(|(r, _)| r.clone()).collect::<Vec<_>>(),
-        );
-        let y: Vec<f64> = rows.iter().map(|(_, y)| *y).collect();
-        let obj = RegularizedLoss { x: &x, y: &y, loss, lam };
+        let x = crate::linalg::Csr::from_rows(cluster.dim, &rows);
+        let obj = RegularizedLoss { x: &x, y: &ys, loss, lam };
         tron::minimize(&obj, &vec![0.0; cluster.dim], &TronParams {
             eps: 1e-12,
             max_iter: 200,
@@ -533,5 +595,23 @@ mod tests {
                 "{inner:?} failed to descend"
             );
         }
+    }
+
+    #[test]
+    fn sequential_and_threaded_runs_are_identical() {
+        // determinism: outputs are slotted by node index and reductions
+        // are tree-ordered, so the thread count must not change a bit
+        let (mut c1, _) = make_cluster(5, 13);
+        let (mut cn, _) = make_cluster(5, 13);
+        c1.threads = 1;
+        cn.threads = 4;
+        let cfg = FsConfig { lam: 0.5, ..Default::default() };
+        let r1 = FsDriver::new(cfg.clone())
+            .run(&mut c1, None, &StopRule::iters(8));
+        let rn = FsDriver::new(cfg).run(&mut cn, None, &StopRule::iters(8));
+        assert_eq!(r1.w, rn.w, "iterates diverged across thread counts");
+        let f1: Vec<f64> = r1.trace.points.iter().map(|p| p.f).collect();
+        let fn_: Vec<f64> = rn.trace.points.iter().map(|p| p.f).collect();
+        assert_eq!(f1, fn_, "trace diverged across thread counts");
     }
 }

@@ -10,12 +10,12 @@
 
 use crate::algo::common::{global_f_diagnostic, test_auprc};
 use crate::algo::{Driver, RunResult, StopRule};
-use crate::cluster::{Cluster, Shard};
+use crate::cluster::Cluster;
 use crate::data::dataset::Dataset;
 use crate::linalg::sparse::SparseVec;
 use crate::loss::LossKind;
 use crate::metrics::trace::{Trace, TracePoint};
-use crate::opt::sgd::{sgd_epochs, SgdParams};
+use crate::opt::sgd::{sgd_epochs_shrink, SgdParams};
 
 #[derive(Clone, Debug)]
 pub struct ParamMixConfig {
@@ -48,39 +48,75 @@ impl ParamMixDriver {
         ParamMixDriver { config }
     }
 
-    /// One mixing round from `w`: node-local SGD then average.
-    /// Charges 2 passes (allreduce of the w_p average). On sparse
-    /// clusters the w_p average ships as index/value pairs — starting
-    /// from a sparse iterate, each w_p is supported on w's support ∪
-    /// the shard's columns (λ-shrinkage never un-zeroes a coordinate),
-    /// so early rounds are cheap on the wire.
+    /// One mixing round from `w`: node-local SGD in compact support
+    /// coordinates, then average. Each node's w_p decomposes as
+    /// shrink_p·w + corr_p: off its support, SGD only ever applies the
+    /// L2 shrink, so a single scalar plus a |support_p|-sized
+    /// correction reconstructs the full iterate. Charges 2 passes
+    /// (allreduce); on sparse clusters only the corrections travel —
+    /// every node rebuilds the average from its own copy of w.
     pub fn round(&self, cluster: &mut Cluster, w: &[f64], iter: usize) -> Vec<f64> {
         let c = &self.config;
         let n_nodes = cluster.n_nodes() as f64;
-        let local = |p: usize, shard: &Shard| -> Vec<f64> {
-            let seed = c
-                .seed
-                .wrapping_add((iter as u64) << 24)
-                .wrapping_add(p as u64);
-            sgd_epochs(
-                &shard.x,
-                &shard.y,
-                c.loss,
-                c.lam,
-                w,
-                &SgdParams { epochs: c.epochs, eta0: c.eta0, seed },
-            )
-        };
-        if cluster.prefer_sparse() {
-            let parts: Vec<SparseVec> = cluster.map_each(|p, shard| {
-                SparseVec::from_dense_scaled(&local(p, shard), 1.0 / n_nodes)
+        let dim = cluster.dim;
+        let sparse = cluster.prefer_sparse();
+        let parts: Vec<(f64, SparseVec)> =
+            cluster.map_each_scratch(|p, shard, s| {
+                let seed = c
+                    .seed
+                    .wrapping_add((iter as u64) << 24)
+                    .wrapping_add(p as u64);
+                shard.map.gather(w, &mut s.wloc);
+                let (w_c, shrink) = sgd_epochs_shrink(
+                    &shard.xl,
+                    &shard.y,
+                    c.loss,
+                    c.lam,
+                    &s.wloc,
+                    &SgdParams { epochs: c.epochs, eta0: c.eta0, seed },
+                );
+                let vals: Vec<f64> = w_c
+                    .iter()
+                    .zip(s.wloc.iter())
+                    .map(|(a, b)| a - shrink * b)
+                    .collect();
+                let corr =
+                    SparseVec::from_support(dim, &shard.map.support, &vals);
+                (shrink, corr)
             });
-            cluster.reduce_parts_sparse(&parts, true).into_dense()
+        let shrink_avg: f64 = parts.iter().map(|(sh, _)| sh / n_nodes).sum();
+        if sparse {
+            let scaled: Vec<SparseVec> = parts
+                .into_iter()
+                .map(|(_, mut sv)| {
+                    sv.scale(1.0 / n_nodes);
+                    sv
+                })
+                .collect();
+            // each node's shrink scalar rides a scalar round alongside
+            // the correction reduce
+            cluster.charge_scalar_round(1);
+            let corr_sum =
+                cluster.reduce_parts_sparse(&scaled, true).into_dense();
+            let mut out: Vec<f64> =
+                w.iter().map(|wj| shrink_avg * wj).collect();
+            for (o, cval) in out.iter_mut().zip(&corr_sum) {
+                *o += cval;
+            }
+            out
         } else {
-            let parts: Vec<Vec<f64>> = cluster.map_each(|p, shard| {
-                local(p, shard).iter().map(|x| x / n_nodes).collect()
-            });
-            cluster.reduce_parts(&parts, true)
+            // dense wire: materialize each node's scaled w_p (classic
+            // parameter-mixing accounting)
+            let dense_parts: Vec<Vec<f64>> = parts
+                .iter()
+                .map(|(sh, sv)| {
+                    let mut wp: Vec<f64> =
+                        w.iter().map(|wj| sh * wj / n_nodes).collect();
+                    sv.axpy_into(1.0 / n_nodes, &mut wp);
+                    wp
+                })
+                .collect();
+            cluster.reduce_parts(&dense_parts, true)
         }
     }
 }
@@ -174,9 +210,8 @@ mod tests {
         let mut rows = Vec::new();
         let mut ys = Vec::new();
         for s in &cluster.shards {
-            for i in 0..s.x.n_rows() {
-                let (c, v) = s.x.row(i);
-                rows.push(c.iter().zip(v).map(|(&a, &b)| (a, b)).collect());
+            for i in 0..s.xl.n_rows() {
+                rows.push(s.row_global(i));
                 ys.push(s.y[i]);
             }
         }

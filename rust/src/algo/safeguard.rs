@@ -5,6 +5,7 @@
 //! descent direction, which corresponds to θ → π/2⁻ here.
 
 use crate::linalg::dense;
+use crate::objective::compact::{GlobalDots, HybridDir};
 
 #[derive(Clone, Copy, Debug)]
 pub struct Safeguard {
@@ -52,6 +53,36 @@ impl Safeguard {
         }
         hits
     }
+
+    /// Hybrid-direction form of [`Self::apply`]: the angle test runs on
+    /// the shared global dots plus O(|support_p|) sparse dots — no node
+    /// (or master) materializes any d_p. Mirrors `dense::angle`'s
+    /// zero-vector policy (numerically zero d_p ⇒ replace by −gʳ).
+    pub fn apply_hybrid(
+        &self,
+        dots: &GlobalDots,
+        w: &[f64],
+        g: &[f64],
+        dirs: &mut [HybridDir],
+    ) -> usize {
+        let gnorm = dots.gg.sqrt();
+        let mut hits = 0;
+        for d in dirs.iter_mut() {
+            let dnorm = d.norm_sq(dots, w, g).sqrt();
+            let reject = if gnorm <= f64::EPSILON || dnorm <= f64::EPSILON {
+                true
+            } else {
+                let cosang = (-d.dot_g(dots, g) / (gnorm * dnorm))
+                    .clamp(-1.0, 1.0);
+                cosang.acos() >= self.theta
+            };
+            if reject {
+                *d = HybridDir::neg_gradient(w.len());
+                hits += 1;
+            }
+        }
+        hits
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +121,36 @@ mod tests {
     fn zero_direction_replaced() {
         let g = vec![1.0, 1.0];
         assert!(Safeguard::default().rejects(&g, &[0.0, 0.0]));
+    }
+
+    #[test]
+    fn hybrid_apply_matches_dense_apply() {
+        use crate::linalg::sparse::SparseVec;
+        let w = vec![0.2, -0.5, 1.0, 0.0];
+        let g = vec![1.0, 0.5, -0.25, 2.0];
+        let dots = GlobalDots::compute(&w, &g);
+        let mk = |a_w: f64, a_g: f64, pairs: Vec<(u32, f64)>| HybridDir {
+            a_w,
+            a_g,
+            corr: SparseVec::from_pairs(4, pairs),
+        };
+        let mut dirs = vec![
+            mk(0.0, -1.0, vec![(1, 0.1)]), // near −g: kept
+            mk(0.0, 1.0, vec![]),          // along +g: replaced
+            mk(0.0, 0.0, vec![]),          // zero: replaced
+        ];
+        let mut dense_dirs: Vec<Vec<f64>> =
+            dirs.iter().map(|d| d.to_dense(&w, &g)).collect();
+        let sg = Safeguard::default();
+        let hits_dense = sg.apply(&g, &mut dense_dirs);
+        let hits_hybrid = sg.apply_hybrid(&dots, &w, &g, &mut dirs);
+        assert_eq!(hits_dense, hits_hybrid);
+        assert_eq!(hits_hybrid, 2);
+        for (hd, dd) in dirs.iter().zip(&dense_dirs) {
+            assert!(
+                dense::max_abs_diff(&hd.to_dense(&w, &g), dd) < 1e-12
+            );
+        }
     }
 
     #[test]

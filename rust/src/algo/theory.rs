@@ -23,19 +23,27 @@ pub fn lipschitz_global(
     let d = cluster.dim;
     let mut v = vec![0.0f64; d];
     for shard in &cluster.shards {
-        for &j in &shard.x.indices {
-            v[j as usize] = 1.0;
+        for &c in &shard.map.support {
+            v[c as usize] = 1.0;
         }
     }
     let n0 = dense::norm(&v).max(f64::MIN_POSITIVE);
     dense::scale(&mut v, 1.0 / n0);
     let mut sigma = 0.0;
+    let mut vl = Vec::new();
+    let mut gl: Vec<f64> = Vec::new();
     for _ in 0..iters {
         let mut vnew = vec![0.0f64; d];
         for shard in &cluster.shards {
-            let mut z = vec![0.0; shard.x.n_rows()];
-            shard.x.matvec(&v, &mut z);
-            shard.x.tmatvec(&z, &mut vnew);
+            // shards store local column ids: gather v onto the support,
+            // run the compact mat-vecs, scatter the product back
+            shard.map.gather(&v, &mut vl);
+            let mut z = vec![0.0; shard.xl.n_rows()];
+            shard.xl.matvec(&vl, &mut z);
+            gl.clear();
+            gl.resize(shard.xl.n_cols, 0.0);
+            shard.xl.tmatvec(&z, &mut gl);
+            shard.map.scatter_add(&gl, 1.0, &mut vnew);
         }
         sigma = dense::norm(&vnew);
         if sigma <= f64::MIN_POSITIVE {
@@ -106,8 +114,10 @@ mod tests {
         let lam = 0.3;
         let global = lipschitz_global(&c, LossKind::Logistic, lam, 25);
         for shard in &c.shards {
+            // the compact matrix has the same spectrum as the
+            // global-column shard (untouched columns are zero)
             let local = crate::opt::svrg::lipschitz_estimate(
-                &shard.x,
+                &shard.xl,
                 LossKind::Logistic.dd_max(),
                 lam,
                 25,
@@ -155,12 +165,15 @@ mod tests {
         let dim = c.dim;
         let mut rng = Rng::new(7);
         let w_r: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.1).collect();
+        // rebuild global-column shard matrices for the full-space oracle
+        let stitched: Vec<crate::linalg::Csr> =
+            c.shards.iter().map(|s| s.stitch(dim)).collect();
         // global gradient
         let mut g = vec![0.0; dim];
         let mut parts = Vec::new();
-        for s in &c.shards {
+        for (s, x) in c.shards.iter().zip(&stitched) {
             let mut gl = vec![0.0; dim];
-            shard_loss_grad(&s.x, &s.y, &w_r, LossKind::Logistic, &mut gl, None);
+            shard_loss_grad(x, &s.y, &w_r, LossKind::Logistic, &mut gl, None);
             dense::axpy(1.0, &gl, &mut g);
             parts.push(gl);
         }
@@ -169,10 +182,11 @@ mod tests {
         let dirs: Vec<Vec<f64>> = c
             .shards
             .iter()
+            .zip(&stitched)
             .zip(&parts)
-            .map(|(s, gl)| {
+            .map(|((s, x), gl)| {
                 let approx = LocalApprox::new(
-                    &s.x, &s.y, LossKind::Logistic, lam, &w_r, &g, gl,
+                    x, &s.y, LossKind::Logistic, lam, &w_r, &g, gl,
                 );
                 let (w_p, _) = svrg_epochs(
                     &approx,

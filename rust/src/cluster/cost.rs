@@ -76,6 +76,23 @@ impl CostModel {
         self.latency_s + bytes / self.bandwidth_bytes_per_s
     }
 
+    /// Seconds for ONE logical traversal of a *sparse* payload of
+    /// `bytes` over `nodes` on the Ring topology: the reduce-scatter
+    /// (or all-gather) phase moves (P−1) chunk hops of bytes/P — the
+    /// ring analogue of charging each tree level by its actual nnz
+    /// payload. A single node has no wire.
+    pub fn ring_sparse_traversal_seconds(
+        &self,
+        bytes: f64,
+        nodes: usize,
+    ) -> f64 {
+        if nodes <= 1 {
+            return 0.0;
+        }
+        let p = nodes as f64;
+        (p - 1.0) * self.hop_seconds(bytes / p)
+    }
+
     /// Modeled seconds for ONE logical size-`dim` traversal (reduce or
     /// broadcast) over `nodes` nodes under the configured topology.
     /// A single-node cluster has no wire: zero seconds.
@@ -132,5 +149,21 @@ mod tests {
         assert!(c.traversal_seconds(1_000_000, 2) > 0.0);
         let ring = CostModel { topology: Topology::Ring, ..c };
         assert_eq!(ring.traversal_seconds(1_000_000, 1), 0.0);
+    }
+
+    #[test]
+    fn ring_sparse_traversal_charges_nnz_payload() {
+        let c = CostModel::default();
+        assert_eq!(c.ring_sparse_traversal_seconds(1e6, 1), 0.0);
+        // a low-density payload must cost less than the dense ring pass
+        // of the same dimension (1M coords × 8 B vs 120 KB of nnz)
+        let sparse = c.ring_sparse_traversal_seconds(120e3, 8);
+        let dense = c.traversal_seconds(1_000_000, 8);
+        assert!(sparse < dense, "sparse {sparse} vs dense {dense}");
+        // more nodes → more (cheaper) hops; latency-dominated growth
+        assert!(
+            c.ring_sparse_traversal_seconds(120e3, 16)
+                > c.ring_sparse_traversal_seconds(120e3, 2)
+        );
     }
 }

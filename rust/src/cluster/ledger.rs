@@ -1,6 +1,7 @@
 //! The run accounting every driver reports: communication passes
 //! (Figure 1's left panels), simulated seconds (middle/right panels),
-//! and the raw component breakdown.
+//! the raw component breakdown, and the per-tree-level sparse payload
+//! profile benches use to report wire shapes.
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Ledger {
@@ -17,6 +18,12 @@ pub struct Ledger {
     pub compute_seconds: f64,
     /// scalar aggregation rounds (line-search trials etc.)
     pub scalar_rounds: usize,
+    /// cumulative largest-message bytes per reduction-tree level
+    /// (index 0 = leaf level), summed over every sparse tree reduction
+    /// in the run — the wire profile `tree_sum_sparse` observes
+    pub level_bytes: Vec<f64>,
+    /// how many sparse tree reductions are folded into `level_bytes`
+    pub sparse_reductions: usize,
 }
 
 impl Ledger {
@@ -28,6 +35,34 @@ impl Ledger {
     /// Snapshot for trace records.
     pub fn snapshot(&self) -> (f64, f64) {
         (self.comm_passes, self.seconds())
+    }
+
+    /// Fold one sparse reduction's per-level message sizes into the
+    /// cumulative profile.
+    pub fn record_sparse_levels(&mut self, levels: &[usize]) {
+        if self.level_bytes.len() < levels.len() {
+            self.level_bytes.resize(levels.len(), 0.0);
+        }
+        for (slot, &b) in self.level_bytes.iter_mut().zip(levels) {
+            *slot += b as f64;
+        }
+        self.sparse_reductions += 1;
+    }
+
+    /// Mean per-level payload of the sparse reductions, rendered for
+    /// bench reports: "L0 24.0KB | L1 31.5KB | ...". Empty string when
+    /// no sparse reduction ran.
+    pub fn level_profile(&self) -> String {
+        if self.sparse_reductions == 0 {
+            return String::new();
+        }
+        let n = self.sparse_reductions as f64;
+        self.level_bytes
+            .iter()
+            .enumerate()
+            .map(|(l, &b)| format!("L{l} {:.1}KB", b / n / 1024.0))
+            .collect::<Vec<_>>()
+            .join(" | ")
     }
 }
 
@@ -43,8 +78,22 @@ mod tests {
             comm_bytes: 320.0,
             compute_seconds: 2.5,
             scalar_rounds: 3,
+            ..Ledger::default()
         };
         assert_eq!(l.seconds(), 4.0);
         assert_eq!(l.snapshot(), (4.0, 4.0));
+    }
+
+    #[test]
+    fn level_profile_accumulates_and_averages() {
+        let mut l = Ledger::default();
+        assert_eq!(l.level_profile(), "");
+        l.record_sparse_levels(&[2048, 1024]);
+        l.record_sparse_levels(&[2048, 1024, 512]);
+        assert_eq!(l.sparse_reductions, 2);
+        assert_eq!(l.level_bytes, vec![4096.0, 2048.0, 512.0]);
+        let profile = l.level_profile();
+        assert!(profile.starts_with("L0 2.0KB"), "{profile}");
+        assert!(profile.contains("L2 0.2KB"), "{profile}");
     }
 }

@@ -18,16 +18,27 @@ pub mod allreduce;
 pub mod cost;
 pub mod ledger;
 pub mod node;
+pub mod scratch;
 
 pub use cost::CostModel;
 pub use ledger::Ledger;
 pub use node::Shard;
+pub use scratch::NodeScratch;
 
 use crate::data::dataset::Dataset;
 use crate::data::partition::Partition;
 use crate::linalg::sparse::SparseVec;
 use self::allreduce::Reduced;
+use std::sync::Mutex;
 use std::time::Instant;
+
+/// Default worker-thread count for map phases: every available core.
+/// The `--threads` CLI flag (0 = this auto value) overrides it.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
 
 /// The simulated cluster: P shards + the accounting state.
 pub struct Cluster {
@@ -35,8 +46,16 @@ pub struct Cluster {
     pub cost: CostModel,
     pub dim: usize,
     pub ledger: Ledger,
-    /// worker threads for map phases (1 = sequential)
+    /// worker threads for map phases (defaults to every available
+    /// core; set to 1 for sequential execution). Results are
+    /// bit-identical across thread counts; note that *measured*
+    /// per-node compute seconds include real memory/cache contention
+    /// when nodes run concurrently — for contention-free per-node
+    /// compute modeling, run with `threads = 1`.
     pub threads: usize,
+    /// per-node reusable scratch buffers (see [`NodeScratch`]) — the
+    /// reason steady-state compact solves allocate nothing
+    pub scratch: Vec<Mutex<NodeScratch>>,
 }
 
 impl Cluster {
@@ -52,7 +71,7 @@ impl Cluster {
         cost: CostModel,
     ) -> Cluster {
         let dim = data.n_features();
-        let shards = partition
+        let shards: Vec<Shard> = partition
             .assignment
             .iter()
             .map(|rows| {
@@ -60,7 +79,15 @@ impl Cluster {
                 Shard::new(sub.x, sub.y)
             })
             .collect();
-        Cluster { shards, cost, dim, ledger: Ledger::default(), threads: 1 }
+        let scratch = NodeScratch::pool(shards.len());
+        Cluster {
+            shards,
+            cost,
+            dim,
+            ledger: Ledger::default(),
+            threads: default_threads(),
+            scratch,
+        }
     }
 
     /// Same shards and cost model, fresh ledger — for computing
@@ -73,6 +100,7 @@ impl Cluster {
             dim: self.dim,
             ledger: Ledger::default(),
             threads: self.threads,
+            scratch: NodeScratch::pool(self.shards.len()),
         }
     }
 
@@ -81,7 +109,7 @@ impl Cluster {
     }
 
     pub fn n_examples(&self) -> usize {
-        self.shards.iter().map(|s| s.x.n_rows()).sum()
+        self.shards.iter().map(|s| s.xl.n_rows()).sum()
     }
 
     /// Mean over shards of the fraction of columns the shard touches —
@@ -101,12 +129,11 @@ impl Cluster {
     /// Should gradient rounds use the sparse phases? Sparse pays
     /// 12 B/nnz vs 8 B/coordinate, so it wins well below the 2/3 wire
     /// break-even; 0.5 leaves headroom for union growth up the tree.
-    /// Only on the Tree topology: [`reduce_parts_sparse`] models tree
-    /// hops, and silently swapping a Ring cluster's time model for a
-    /// tree one would corrupt Tree-vs-Ring comparisons.
+    /// Both topologies are modeled: the Tree path charges per-level
+    /// message sizes, the Ring path charges the reduce-scatter by the
+    /// merged nnz payload (see [`CostModel::ring_sparse_traversal_seconds`]).
     pub fn prefer_sparse(&self) -> bool {
-        self.cost.topology == cost::Topology::Tree
-            && self.support_density() < 0.5
+        self.support_density() < 0.5
     }
 
     /// Compute-only phase: run `f` on every node, charge the clock with
@@ -117,13 +144,36 @@ impl Cluster {
         f: impl Fn(usize, &Shard) -> T + Sync,
     ) -> Vec<T> {
         let (outs, times) = self.run_nodes(&f);
+        self.charge_compute(&times);
+        outs
+    }
+
+    /// [`Self::map_each`] handing every node its reusable
+    /// [`NodeScratch`] slot. Each node's slot is locked for exactly the
+    /// duration of its closure (one worker per node — the lock is never
+    /// contended), so threaded map phases stay safe while steady-state
+    /// per-node buffers persist across outer iterations.
+    pub fn map_each_scratch<T: Send>(
+        &mut self,
+        f: impl Fn(usize, &Shard, &mut NodeScratch) -> T + Sync,
+    ) -> Vec<T> {
+        let scratch = &self.scratch;
+        let g = |p: usize, shard: &Shard| -> T {
+            let mut slot = scratch[p].lock().expect("scratch lock");
+            f(p, shard, &mut slot)
+        };
+        let (outs, times) = self.run_nodes(&g);
+        self.charge_compute(&times);
+        outs
+    }
+
+    fn charge_compute(&mut self, times: &[f64]) {
         let max = times
             .iter()
             .enumerate()
             .map(|(p, t)| t * self.cost.node_compute_scale(p))
             .fold(0.0f64, f64::max);
         self.ledger.compute_seconds += max;
-        outs
     }
 
     /// Compute phase followed by a size-d vector reduce (summed in tree
@@ -186,10 +236,12 @@ impl Cluster {
 
     /// Sparse analogue of [`Self::reduce_parts`]: tree-merge by column
     /// index (dense accumulator past the density switch), charging the
-    /// clock by the bytes each tree level actually moves rather than
-    /// d·8. Modeled on the binary tree regardless of the configured
-    /// [`cost::Topology`] — a ring reduce-scatter of irregular sparse
-    /// payloads is not modeled.
+    /// clock by the bytes actually moved rather than d·8. The summation
+    /// itself always uses the binary-tree order (so sparse and dense
+    /// reductions agree coordinate-for-coordinate); the *time* model
+    /// follows the configured [`cost::Topology`]: per-level message
+    /// sizes on the Tree, (P−1) chunked hops of the merged nnz payload
+    /// per logical traversal on the Ring.
     pub fn reduce_parts_sparse(
         &mut self,
         parts: &[SparseVec],
@@ -197,23 +249,59 @@ impl Cluster {
     ) -> Reduced {
         let (out, level_bytes) = allreduce::tree_sum_sparse(parts);
         let result_bytes = out.wire_bytes() as f64;
-        // up-sweep: one hop per level, payload = largest concurrent
-        // message at that level (level_bytes is empty on 1 node)
-        let mut secs: f64 = level_bytes
-            .iter()
-            .map(|&b| self.cost.hop_seconds(b as f64))
-            .sum();
-        let mut bytes = result_bytes;
-        if all {
-            // broadcast of the merged result back down the tree
-            // (tree_depth = 0 on a single node: no wire, no cost)
-            secs += self.tree_depth() as f64 * self.cost.hop_seconds(result_bytes);
-            bytes += result_bytes;
-        }
+        let nodes = self.n_nodes();
+        let secs = match self.cost.topology {
+            cost::Topology::Tree => {
+                // up-sweep: one hop per level, payload = largest
+                // concurrent message at that level (level_bytes is
+                // empty on 1 node)
+                let mut s: f64 = level_bytes
+                    .iter()
+                    .map(|&b| self.cost.hop_seconds(b as f64))
+                    .sum();
+                if all {
+                    // broadcast of the merged result back down the tree
+                    // (tree_depth = 0 on a single node: no wire)
+                    s += self.tree_depth() as f64
+                        * self.cost.hop_seconds(result_bytes);
+                }
+                s
+            }
+            cost::Topology::Ring => {
+                // reduce-scatter (+ all-gather when every node keeps
+                // the sum), charged by the merged nnz payload
+                let per = self
+                    .cost
+                    .ring_sparse_traversal_seconds(result_bytes, nodes);
+                if all {
+                    2.0 * per
+                } else {
+                    per
+                }
+            }
+        };
+        let bytes = if all { 2.0 * result_bytes } else { result_bytes };
         self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
         self.ledger.comm_seconds += secs;
         self.ledger.comm_bytes += bytes;
+        // the per-level profile describes binary-tree hops — only
+        // meaningful when the time model actually charged them
+        if self.cost.topology == cost::Topology::Tree {
+            self.ledger.record_sparse_levels(&level_bytes);
+        }
         out
+    }
+
+    /// Charge one cross-node aggregation round of `k` scalars that is
+    /// not mediated by [`Self::map_reduce_scalars`] — e.g. the hybrid
+    /// direction round's per-node affine coefficients. Latency-only
+    /// time, zero passes (footnote 5 counts size-d vectors).
+    pub fn charge_scalar_round(&mut self, k: usize) {
+        let hops = 2.0 * self.tree_depth() as f64;
+        self.ledger.comm_seconds += hops
+            * (self.cost.latency_s
+                + (k * 8) as f64 / self.cost.bandwidth_bytes_per_s);
+        self.ledger.scalar_rounds += 1;
     }
 
     /// Master → nodes broadcast of a size-d vector. Charges 1 pass.
@@ -237,11 +325,7 @@ impl Cluster {
                 *a += v;
             }
         }
-        let hops = 2.0 * self.tree_depth() as f64;
-        self.ledger.comm_seconds += hops
-            * (self.cost.latency_s
-                + (K * 8) as f64 / self.cost.bandwidth_bytes_per_s);
-        self.ledger.scalar_rounds += 1;
+        self.charge_scalar_round(K);
         acc
     }
 
@@ -335,7 +419,7 @@ mod tests {
         let c = cluster(7);
         assert_eq!(c.n_nodes(), 7);
         assert_eq!(c.n_examples(), 120);
-        assert!(c.shards.iter().all(|s| s.x.n_rows() > 0));
+        assert!(c.shards.iter().all(|s| s.xl.n_rows() > 0));
     }
 
     #[test]
@@ -344,7 +428,7 @@ mod tests {
         // per-node example counts, one-hot by node index
         let v = c.map_reduce_vec(|p, shard| {
             let mut out = vec![0.0; 30];
-            out[p] = shard.x.n_rows() as f64;
+            out[p] = shard.xl.n_rows() as f64;
             out
         });
         let total: f64 = v.iter().sum();
@@ -363,7 +447,7 @@ mod tests {
     #[test]
     fn scalar_rounds_cost_no_passes() {
         let mut c = cluster(4);
-        let [s] = c.map_reduce_scalars(|_, shard| [shard.x.n_rows() as f64]);
+        let [s] = c.map_reduce_scalars(|_, shard| [shard.xl.n_rows() as f64]);
         assert_eq!(s, 120.0);
         assert_eq!(c.ledger.comm_passes, 0.0);
         assert_eq!(c.ledger.scalar_rounds, 1);
@@ -388,10 +472,10 @@ mod tests {
     #[test]
     fn threaded_map_matches_sequential() {
         let mut c1 = cluster(6);
-        let seq = c1.map_each(|p, s| (p, s.x.nnz()));
+        let seq = c1.map_each(|p, s| (p, s.xl.nnz()));
         let mut c2 = cluster(6);
         c2.threads = 3;
-        let par = c2.map_each(|p, s| (p, s.x.nnz()));
+        let par = c2.map_each(|p, s| (p, s.xl.nnz()));
         assert_eq!(seq, par);
     }
 
@@ -401,7 +485,7 @@ mod tests {
         // tree hops of latency per scalar round and per-pass traversal
         // time it could never incur
         let mut c = cluster(1);
-        let [s] = c.map_reduce_scalars(|_, shard| [shard.x.n_rows() as f64]);
+        let [s] = c.map_reduce_scalars(|_, shard| [shard.xl.n_rows() as f64]);
         assert_eq!(s, 120.0);
         c.broadcast_vec();
         let _ = c.map_reduce_vec(|_, _| vec![0.0; 30]);

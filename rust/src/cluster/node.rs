@@ -1,27 +1,55 @@
 //! Per-node state: the shard of examples node p owns (the paper's I_p),
-//! plus the column-support index the sparse gradient pipeline uses.
+//! stored in *compact support coordinates*: the CSR's column ids are
+//! local positions `0..support.len()` and [`SupportMap`] is the
+//! local↔global dictionary. Every per-node phase (gradient sweeps,
+//! inner solves, Hessian products, margin matvecs) runs on
+//! |support|-length buffers; global size-d vectors are gathered onto
+//! the support at phase entry and results scatter back as sparse
+//! index/value payloads.
 
 use crate::linalg::sparse::SupportMap;
 use crate::linalg::Csr;
 
 #[derive(Clone, Debug)]
 pub struct Shard {
-    pub x: Csr,
+    /// shard examples with columns remapped to local ids
+    /// `0..map.support.len()` — built once at partition time
+    pub xl: Csr,
     pub y: Vec<f64>,
-    /// sorted unique columns this shard touches + per-nnz positions —
-    /// built once at partition time, reused by every sparse gradient
-    /// pass
+    /// sorted unique global columns this shard touches (the compact
+    /// coordinate dictionary)
     pub map: SupportMap,
+    /// global feature dimension d
+    pub dim: usize,
 }
 
 impl Shard {
+    /// Build from a global-column sub-matrix (remaps and drops it).
     pub fn new(x: Csr, y: Vec<f64>) -> Shard {
-        let map = SupportMap::build(&x);
-        Shard { x, y, map }
+        let dim = x.n_cols;
+        let (map, xl) = SupportMap::compact(&x);
+        Shard { xl, y, map, dim }
     }
 
     pub fn n_examples(&self) -> usize {
         self.y.len()
+    }
+
+    /// Row i in global coordinates (tests / stitching diagnostics).
+    pub fn row_global(&self, i: usize) -> Vec<(u32, f32)> {
+        let (cols, vals) = self.xl.row(i);
+        cols.iter()
+            .zip(vals)
+            .map(|(&c, &v)| (self.map.support[c as usize], v))
+            .collect()
+    }
+
+    /// Rebuild the global-column matrix of this shard — the
+    /// single-machine oracle tests compare the compact pipeline against.
+    pub fn stitch(&self, dim: usize) -> Csr {
+        let rows: Vec<Vec<(u32, f32)>> =
+            (0..self.xl.n_rows()).map(|i| self.row_global(i)).collect();
+        Csr::from_rows(dim, &rows)
     }
 
     /// Fraction of the `dim` feature columns this shard's examples
@@ -42,7 +70,13 @@ mod tests {
             vec![1.0, -1.0],
         );
         assert_eq!(s.n_examples(), 2);
+        assert_eq!(s.dim, 3);
         assert_eq!(s.map.support, vec![0, 2]);
+        // compact storage: two columns, local ids
+        assert_eq!(s.xl.n_cols, 2);
+        assert_eq!(s.xl.row(0).0, &[0]);
+        assert_eq!(s.xl.row(1).0, &[1]);
+        assert_eq!(s.row_global(1), vec![(2, 2.0)]);
         assert!((s.support_density(3) - 2.0 / 3.0).abs() < 1e-15);
     }
 }

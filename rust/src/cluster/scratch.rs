@@ -1,0 +1,35 @@
+//! Per-node reusable scratch buffers. A [`NodeScratch`] lives in the
+//! [`Cluster`](super::Cluster) (one slot per node, behind a `Mutex` so
+//! threaded map phases can borrow their own slot mutably) and is handed
+//! to every `map_each_scratch` closure. Steady-state gradient rounds
+//! and inner solves therefore allocate nothing: gathers, support-
+//! aligned accumulators and the solver working sets all reuse these
+//! buffers across outer iterations. Every buffer is O(|support_p|) or
+//! O(n_p) — never O(d).
+
+use crate::opt::sag::SagScratch;
+use crate::opt::svrg::SvrgScratch;
+
+#[derive(Debug, Default)]
+pub struct NodeScratch {
+    /// compact gather of the global iterate w on the shard support
+    pub wloc: Vec<f64>,
+    /// compact gather of the global gradient (or a second operand)
+    pub gloc: Vec<f64>,
+    /// support-aligned accumulator (loss gradients, Hv products)
+    pub vals: Vec<f64>,
+    /// general compact buffer (direction gathers, corrections)
+    pub buf: Vec<f64>,
+    /// SVRG inner-solver working set
+    pub svrg: SvrgScratch,
+    /// SAG inner-solver working set
+    pub sag: SagScratch,
+}
+
+impl NodeScratch {
+    pub fn pool(n_nodes: usize) -> Vec<std::sync::Mutex<NodeScratch>> {
+        (0..n_nodes)
+            .map(|_| std::sync::Mutex::new(NodeScratch::default()))
+            .collect()
+    }
+}

@@ -7,23 +7,38 @@
 //! [`algo::fs`]; everything else is the substrate it needs:
 //!
 //! - [`linalg`] — CSR sparse matrix, dense vector kernels, and the
-//!   [`linalg::sparse`] index/value vectors + per-shard support maps
-//!   the sparse gradient pipeline ships over the simulated wire.
+//!   [`linalg::sparse`] index/value vectors + per-shard
+//!   [`linalg::SupportMap`] dictionaries (sorted global columns ↔
+//!   compact local ids) the whole compact-coordinate pipeline runs on.
 //! - [`data`] — libsvm I/O, the kdd2010-shaped synthetic generator,
 //!   example partitioning.
 //! - [`loss`] — the differentiable convex losses the theory covers.
 //! - [`objective`] — regularized risk, shard-local views, the tilted
-//!   approximation f̂_p (eq. 2).
-//! - [`opt`] — inner/core optimizers: SVRG, SGD, TRON, L-BFGS, CG and
-//!   the distributed Armijo–Wolfe line search.
-//! - [`cluster`] — the simulated AllReduce-tree cluster with an
-//!   explicit communication cost model (passes + modeled seconds +
-//!   payload bytes). Gradient rounds auto-route through sparse
+//!   approximation f̂_p (eq. 2) in full space ([`objective::LocalApprox`],
+//!   the reference) and in **compact support coordinates**
+//!   ([`objective::CompactApprox`]: |support| coordinates plus an
+//!   orthonormal ≤2-dim tail spanning the off-support affine dynamics),
+//!   so every inner solver reproduces the full-space solve with
+//!   O(|support|) buffers.
+//! - [`opt`] — inner/core optimizers: SVRG, SAG, SGD, TRON, L-BFGS, CG
+//!   and the distributed Armijo–Wolfe line search; the stochastic
+//!   solvers take reusable scratch working sets from the cluster pool.
+//! - [`cluster`] — the simulated AllReduce cluster with an explicit
+//!   communication cost model (passes + modeled seconds + payload
+//!   bytes). Shards store column-remapped CSRs
+//!   ([`cluster::Shard::xl`]); map phases are **threaded by default**
+//!   (`--threads 0` = auto-detect cores) and hand each node a
+//!   [`cluster::NodeScratch`] so steady-state solves allocate nothing.
+//!   Gradient/direction rounds auto-route through sparse
 //!   merge-by-index reductions when shard supports are small relative
 //!   to d (`Cluster::prefer_sparse`), charging the ledger by actual
-//!   bytes moved (nnz·12 vs d·8).
-//! - [`algo`] — FS-s (Algorithm 1), SQM, Hybrid, parameter mixing and
-//!   the auto-switching extension.
+//!   bytes moved (nnz·12 vs d·8) on both Tree (per-level messages) and
+//!   Ring (chunked nnz payload) topologies, with per-level wire
+//!   profiles recorded on the [`cluster::Ledger`].
+//! - [`algo`] — FS-s (Algorithm 1) aggregating hybrid directions
+//!   (a_w·wʳ + a_g·gʳ + support-sized sparse corrections — the only
+//!   payload the direction allreduce moves), SQM, Hybrid, parameter
+//!   mixing and the auto-switching extension.
 //! - [`metrics`] — AUPRC, convergence traces, run recording.
 //! - `runtime` — PJRT executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); the dense three-layer path.

@@ -25,28 +25,44 @@ impl Csr {
 
     /// Build from row triplets; each row is a (sorted-or-not) list of
     /// (col, val). Duplicates within a row are summed.
+    ///
+    /// §Perf: one reusable scratch row instead of cloning every input
+    /// row — shard construction is on the partition hot path.
     pub fn from_rows(n_cols: usize, rows: &[Vec<(u32, f32)>]) -> Csr {
         let mut m = Csr::new(n_cols);
+        m.offsets.reserve(rows.len());
+        m.indices.reserve(rows.iter().map(Vec::len).sum());
+        m.values.reserve(rows.iter().map(Vec::len).sum());
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
         for row in rows {
-            m.push_row(row.clone());
+            scratch.clear();
+            scratch.extend_from_slice(row);
+            m.append_row_scratch(&mut scratch);
         }
         m
     }
 
     /// Append one row, sorting and merging duplicate columns.
     pub fn push_row(&mut self, mut entries: Vec<(u32, f32)>) {
+        self.append_row_scratch(&mut entries);
+    }
+
+    /// Sort `entries`, merge duplicate columns directly into the CSR
+    /// arrays (no per-row temporaries), close the row.
+    fn append_row_scratch(&mut self, entries: &mut Vec<(u32, f32)>) {
         entries.sort_unstable_by_key(|&(c, _)| c);
-        let mut merged: Vec<(u32, f32)> = Vec::with_capacity(entries.len());
-        for (c, v) in entries {
+        let row_start = self.indices.len();
+        for &(c, v) in entries.iter() {
             assert!((c as usize) < self.n_cols, "col {c} out of bounds");
-            match merged.last_mut() {
-                Some((lc, lv)) if *lc == c => *lv += v,
-                _ => merged.push((c, v)),
+            match self.indices.last() {
+                Some(&lc) if lc == c && self.indices.len() > row_start => {
+                    *self.values.last_mut().unwrap() += v;
+                }
+                _ => {
+                    self.indices.push(c);
+                    self.values.push(v);
+                }
             }
-        }
-        for (c, v) in merged {
-            self.indices.push(c);
-            self.values.push(v);
         }
         self.offsets.push(self.indices.len());
     }

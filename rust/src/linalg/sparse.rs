@@ -122,9 +122,13 @@ impl SparseVec {
         }
     }
 
-    /// Bytes this vector occupies in the sparse wire encoding.
+    /// Bytes this vector occupies in the sparse wire encoding. Stored
+    /// exact zeros (support-aligned carriers keep them so `val` stays
+    /// aligned with the shard support) are stripped before sending — a
+    /// real system wouldn't ship them, so they cost no wire bytes.
     pub fn wire_bytes(&self) -> usize {
-        self.nnz() * BYTES_PER_SPARSE_NNZ
+        self.val.iter().filter(|v| **v != 0.0).count()
+            * BYTES_PER_SPARSE_NNZ
     }
 
     /// self·w against a dense vector.
@@ -202,18 +206,18 @@ impl SparseVec {
     }
 }
 
-/// Per-shard column-support index: the sorted unique columns a CSR
-/// shard touches plus, for every stored nnz, its position within that
-/// support. Built once at partition time; lets every gradient pass
-/// accumulate into a |support|-length buffer instead of a size-d dense
-/// vector (the O(P·d) → O(Σ|support_p|) win the sparse pipeline is
-/// about).
+/// Per-shard column-support dictionary: the sorted unique global
+/// columns a CSR shard touches. Built once at partition time, it is the
+/// local↔global translation every compact-coordinate phase uses — the
+/// shard's CSR itself stores *local* ids `0..support.len()` (see
+/// [`SupportMap::compact`]), so gradient passes, inner solves and
+/// Hessian products all run over |support|-length buffers instead of
+/// size-d dense vectors (the O(P·d) → O(Σ|support_p|) win the sparse
+/// pipeline is about).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SupportMap {
-    /// sorted unique columns present in the shard
+    /// sorted unique global columns present in the shard
     pub support: Vec<u32>,
-    /// position of csr.indices[k] within `support`, for every k
-    pub local: Vec<u32>,
 }
 
 impl SupportMap {
@@ -221,28 +225,65 @@ impl SupportMap {
         let mut support = x.indices.clone();
         support.sort_unstable();
         support.dedup();
-        let local = x
-            .indices
-            .iter()
-            .map(|c| support.binary_search(c).expect("col in support") as u32)
-            .collect();
-        SupportMap { support, local }
+        SupportMap { support }
     }
 
-    /// g_vals ← g_vals + α·xᵢ, with g_vals indexed by support position.
+    /// Remap a global-column CSR to compact local ids: returns the
+    /// support dictionary plus a CSR whose `n_cols == support.len()`
+    /// and whose indices are positions within the support. Row order
+    /// and within-row entry order are preserved (support is sorted, so
+    /// sorted global indices stay sorted locally) — compact sweeps
+    /// accumulate in exactly the order the global-space sweeps did.
+    pub fn compact(x: &Csr) -> (SupportMap, Csr) {
+        let map = SupportMap::build(x);
+        let indices = x
+            .indices
+            .iter()
+            .map(|c| {
+                map.support.binary_search(c).expect("col in support") as u32
+            })
+            .collect();
+        let local = Csr {
+            n_cols: map.support.len(),
+            offsets: x.offsets.clone(),
+            indices,
+            values: x.values.clone(),
+        };
+        (map, local)
+    }
+
+    /// Number of support columns (the compact dimension m).
     #[inline]
-    pub fn add_row_scaled(
-        &self,
-        x: &Csr,
-        i: usize,
-        alpha: f64,
-        g_vals: &mut [f64],
-    ) {
-        debug_assert_eq!(g_vals.len(), self.support.len());
-        let (lo, hi) = (x.offsets[i], x.offsets[i + 1]);
-        for k in lo..hi {
-            g_vals[self.local[k] as usize] += alpha * x.values[k] as f64;
+    pub fn len(&self) -> usize {
+        self.support.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.support.is_empty()
+    }
+
+    /// Gather a global dense vector onto the support:
+    /// out[l] = global[support[l]]. Reuses `out`'s allocation.
+    pub fn gather(&self, global: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.support.iter().map(|&c| global[c as usize]));
+    }
+
+    /// out ← out + α·vals scattered to global coordinates.
+    pub fn scatter_add(&self, vals: &[f64], alpha: f64, out: &mut [f64]) {
+        debug_assert_eq!(vals.len(), self.support.len());
+        for (&c, &v) in self.support.iter().zip(vals) {
+            out[c as usize] += alpha * v;
         }
+    }
+
+    /// Support-aligned values as a global [`SparseVec`] carrying every
+    /// support coordinate (zeros included, so `val` stays aligned with
+    /// the shard support on the receiving side).
+    pub fn to_sparse_aligned(&self, dim: usize, vals: &[f64]) -> SparseVec {
+        debug_assert_eq!(vals.len(), self.support.len());
+        SparseVec { dim, idx: self.support.clone(), val: vals.to_vec() }
     }
 
     /// Fraction of the `dim` columns this shard touches.
@@ -314,7 +355,7 @@ mod tests {
     }
 
     #[test]
-    fn support_map_indexes_every_nnz() {
+    fn support_map_compacts_and_scatters() {
         let x = Csr::from_rows(
             6,
             &[
@@ -323,14 +364,31 @@ mod tests {
                 vec![(0, 4.0), (3, -1.0)],
             ],
         );
-        let map = SupportMap::build(&x);
+        let (map, xl) = SupportMap::compact(&x);
         assert_eq!(map.support, vec![0, 3, 5]);
-        assert_eq!(map.local.len(), x.nnz());
-        // accumulate row 2 into a support-length buffer
+        assert_eq!(map.len(), 3);
+        assert_eq!(xl.n_cols, 3);
+        assert_eq!(xl.nnz(), x.nnz());
+        // rows keep their order, columns become support positions
+        assert_eq!(xl.row(0).0, &[0, 2]);
+        assert_eq!(xl.row(2).0, &[0, 1]);
+        // accumulate row 2 into a support-length buffer via the local csr
         let mut vals = vec![0.0; 3];
-        map.add_row_scaled(&x, 2, 2.0, &mut vals);
+        xl.add_row_scaled(2, 2.0, &mut vals);
         assert_eq!(vals, vec![8.0, -2.0, 0.0]);
         assert!((map.density(6) - 0.5).abs() < 1e-15);
+
+        // gather/scatter round-trip against a global vector
+        let w = vec![0.5, 0.0, 0.0, -1.0, 0.0, 2.0];
+        let mut wc = Vec::new();
+        map.gather(&w, &mut wc);
+        assert_eq!(wc, vec![0.5, -1.0, 2.0]);
+        let mut back = vec![0.0; 6];
+        map.scatter_add(&wc, 2.0, &mut back);
+        assert_eq!(back, vec![1.0, 0.0, 0.0, -2.0, 0.0, 4.0]);
+        let sv = map.to_sparse_aligned(6, &[0.0, 7.0, 1.0]);
+        assert_eq!(sv.idx, map.support);
+        assert_eq!(sv.to_dense(), vec![0.0, 0.0, 0.0, 7.0, 0.0, 1.0]);
     }
 
     #[test]

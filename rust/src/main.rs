@@ -41,10 +41,12 @@ COMMANDS
                --method fs|sqm|sqm-lbfgs|hybrid|parammix|autoswitch
                --nodes P --lambda L --loss logistic|squared_hinge|least_squares
                --epochs s --batch B --iters N --theta-deg T
-               --inner svrg|sgd|lbfgs|tron
+               --inner svrg|sag|sgd|lbfgs|tron
                [--data FILE | --examples N --features D --skew S]
                [--config exp.toml] [--trace out.csv] [--fstar]
-               [--test-frac F] [--seed S] [--threads T]
+               [--test-frac F] [--seed S]
+               [--threads T]   local-solve worker threads; 0 = auto
+                               (all cores, the default), 1 = sequential
   figure1    regenerate the paper's Figure 1 panels for one node count
                --nodes P [--full] [--out-dir results/] [--iters N]
   info       show the AOT artifact manifest and PJRT platform
@@ -161,11 +163,17 @@ fn train(args: &Args) {
     eprintln!("data: {}", DataStats::compute(&data).render());
     let (train_set, test_set) = data.split(1.0 - test_frac, seed ^ 1);
     let mut cluster = Cluster::partition(train_set, nodes, CostModel::default());
-    cluster.threads = args.usize("threads", 1);
+    // threads: 0 (the default) = auto-detect every available core —
+    // map phases are threaded by default; pass 1 to force sequential
+    let threads = args.usize("threads", 0);
+    if threads > 0 {
+        cluster.threads = threads;
+    }
 
     let method = args.get_or("method", "fs");
     let inner = match args.get_or("inner", "svrg") {
         "svrg" => InnerSolver::Svrg,
+        "sag" => InnerSolver::Sag,
         "sgd" => InnerSolver::Sgd,
         "lbfgs" => InnerSolver::Lbfgs,
         "tron" => InnerSolver::Tron,

@@ -1,0 +1,455 @@
+//! Support-compact view of the paper's tilted local approximation
+//! f̂_p (eq. 2), plus the hybrid direction representation the FS driver
+//! aggregates.
+//!
+//! A node's loss only touches its shard's support columns S_p, but the
+//! tilt gʳ − λwʳ − ∇L_p(wʳ) moves *every* coordinate, so a naive
+//! support restriction would change the solve. The observation that
+//! makes compact solves exact: off the support, f̂_p is a separable
+//! quadratic whose entire trajectory (for any of our inner solvers)
+//! stays inside span{wʳ_off, tilt_off}. [`CompactApprox`] therefore
+//! optimizes over m = |S_p| support coordinates plus at most **two
+//! tail coordinates** expressed in an *orthonormal* basis of that
+//! span — Euclidean dots in the compact space equal full-space dots, so
+//! SVRG, SAG, L-BFGS and TRON run unmodified and reproduce the
+//! full-space solve to rounding error with O(|S_p|) working set.
+//!
+//! The basis is built from three scalars (‖wʳ‖²_off, wʳ_off·tilt_off,
+//! ‖tilt_off‖²_off) obtained by subtracting support-local dots from the
+//! master's global dots — zero O(d) work per node.
+//!
+//! The solve result converts to a [`HybridDir`]
+//! d_p = a_w·wʳ + a_g·gʳ + corr (corr supported on S_p): nodes already
+//! hold wʳ and gʳ after the gradient allreduce, so the direction
+//! allreduce ships only |S_p|-sized corrections plus two scalars.
+
+use crate::linalg::sparse::{SparseVec, SupportMap};
+use crate::linalg::{dense, Csr};
+use crate::loss::LossKind;
+use crate::objective::{
+    regularized_hess_vec, tilted_grad, tilted_value, Objective, TiltedShard,
+};
+
+/// Master-side dot products shared by every node's tail construction,
+/// computed once per outer iteration (O(d) at the master only).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GlobalDots {
+    pub ww: f64,
+    pub wg: f64,
+    pub gg: f64,
+}
+
+impl GlobalDots {
+    pub fn compute(w: &[f64], g: &[f64]) -> GlobalDots {
+        GlobalDots {
+            ww: dense::norm_sq(w),
+            wg: dense::dot(w, g),
+            gg: dense::norm_sq(g),
+        }
+    }
+}
+
+/// Relative threshold below which an off-support basis vector carries
+/// no recoverable mass (its squared norm is cancellation noise) and is
+/// dropped from the tail.
+const TAIL_REL_TOL: f64 = 1e-24;
+
+/// Orthonormalized basis of span{wʳ_off, tilt_off} — `k ≤ 2` tail
+/// coordinates appended to the m support coordinates.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OffSupportTail {
+    /// number of tail coordinates (0, 1 or 2)
+    pub k: usize,
+    /// wʳ_off in the q-basis
+    pub wr: [f64; 2],
+    /// tilt_off in the q-basis
+    pub tilt: [f64; 2],
+    /// q1 points along wʳ_off when true, along tilt_off when false
+    pub on_w: bool,
+    /// ‖wʳ_off‖ (q1 scale when `on_w`)
+    pub nu: f64,
+    /// tilt_off·q1 (when `on_w`)
+    pub c: f64,
+    /// ‖tilt_off − c·q1‖ when `on_w` (q2 scale); ‖tilt_off‖ otherwise
+    pub rv: f64,
+}
+
+impl OffSupportTail {
+    fn build(
+        lam: f64,
+        dots: &GlobalDots,
+        wr_c: &[f64],
+        g_c: &[f64],
+    ) -> OffSupportTail {
+        // off-support dots by subtraction (clamped: cancellation can
+        // push a true zero slightly negative)
+        let suu = (dots.ww - dense::norm_sq(wr_c)).max(0.0);
+        let sug = dots.wg - dense::dot(wr_c, g_c);
+        let sgg = (dots.gg - dense::norm_sq(g_c)).max(0.0);
+        // u = wʳ_off, v = tilt_off = (gʳ − λwʳ)_off
+        let suv = sug - lam * suu;
+        let svv = (sgg - 2.0 * lam * sug + lam * lam * suu).max(0.0);
+        let mut t = OffSupportTail::default();
+        if suu > TAIL_REL_TOL * (dots.ww + f64::MIN_POSITIVE) {
+            t.on_w = true;
+            t.nu = suu.sqrt();
+            // Cauchy–Schwarz clamp |v·q1| ≤ ‖v‖: keeps a noise-level nu
+            // from amplifying suv into a phantom tilt
+            let vmax = svv.sqrt();
+            t.c = (suv / t.nu).clamp(-vmax, vmax);
+            let r2 = (svv - t.c * t.c).max(0.0);
+            t.wr = [t.nu, 0.0];
+            if r2 > TAIL_REL_TOL * (svv + f64::MIN_POSITIVE) {
+                t.k = 2;
+                t.rv = r2.sqrt();
+                t.tilt = [t.c, t.rv];
+            } else {
+                t.k = 1;
+                t.tilt = [t.c, 0.0];
+            }
+        } else {
+            let vscale = dots.gg + lam * lam * dots.ww;
+            if svv > TAIL_REL_TOL * (vscale + f64::MIN_POSITIVE) {
+                t.k = 1;
+                t.on_w = false;
+                t.rv = svv.sqrt();
+                t.tilt = [t.rv, 0.0];
+            }
+        }
+        t
+    }
+
+    /// Tail-coordinate deltas → coefficients on (wʳ_off, tilt_off):
+    /// d_off = a_u·wʳ_off + a_v·tilt_off.
+    fn delta_coeffs(&self, d0: f64, d1: f64) -> (f64, f64) {
+        match (self.k, self.on_w) {
+            (0, _) => (0.0, 0.0),
+            (1, true) => (d0 / self.nu, 0.0),
+            (1, false) => (0.0, d0 / self.rv),
+            _ => (
+                d0 / self.nu - d1 * self.c / (self.nu * self.rv),
+                d1 / self.rv,
+            ),
+        }
+    }
+}
+
+/// f̂_p in compact coordinates: m support values followed by the k tail
+/// coordinates. Implements [`Objective`] (dimension m + k), so every
+/// optimizer in `opt` runs on it unchanged; the tail coordinates carry
+/// only the quadratic + linear terms (no data row touches them).
+pub struct CompactApprox<'a> {
+    /// shard matrix with local column ids 0..m
+    pub x: &'a Csr,
+    pub y: &'a [f64],
+    pub loss: LossKind,
+    pub lam: f64,
+    /// support coordinate count (x.n_cols)
+    pub m: usize,
+    /// start point wʳ in compact coordinates (length m + k)
+    pub w_r: Vec<f64>,
+    /// tilt in compact coordinates (length m + k)
+    pub tilt: Vec<f64>,
+    pub tail: OffSupportTail,
+}
+
+impl<'a> CompactApprox<'a> {
+    /// Build node p's compact view of f̂_p at (wʳ, gʳ). `wr_c` and
+    /// `g_c` are the support gathers of wʳ and gʳ, `grad_lp` the
+    /// support-aligned ∇L_p(wʳ), `dots` the master's shared global dot
+    /// products. All inputs are O(m); nothing here touches d.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        xl: &'a Csr,
+        y: &'a [f64],
+        loss: LossKind,
+        lam: f64,
+        dots: &GlobalDots,
+        wr_c: &[f64],
+        g_c: &[f64],
+        grad_lp: &[f64],
+    ) -> CompactApprox<'a> {
+        let m = xl.n_cols;
+        debug_assert_eq!(wr_c.len(), m);
+        debug_assert_eq!(g_c.len(), m);
+        debug_assert_eq!(grad_lp.len(), m);
+        let tail = OffSupportTail::build(lam, dots, wr_c, g_c);
+        let k = tail.k;
+        let mut w_r = Vec::with_capacity(m + k);
+        w_r.extend_from_slice(wr_c);
+        w_r.extend_from_slice(&tail.wr[..k]);
+        let mut tilt = Vec::with_capacity(m + k);
+        for l in 0..m {
+            tilt.push(g_c[l] - lam * wr_c[l] - grad_lp[l]);
+        }
+        tilt.extend_from_slice(&tail.tilt[..k]);
+        CompactApprox { x: xl, y, loss, lam, m, w_r, tilt, tail }
+    }
+
+    /// Off-support part of a solve result as (a_w, a_g) coefficients on
+    /// the global (wʳ, gʳ): d_off = a_w·wʳ_off + a_g·gʳ_off.
+    pub fn off_support_coeffs(&self, w_p: &[f64]) -> (f64, f64) {
+        let k = self.tail.k;
+        let d0 = if k >= 1 { w_p[self.m] - self.w_r[self.m] } else { 0.0 };
+        let d1 = if k >= 2 {
+            w_p[self.m + 1] - self.w_r[self.m + 1]
+        } else {
+            0.0
+        };
+        let (a_u, a_v) = self.tail.delta_coeffs(d0, d1);
+        // tilt_off = (gʳ − λwʳ)_off folds v's coefficient into both
+        (a_u - self.lam * a_v, a_v)
+    }
+}
+
+impl<'a> Objective for CompactApprox<'a> {
+    fn dim(&self) -> usize {
+        self.m + self.tail.k
+    }
+
+    // the exact same tilted kernels as the full-space LocalApprox —
+    // compact vs full differ only in the coordinate space, never in
+    // the math (tests/compact.rs holds the two to ε)
+
+    fn value(&self, w: &[f64]) -> f64 {
+        tilted_value(
+            self.x, self.y, self.loss, self.lam, &self.tilt, &self.w_r, w,
+        )
+    }
+
+    fn grad(&self, w: &[f64], out: &mut [f64]) {
+        tilted_grad(self.x, self.y, self.loss, self.lam, &self.tilt, w, out);
+    }
+
+    fn hess_vec(&self, w: &[f64], v: &[f64], out: &mut [f64]) {
+        regularized_hess_vec(self.x, self.y, self.loss, self.lam, w, v, out);
+    }
+}
+
+impl<'a> TiltedShard for CompactApprox<'a> {
+    fn shard_x(&self) -> &Csr {
+        self.x
+    }
+    fn shard_y(&self) -> &[f64] {
+        self.y
+    }
+    fn loss_kind(&self) -> LossKind {
+        self.loss
+    }
+    fn l2(&self) -> f64 {
+        self.lam
+    }
+    fn tilt_coeffs(&self) -> &[f64] {
+        &self.tilt
+    }
+}
+
+/// A node's local-solve outcome in hybrid affine + sparse form:
+/// d_p = a_w·wʳ + a_g·gʳ + corr, with corr supported on the shard's
+/// columns. Every node holds wʳ and gʳ after the gradient allreduce, so
+/// the direction round's wire payload is corr plus two scalars — the
+/// step-7 combination happens on coefficients and a sparse reduce.
+#[derive(Clone, Debug)]
+pub struct HybridDir {
+    pub a_w: f64,
+    pub a_g: f64,
+    pub corr: SparseVec,
+}
+
+impl HybridDir {
+    /// The safeguard's replacement direction −gʳ.
+    pub fn neg_gradient(dim: usize) -> HybridDir {
+        HybridDir { a_w: 0.0, a_g: -1.0, corr: SparseVec::new(dim) }
+    }
+
+    /// Package a compact solve result (support deviations minus the
+    /// affine part; tail deltas already folded into the coefficients).
+    pub fn from_compact(
+        map: &SupportMap,
+        dim: usize,
+        a_w: f64,
+        a_g: f64,
+        w_p: &[f64],
+        wr_c: &[f64],
+        g_c: &[f64],
+    ) -> HybridDir {
+        let m = map.len();
+        debug_assert!(w_p.len() >= m && wr_c.len() >= m && g_c.len() >= m);
+        let vals: Vec<f64> = (0..m)
+            .map(|l| (w_p[l] - wr_c[l]) - a_w * wr_c[l] - a_g * g_c[l])
+            .collect();
+        HybridDir {
+            a_w,
+            a_g,
+            corr: SparseVec::from_support(dim, &map.support, &vals),
+        }
+    }
+
+    /// d_p·gʳ from the shared scalars plus one O(nnz) sparse dot.
+    pub fn dot_g(&self, dots: &GlobalDots, g: &[f64]) -> f64 {
+        self.a_w * dots.wg + self.a_g * dots.gg + self.corr.dot_dense(g)
+    }
+
+    /// ‖d_p‖² from the shared scalars plus O(nnz) sparse dots.
+    pub fn norm_sq(&self, dots: &GlobalDots, w: &[f64], g: &[f64]) -> f64 {
+        let affine = self.a_w * self.a_w * dots.ww
+            + self.a_g * self.a_g * dots.gg
+            + 2.0 * self.a_w * self.a_g * dots.wg;
+        let cross = 2.0
+            * (self.a_w * self.corr.dot_dense(w)
+                + self.a_g * self.corr.dot_dense(g));
+        (affine + cross + self.corr.norm_sq()).max(0.0)
+    }
+
+    /// Materialize the full-space direction (tests, dense wire path).
+    pub fn to_dense(&self, w: &[f64], g: &[f64]) -> Vec<f64> {
+        let mut d: Vec<f64> = w
+            .iter()
+            .zip(g)
+            .map(|(wj, gj)| self.a_w * wj + self.a_g * gj)
+            .collect();
+        self.corr.axpy_into(1.0, &mut d);
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+    use crate::objective::{shard_loss_grad, LocalApprox};
+    use crate::util::rng::Rng;
+
+    /// Build matched full-space and compact views of the same f̂_p.
+    fn matched_views(
+        seed: u64,
+        lam: f64,
+    ) -> (crate::data::dataset::Dataset, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let d = SynthConfig {
+            n_examples: 50,
+            n_features: 40,
+            nnz_per_example: 5,
+            ..SynthConfig::default()
+        }
+        .generate(seed);
+        let dim = d.n_features();
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let w_r: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.3).collect();
+        let g_r: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let mut grad_lp = vec![0.0; dim];
+        shard_loss_grad(
+            &d.x, &d.y, &w_r, LossKind::Logistic, &mut grad_lp, None,
+        );
+        let _ = lam;
+        (d, w_r, g_r, grad_lp)
+    }
+
+    #[test]
+    fn compact_gradient_matches_full_space_at_wr() {
+        // ∇f̂_p(wʳ) = gʳ in both views: the compact gradient at the
+        // compact start must have exactly ‖gʳ‖ mass, split between the
+        // support gather of gʳ and the tail coordinates of gʳ_off.
+        for seed in [1u64, 2, 3] {
+            let lam = 0.4;
+            let (d, w_r, g_r, grad_lp) = matched_views(seed, lam);
+            let (map, xl) = SupportMap::compact(&d.x);
+            let mut wr_c = Vec::new();
+            let mut g_c = Vec::new();
+            map.gather(&w_r, &mut wr_c);
+            map.gather(&g_r, &mut g_c);
+            let mut glp_c = Vec::new();
+            map.gather(&grad_lp, &mut glp_c);
+            let dots = GlobalDots::compute(&w_r, &g_r);
+            let ca = CompactApprox::build(
+                &xl, &d.y, LossKind::Logistic, lam, &dots, &wr_c, &g_c,
+                &glp_c,
+            );
+            let mut gc = vec![0.0; ca.dim()];
+            ca.grad(&ca.w_r.clone(), &mut gc);
+            // support part equals the gathered gʳ
+            for l in 0..ca.m {
+                assert!(
+                    (gc[l] - g_c[l]).abs() < 1e-10,
+                    "seed {seed} support coord {l}"
+                );
+            }
+            // total mass equals ‖gʳ‖²
+            let full = dense::norm_sq(&g_r);
+            let got = dense::norm_sq(&gc);
+            assert!(
+                (full - got).abs() < 1e-8 * (1.0 + full),
+                "seed {seed}: ‖g‖² {full} vs compact {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn compact_value_matches_full_space_along_tilt_moves() {
+        // move the tail coordinates and check the value agrees with the
+        // corresponding full-space move via the hybrid reconstruction
+        let lam = 0.7;
+        let (d, w_r, g_r, grad_lp) = matched_views(7, lam);
+        let full = LocalApprox::new(
+            &d.x, &d.y, LossKind::Logistic, lam, &w_r, &g_r, &grad_lp,
+        );
+        let (map, xl) = SupportMap::compact(&d.x);
+        let (mut wr_c, mut g_c, mut glp_c) =
+            (Vec::new(), Vec::new(), Vec::new());
+        map.gather(&w_r, &mut wr_c);
+        map.gather(&g_r, &mut g_c);
+        map.gather(&grad_lp, &mut glp_c);
+        let dots = GlobalDots::compute(&w_r, &g_r);
+        let ca = CompactApprox::build(
+            &xl, &d.y, LossKind::Logistic, lam, &dots, &wr_c, &g_c, &glp_c,
+        );
+        // a deterministic compact move: shift every coordinate
+        let mut wp = ca.w_r.clone();
+        for (j, v) in wp.iter_mut().enumerate() {
+            *v += 0.01 * ((j % 5) as f64 - 2.0);
+        }
+        let (a_w, a_g) = ca.off_support_coeffs(&wp);
+        let hd = HybridDir::from_compact(
+            &map, d.n_features(), a_w, a_g, &wp, &wr_c, &g_c,
+        );
+        let w_full = {
+            let mut w = w_r.clone();
+            dense::axpy(1.0, &hd.to_dense(&w_r, &g_r), &mut w);
+            w
+        };
+        let v_full = full.value(&w_full);
+        let v_compact = ca.value(&wp);
+        assert!(
+            (v_full - v_compact).abs() < 1e-7 * (1.0 + v_full.abs()),
+            "{v_full} vs {v_compact}"
+        );
+        // hybrid scalar algebra matches the dense reconstruction
+        let dd = hd.to_dense(&w_r, &g_r);
+        assert!(
+            (hd.dot_g(&dots, &g_r) - dense::dot(&dd, &g_r)).abs()
+                < 1e-9 * (1.0 + dense::norm(&dd) * dense::norm(&g_r)),
+        );
+        assert!(
+            (hd.norm_sq(&dots, &w_r, &g_r) - dense::norm_sq(&dd)).abs()
+                < 1e-9 * (1.0 + dense::norm_sq(&dd)),
+        );
+    }
+
+    #[test]
+    fn zero_start_has_tilt_only_tail() {
+        // first outer iteration: w = 0 ⇒ the tail is 1-dimensional
+        let (d, _, g_r, grad_lp) = matched_views(11, 0.3);
+        let w0 = vec![0.0; d.n_features()];
+        let (map, xl) = SupportMap::compact(&d.x);
+        let (mut wr_c, mut g_c, mut glp_c) =
+            (Vec::new(), Vec::new(), Vec::new());
+        map.gather(&w0, &mut wr_c);
+        map.gather(&g_r, &mut g_c);
+        map.gather(&grad_lp, &mut glp_c);
+        let dots = GlobalDots::compute(&w0, &g_r);
+        let ca = CompactApprox::build(
+            &xl, &d.y, LossKind::Logistic, 0.3, &dots, &wr_c, &g_c, &glp_c,
+        );
+        assert!(ca.tail.k <= 1, "tail k = {}", ca.tail.k);
+        assert!(!ca.tail.on_w || ca.tail.k == 0);
+    }
+}

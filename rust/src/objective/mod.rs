@@ -4,6 +4,10 @@
 //! `f(w) = (λ/2)‖w‖² + Σ_i l(w·x_i, y_i)` — note the paper uses the
 //! *sum* of losses, not the mean; λ is scaled accordingly by callers.
 
+pub mod compact;
+
+pub use compact::{CompactApprox, GlobalDots};
+
 use crate::linalg::sparse::{SparseVec, SupportMap};
 use crate::linalg::{dense, Csr};
 use crate::loss::LossKind;
@@ -25,6 +29,22 @@ pub trait Objective {
     fn hess_vec(&self, _w: &[f64], _v: &[f64], _out: &mut [f64]) {
         unimplemented!("Hessian-vector product not provided")
     }
+}
+
+/// The structural shape the stochastic inner solvers exploit:
+/// f(w) = (λ/2)‖w‖² + Σᵢ l(xᵢ·w, yᵢ) + tilt·(w − const). Coordinates
+/// `x().n_cols..dim()` (a compact tail, if any) carry only the
+/// quadratic + linear terms — no data rows touch them, which is
+/// exactly what the solvers' lazy dense-affine bookkeeping assumes.
+/// Implemented by the full-space [`LocalApprox`] and the
+/// support-compact [`CompactApprox`].
+pub trait TiltedShard: Objective {
+    fn shard_x(&self) -> &Csr;
+    fn shard_y(&self) -> &[f64];
+    fn loss_kind(&self) -> LossKind;
+    fn l2(&self) -> f64;
+    /// linear tilt coefficients, length == `dim()`
+    fn tilt_coeffs(&self) -> &[f64];
 }
 
 /// Shard-level loss pass: returns Σ l_i and accumulates Xᵀ l' into
@@ -64,73 +84,165 @@ pub fn shard_loss_grad(
     val
 }
 
-/// Sparse shard-level loss pass: like [`shard_loss_grad`] but the
-/// gradient is accumulated over the shard's column support only
-/// (O(|support|) memory instead of O(d)) and returned as index/value
-/// pairs ready for the sparse tree reduction. The λ term is NOT
-/// included — the master applies it lazily after the merge, which is
-/// exact because λw is common to every node.
+/// Compact shard-level loss pass over a *local-column* CSR: the
+/// gradient is accumulated into the support-aligned `vals` buffer
+/// (resized to `xl.n_cols`, O(|support|) memory instead of O(d)).
+/// `w_c` is the support-gathered iterate (`w_c.len() ≥ xl.n_cols`; a
+/// longer compact-tail vector is fine — the rows never index past the
+/// support). The λ term is NOT included — the master applies it lazily
+/// after the merge, which is exact because λw is common to every node.
 ///
 /// Accumulation visits rows (and entries within a row) in the same
-/// order as the dense pass, so the two agree coordinate-for-coordinate,
-/// not just to rounding tolerance.
-pub fn shard_loss_grad_sparse(
-    x: &Csr,
+/// order as the global dense pass, so the two agree
+/// coordinate-for-coordinate, not just to rounding tolerance.
+pub fn shard_loss_grad_compact(
+    xl: &Csr,
     y: &[f64],
-    w: &[f64],
+    w_c: &[f64],
     loss: LossKind,
-    map: &SupportMap,
+    vals: &mut Vec<f64>,
     margins_out: Option<&mut Vec<f64>>,
-) -> (f64, SparseVec) {
-    debug_assert_eq!(x.n_rows(), y.len());
+) -> f64 {
+    debug_assert_eq!(xl.n_rows(), y.len());
     match margins_out {
         Some(z) => {
-            z.resize(x.n_rows(), 0.0);
-            sparse_loss_pass(x, y, loss, map, |i| {
-                let zi = x.row_dot(i, w);
+            z.resize(xl.n_rows(), 0.0);
+            compact_loss_pass(xl, y, loss, vals, |i| {
+                let zi = xl.row_dot(i, w_c);
                 z[i] = zi;
                 zi
             })
         }
-        None => sparse_loss_pass(x, y, loss, map, |i| x.row_dot(i, w)),
+        None => compact_loss_pass(xl, y, loss, vals, |i| xl.row_dot(i, w_c)),
     }
 }
 
-/// Cached-margin variant of [`shard_loss_grad_sparse`] (FS keeps
+/// Cached-margin variant of [`shard_loss_grad_compact`] (FS keeps
 /// zᵢ = w·xᵢ node-local across outer iterations): one data pass, no
-/// X·w matvec.
+/// X·w matvec, and no need for the gathered iterate at all.
+pub fn shard_loss_grad_compact_cached(
+    xl: &Csr,
+    y: &[f64],
+    z: &[f64],
+    loss: LossKind,
+    vals: &mut Vec<f64>,
+) -> f64 {
+    debug_assert_eq!(xl.n_rows(), z.len());
+    compact_loss_pass(xl, y, loss, vals, |i| z[i])
+}
+
+/// [`shard_loss_grad_compact`] packaged for the wire: returns the
+/// support-aligned gradient as a global-index [`SparseVec`] (every
+/// support coordinate carried, zeros included, so `val` stays aligned
+/// with the shard support at the receiver).
+pub fn shard_loss_grad_sparse(
+    xl: &Csr,
+    y: &[f64],
+    w_c: &[f64],
+    loss: LossKind,
+    map: &SupportMap,
+    dim: usize,
+    margins_out: Option<&mut Vec<f64>>,
+) -> (f64, SparseVec) {
+    let mut vals = Vec::new();
+    let v = shard_loss_grad_compact(xl, y, w_c, loss, &mut vals, margins_out);
+    (v, map.to_sparse_aligned(dim, &vals))
+}
+
+/// Cached-margin variant of [`shard_loss_grad_sparse`].
 pub fn shard_loss_grad_sparse_cached(
-    x: &Csr,
+    xl: &Csr,
     y: &[f64],
     z: &[f64],
     loss: LossKind,
     map: &SupportMap,
+    dim: usize,
 ) -> (f64, SparseVec) {
-    debug_assert_eq!(x.n_rows(), z.len());
-    sparse_loss_pass(x, y, loss, map, |i| z[i])
+    let mut vals = Vec::new();
+    let v = shard_loss_grad_compact_cached(xl, y, z, loss, &mut vals);
+    (v, map.to_sparse_aligned(dim, &vals))
 }
 
-/// The shared sparse loss sweep: rows in order, margin supplied by the
+/// The shared compact loss sweep: rows in order, margin supplied by the
 /// caller (computed, computed-and-recorded, or cached), gradient
-/// accumulated over the support coordinates.
-fn sparse_loss_pass(
-    x: &Csr,
+/// accumulated over the local columns.
+fn compact_loss_pass(
+    xl: &Csr,
     y: &[f64],
     loss: LossKind,
-    map: &SupportMap,
+    vals: &mut Vec<f64>,
     mut margin_of: impl FnMut(usize) -> f64,
-) -> (f64, SparseVec) {
-    let mut vals = vec![0.0; map.support.len()];
+) -> f64 {
+    vals.clear();
+    vals.resize(xl.n_cols, 0.0);
     let mut val = 0.0;
-    for i in 0..x.n_rows() {
+    for i in 0..xl.n_rows() {
         let zi = margin_of(i);
         val += loss.value(zi, y[i]);
         let r = loss.deriv(zi, y[i]);
         if r != 0.0 {
-            map.add_row_scaled(x, i, r, &mut vals);
+            xl.add_row_scaled(i, r, vals);
         }
     }
-    (val, SparseVec::from_support(x.n_cols, &map.support, &vals))
+    val
+}
+
+/// Shared tilted-objective kernels — ONE implementation of the
+/// value/gradient/Hessian-vector math of
+/// f(w) = (λ/2)‖w‖² + Σᵢ l(xᵢ·w, yᵢ) + tilt·(w − wʳ), used by both the
+/// full-space [`LocalApprox`] and the support-compact
+/// [`CompactApprox`] so the two views can never drift apart.
+pub(crate) fn tilted_value(
+    x: &Csr,
+    y: &[f64],
+    loss: LossKind,
+    lam: f64,
+    tilt: &[f64],
+    w_r: &[f64],
+    w: &[f64],
+) -> f64 {
+    let mut v = 0.5 * lam * dense::norm_sq(w);
+    for i in 0..x.n_rows() {
+        v += loss.value(x.row_dot(i, w), y[i]);
+    }
+    v + dense::dot(tilt, w) - dense::dot(tilt, w_r)
+}
+
+pub(crate) fn tilted_grad(
+    x: &Csr,
+    y: &[f64],
+    loss: LossKind,
+    lam: f64,
+    tilt: &[f64],
+    w: &[f64],
+    out: &mut [f64],
+) {
+    out.copy_from_slice(tilt);
+    shard_loss_grad(x, y, w, loss, out, None);
+    dense::axpy(lam, w, out);
+}
+
+/// H·v = λv + Xᵀ D X v, D_ii = l''(zᵢ, yᵢ) — the tilt is linear, so
+/// tilted and untilted objectives share this Hessian.
+pub(crate) fn regularized_hess_vec(
+    x: &Csr,
+    y: &[f64],
+    loss: LossKind,
+    lam: f64,
+    w: &[f64],
+    v: &[f64],
+    out: &mut [f64],
+) {
+    out.iter_mut().for_each(|g| *g = 0.0);
+    for i in 0..x.n_rows() {
+        let zi = x.row_dot(i, w);
+        let dii = loss.second_deriv(zi, y[i]);
+        if dii != 0.0 {
+            let xv = x.row_dot(i, v);
+            x.add_row_scaled(i, dii * xv, out);
+        }
+    }
+    dense::axpy(lam, v, out);
 }
 
 /// The full regularized risk over one dataset (single-machine view and
@@ -170,16 +282,7 @@ impl<'a> Objective for RegularizedLoss<'a> {
 
     /// H·v = λv + Xᵀ D X v, D_ii = l''(zᵢ, yᵢ)
     fn hess_vec(&self, w: &[f64], v: &[f64], out: &mut [f64]) {
-        out.iter_mut().for_each(|g| *g = 0.0);
-        for i in 0..self.x.n_rows() {
-            let zi = self.x.row_dot(i, w);
-            let dii = self.loss.second_deriv(zi, self.y[i]);
-            if dii != 0.0 {
-                let xv = self.x.row_dot(i, v);
-                self.x.add_row_scaled(i, dii * xv, out);
-            }
-        }
-        dense::axpy(self.lam, v, out);
+        regularized_hess_vec(self.x, self.y, self.loss, self.lam, w, v, out);
     }
 }
 
@@ -239,24 +342,36 @@ impl<'a> Objective for LocalApprox<'a> {
     }
 
     fn value(&self, w: &[f64]) -> f64 {
-        let mut v = 0.5 * self.lam * dense::norm_sq(w);
-        for i in 0..self.x.n_rows() {
-            v += self.loss.value(self.x.row_dot(i, w), self.y[i]);
-        }
-        // tilt·(w − wʳ)
-        v + dense::dot(&self.tilt, w) - dense::dot(&self.tilt, &self.w_r)
+        tilted_value(
+            self.x, self.y, self.loss, self.lam, &self.tilt, &self.w_r, w,
+        )
     }
 
     fn grad(&self, w: &[f64], out: &mut [f64]) {
-        out.copy_from_slice(&self.tilt);
-        shard_loss_grad(self.x, self.y, w, self.loss, out, None);
-        dense::axpy(self.lam, w, out);
+        tilted_grad(self.x, self.y, self.loss, self.lam, &self.tilt, w, out);
     }
 
     fn hess_vec(&self, w: &[f64], v: &[f64], out: &mut [f64]) {
         // the tilt is linear — same Hessian as the untilted local risk
-        RegularizedLoss { x: self.x, y: self.y, loss: self.loss, lam: self.lam }
-            .hess_vec(w, v, out)
+        regularized_hess_vec(self.x, self.y, self.loss, self.lam, w, v, out);
+    }
+}
+
+impl<'a> TiltedShard for LocalApprox<'a> {
+    fn shard_x(&self) -> &Csr {
+        self.x
+    }
+    fn shard_y(&self) -> &[f64] {
+        self.y
+    }
+    fn loss_kind(&self) -> LossKind {
+        self.loss
+    }
+    fn l2(&self) -> f64 {
+        self.lam
+    }
+    fn tilt_coeffs(&self) -> &[f64] {
+        &self.tilt
     }
 }
 
@@ -399,7 +514,9 @@ mod tests {
     #[test]
     fn sparse_shard_grad_matches_dense_exactly() {
         let (d, w) = tiny_problem();
-        let map = crate::linalg::SupportMap::build(&d.x);
+        let (map, xl) = crate::linalg::SupportMap::compact(&d.x);
+        let mut w_c = Vec::new();
+        map.gather(&w, &mut w_c);
         for loss in ALL_LOSSES {
             let mut g_dense = vec![0.0; 12];
             let mut z_dense = Vec::new();
@@ -408,14 +525,14 @@ mod tests {
             );
             let mut z_sparse = Vec::new();
             let (v_sparse, g_sparse) = shard_loss_grad_sparse(
-                &d.x, &d.y, &w, loss, &map, Some(&mut z_sparse),
+                &xl, &d.y, &w_c, loss, &map, 12, Some(&mut z_sparse),
             );
             assert_eq!(v_dense, v_sparse, "{loss:?}");
             assert_eq!(g_dense, g_sparse.to_dense(), "{loss:?}");
             assert_eq!(z_dense, z_sparse, "{loss:?}");
             // cached variant agrees given the same margins
             let (v_cached, g_cached) = shard_loss_grad_sparse_cached(
-                &d.x, &d.y, &z_dense, loss, &map,
+                &xl, &d.y, &z_dense, loss, &map, 12,
             );
             assert_eq!(v_dense, v_cached, "{loss:?}");
             assert_eq!(g_sparse, g_cached, "{loss:?}");

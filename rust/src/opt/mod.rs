@@ -1,7 +1,12 @@
 //! Optimizers.
 //!
-//! Inner solvers for Algorithm 1 step 5 (per-node, on f̂_p):
+//! Inner solvers for Algorithm 1 step 5 (per-node, on f̂_p — generic
+//! over `objective::TiltedShard`, so they run identically on the
+//! full-space `LocalApprox` and the support-compact `CompactApprox`;
+//! the stochastic ones take reusable scratch working sets from the
+//! cluster's per-node pool):
 //! - [`svrg`] — the paper's choice [3]: strongly convergent SGD.
+//! - [`sag`] — the other strongly-convergent option Theorem 2 covers.
 //! - [`sgd`] — plain Bottou SGD (used by Hybrid/ParamMix init).
 //!
 //! Core batch optimizers (the SQM baseline and inner-solver swaps):

@@ -20,7 +20,7 @@
 //! Memory: one scalar per example (the margin-derivative r_i), since
 //! ∇l_i = r_i·x_i — the standard linear-model compression of SAG.
 
-use crate::objective::LocalApprox;
+use crate::objective::TiltedShard;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -37,26 +37,52 @@ impl Default for SagParams {
     }
 }
 
+/// Reusable SAG working set (cluster scratch pool): O(n_p) example
+/// memory plus O(dim) gradient-sum buffer in the solve space.
+#[derive(Clone, Debug, Default)]
+pub struct SagScratch {
+    r_mem: Vec<f64>,
+    s_sum: Vec<f64>,
+    seen: Vec<bool>,
+}
+
 /// Run SAG epochs on f̂_p from `w0`. Returns the output point.
 ///
 /// Implementation note: the dense part of the step,
 /// w ← w − η(S + λw + tilt) with S = Σ_j y_j, is NOT affine-constant
 /// across steps (S itself changes every step), so the SVRG-style lazy
 /// fast-forward does not apply directly. For clarity and correctness we
-/// apply the dense O(d) update per step, making an epoch O(n·d): SAG
-/// here is the *ablation* inner solver (small-d studies); SVRG stays
-/// the production choice (see the inner_solver bench).
-pub fn sag_epochs(
-    approx: &LocalApprox,
+/// apply the dense O(dim) update per step, making an epoch O(n·dim):
+/// SAG here is the *ablation* inner solver; SVRG stays the production
+/// choice (see the inner_solver bench). On the support-compact path
+/// dim = |support| + tail, which is what makes even this dense-per-step
+/// sweep affordable on high-d shards.
+pub fn sag_epochs<O: TiltedShard>(
+    approx: &O,
     w0: &[f64],
     params: &SagParams,
 ) -> Vec<f64> {
-    let x = approx.x;
+    sag_epochs_with(approx, w0, params, &mut SagScratch::default())
+}
+
+/// [`sag_epochs`] with an explicit reusable working set.
+pub fn sag_epochs_with<O: TiltedShard>(
+    approx: &O,
+    w0: &[f64],
+    params: &SagParams,
+    scratch: &mut SagScratch,
+) -> Vec<f64> {
+    let x = approx.shard_x();
     let n = x.n_rows();
-    let d = x.n_cols;
+    let d = approx.dim();
+    debug_assert_eq!(w0.len(), d);
     if n == 0 || params.epochs == 0 {
         return w0.to_vec();
     }
+    let lam = approx.l2();
+    let loss = approx.loss_kind();
+    let y = approx.shard_y();
+    let tilt = approx.tilt_coeffs();
     let lr = params.lr.unwrap_or_else(|| {
         // SAG's 1/(16·L_max) is stated for the AVERAGE-form objective;
         // the paper's objective is the SUM form (n× the average), so
@@ -66,26 +92,30 @@ pub fn sag_epochs(
             .into_iter()
             .fold(0.0f64, f64::max)
             .max(f64::MIN_POSITIVE)
-            * approx.loss.dd_max();
-        1.0 / (16.0 * lmax * n as f64).max(approx.lam * 2.0)
+            * loss.dd_max();
+        1.0 / (16.0 * lmax * n as f64).max(lam * 2.0)
     });
     let mut rng = Rng::new(params.seed);
     let mut w = w0.to_vec();
     // r_mem[i] = stored margin-derivative of example i; S = Σ r_i·x_i
-    let mut r_mem = vec![0.0f64; n];
-    let mut s_sum = vec![0.0f64; d];
-    let mut seen = vec![false; n];
+    let SagScratch { r_mem, s_sum, seen } = scratch;
+    r_mem.clear();
+    r_mem.resize(n, 0.0);
+    s_sum.clear();
+    s_sum.resize(d, 0.0);
+    seen.clear();
+    seen.resize(n, false);
     let mut n_seen = 0usize;
 
     for _ in 0..params.epochs {
         for _ in 0..n {
             let i = rng.below(n);
             let zi = x.row_dot(i, &w);
-            let r_new = approx.loss.deriv(zi, approx.y[i]);
+            let r_new = loss.deriv(zi, y[i]);
             // S += (r_new − r_old)·x_i  (sparse)
             let delta = r_new - r_mem[i];
             if delta != 0.0 {
-                x.add_row_scaled(i, delta, &mut s_sum);
+                x.add_row_scaled(i, delta, s_sum);
             }
             r_mem[i] = r_new;
             if !seen[i] {
@@ -96,10 +126,7 @@ pub fn sag_epochs(
             // SAG's practical variant does (n/n_seen correction)
             let scale = n as f64 / n_seen as f64;
             for j in 0..d {
-                w[j] -= lr
-                    * (scale * s_sum[j]
-                        + approx.lam * w[j]
-                        + approx.tilt[j]);
+                w[j] -= lr * (scale * s_sum[j] + lam * w[j] + tilt[j]);
             }
         }
     }
@@ -112,7 +139,7 @@ mod tests {
     use crate::data::synth::SynthConfig;
     use crate::linalg::dense;
     use crate::loss::LossKind;
-    use crate::objective::{shard_loss_grad, Objective};
+    use crate::objective::{shard_loss_grad, LocalApprox, Objective};
     use crate::opt::tron::{self, TronParams};
 
     fn approx_for<'a>(

@@ -73,12 +73,30 @@ pub fn sgd_epochs(
     w0: &[f64],
     params: &SgdParams,
 ) -> Vec<f64> {
+    sgd_epochs_shrink(x, y, loss, lam, w0, params).0
+}
+
+/// [`sgd_epochs`] that also reports the total L2 shrink Π_t(1 − η_tλ).
+/// On a support-compact shard this is the whole off-support story: a
+/// coordinate no row touches only ever shrinks, so
+/// w_off_final = shrink·w_off — the scalar the hybrid direction
+/// aggregation needs to reconstruct the full-space SGD result from a
+/// |support|-sized solve.
+pub fn sgd_epochs_shrink(
+    x: &Csr,
+    y: &[f64],
+    loss: LossKind,
+    lam: f64,
+    w0: &[f64],
+    params: &SgdParams,
+) -> (Vec<f64>, f64) {
     let n = x.n_rows();
     if n == 0 {
-        return w0.to_vec();
+        return (w0.to_vec(), 1.0);
     }
     let mut rng = Rng::new(params.seed);
     let mut w = ScaledVec::new(w0);
+    let mut shrink_total = 1.0f64;
     let mut t = 0u64;
     for _ in 0..params.epochs {
         let order = rng.permutation(n);
@@ -91,14 +109,16 @@ pub fn sgd_epochs(
             // uses λ directly)
             let z = w.dot_row(x, i);
             let r = loss.deriv(z, y[i]);
-            w.shrink(1.0 - eta * lam);
+            let factor = 1.0 - eta * lam;
+            w.shrink(factor);
+            shrink_total *= factor;
             if r != 0.0 {
                 w.add_row(x, i, -eta * r);
             }
             t += 1;
         }
     }
-    w.materialize()
+    (w.materialize(), shrink_total)
 }
 
 #[cfg(test)]

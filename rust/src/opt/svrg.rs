@@ -14,7 +14,7 @@
 //! an O(nnz_B) sparse part, so epoch cost is (n/b)·O(d) + O(nnz_p).
 
 use crate::linalg::{dense, Csr};
-use crate::objective::{LocalApprox, Objective};
+use crate::objective::{Objective, TiltedShard};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -46,6 +46,9 @@ pub struct SvrgStats {
 /// Estimate L = λ + l''_max · σ_max(XᵀX) by power iteration on XᵀX.
 /// σ_max here is the largest *eigenvalue* (sum over all rows), which is
 /// the Lipschitz constant of w ↦ ∇Σᵢ l(w·xᵢ) up to the l'' bound.
+/// On a support-compact shard matrix the iterate buffers are
+/// O(|support|); the spectrum (and hence the estimate) is identical to
+/// the global-column matrix since untouched columns contribute nothing.
 pub fn lipschitz_estimate(x: &Csr, dd_max: f64, lam: f64, iters: usize) -> f64 {
     let d = x.n_cols;
     let n = x.n_rows();
@@ -60,19 +63,38 @@ pub fn lipschitz_estimate(x: &Csr, dd_max: f64, lam: f64, iters: usize) -> f64 {
     let norm0 = dense::norm(&v);
     dense::scale(&mut v, 1.0 / norm0.max(f64::MIN_POSITIVE));
     let mut z = vec![0.0; n];
+    // §Perf: one buffer swapped across power iterations — the
+    // per-iteration `vnew` allocation sat on the solve hot path
+    let mut vnew = vec![0.0f64; d];
     let mut sigma = 0.0;
     for _ in 0..iters {
         x.matvec(&v, &mut z);
-        let mut vnew = vec![0.0; d];
+        vnew.iter_mut().for_each(|t| *t = 0.0);
         x.tmatvec(&z, &mut vnew);
         sigma = dense::norm(&vnew);
         if sigma <= f64::MIN_POSITIVE {
             break;
         }
         dense::scale(&mut vnew, 1.0 / sigma);
-        v = vnew;
+        std::mem::swap(&mut v, &mut vnew);
     }
     lam + dd_max * sigma
+}
+
+/// Reusable SVRG working set — owned per node by the cluster's scratch
+/// pool so steady-state inner solves allocate nothing. Every buffer is
+/// O(dim) of the *solve space* (|support| + tail on the compact path),
+/// never O(d_global).
+#[derive(Clone, Debug, Default)]
+pub struct SvrgScratch {
+    mu: Vec<f64>,
+    z0: Vec<f64>,
+    anchor: Vec<f64>,
+    bvec: Vec<f64>,
+    last: Vec<u32>,
+    geom: Vec<(f64, f64)>,
+    order: Vec<u32>,
+    updates: Vec<(usize, f64)>,
 }
 
 /// Run `params.epochs` SVRG epochs on f̂_p starting from `w0`
@@ -86,64 +108,91 @@ pub fn lipschitz_estimate(x: &Csr, dd_max: f64, lam: f64, iters: usize) -> f64 {
 /// has an *affine* dense part that is constant within an epoch, so
 /// coordinates untouched by the sparse term are fast-forwarded lazily:
 /// after k silent steps, w_j ← aᵏw_j + ((1 − aᵏ)/(1 − a))·b_j. Epoch
-/// cost drops from O(steps·d) to O(nnz + d) — the difference between
-/// per-example SVRG being usable at kdd2010 dimensionality or not.
-pub fn svrg_epochs(
-    approx: &LocalApprox,
+/// cost drops from O(steps·dim) to O(nnz + dim); on the support-compact
+/// path dim = |support| + tail, so the whole solve runs in the shard's
+/// own coordinate space (the compact tail coordinates are never touched
+/// by a row and ride the same lazy fast-forward).
+pub fn svrg_epochs<O: TiltedShard>(
+    approx: &O,
     w0: &[f64],
     params: &SvrgParams,
 ) -> (Vec<f64>, SvrgStats) {
-    let x = approx.x;
+    svrg_epochs_with(approx, w0, params, &mut SvrgScratch::default())
+}
+
+/// [`svrg_epochs`] with an explicit reusable working set — the cluster
+/// scratch pool hands each node its own, so steady-state outer
+/// iterations allocate only the returned iterate.
+pub fn svrg_epochs_with<O: TiltedShard>(
+    approx: &O,
+    w0: &[f64],
+    params: &SvrgParams,
+    scratch: &mut SvrgScratch,
+) -> (Vec<f64>, SvrgStats) {
+    let x = approx.shard_x();
     let n = x.n_rows();
-    let d = x.n_cols;
+    let d = approx.dim();
+    debug_assert_eq!(w0.len(), d);
     if n == 0 || params.epochs == 0 {
         return (w0.to_vec(), SvrgStats::default());
     }
+    let lam = approx.l2();
+    let loss = approx.loss_kind();
+    let y = approx.shard_y();
     let lr = params.lr.unwrap_or_else(|| {
-        1.0 / lipschitz_estimate(x, approx.loss.dd_max(), approx.lam, 12)
+        1.0 / lipschitz_estimate(x, loss.dd_max(), lam, 12)
     });
     let batch = params.batch.clamp(1, n);
     let mut rng = Rng::new(params.seed);
     let mut w = w0.to_vec();
-    let mut mu = vec![0.0; d];
-    let mut z0 = vec![0.0; n];
-    let mut anchor = vec![0.0; d];
+    let SvrgScratch { mu, z0, anchor, bvec, last, geom, order, updates } =
+        scratch;
+    mu.clear();
+    mu.resize(d, 0.0);
+    z0.clear();
+    z0.resize(n, 0.0);
+    anchor.clear();
+    anchor.resize(d, 0.0);
     // lazy bookkeeping: b_j and the step index of w_j's last update
-    let mut bvec = vec![0.0; d];
-    let mut last = vec![0u32; d];
+    bvec.clear();
+    bvec.resize(d, 0.0);
+    last.clear();
+    last.resize(d, 0u32);
     let mut stats = SvrgStats { epochs_run: 0, lr_used: lr, full_grad_passes: 0 };
+
+    let a = 1.0 - lr * lam;
+    debug_assert!(a > 0.0, "lr·λ ≥ 1: unstable epoch (lr {lr})");
+    // §Perf: precompute (aᵏ, (1−aᵏ)/(1−a)) for every possible lag —
+    // the per-nnz a.powi(lag) was the epoch's top cost (~40% of
+    // wall); a table lookup replaces it. λ=0 ⇒ a=1 ⇒ (1, k).
+    let max_steps = n / batch + 2;
+    geom.clear();
+    geom.reserve(max_steps);
+    {
+        let (mut ak, mut s) = (1.0f64, 0.0f64);
+        for _ in 0..max_steps {
+            geom.push((ak, s));
+            s += ak;
+            ak *= a;
+        }
+    }
+    let geom_at = |k: u32| -> (f64, f64) { geom[k as usize] };
 
     for _ in 0..params.epochs {
         // --- anchor pass: μ = ∇f̂_p(w) and margins z0 = X·w ---
         anchor.copy_from_slice(&w);
-        approx.grad(&anchor, &mut mu);
-        x.matvec(&anchor, &mut z0);
+        approx.grad(anchor, mu);
+        x.matvec(anchor, z0);
         stats.full_grad_passes += 1;
 
-        let a = 1.0 - lr * approx.lam;
-        debug_assert!(a > 0.0, "lr·λ ≥ 1: unstable epoch (lr {lr})");
         for j in 0..d {
-            bvec[j] = lr * (approx.lam * anchor[j] - mu[j]);
+            bvec[j] = lr * (lam * anchor[j] - mu[j]);
         }
         last.iter_mut().for_each(|t| *t = 0);
 
-        // §Perf: precompute (aᵏ, (1−aᵏ)/(1−a)) for every possible lag —
-        // the per-nnz a.powi(lag) was the epoch's top cost (~40% of
-        // wall); a table lookup replaces it. λ=0 ⇒ a=1 ⇒ (1, k).
-        let max_steps = n / batch + 2;
-        let geom_table: Vec<(f64, f64)> = {
-            let mut t = Vec::with_capacity(max_steps);
-            let (mut ak, mut s) = (1.0f64, 0.0f64);
-            for _ in 0..max_steps {
-                t.push((ak, s));
-                s += ak;
-                ak *= a;
-            }
-            t
-        };
-        let geom = |k: u32| -> (f64, f64) { geom_table[k as usize] };
-
-        let order = rng.permutation(n);
+        order.clear();
+        order.extend(0..n as u32);
+        rng.shuffle(order);
         let scale = n as f64 / batch as f64;
         let nb = (n / batch).max(1);
         let mut step = 0u32; // steps completed so far this epoch
@@ -152,7 +201,7 @@ pub fn svrg_epochs(
             let hi = (lo + batch).min(n);
             // ---- compute residuals at CURRENT w (after fast-forward) ----
             // then apply: one dense-affine step + the sparse scatter
-            let mut updates: Vec<(usize, f64)> = Vec::new();
+            updates.clear();
             for &oi in &order[lo..hi] {
                 let i = oi as usize;
                 let (cols, vals) = x.row(i);
@@ -161,14 +210,13 @@ pub fn svrg_epochs(
                     let j = *c as usize;
                     let lag = step - last[j];
                     if lag > 0 {
-                        let (ak, s) = geom(lag);
+                        let (ak, s) = geom_at(lag);
                         w[j] = ak * w[j] + s * bvec[j];
                         last[j] = step;
                     }
                     zi += *v as f64 * w[j];
                 }
-                let r = approx.loss.deriv(zi, approx.y[i])
-                    - approx.loss.deriv(z0[i], approx.y[i]);
+                let r = loss.deriv(zi, y[i]) - loss.deriv(z0[i], y[i]);
                 if r != 0.0 {
                     for (c, v) in cols.iter().zip(vals) {
                         updates.push((*c as usize, r * *v as f64));
@@ -198,7 +246,7 @@ pub fn svrg_epochs(
         for j in 0..d {
             let lag = step - last[j];
             if lag > 0 {
-                let (ak, s) = geom(lag);
+                let (ak, s) = geom_at(lag);
                 w[j] = ak * w[j] + s * bvec[j];
             }
         }
@@ -207,22 +255,25 @@ pub fn svrg_epochs(
     (w, stats)
 }
 
-/// Straightforward O(steps·d) reference implementation (no lazy
+/// Straightforward O(steps·dim) reference implementation (no lazy
 /// fast-forward) — kept for the equivalence tests and as documentation
 /// of the update rule.
-pub fn svrg_epochs_dense(
-    approx: &LocalApprox,
+pub fn svrg_epochs_dense<O: TiltedShard>(
+    approx: &O,
     w0: &[f64],
     params: &SvrgParams,
 ) -> (Vec<f64>, SvrgStats) {
-    let x = approx.x;
+    let x = approx.shard_x();
     let n = x.n_rows();
-    let d = x.n_cols;
+    let d = approx.dim();
     if n == 0 || params.epochs == 0 {
         return (w0.to_vec(), SvrgStats::default());
     }
+    let lam = approx.l2();
+    let loss = approx.loss_kind();
+    let y = approx.shard_y();
     let lr = params.lr.unwrap_or_else(|| {
-        1.0 / lipschitz_estimate(x, approx.loss.dd_max(), approx.lam, 12)
+        1.0 / lipschitz_estimate(x, loss.dd_max(), lam, 12)
     });
     let batch = params.batch.clamp(1, n);
     let mut rng = Rng::new(params.seed);
@@ -248,15 +299,11 @@ pub fn svrg_epochs_dense(
                 .map(|&oi| {
                     let i = oi as usize;
                     let zi = x.row_dot(i, &w);
-                    (
-                        i,
-                        approx.loss.deriv(zi, approx.y[i])
-                            - approx.loss.deriv(z0[i], approx.y[i]),
-                    )
+                    (i, loss.deriv(zi, y[i]) - loss.deriv(z0[i], y[i]))
                 })
                 .collect();
             for j in 0..d {
-                w[j] -= lr * (mu[j] + approx.lam * (w[j] - anchor[j]));
+                w[j] -= lr * (mu[j] + lam * (w[j] - anchor[j]));
             }
             for (i, r) in rs {
                 if r != 0.0 {
@@ -274,7 +321,7 @@ mod tests {
     use super::*;
     use crate::data::synth::SynthConfig;
     use crate::loss::LossKind;
-    use crate::objective::shard_loss_grad;
+    use crate::objective::{shard_loss_grad, LocalApprox};
     use crate::opt::tron::{self, TronParams};
 
     #[test]

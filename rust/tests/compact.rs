@@ -1,0 +1,249 @@
+//! Compact-solve contract tests: every inner solver (SVRG, SAG, plain
+//! SGD, L-BFGS, TRON) run on the support-compact [`CompactApprox`] must
+//! reproduce the full-space solve on [`LocalApprox`] to rounding error —
+//! across skewed shards, an all-dense shard (support = every column)
+//! and a 1-nnz shard (support = one column), with tilts that move every
+//! off-support coordinate. This is the invariant that lets the FS
+//! driver run all local solves in O(|support|) buffers and ship
+//! directions as support-sized corrections.
+
+use psgd::linalg::{dense, Csr, SupportMap};
+use psgd::loss::LossKind;
+use psgd::objective::compact::{CompactApprox, GlobalDots, HybridDir};
+use psgd::objective::{shard_loss_grad, LocalApprox, Objective};
+use psgd::opt::lbfgs::{self, LbfgsParams};
+use psgd::opt::sag::{sag_epochs, SagParams};
+use psgd::opt::sgd::{sgd_epochs, sgd_epochs_shrink, SgdParams};
+use psgd::opt::svrg::{svrg_epochs, SvrgParams};
+use psgd::opt::tron::{self, TronParams};
+use psgd::util::rng::Rng;
+
+struct Problem {
+    x: Csr,
+    y: Vec<f64>,
+    w_r: Vec<f64>,
+    g_r: Vec<f64>,
+    lam: f64,
+}
+
+fn skewed(seed: u64, dim: usize, n: usize, max_nnz: usize) -> Problem {
+    let mut rng = Rng::new(seed);
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|_| {
+            (0..1 + rng.below(max_nnz))
+                .map(|_| (rng.below(dim) as u32, rng.range(-2.0, 2.0) as f32))
+                .collect()
+        })
+        .collect();
+    let x = Csr::from_rows(dim, &rows);
+    let y: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+    let w_r: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.3).collect();
+    finish(x, y, w_r, 0.7, &mut rng)
+}
+
+fn all_dense(seed: u64, dim: usize, n: usize) -> Problem {
+    let mut rng = Rng::new(seed);
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|_| {
+            (0..dim as u32)
+                .map(|c| (c, rng.range(-1.0, 1.0) as f32))
+                .collect()
+        })
+        .collect();
+    let x = Csr::from_rows(dim, &rows);
+    let y: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+    let w_r: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.2).collect();
+    finish(x, y, w_r, 0.5, &mut rng)
+}
+
+fn one_nnz(seed: u64, dim: usize) -> Problem {
+    let mut rng = Rng::new(seed);
+    let x = Csr::from_rows(dim, &[vec![(7u32, 1.5f32)]]);
+    let y = vec![1.0];
+    let w_r: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.3).collect();
+    finish(x, y, w_r, 1.0, &mut rng)
+}
+
+/// Attach a plausible global gradient: ∇L_p(wʳ) + λwʳ + a perturbation
+/// so the tilt genuinely moves every (off-support included) coordinate.
+fn finish(x: Csr, y: Vec<f64>, w_r: Vec<f64>, lam: f64, rng: &mut Rng) -> Problem {
+    let dim = x.n_cols;
+    let mut grad_lp = vec![0.0; dim];
+    shard_loss_grad(&x, &y, &w_r, LossKind::Logistic, &mut grad_lp, None);
+    let mut g_r = grad_lp;
+    for (j, gj) in g_r.iter_mut().enumerate() {
+        *gj += lam * w_r[j] + rng.normal() * 0.5;
+    }
+    Problem { x, y, w_r, g_r, lam }
+}
+
+struct CompactSetup {
+    map: SupportMap,
+    xl: Csr,
+    wr_c: Vec<f64>,
+    g_c: Vec<f64>,
+    glp_c: Vec<f64>,
+    dots: GlobalDots,
+    grad_lp: Vec<f64>,
+}
+
+fn compact_setup(p: &Problem) -> CompactSetup {
+    let dim = p.x.n_cols;
+    let (map, xl) = SupportMap::compact(&p.x);
+    let mut grad_lp = vec![0.0; dim];
+    shard_loss_grad(&p.x, &p.y, &p.w_r, LossKind::Logistic, &mut grad_lp, None);
+    let (mut wr_c, mut g_c, mut glp_c) = (Vec::new(), Vec::new(), Vec::new());
+    map.gather(&p.w_r, &mut wr_c);
+    map.gather(&p.g_r, &mut g_c);
+    map.gather(&grad_lp, &mut glp_c);
+    let dots = GlobalDots::compute(&p.w_r, &p.g_r);
+    CompactSetup { map, xl, wr_c, g_c, glp_c, dots, grad_lp }
+}
+
+/// Reconstruct the full-space solve result from a compact one.
+fn reconstruct(
+    p: &Problem,
+    cs: &CompactSetup,
+    ca: &CompactApprox,
+    w_p: &[f64],
+) -> Vec<f64> {
+    let (a_w, a_g) = ca.off_support_coeffs(w_p);
+    let hd = HybridDir::from_compact(
+        &cs.map,
+        p.x.n_cols,
+        a_w,
+        a_g,
+        w_p,
+        &cs.wr_c,
+        &cs.g_c,
+    );
+    let mut w_full = p.w_r.clone();
+    dense::axpy(1.0, &hd.to_dense(&p.w_r, &p.g_r), &mut w_full);
+    w_full
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    let scale = 1.0
+        + a.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+        + b.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    let diff = dense::max_abs_diff(a, b);
+    assert!(diff < tol * scale, "{what}: max diff {diff} (scale {scale})");
+}
+
+/// Run every solver both ways on one problem instance.
+fn check_all_solvers(p: &Problem, tag: &str) {
+    let loss = LossKind::Logistic;
+    let cs = compact_setup(p);
+    let full = LocalApprox::new(
+        &p.x, &p.y, loss, p.lam, &p.w_r, &p.g_r, &cs.grad_lp,
+    );
+    let ca = CompactApprox::build(
+        &cs.xl, &p.y, loss, p.lam, &cs.dots, &cs.wr_c, &cs.g_c, &cs.glp_c,
+    );
+
+    // sanity: the two views value-agree at matched points
+    let v_full = full.value(&p.w_r);
+    let v_compact = ca.value(&ca.w_r);
+    assert!(
+        (v_full - v_compact).abs() < 1e-8 * (1.0 + v_full.abs()),
+        "{tag}: f̂(wʳ) {v_full} vs compact {v_compact}"
+    );
+
+    // --- SVRG ---
+    let sp = SvrgParams { epochs: 3, batch: 4, lr: None, seed: 11 };
+    let w_f = svrg_epochs(&full, &p.w_r, &sp).0;
+    let w_c = svrg_epochs(&ca, &ca.w_r, &sp).0;
+    assert_close(&w_f, &reconstruct(p, &cs, &ca, &w_c), 1e-9, &format!("{tag}/svrg"));
+
+    // --- SAG ---
+    let gp = SagParams { epochs: 2, lr: None, seed: 12 };
+    let w_f = sag_epochs(&full, &p.w_r, &gp);
+    let w_c = sag_epochs(&ca, &ca.w_r, &gp);
+    assert_close(&w_f, &reconstruct(p, &cs, &ca, &w_c), 1e-9, &format!("{tag}/sag"));
+
+    // --- plain SGD (untilted f̃_p) ---
+    let dp = SgdParams { epochs: 2, eta0: 0.05, seed: 13 };
+    let w_f = sgd_epochs(&p.x, &p.y, loss, p.lam, &p.w_r, &dp);
+    let (w_c, shrink) =
+        sgd_epochs_shrink(&cs.xl, &p.y, loss, p.lam, &cs.wr_c, &dp);
+    let hd = HybridDir::from_compact(
+        &cs.map,
+        p.x.n_cols,
+        shrink - 1.0,
+        0.0,
+        &w_c,
+        &cs.wr_c,
+        &cs.g_c,
+    );
+    let mut w_rec = p.w_r.clone();
+    dense::axpy(1.0, &hd.to_dense(&p.w_r, &p.g_r), &mut w_rec);
+    assert_close(&w_f, &w_rec, 1e-9, &format!("{tag}/sgd"));
+
+    // --- L-BFGS ---
+    let lp = LbfgsParams { max_iter: 5, eps: 1e-10, ..Default::default() };
+    let w_f = lbfgs::minimize(&full, &p.w_r, &lp).w;
+    let w_c = lbfgs::minimize(&ca, &ca.w_r, &lp).w;
+    assert_close(
+        &w_f,
+        &reconstruct(p, &cs, &ca, &w_c),
+        1e-6,
+        &format!("{tag}/lbfgs"),
+    );
+
+    // --- TRON ---
+    let tp = TronParams { max_iter: 3, eps: 1e-10, ..Default::default() };
+    let w_f = tron::minimize(&full, &p.w_r, &tp).w;
+    let w_c = tron::minimize(&ca, &ca.w_r, &tp).w;
+    assert_close(
+        &w_f,
+        &reconstruct(p, &cs, &ca, &w_c),
+        1e-6,
+        &format!("{tag}/tron"),
+    );
+}
+
+#[test]
+fn compact_solves_match_full_space_on_skewed_shards() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        let p = skewed(seed, 60, 40, 6);
+        check_all_solvers(&p, &format!("skewed-{seed}"));
+    }
+}
+
+#[test]
+fn compact_solves_match_full_space_on_all_dense_shard() {
+    // support = every column: the tail is empty and compact == full
+    let p = all_dense(7, 12, 15);
+    let cs = compact_setup(&p);
+    assert_eq!(cs.map.len(), 12);
+    check_all_solvers(&p, "all-dense");
+}
+
+#[test]
+fn compact_solves_match_full_space_on_one_nnz_shard() {
+    // support = a single column; everything else lives in the tail
+    let p = one_nnz(9, 40);
+    let cs = compact_setup(&p);
+    assert_eq!(cs.map.len(), 1);
+    check_all_solvers(&p, "one-nnz");
+}
+
+#[test]
+fn compact_dim_is_support_plus_tail() {
+    let p = skewed(21, 300, 10, 4);
+    let cs = compact_setup(&p);
+    let ca = CompactApprox::build(
+        &cs.xl,
+        &p.y,
+        LossKind::Logistic,
+        p.lam,
+        &cs.dots,
+        &cs.wr_c,
+        &cs.g_c,
+        &cs.glp_c,
+    );
+    // the whole point: the solve space is |support| + ≤2, not d
+    assert!(cs.map.len() < 300 / 2, "support {} of 300", cs.map.len());
+    assert_eq!(ca.dim(), cs.map.len() + ca.tail.k);
+    assert!(ca.tail.k <= 2);
+}

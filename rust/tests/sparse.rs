@@ -24,15 +24,18 @@ fn compare_paths(
     w: &[f64],
 ) -> Result<(), String> {
     let x = Csr::from_rows(dim, rows);
-    let map = SupportMap::build(&x);
+    let (map, xl) = SupportMap::compact(&x);
+    let mut w_c = Vec::new();
+    map.gather(w, &mut w_c);
     for loss in ALL_LOSSES {
         let mut g_dense = vec![0.0; dim];
         let mut z_dense = Vec::new();
         let v_dense =
             shard_loss_grad(&x, y, w, loss, &mut g_dense, Some(&mut z_dense));
         let mut z_sparse = Vec::new();
-        let (v_sparse, g_sparse) =
-            shard_loss_grad_sparse(&x, y, w, loss, &map, Some(&mut z_sparse));
+        let (v_sparse, g_sparse) = shard_loss_grad_sparse(
+            &xl, y, &w_c, loss, &map, dim, Some(&mut z_sparse),
+        );
         if (v_dense - v_sparse).abs() > 1e-12 * (1.0 + v_dense.abs()) {
             return Err(format!(
                 "loss value mismatch ({loss:?}): {v_dense} vs {v_sparse}"
@@ -98,14 +101,17 @@ fn edge_shards_all_dense_and_single_nnz() {
     let rows1 = vec![vec![(7u32, 1.5f32)]];
     compare_paths(dim, &rows1, &[1.0], &w).unwrap();
     let x1 = Csr::from_rows(dim, &rows1);
-    let map1 = SupportMap::build(&x1);
+    let (map1, xl1) = SupportMap::compact(&x1);
     assert_eq!(map1.support, vec![7]);
+    let mut w1c = Vec::new();
+    map1.gather(&w, &mut w1c);
     let (_, g1) = shard_loss_grad_sparse(
-        &x1,
+        &xl1,
         &[1.0],
-        &w,
+        &w1c,
         LossKind::Logistic,
         &map1,
+        dim,
         None,
     );
     assert!(g1.nnz() <= 1);
