@@ -10,19 +10,25 @@ test:
 bench:
 	cargo bench
 
-# Fast bench smoke for CI: the sparse wire pipeline and the
-# compact-vs-full inner solve (the latter asserts compact is strictly
-# faster and ε-equivalent, so a perf/correctness regression fails CI).
+# Fast bench smoke for CI: the sparse wire pipeline, the
+# compact-vs-full inner solve (asserts compact is strictly faster and
+# ε-equivalent) and the pipelined-schedule bench (asserts pipelined
+# makespan ≤ barrier everywhere and strictly lower on the straggler
+# scenario, with bit-identical arithmetic).
 bench-smoke:
 	cargo bench --bench sparse_grad
 	cargo bench --bench compact_solve
+	cargo bench --bench pipeline
 
 fmt-check:
 	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets
 
 # AOT-compile the JAX/Pallas kernels to artifacts/*.hlo.txt for the
 # xla-feature runtime (needs the python toolchain; not part of tier-1).
 artifacts:
 	python3 python/compile/aot.py --out artifacts
 
-.PHONY: verify test bench bench-smoke fmt-check artifacts
+.PHONY: verify test bench bench-smoke fmt-check clippy artifacts

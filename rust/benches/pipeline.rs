@@ -1,0 +1,113 @@
+//! Pipelined-schedule bench: FS makespan under the event engine's
+//! barrier vs `--pipeline` schedules, across three node-profile
+//! scenarios (homogeneous, seeded skew, one 3× straggler).
+//!
+//! The pipelined schedule overlaps round r's direction allreduce +
+//! safeguard + line search (control lane) with round r+1's self-paced
+//! node compute; the arithmetic is bit-identical (asserted below), so
+//! the whole difference is schedule. Smoke contract for CI
+//! (`make bench-smoke`): pipelining never loses, and on the straggler
+//! scenario it wins strictly — the ROADMAP's "async pipeline of local
+//! solves with the reduction" made measurable.
+
+use psgd::algo::fs::{FsConfig, FsDriver};
+use psgd::algo::{Driver, RunResult, StopRule};
+use psgd::cluster::{Cluster, CostModel, NodeProfile};
+use psgd::data::synth::SynthConfig;
+
+const NODES: usize = 8;
+const ITERS: usize = 10;
+
+fn run_fs(c0: &Cluster, profile: &NodeProfile, pipeline: bool) -> RunResult {
+    let mut cluster = c0.fork_fresh();
+    cluster.set_profile(profile.clone());
+    let driver = FsDriver::new(FsConfig {
+        lam: 1.0,
+        epochs: 2,
+        pipeline,
+        ..Default::default()
+    });
+    driver.run(&mut cluster, None, &StopRule::iters(ITERS))
+}
+
+fn main() {
+    let data = SynthConfig {
+        n_examples: 8_000,
+        n_features: 20_000,
+        nnz_per_example: 10,
+        ..SynthConfig::default()
+    }
+    .generate(42);
+    // comm heavy enough that the control plane is worth hiding, and
+    // modeled compute large enough to dwarf measurement noise
+    let cost = CostModel {
+        latency_s: 0.02,
+        compute_scale: 20_000.0,
+        ..CostModel::default()
+    };
+    let mut c0 = Cluster::partition(data, NODES, cost);
+    c0.threads = 1; // contention-free measured per-node compute
+    println!(
+        "### pipeline bench: FS on {NODES} nodes, {ITERS} outer iters \
+         (sparse path: {})",
+        c0.prefer_sparse()
+    );
+    println!(
+        "{:<14} {:>14} {:>14} {:>9}",
+        "scenario", "barrier s", "pipelined s", "speedup"
+    );
+
+    let scenarios: Vec<(&str, NodeProfile)> = vec![
+        ("homogeneous", NodeProfile::homogeneous(NODES)),
+        ("skewed", NodeProfile::seeded(NODES, 7, 1.5)),
+        ("straggler3x", NodeProfile::with_straggler(NODES, 0, 3.0)),
+    ];
+
+    for (name, profile) in &scenarios {
+        let barrier = run_fs(&c0, profile, false);
+        let piped = run_fs(&c0, profile, true);
+        // schedule only: the iterates and objective traces must match
+        // bit-for-bit between the two schedules
+        assert_eq!(
+            barrier.w, piped.w,
+            "{name}: pipelined arithmetic diverged"
+        );
+        for (b, p) in barrier.trace.points.iter().zip(&piped.trace.points) {
+            assert_eq!(b.f, p.f, "{name}: trace diverged at iter {}", b.iter);
+        }
+        let mb = barrier.ledger.seconds();
+        let mp = piped.ledger.seconds();
+        println!(
+            "{:<14} {:>14.2} {:>14.2} {:>8.2}x",
+            name,
+            mb,
+            mp,
+            mb / mp
+        );
+        // smoke contract: pipelining never loses. Makespans fold in
+        // wall-clock compute measured in two independent runs, so
+        // allow generous noise headroom here — the load-bearing
+        // assertion is the absolute-margin straggler win below.
+        assert!(
+            mp <= mb * 1.10 + 0.5,
+            "{name}: pipelined {mp} exceeds barrier {mb}"
+        );
+        // ...and strictly wins when one node straggles: the control
+        // plane hides under the straggler's self-paced compute. The
+        // margin is absolute virtual seconds (≈ one round's control
+        // plane), robust to host speed.
+        if *name == "straggler3x" {
+            assert!(
+                mp < mb - 0.25,
+                "straggler: pipelined {mp} not strictly below barrier {mb}"
+            );
+        }
+    }
+
+    println!(
+        "\nreading: the barrier schedule serializes every direction \
+         allreduce + line search behind the slowest node; the pipelined \
+         schedule hides that control plane under the next round's \
+         sweeps/solves. Identical math, shorter critical path."
+    );
+}

@@ -39,6 +39,7 @@ pub fn global_value_grad(
     all: bool,
 ) -> (f64, Vec<f64>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
     let dim = cluster.dim;
+    cluster.engine.set_phase("grad_sweep");
     let parts: Vec<(f64, Vec<f64>, Vec<f64>)> =
         cluster.map_each_scratch(|_, shard, s| {
             shard.map.gather(w, &mut s.wloc);
@@ -83,6 +84,7 @@ pub fn global_value_grad_cached(
     all: bool,
 ) -> (f64, Vec<f64>, Vec<Vec<f64>>) {
     let dim = cluster.dim;
+    cluster.engine.set_phase("grad_sweep");
     let parts: Vec<(f64, Vec<f64>)> =
         cluster.map_each_scratch(|p, shard, s| {
             let z = &margins[p];
@@ -188,6 +190,7 @@ pub fn global_value_grad_auto(
         return (f, g, LocalGrads::Dense(parts), margins);
     }
     let dim = cluster.dim;
+    cluster.engine.set_phase("grad_sweep");
     let parts: Vec<(f64, SparseVec, Vec<f64>)> =
         cluster.map_each_scratch(|_, shard, s| {
             shard.map.gather(w, &mut s.wloc);
@@ -232,6 +235,7 @@ pub fn global_value_grad_cached_auto(
         return (f, g, LocalGrads::Dense(parts));
     }
     let dim = cluster.dim;
+    cluster.engine.set_phase("grad_sweep");
     let parts: Vec<(f64, SparseVec)> =
         cluster.map_each_scratch(|p, shard, s| {
             debug_assert_eq!(margins[p].len(), shard.xl.n_rows());
@@ -344,6 +348,7 @@ impl<'a> Objective for DistributedObjective<'a> {
         cluster.broadcast_vec(); // ship v
         let loss = self.loss;
         let dim = cluster.dim;
+        cluster.engine.set_phase("hv_product");
         let hv = if self.sparse {
             let parts: Vec<SparseVec> =
                 cluster.map_each_scratch(|_, shard, s| {

@@ -23,6 +23,19 @@
 //! Communication per iteration: one gradient allreduce (2 passes) + one
 //! direction allreduce (2 passes) = 4, versus SQM/TRON's 2 + 2·(CG
 //! iterations). That 4-vs-many gap is exactly Figure 1's left panels.
+//!
+//! **Pipelined mode** ([`FsConfig::pipeline`], CLI `--pipeline`):
+//! round r's direction allreduce, safeguard scalars, broadcast and
+//! line search ride the event engine's *control lane* and overlap
+//! round r+1's gradient sweeps/solves on the self-paced node clocks —
+//! the safeguard consumes the reduced direction when it lands. This is
+//! a schedule, not an algorithm change: the simulated arithmetic (and
+//! hence the objective trace) is bit-identical with pipelining on or
+//! off; only the modeled makespan differs. It is the
+//! optimistic-overlap bound of the async-parallel SGD literature
+//! (arXiv:1505.04956, arXiv:1705.08030): a real async deployment hides
+//! the control plane behind speculative node compute and reconciles
+//! when the committed step lands.
 
 use crate::algo::common::{
     global_value_grad_auto, global_value_grad_cached_auto, test_auprc,
@@ -80,6 +93,10 @@ pub struct FsConfig {
     pub wolfe: WolfeParams,
     pub inner: InnerSolver,
     pub seed: u64,
+    /// pipelined schedule: overlap the direction allreduce + line
+    /// search (control lane) with the next round's node compute.
+    /// Timing-model only — results are bit-identical (see module docs).
+    pub pipeline: bool,
 }
 
 impl Default for FsConfig {
@@ -95,6 +112,7 @@ impl Default for FsConfig {
             wolfe: WolfeParams::default(),
             inner: InnerSolver::Svrg,
             seed: 0,
+            pipeline: false,
         }
     }
 }
@@ -209,7 +227,8 @@ impl Driver for FsDriver {
             InnerSolver::Lbfgs => "fs+lbfgs",
             InnerSolver::Tron => "fs+tron",
         };
-        format!("{}-{}", tag, self.config.epochs)
+        let pipe = if self.config.pipeline { "+pipe" } else { "" };
+        format!("{}{}-{}", tag, pipe, self.config.epochs)
     }
 
     fn run(
@@ -225,6 +244,7 @@ impl Driver for FsDriver {
         // paper's high-dimensional regime); dense-heavy shards keep the
         // plain dense path
         let sparse = cluster.prefer_sparse();
+        cluster.set_pipeline(c.pipeline);
         let mut w = vec![0.0; dim];
         let mut trace = Trace::new(self.name());
         cluster.broadcast_vec(); // ship w⁰
@@ -275,6 +295,7 @@ impl Driver for FsDriver {
             let w_ref = &w;
             let g_ref = &g;
             let gp_ref = &grad_parts;
+            cluster.engine.set_phase("local_solve");
             let mut dirs: Vec<HybridDir> =
                 cluster.map_each_scratch(|p, shard, s| {
                     shard.map.gather(w_ref, &mut s.wloc);
@@ -351,9 +372,11 @@ impl Driver for FsDriver {
                     parts.push(sv);
                 }
                 // the (a_w, a_g) pair each node contributes rides a
-                // scalar aggregation round alongside the corr reduce
+                // scalar aggregation round alongside the corr reduce;
+                // both land on the control lane so a pipelined
+                // schedule overlaps them with the next round's sweeps
                 cluster.charge_scalar_round(2);
-                let reduced = cluster.reduce_parts_sparse(&parts, true);
+                let reduced = cluster.reduce_parts_sparse_ctrl(&parts, true);
                 let mut d: Vec<f64> = w
                     .iter()
                     .zip(&g)
@@ -374,15 +397,16 @@ impl Driver for FsDriver {
                         dd
                     })
                     .collect();
-                cluster.reduce_parts(&parts, true)
+                cluster.reduce_parts_ctrl(&parts, true)
             };
 
             // --- step 8: distributed line search on margins ---
             // nodes compute dʳ·xᵢ locally (compute-only phase, compact
             // gather of dʳ onto the support)
             let d_ref = &d;
+            cluster.engine.set_phase("dir_matvec");
             let dz_parts: Vec<Vec<f64>> =
-                cluster.map_each_scratch(|_, shard, s| {
+                cluster.map_each_scratch_ctrl(|_, shard, s| {
                     shard.map.gather(d_ref, &mut s.buf);
                     let mut dz = vec![0.0; shard.xl.n_rows()];
                     shard.xl.matvec(&s.buf, &mut dz);

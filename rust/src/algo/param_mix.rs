@@ -60,6 +60,7 @@ impl ParamMixDriver {
         let n_nodes = cluster.n_nodes() as f64;
         let dim = cluster.dim;
         let sparse = cluster.prefer_sparse();
+        cluster.engine.set_phase("mix_sgd");
         let parts: Vec<(f64, SparseVec)> =
             cluster.map_each_scratch(|p, shard, s| {
                 let seed = c

@@ -9,6 +9,13 @@
 //! Communication per TRON iteration: w-broadcast + gradient reduce
 //! (2 passes) + 2 passes per CG iteration — the many-passes profile
 //! Figure 1's left panels show.
+//!
+//! Timing rides the event engine like every driver: each
+//! broadcast/reduce is scheduled on the per-node virtual clocks
+//! (labels "grad_sweep"/"hv_product" in the exported timeline), so a
+//! heterogeneous [`NodeProfile`](crate::cluster::NodeProfile) shows
+//! SQM's many synchronization points paying the straggler tax once
+//! per pass — the contrast the paper draws against FS.
 
 use crate::algo::common::{test_auprc, DistributedObjective};
 use crate::algo::{Driver, RunResult, StopRule};

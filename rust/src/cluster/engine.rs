@@ -1,0 +1,606 @@
+//! Event-driven cluster execution engine: one virtual clock per node.
+//!
+//! The legacy timing model was a flat accumulator — every phase added
+//! `max(per-node seconds)` or `hops × cost` to a single global clock,
+//! which cannot express heterogeneous nodes, partial straggler hiding
+//! inside the reduction tree, or overlap of local solves with an
+//! in-flight reduction. This module replaces it with an explicit
+//! schedule:
+//!
+//! - **Per-node virtual clocks.** Every compute phase advances node
+//!   p's clock by its own measured seconds × the node's
+//!   [`NodeProfile`] speed. In the default *barrier schedule* each
+//!   phase ends with a global barrier, so the makespan reproduces the
+//!   legacy flat accumulator exactly (the equivalence regression in
+//!   `tests/engine.rs` pins this); in pipelined mode nodes are
+//!   *self-paced* — a node's next phase starts the moment its
+//!   previous one ends.
+//! - **Event-driven reductions.** A reduction-tree parent hop starts
+//!   at `max(children ready)` rather than after a global barrier, so
+//!   when leaves inject at different times (pipelined runs, direct
+//!   engine use) fast subtrees climb the tree while slow ones still
+//!   compute, and an odd-tail node joins the tree one level up with
+//!   no leaf hop.
+//! - **Two lanes.** Results land either on the *node lane* (an
+//!   allreduce whose output feeds the next node-local compute — the
+//!   gradient round) or on the *control lane* (a master-side chain:
+//!   safeguard scalars, direction broadcast, line-search rounds). In
+//!   pipelined mode ([`Engine::pipeline`]) control-lane traffic no
+//!   longer stalls the node clocks: round r's direction allreduce and
+//!   line search overlap round r+1's sweeps/solves on the self-paced
+//!   nodes, and the safeguard consumes the reduced direction when it
+//!   lands on the control clock. The arithmetic of the simulated run
+//!   is unchanged — pipelining is a *schedule* (the optimistic-overlap
+//!   bound of the async-parallel SGD literature, arXiv:1505.04956 /
+//!   1705.08030); objective traces are bit-identical either way.
+//!
+//! Every phase is recorded as a timed [`Event`] (capped; see
+//! [`Engine::dropped_events`]) and exported as a JSON timeline via
+//! [`Engine::timeline_json`] for benches and plots
+//! (`psgd train --trace-timeline out.json`).
+
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// Per-node relative compute speed, replacing the old
+/// `CostModel::straggle` `p mod 4` hack. `speed[p]` multiplies node
+/// p's measured compute seconds: 1.0 = this machine's single core,
+/// 3.0 = a node three times slower. The global `CostModel::
+/// compute_scale` still applies on top (so `CostModel::free()` keeps
+/// costing nothing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeProfile {
+    pub speed: Vec<f64>,
+}
+
+impl NodeProfile {
+    /// Every node identical to the reference machine.
+    pub fn homogeneous(n: usize) -> NodeProfile {
+        NodeProfile { speed: vec![1.0; n] }
+    }
+
+    /// Seeded heterogeneous cluster: `speed[p] = 1 + spread·u_p` with
+    /// `u_p ~ U[0,1)` from the deterministic stream — the reproducible
+    /// way to model a skewed fleet.
+    pub fn seeded(n: usize, seed: u64, spread: f64) -> NodeProfile {
+        let mut rng = Rng::new(seed ^ 0xC1A5_7E12_9B1D_F00D);
+        NodeProfile {
+            speed: (0..n).map(|_| 1.0 + spread * rng.uniform()).collect(),
+        }
+    }
+
+    /// Homogeneous except one straggler running `factor`× slower — the
+    /// canonical failure-injection scenario.
+    pub fn with_straggler(n: usize, node: usize, factor: f64) -> NodeProfile {
+        let mut p = NodeProfile::homogeneous(n);
+        if node < n {
+            p.speed[node] = factor;
+        }
+        p
+    }
+
+    /// Deprecated shim for the old `CostModel::straggle` knob
+    /// (`1 + straggle·(p mod 4 == 0)`), so existing configs, benches
+    /// and tests keep their exact timing. New code should construct a
+    /// profile directly.
+    pub fn from_legacy_straggle(n: usize, straggle: f64) -> NodeProfile {
+        NodeProfile {
+            speed: (0..n)
+                .map(|p| if p % 4 == 0 { 1.0 + straggle } else { 1.0 })
+                .collect(),
+        }
+    }
+
+    /// Node p's speed multiplier (1.0 past the profile's end, so a
+    /// profile of the wrong length degrades gracefully).
+    #[inline]
+    pub fn scale(&self, p: usize) -> f64 {
+        self.speed.get(p).copied().unwrap_or(1.0)
+    }
+
+    pub fn is_homogeneous(&self) -> bool {
+        self.speed.iter().all(|&s| s == 1.0)
+    }
+}
+
+/// Where a reduction's result lands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// The result feeds the next node-local compute (gradient
+    /// allreduce): node clocks advance to the arrival time.
+    Node,
+    /// The result feeds the master-side control chain (direction
+    /// combine, safeguard, line search): only the control clock
+    /// advances, nodes keep computing. Callers request this lane and
+    /// the engine honors it only in pipelined mode — otherwise it
+    /// falls back to [`Lane::Node`] semantics, which is exactly the
+    /// barrier schedule.
+    Control,
+}
+
+/// One timed entry of the schedule.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// phase tag: "compute", "local_solve", "grad_sweep", "reduce",
+    /// "broadcast", "scalar_round", "ring", ...
+    pub label: &'static str,
+    /// owning node for compute events; None for tree/control events
+    pub node: Option<usize>,
+    /// reduction-tree level for hop events (0 = leaf level)
+    pub level: Option<usize>,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Hard cap on recorded events so multi-thousand-round runs cannot
+/// grow memory without bound; past it only clocks advance and
+/// [`Engine::dropped_events`] counts the overflow.
+const MAX_EVENTS: usize = 1 << 18;
+
+#[derive(Clone, Debug)]
+pub struct Engine {
+    pub profile: NodeProfile,
+    /// pipelined schedule: control-lane ops overlap node compute
+    pub pipeline: bool,
+    /// when node p's current work finishes (virtual seconds)
+    node_clock: Vec<f64>,
+    /// when the master/control chain is free
+    control_clock: f64,
+    events: Vec<Event>,
+    dropped_events: usize,
+    /// label the next compute phase's events carry (set by drivers via
+    /// [`Engine::set_phase`]; consumed once)
+    next_label: Option<&'static str>,
+}
+
+impl Engine {
+    pub fn new(profile: NodeProfile) -> Engine {
+        let n = profile.speed.len();
+        Engine {
+            profile,
+            pipeline: false,
+            node_clock: vec![0.0; n],
+            control_clock: 0.0,
+            events: Vec::new(),
+            dropped_events: 0,
+            next_label: None,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.node_clock.len()
+    }
+
+    /// The simulated wall clock: when the last node AND the control
+    /// chain are done — the critical path of the whole schedule.
+    pub fn makespan(&self) -> f64 {
+        self.node_clock
+            .iter()
+            .fold(self.control_clock, |a, &c| a.max(c))
+    }
+
+    /// Tag the next compute phase's events (e.g. "local_solve").
+    pub fn set_phase(&mut self, label: &'static str) {
+        self.next_label = Some(label);
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn dropped_events(&self) -> usize {
+        self.dropped_events
+    }
+
+    fn push_event(&mut self, ev: Event) {
+        if self.events.len() < MAX_EVENTS {
+            self.events.push(ev);
+        } else {
+            self.dropped_events += 1;
+        }
+    }
+
+    /// Per-node compute phase: node p runs for
+    /// `times[p]·scale·profile[p]` starting at its own clock. In the
+    /// barrier schedule (pipelining off) the phase ends with a global
+    /// barrier — exactly the legacy flat accumulator; in pipelined
+    /// mode nodes stay self-paced and only reductions/broadcasts gate
+    /// them. Returns the barrier-equivalent charge (max scaled
+    /// duration) for the ledger's legacy component breakdown.
+    pub fn compute(&mut self, scale: f64, times: &[f64]) -> f64 {
+        debug_assert_eq!(times.len(), self.node_clock.len());
+        let label = self.next_label.take().unwrap_or("compute");
+        let mut max_dur = 0.0f64;
+        let mut max_end = 0.0f64;
+        for (p, &t) in times.iter().enumerate() {
+            let dur = t * scale * self.profile.scale(p);
+            max_dur = max_dur.max(dur);
+            let start = self.node_clock[p];
+            self.node_clock[p] = start + dur;
+            max_end = max_end.max(start + dur);
+            self.push_event(Event {
+                label,
+                node: Some(p),
+                level: None,
+                start,
+                end: start + dur,
+            });
+        }
+        if !self.pipeline {
+            for c in self.node_clock.iter_mut() {
+                *c = (*c).max(max_end);
+            }
+        }
+        max_dur
+    }
+
+    /// Control-lane compute (pipelined mode only — callers fall back
+    /// to [`Engine::compute`] otherwise): the whole phase rides the
+    /// master chain, nodes are not stalled. Used for the tiny
+    /// direction-margin matvec and line-search evaluations, which
+    /// briefly preempt the workers in a real async pipeline. Returns
+    /// the charged duration.
+    pub fn compute_control(&mut self, scale: f64, times: &[f64]) -> f64 {
+        let label = self.next_label.take().unwrap_or("compute");
+        let dur = times
+            .iter()
+            .enumerate()
+            .map(|(p, &t)| t * scale * self.profile.scale(p))
+            .fold(0.0f64, f64::max);
+        let start = self.control_clock;
+        self.control_clock = start + dur;
+        self.push_event(Event {
+            label,
+            node: None,
+            level: None,
+            start,
+            end: start + dur,
+        });
+        dur
+    }
+
+    /// Event-driven binary-tree reduction. Leaf p injects at
+    /// `max(node_clock[p], control_clock)` (a round can only combine
+    /// after the previous one committed — information never flows
+    /// backward); a parent at level ℓ is ready at
+    /// `max(children) + hops[ℓ]`. `down = Some((depth, hop))` appends
+    /// the result broadcast. Landing follows `lane` (see [`Lane`];
+    /// [`Lane::Control`] only takes effect in pipelined mode).
+    /// Returns the time the result is available on its lane.
+    pub fn tree_reduce(
+        &mut self,
+        label: &'static str,
+        hops: &[f64],
+        down: Option<(usize, f64)>,
+        lane: Lane,
+    ) -> f64 {
+        let floor = self.control_clock;
+        let mut ready: Vec<f64> =
+            self.node_clock.iter().map(|&c| c.max(floor)).collect();
+        let mut level = 0usize;
+        while ready.len() > 1 {
+            let hop = hops.get(level).copied().unwrap_or(0.0);
+            let mut next = Vec::with_capacity(ready.len().div_ceil(2));
+            let mut start = f64::INFINITY;
+            let mut end = 0.0f64;
+            let mut it = ready.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => {
+                        let s = a.max(b);
+                        let t = s + hop;
+                        start = start.min(s);
+                        end = end.max(t);
+                        next.push(t);
+                    }
+                    // odd tail: joins the tree one level up, no hop
+                    None => next.push(a),
+                }
+            }
+            if start.is_finite() {
+                self.push_event(Event {
+                    label,
+                    node: None,
+                    level: Some(level),
+                    start,
+                    end,
+                });
+            }
+            ready = next;
+            level += 1;
+        }
+        let root = ready.first().copied().unwrap_or(floor);
+        let landed = match down {
+            Some((depth, hop)) => {
+                let arrival = root + depth as f64 * hop;
+                if depth > 0 {
+                    self.push_event(Event {
+                        label: "broadcast",
+                        node: None,
+                        level: None,
+                        start: root,
+                        end: arrival,
+                    });
+                }
+                arrival
+            }
+            None => root,
+        };
+        self.control_clock = self.control_clock.max(landed);
+        if !(self.pipeline && lane == Lane::Control) {
+            // barrier schedule: every node waits for the landing time
+            // (in the synchronous algorithm nothing can proceed until
+            // the result is committed — this is what makes the
+            // homogeneous schedule collapse to the legacy flat sum
+            // exactly). Straggler hiding still happens INSIDE the
+            // tree via the max(children) hop starts.
+            for c in self.node_clock.iter_mut() {
+                *c = (*c).max(landed);
+            }
+        }
+        landed
+    }
+
+    /// Master → nodes broadcast (no preceding reduce): starts when the
+    /// control chain holds the payload, arrives `depth·hop` later and
+    /// gates the node clocks. In the barrier schedule the send also
+    /// waits for every node (the serial flat model — otherwise a
+    /// broadcast issued right after a compute-only phase would hide
+    /// entirely behind stale node clocks and underreport the
+    /// makespan); in pipelined mode it is a pure control-lane op.
+    pub fn broadcast(&mut self, depth: usize, hop: f64) -> f64 {
+        let start = if self.pipeline {
+            self.control_clock
+        } else {
+            self.makespan()
+        };
+        let arrival = start + depth as f64 * hop;
+        if depth > 0 {
+            self.push_event(Event {
+                label: "broadcast",
+                node: None,
+                level: None,
+                start,
+                end: arrival,
+            });
+        }
+        self.control_clock = arrival;
+        for c in self.node_clock.iter_mut() {
+            *c = (*c).max(arrival);
+        }
+        arrival
+    }
+
+    /// Ring traversal(s): every node participates in every chunk hop,
+    /// so the ring is inherently a barrier — it starts once all nodes
+    /// (and the control chain) are ready and synchronizes everyone at
+    /// the end. Pipelined overlap therefore only hides ring traffic
+    /// behind nothing; the pipeline bench runs on the Tree topology.
+    pub fn ring_traversal(&mut self, label: &'static str, secs: f64) -> f64 {
+        let start = self.makespan();
+        let end = start + secs;
+        if secs > 0.0 {
+            self.push_event(Event {
+                label,
+                node: None,
+                level: None,
+                start,
+                end,
+            });
+        }
+        self.control_clock = end;
+        for c in self.node_clock.iter_mut() {
+            *c = (*c).max(end);
+        }
+        end
+    }
+
+    /// Scalar aggregation round: up-sweep + down-sweep of `depth`
+    /// latency-sized hops each. Control-lane in pipelined mode (line
+    /// searches and coefficient rounds are the control plane).
+    pub fn scalar_round(&mut self, depth: usize, hop: f64) -> f64 {
+        let hops = vec![hop; depth];
+        self.tree_reduce(
+            "scalar_round",
+            &hops,
+            Some((depth, hop)),
+            Lane::Control,
+        )
+    }
+
+    /// Export the recorded schedule for plots/benches.
+    pub fn timeline_json(&self) -> Value {
+        let events: Vec<Value> = self
+            .events
+            .iter()
+            .map(|e| {
+                Value::obj(vec![
+                    ("label", Value::Str(e.label.to_string())),
+                    (
+                        "node",
+                        match e.node {
+                            Some(p) => Value::Num(p as f64),
+                            None => Value::Null,
+                        },
+                    ),
+                    (
+                        "level",
+                        match e.level {
+                            Some(l) => Value::Num(l as f64),
+                            None => Value::Null,
+                        },
+                    ),
+                    ("start", Value::Num(e.start)),
+                    ("end", Value::Num(e.end)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("makespan", Value::Num(self.makespan())),
+            ("nodes", Value::Num(self.n_nodes() as f64)),
+            ("pipeline", Value::Bool(self.pipeline)),
+            (
+                "profile",
+                Value::Arr(
+                    self.profile.speed.iter().map(|&s| Value::Num(s)).collect(),
+                ),
+            ),
+            ("dropped_events", Value::Num(self.dropped_events as f64)),
+            ("events", Value::Arr(events)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(engine: &Engine) -> f64 {
+        engine.makespan()
+    }
+
+    #[test]
+    fn homogeneous_schedule_equals_flat_sum() {
+        // compute (max 3s) + 2-level reduce (1s hops) + broadcast
+        // (2 × 1s) must chain to exactly 3 + 2 + 2 = 7s
+        let mut e = Engine::new(NodeProfile::homogeneous(4));
+        e.compute(1.0, &[2.0, 3.0, 2.5, 3.0]);
+        e.tree_reduce("reduce", &[1.0, 1.0], Some((2, 1.0)), Lane::Node);
+        assert!((flat(&e) - 7.0).abs() < 1e-12, "{}", flat(&e));
+        // every node gated on the arrival
+        e.compute(1.0, &[1.0; 4]);
+        assert!((flat(&e) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_subtree_is_partially_hidden() {
+        // nodes 0..2 ready at 1s, node 3 at 10s (self-paced pipelined
+        // schedule): the (0,1) merge and the level-0 hop of (2,3) all
+        // complete while node 3 works; root = max(2+h, 10+h) + h —
+        // NOT 10 + 2h + barrier slack
+        let mut e = Engine::new(NodeProfile::homogeneous(4));
+        e.pipeline = true;
+        e.compute(1.0, &[1.0, 1.0, 1.0, 10.0]);
+        let root =
+            e.tree_reduce("reduce", &[1.0, 1.0], None, Lane::Node);
+        assert!((root - 12.0).abs() < 1e-12, "root {root}");
+        // odd-node passthrough: 3 nodes, straggler is the lone tail —
+        // it skips the leaf-level hop entirely
+        let mut e3 = Engine::new(NodeProfile::homogeneous(3));
+        e3.pipeline = true;
+        e3.compute(1.0, &[1.0, 1.0, 10.0]);
+        let root3 =
+            e3.tree_reduce("reduce", &[1.0, 1.0], None, Lane::Node);
+        assert!((root3 - 11.0).abs() < 1e-12, "root3 {root3}");
+        // barrier schedule: the same reduce pays the full flat sum
+        let mut b = Engine::new(NodeProfile::homogeneous(4));
+        b.compute(1.0, &[1.0, 1.0, 1.0, 10.0]);
+        let broot = b.tree_reduce("reduce", &[1.0, 1.0], None, Lane::Node);
+        assert!((broot - 12.0).abs() < 1e-12, "barrier root {broot}");
+    }
+
+    #[test]
+    fn profile_scales_per_node_compute() {
+        let mut e = Engine::new(NodeProfile::with_straggler(4, 2, 3.0));
+        let max = e.compute(2.0, &[1.0; 4]);
+        // straggler: 1.0 × scale 2 × speed 3 = 6
+        assert!((max - 6.0).abs() < 1e-12);
+        assert!((e.makespan() - 6.0).abs() < 1e-12);
+        let seeded = NodeProfile::seeded(8, 7, 1.5);
+        assert_eq!(seeded, NodeProfile::seeded(8, 7, 1.5));
+        assert!(seeded.speed.iter().all(|&s| (1.0..2.5).contains(&s)));
+        assert!(!seeded.is_homogeneous());
+        let legacy = NodeProfile::from_legacy_straggle(6, 2.0);
+        assert_eq!(legacy.speed, vec![3.0, 1.0, 1.0, 1.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn pipeline_overlaps_control_with_node_compute() {
+        // two "rounds": solve, control-lane reduce+scalars, next solve.
+        // barrier schedule serializes control; pipelined hides it
+        // under the next solve.
+        let solve = [4.0, 4.0, 4.0, 12.0];
+        let run = |pipeline: bool| {
+            let mut e = Engine::new(NodeProfile::homogeneous(4));
+            e.pipeline = pipeline;
+            for _ in 0..3 {
+                e.compute(1.0, &solve);
+                e.tree_reduce(
+                    "reduce",
+                    &[1.0, 1.0],
+                    Some((2, 1.0)),
+                    Lane::Control,
+                );
+                e.scalar_round(2, 0.5);
+            }
+            e.makespan()
+        };
+        let barrier = run(false);
+        let pipelined = run(true);
+        assert!(
+            pipelined < barrier - 1.0,
+            "pipelined {pipelined} vs barrier {barrier}"
+        );
+        // control still lands after the solves that feed it
+        assert!(pipelined >= 3.0 * 12.0);
+    }
+
+    #[test]
+    fn control_lane_is_barrier_when_pipeline_off() {
+        let mut sync = Engine::new(NodeProfile::homogeneous(2));
+        sync.compute(1.0, &[1.0, 5.0]);
+        sync.tree_reduce("reduce", &[1.0], Some((1, 1.0)), Lane::Control);
+        // nodes gated on arrival: 5 + 1 + 1
+        sync.compute(1.0, &[1.0, 1.0]);
+        assert!((sync.makespan() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn control_reduce_leaves_workers_running_only_when_pipelined() {
+        // non-pipelined: even a master-only reduce is a barrier
+        let mut e = Engine::new(NodeProfile::homogeneous(2));
+        e.compute(1.0, &[1.0, 1.0]);
+        let root = e.tree_reduce("reduce", &[1.0], None, Lane::Node);
+        assert!((root - 2.0).abs() < 1e-12);
+        e.compute(1.0, &[1.0, 1.0]);
+        assert!((e.node_clock[0] - 3.0).abs() < 1e-12);
+
+        // pipelined + control lane: workers keep their own pace and a
+        // later broadcast gates them on the control chain
+        let mut p = Engine::new(NodeProfile::homogeneous(2));
+        p.pipeline = true;
+        p.compute(1.0, &[1.0, 1.0]);
+        p.tree_reduce("reduce", &[1.0], None, Lane::Control);
+        p.compute(1.0, &[1.0, 1.0]);
+        assert!((p.node_clock[0] - 2.0).abs() < 1e-12);
+        p.broadcast(1, 0.5);
+        assert!((p.makespan() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_broadcast_waits_for_all_nodes() {
+        // compute-only phase then broadcast: the send must not hide
+        // behind the stale control clock (regression: makespan would
+        // gain 0 while the flat ledger charged the hop)
+        let mut e = Engine::new(NodeProfile::homogeneous(2));
+        e.compute(1.0, &[1.0, 3.0]);
+        let arrival = e.broadcast(1, 0.5);
+        assert!((arrival - 3.5).abs() < 1e-12, "arrival {arrival}");
+        assert!((e.makespan() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_is_a_barrier_and_timeline_exports() {
+        let mut e = Engine::new(NodeProfile::homogeneous(3));
+        e.pipeline = true;
+        e.set_phase("local_solve");
+        e.compute(1.0, &[1.0, 2.0, 3.0]);
+        e.ring_traversal("ring", 2.0);
+        assert!((e.makespan() - 5.0).abs() < 1e-12);
+        let json = e.timeline_json().to_json(0);
+        assert!(json.contains("\"local_solve\""), "{json}");
+        assert!(json.contains("\"makespan\""));
+        assert!(json.contains("\"ring\""));
+        assert_eq!(e.dropped_events(), 0);
+    }
+}

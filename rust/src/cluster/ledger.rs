@@ -1,35 +1,58 @@
 //! The run accounting every driver reports: communication passes
 //! (Figure 1's left panels), simulated seconds (middle/right panels),
-//! the raw component breakdown, and the per-tree-level sparse payload
+//! the raw component breakdown, and the per-level sparse payload
 //! profile benches use to report wire shapes.
+//!
+//! Since the event-driven engine landed, the ledger is a *view* over
+//! the engine's timeline: [`Ledger::seconds`] reports the critical-path
+//! makespan the [`Engine`](super::engine::Engine) computed from
+//! per-node virtual clocks, while `comm_seconds`/`compute_seconds`
+//! remain the flat *component* accumulators (the barrier-equivalent
+//! breakdown). Without pipelining the schedule IS the barrier
+//! schedule and the two agree to floating-point ε — `tests/engine.rs`
+//! pins that equivalence; under `--pipeline` the makespan is the
+//! smaller, honest number (control-lane overlap and in-tree straggler
+//! hiding).
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Ledger {
     /// size-d vector traversals (paper footnote 5)
     pub comm_passes: f64,
-    /// modeled communication seconds (tree hops × cost model)
+    /// modeled communication seconds, flat component sum (every hop
+    /// charged as if serial — the barrier-equivalent comm share)
     pub comm_seconds: f64,
     /// payload bytes per logical traversal, summed over traversals —
     /// d·8 for a dense pass, min(nnz·12, d·8) for a sparse one. This is
     /// where the sparse pipeline's wire win shows up even when the
     /// logical pass count is identical.
     pub comm_bytes: f64,
-    /// measured compute seconds (max over concurrent nodes per phase)
+    /// measured compute seconds (max over concurrent nodes per phase,
+    /// scaled by the per-node profile — the barrier-equivalent compute
+    /// share)
     pub compute_seconds: f64,
     /// scalar aggregation rounds (line-search trials etc.)
     pub scalar_rounds: usize,
-    /// cumulative largest-message bytes per reduction-tree level
-    /// (index 0 = leaf level), summed over every sparse tree reduction
-    /// in the run — the wire profile `tree_sum_sparse` observes
+    /// cumulative largest-message bytes per combining-tree level
+    /// (index 0 = leaf level), summed over every sparse reduction in
+    /// the run — the wire profile `tree_sum_sparse` observes. Recorded
+    /// under BOTH time models: on the Ring the profile describes the
+    /// logical combining tree's payload growth (what the chunked hops
+    /// carry in aggregate), while time is charged by `(P−1)` chunk
+    /// hops of the merged payload.
     pub level_bytes: Vec<f64>,
-    /// how many sparse tree reductions are folded into `level_bytes`
+    /// how many sparse reductions are folded into `level_bytes`
     pub sparse_reductions: usize,
+    /// critical-path makespan from the event engine; `None` on a
+    /// hand-built ledger (falls back to the flat component sum)
+    pub makespan: Option<f64>,
 }
 
 impl Ledger {
-    /// The simulated wall clock.
+    /// The simulated wall clock: the engine's critical-path makespan
+    /// when an engine drove this ledger, else the flat component sum.
     pub fn seconds(&self) -> f64 {
-        self.comm_seconds + self.compute_seconds
+        self.makespan
+            .unwrap_or(self.comm_seconds + self.compute_seconds)
     }
 
     /// Snapshot for trace records.
@@ -82,6 +105,11 @@ mod tests {
         };
         assert_eq!(l.seconds(), 4.0);
         assert_eq!(l.snapshot(), (4.0, 4.0));
+        // engine-driven ledgers report the critical-path makespan
+        // instead of the flat sum (overlap makes it smaller)
+        let engine_view = Ledger { makespan: Some(3.2), ..l };
+        assert_eq!(engine_view.seconds(), 3.2);
+        assert_eq!(engine_view.snapshot(), (4.0, 3.2));
     }
 
     #[test]

@@ -10,17 +10,26 @@
 //!   one pass = one size-d vector traversal between nodes). A broadcast
 //!   or a reduce is 1 pass; an allreduce is 2. Scalar rounds (line
 //!   search trials) cost time but no passes.
-//! - **simulated seconds**: measured per-node compute (max over nodes
-//!   per phase, as P nodes would run concurrently) + modeled tree
-//!   communication time (α per hop + bytes/bandwidth).
+//! - **simulated seconds**: an event-driven schedule computed by the
+//!   [`engine::Engine`] — one virtual clock per node (scaled by the
+//!   seeded [`engine::NodeProfile`]), reduction-tree hops that start at
+//!   `max(children ready)`, and an optional pipelined mode where
+//!   control-lane traffic (direction combine, safeguard, line search)
+//!   overlaps the next round's node compute. [`Ledger::seconds`]
+//!   reports the schedule's critical-path makespan;
+//!   `comm_seconds`/`compute_seconds` keep the flat barrier-equivalent
+//!   component breakdown (identical to the makespan for homogeneous,
+//!   non-pipelined runs).
 
 pub mod allreduce;
 pub mod cost;
+pub mod engine;
 pub mod ledger;
 pub mod node;
 pub mod scratch;
 
 pub use cost::CostModel;
+pub use engine::{Engine, NodeProfile};
 pub use ledger::Ledger;
 pub use node::Shard;
 pub use scratch::NodeScratch;
@@ -29,6 +38,7 @@ use crate::data::dataset::Dataset;
 use crate::data::partition::Partition;
 use crate::linalg::sparse::SparseVec;
 use self::allreduce::Reduced;
+use self::engine::Lane;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -56,6 +66,9 @@ pub struct Cluster {
     /// per-node reusable scratch buffers (see [`NodeScratch`]) — the
     /// reason steady-state compact solves allocate nothing
     pub scratch: Vec<Mutex<NodeScratch>>,
+    /// the event-driven timing engine: per-node virtual clocks, the
+    /// control lane, and the recorded timeline (see [`engine`])
+    pub engine: Engine,
 }
 
 impl Cluster {
@@ -80,6 +93,13 @@ impl Cluster {
             })
             .collect();
         let scratch = NodeScratch::pool(shards.len());
+        // the deprecated CostModel::straggle knob becomes a NodeProfile
+        // at partition time (straggle == 0 ⇒ homogeneous); replace it
+        // with Cluster::set_profile for seeded/straggler scenarios
+        let engine = Engine::new(NodeProfile::from_legacy_straggle(
+            shards.len(),
+            cost.straggle,
+        ));
         Cluster {
             shards,
             cost,
@@ -87,13 +107,17 @@ impl Cluster {
             ledger: Ledger::default(),
             threads: default_threads(),
             scratch,
+            engine,
         }
     }
 
-    /// Same shards and cost model, fresh ledger — for computing
-    /// reference optima or re-running a second method on identical data
-    /// without inheriting the first run's accounting.
+    /// Same shards, cost model and node profile, fresh ledger and
+    /// virtual clocks — for computing reference optima or re-running a
+    /// second method on identical data without inheriting the first
+    /// run's accounting.
     pub fn fork_fresh(&self) -> Cluster {
+        let mut engine = Engine::new(self.engine.profile.clone());
+        engine.pipeline = self.engine.pipeline;
         Cluster {
             shards: self.shards.clone(),
             cost: self.cost,
@@ -101,7 +125,27 @@ impl Cluster {
             ledger: Ledger::default(),
             threads: self.threads,
             scratch: NodeScratch::pool(self.shards.len()),
+            engine,
         }
+    }
+
+    /// Install a per-node speed profile (resets the engine's clocks —
+    /// call before running a method). Panics on a length mismatch.
+    pub fn set_profile(&mut self, profile: NodeProfile) {
+        assert_eq!(
+            profile.speed.len(),
+            self.n_nodes(),
+            "profile length must match node count"
+        );
+        let pipeline = self.engine.pipeline;
+        self.engine = Engine::new(profile);
+        self.engine.pipeline = pipeline;
+    }
+
+    /// Toggle the pipelined schedule (drivers set this from their
+    /// config; it affects *timing only* — results are bit-identical).
+    pub fn set_pipeline(&mut self, on: bool) {
+        self.engine.pipeline = on;
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -157,23 +201,92 @@ impl Cluster {
         &mut self,
         f: impl Fn(usize, &Shard, &mut NodeScratch) -> T + Sync,
     ) -> Vec<T> {
+        self.map_each_scratch_lane(f, false)
+    }
+
+    /// [`Self::map_each_scratch`] on the control lane: in pipelined
+    /// mode the phase rides the master chain (the tiny direction
+    /// matvec the line search needs) instead of stalling the
+    /// self-paced node clocks; otherwise identical to
+    /// [`Self::map_each_scratch`].
+    pub fn map_each_scratch_ctrl<T: Send>(
+        &mut self,
+        f: impl Fn(usize, &Shard, &mut NodeScratch) -> T + Sync,
+    ) -> Vec<T> {
+        self.map_each_scratch_lane(f, true)
+    }
+
+    fn map_each_scratch_lane<T: Send>(
+        &mut self,
+        f: impl Fn(usize, &Shard, &mut NodeScratch) -> T + Sync,
+        ctrl: bool,
+    ) -> Vec<T> {
         let scratch = &self.scratch;
         let g = |p: usize, shard: &Shard| -> T {
             let mut slot = scratch[p].lock().expect("scratch lock");
             f(p, shard, &mut slot)
         };
         let (outs, times) = self.run_nodes(&g);
-        self.charge_compute(&times);
+        self.charge_compute_lane(&times, ctrl);
         outs
     }
 
     fn charge_compute(&mut self, times: &[f64]) {
-        let max = times
-            .iter()
-            .enumerate()
-            .map(|(p, t)| t * self.cost.node_compute_scale(p))
-            .fold(0.0f64, f64::max);
+        self.charge_compute_lane(times, false);
+    }
+
+    fn charge_compute_lane(&mut self, times: &[f64], ctrl: bool) {
+        let max = if ctrl && self.engine.pipeline {
+            self.engine.compute_control(self.cost.compute_scale, times)
+        } else {
+            self.engine.compute(self.cost.compute_scale, times)
+        };
         self.ledger.compute_seconds += max;
+        self.sync_ledger();
+    }
+
+    /// Mirror the engine's critical path onto the ledger after every
+    /// charge — [`Ledger::seconds`] is a view over the timeline.
+    fn sync_ledger(&mut self) {
+        self.ledger.makespan = Some(self.engine.makespan());
+    }
+
+    fn lane(ctrl: bool) -> Lane {
+        if ctrl {
+            Lane::Control
+        } else {
+            Lane::Node
+        }
+    }
+
+    /// Schedule one dense tree/ring traversal set on the engine
+    /// (`up` = reduce toward the master, `down` = broadcast of the
+    /// result). The ledger's flat `comm_seconds` charge stays in
+    /// [`Self::charge_vector_pass`]; this models *when* the hops run.
+    fn engine_dense_traversal(&mut self, up: bool, down: bool, ctrl: bool) {
+        let depth = self.tree_depth() as usize;
+        match self.cost.topology {
+            cost::Topology::Tree => {
+                let hop = if self.n_nodes() <= 1 {
+                    0.0
+                } else {
+                    self.cost.pass_seconds(self.dim)
+                };
+                if up {
+                    let hops = vec![hop; depth];
+                    let d = if down { Some((depth, hop)) } else { None };
+                    self.engine.tree_reduce("reduce", &hops, d, Self::lane(ctrl));
+                } else if down {
+                    self.engine.broadcast(depth, hop);
+                }
+            }
+            cost::Topology::Ring => {
+                let per = self.cost.traversal_seconds(self.dim, self.n_nodes());
+                let passes = (up as usize + down as usize) as f64;
+                self.engine.ring_traversal("ring", passes * per);
+            }
+        }
+        self.sync_ledger();
     }
 
     /// Compute phase followed by a size-d vector reduce (summed in tree
@@ -185,6 +298,7 @@ impl Cluster {
         let outs = self.map_each(f);
         let sum = allreduce::tree_sum(&outs);
         self.charge_vector_pass(1);
+        self.engine_dense_traversal(true, false, false);
         sum
     }
 
@@ -198,6 +312,7 @@ impl Cluster {
         let outs = self.map_each(f);
         let sum = allreduce::tree_sum(&outs);
         self.charge_vector_pass(2);
+        self.engine_dense_traversal(true, true, false);
         sum
     }
 
@@ -207,8 +322,29 @@ impl Cluster {
     /// per-node parts (e.g. ∇L_p for the tilt) AND account the
     /// aggregation.
     pub fn reduce_parts(&mut self, parts: &[Vec<f64>], all: bool) -> Vec<f64> {
+        self.reduce_parts_lane(parts, all, false)
+    }
+
+    /// [`Self::reduce_parts`] whose result lands on the engine's
+    /// control lane (pipelined direction combine); identical to the
+    /// plain version when pipelining is off.
+    pub fn reduce_parts_ctrl(
+        &mut self,
+        parts: &[Vec<f64>],
+        all: bool,
+    ) -> Vec<f64> {
+        self.reduce_parts_lane(parts, all, true)
+    }
+
+    fn reduce_parts_lane(
+        &mut self,
+        parts: &[Vec<f64>],
+        all: bool,
+        ctrl: bool,
+    ) -> Vec<f64> {
         let sum = allreduce::tree_sum(parts);
         self.charge_vector_pass(if all { 2 } else { 1 });
+        self.engine_dense_traversal(true, all, ctrl);
         sum
     }
 
@@ -247,6 +383,28 @@ impl Cluster {
         parts: &[SparseVec],
         all: bool,
     ) -> Reduced {
+        self.reduce_parts_sparse_lane(parts, all, false)
+    }
+
+    /// [`Self::reduce_parts_sparse`] whose result lands on the
+    /// engine's control lane — the FS direction combine, which in
+    /// pipelined mode overlaps the next round's node compute ("the
+    /// safeguard consumes the reduced direction when it lands").
+    /// Identical to the plain version when pipelining is off.
+    pub fn reduce_parts_sparse_ctrl(
+        &mut self,
+        parts: &[SparseVec],
+        all: bool,
+    ) -> Reduced {
+        self.reduce_parts_sparse_lane(parts, all, true)
+    }
+
+    fn reduce_parts_sparse_lane(
+        &mut self,
+        parts: &[SparseVec],
+        all: bool,
+        ctrl: bool,
+    ) -> Reduced {
         let (out, level_bytes) = allreduce::tree_sum_sparse(parts);
         let result_bytes = out.wire_bytes() as f64;
         let nodes = self.n_nodes();
@@ -284,11 +442,38 @@ impl Cluster {
         self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
         self.ledger.comm_seconds += secs;
         self.ledger.comm_bytes += bytes;
-        // the per-level profile describes binary-tree hops — only
-        // meaningful when the time model actually charged them
-        if self.cost.topology == cost::Topology::Tree {
-            self.ledger.record_sparse_levels(&level_bytes);
+        // the per-level profile describes the logical combining tree's
+        // payload growth and is recorded under BOTH time models (on
+        // the Ring the chunked hops carry the same merged payload in
+        // aggregate — see Ledger::level_bytes)
+        self.ledger.record_sparse_levels(&level_bytes);
+        // schedule the hops on the event engine
+        match self.cost.topology {
+            cost::Topology::Tree => {
+                let hops: Vec<f64> = level_bytes
+                    .iter()
+                    .map(|&b| self.cost.hop_seconds(b as f64))
+                    .collect();
+                let down = if all {
+                    Some((
+                        self.tree_depth() as usize,
+                        self.cost.hop_seconds(result_bytes),
+                    ))
+                } else {
+                    None
+                };
+                self.engine.tree_reduce(
+                    "sparse_reduce",
+                    &hops,
+                    down,
+                    Self::lane(ctrl),
+                );
+            }
+            cost::Topology::Ring => {
+                self.engine.ring_traversal("ring", secs);
+            }
         }
+        self.sync_ledger();
         out
     }
 
@@ -297,11 +482,15 @@ impl Cluster {
     /// direction round's per-node affine coefficients. Latency-only
     /// time, zero passes (footnote 5 counts size-d vectors).
     pub fn charge_scalar_round(&mut self, k: usize) {
-        let hops = 2.0 * self.tree_depth() as f64;
-        self.ledger.comm_seconds += hops
-            * (self.cost.latency_s
-                + (k * 8) as f64 / self.cost.bandwidth_bytes_per_s);
+        let depth = self.tree_depth() as usize;
+        let hop = self.cost.latency_s
+            + (k * 8) as f64 / self.cost.bandwidth_bytes_per_s;
+        self.ledger.comm_seconds += 2.0 * depth as f64 * hop;
         self.ledger.scalar_rounds += 1;
+        // scalar rounds are control-plane by nature: in pipelined mode
+        // they never stall the self-paced node clocks
+        self.engine.scalar_round(depth, hop);
+        self.sync_ledger();
     }
 
     /// Master → nodes broadcast of a size-d vector. Charges 1 pass.
@@ -309,6 +498,7 @@ impl Cluster {
     /// but the cost is real.)
     pub fn broadcast_vec(&mut self) {
         self.charge_vector_pass(1);
+        self.engine_dense_traversal(false, true, false);
     }
 
     /// Scalar aggregation round (line-search trial): each node returns
@@ -318,7 +508,11 @@ impl Cluster {
         &mut self,
         f: impl Fn(usize, &Shard) -> [f64; K] + Sync,
     ) -> [f64; K] {
-        let outs = self.map_each(f);
+        // the per-node evaluation is tiny (margins are cached); in
+        // pipelined mode it rides the control lane with the round
+        // itself (line-search trials ARE the control plane)
+        let (outs, times) = self.run_nodes(&f);
+        self.charge_compute_lane(&times, true);
         let mut acc = [0.0; K];
         for o in outs {
             for (a, v) in acc.iter_mut().zip(o) {
@@ -340,6 +534,9 @@ impl Cluster {
         }
     }
 
+    /// Flat ledger accounting for dense passes (passes/seconds/bytes);
+    /// the *schedule* of those hops is modeled separately by
+    /// [`Self::engine_dense_traversal`].
     fn charge_vector_pass(&mut self, passes: usize) {
         let per_pass = self.cost.traversal_seconds(self.dim, self.n_nodes());
         self.ledger.comm_passes += passes as f64;
@@ -534,6 +731,79 @@ mod tests {
         let c = cluster(4);
         assert!(c.support_density() > 0.5);
         assert!(!c.prefer_sparse());
+    }
+
+    #[test]
+    fn homogeneous_makespan_matches_flat_component_sum() {
+        // the engine's non-pipelined schedule IS the barrier schedule:
+        // it must collapse to the legacy flat accumulator exactly
+        let mut c = cluster(8);
+        assert!(c.engine.profile.is_homogeneous());
+        c.broadcast_vec();
+        let _ = c.map_reduce_vec(|_, _| vec![1.0; 30]);
+        let _ = c.map_allreduce_vec(|_, _| vec![1.0; 30]);
+        let [_] = c.map_reduce_scalars(|_, s| [s.xl.n_rows() as f64]);
+        let parts: Vec<SparseVec> = (0..8)
+            .map(|p| SparseVec::from_pairs(30, vec![(p as u32, 1.0)]))
+            .collect();
+        let _ = c.reduce_parts_sparse(&parts, true);
+        let flat = c.ledger.comm_seconds + c.ledger.compute_seconds;
+        let makespan = c.ledger.seconds();
+        assert!(c.ledger.makespan.is_some());
+        assert!(
+            (makespan - flat).abs() <= 1e-9 * (1.0 + flat),
+            "makespan {makespan} vs flat {flat}"
+        );
+    }
+
+    #[test]
+    fn straggler_profile_stretches_compute_and_makespan() {
+        let mut c = cluster(4);
+        c.threads = 1; // contention-free measured compute
+        c.set_profile(NodeProfile::with_straggler(4, 1, 3.0));
+        let mut c_base = cluster(4);
+        c_base.threads = 1;
+        let work = |_: usize, _: &Shard| {
+            let mut acc = 0.0f64;
+            for i in 0..200_000 {
+                acc += (i as f64).sqrt();
+            }
+            acc
+        };
+        c.map_each(&work);
+        c_base.map_each(&work);
+        // the 3× node dominates the barrier-equivalent compute charge
+        assert!(
+            c.ledger.compute_seconds > 2.0 * c_base.ledger.compute_seconds,
+            "straggler {} vs base {}",
+            c.ledger.compute_seconds,
+            c_base.ledger.compute_seconds
+        );
+        assert!(c.ledger.seconds() >= c.ledger.compute_seconds * 0.999);
+    }
+
+    #[test]
+    fn ring_sparse_reduction_records_level_profile() {
+        // satellite regression: the per-level sparse payload profile
+        // is recorded under the Ring time model too (was Tree-only)
+        let mut c = cluster(5);
+        c.cost.topology = cost::Topology::Ring;
+        let parts: Vec<SparseVec> = (0..5)
+            .map(|p| SparseVec::from_pairs(30, vec![(p as u32, 1.0)]))
+            .collect();
+        let _ = c.reduce_parts_sparse(&parts, true);
+        assert_eq!(c.ledger.sparse_reductions, 1);
+        assert!(
+            !c.ledger.level_bytes.is_empty(),
+            "ring reduction must record the combining-tree profile"
+        );
+        assert!(!c.ledger.level_profile().is_empty());
+        // ring time model still charges by chunked merged payload
+        assert!(c.ledger.comm_seconds > 0.0);
+        // and the tree model records the same logical profile
+        let mut t = cluster(5);
+        let _ = t.reduce_parts_sparse(&parts, true);
+        assert_eq!(t.ledger.level_bytes, c.ledger.level_bytes);
     }
 
     #[test]

@@ -23,18 +23,38 @@
 //! - [`opt`] — inner/core optimizers: SVRG, SAG, SGD, TRON, L-BFGS, CG
 //!   and the distributed Armijo–Wolfe line search; the stochastic
 //!   solvers take reusable scratch working sets from the cluster pool.
-//! - [`cluster`] — the simulated AllReduce cluster with an explicit
-//!   communication cost model (passes + modeled seconds + payload
-//!   bytes). Shards store column-remapped CSRs
-//!   ([`cluster::Shard::xl`]); map phases are **threaded by default**
-//!   (`--threads 0` = auto-detect cores) and hand each node a
-//!   [`cluster::NodeScratch`] so steady-state solves allocate nothing.
-//!   Gradient/direction rounds auto-route through sparse
-//!   merge-by-index reductions when shard supports are small relative
-//!   to d (`Cluster::prefer_sparse`), charging the ledger by actual
+//! - [`cluster`] — the simulated AllReduce cluster. Shards store
+//!   column-remapped CSRs ([`cluster::Shard::xl`]); map phases are
+//!   **threaded by default** (`--threads 0` = auto-detect cores) and
+//!   hand each node a [`cluster::NodeScratch`] so steady-state solves
+//!   allocate nothing. Gradient/direction rounds auto-route through
+//!   sparse merge-by-index reductions when shard supports are small
+//!   relative to d (`Cluster::prefer_sparse`), charging by actual
 //!   bytes moved (nnz·12 vs d·8) on both Tree (per-level messages) and
 //!   Ring (chunked nnz payload) topologies, with per-level wire
-//!   profiles recorded on the [`cluster::Ledger`].
+//!   profiles recorded on the [`cluster::Ledger`] under both time
+//!   models.
+//!
+//!   **Timing** is an event-driven schedule computed by
+//!   [`cluster::Engine`]: one virtual clock per node, scaled by a
+//!   seeded [`cluster::NodeProfile`] (which replaces the deprecated
+//!   `CostModel::straggle` knob); every phase — local solve, gradient
+//!   sweep, Hv product, each tree hop, scalar round — is a timed event,
+//!   and a reduction-tree parent hop starts at `max(children ready)`,
+//!   so in pipelined schedules fast subtrees hide slow ones.
+//!   [`cluster::Ledger::seconds`] is a view over this timeline (the
+//!   critical-path makespan); `comm_seconds`/`compute_seconds` keep
+//!   the flat barrier-equivalent component breakdown, and the two
+//!   agree to ε for non-pipelined runs (pinned by `tests/engine.rs`).
+//!   FS's
+//!   `--pipeline` mode re-schedules the direction allreduce, safeguard
+//!   scalars and line search onto the engine's *control lane* so they
+//!   overlap the next round's self-paced node compute — a schedule
+//!   change only, arithmetic bit-identical. `--trace-timeline out.json`
+//!   exports the schedule as JSON:
+//!   `{makespan, nodes, pipeline, profile[], events[{label, node,
+//!   level, start, end}]}` — what `benches/pipeline.rs` and the plots
+//!   consume.
 //! - [`algo`] — FS-s (Algorithm 1) aggregating hybrid directions
 //!   (a_w·wʳ + a_g·gʳ + support-sized sparse corrections — the only
 //!   payload the direction allreduce moves), SQM, Hybrid, parameter

@@ -17,7 +17,7 @@ use psgd::algo::param_mix::{ParamMixConfig, ParamMixDriver};
 use psgd::algo::safeguard::Safeguard;
 use psgd::algo::sqm::{CoreOpt, SqmConfig, SqmDriver};
 use psgd::algo::{Driver, StopRule};
-use psgd::cluster::{Cluster, CostModel};
+use psgd::cluster::{Cluster, CostModel, NodeProfile};
 use psgd::data::dataset::Dataset;
 use psgd::data::stats::DataStats;
 use psgd::data::synth::SynthConfig;
@@ -47,6 +47,15 @@ COMMANDS
                [--test-frac F] [--seed S]
                [--threads T]   local-solve worker threads; 0 = auto
                                (all cores, the default), 1 = sequential
+               [--pipeline]    overlap the direction allreduce + line
+                               search with the next round's node compute
+                               (fs only; timing model — results are
+                               bit-identical to the barrier schedule)
+               [--straggler N:F]    node N runs F× slower (e.g. 0:3)
+               [--profile-spread X] seeded heterogeneous node speeds
+                                    1 + X·U[0,1)  [--profile-seed S]
+               [--trace-timeline out.json]  export the event engine's
+                                            per-node schedule
   figure1    regenerate the paper's Figure 1 panels for one node count
                --nodes P [--full] [--out-dir results/] [--iters N]
   info       show the AOT artifact manifest and PJRT platform
@@ -142,6 +151,39 @@ fn load_data(args: &Args, cfg: &Config) -> Dataset {
     }
 }
 
+/// Build the per-node speed profile from `--straggler N:F` /
+/// `--profile-spread X [--profile-seed S]`; None keeps the default
+/// (homogeneous, or the deprecated `CostModel::straggle` shim).
+fn node_profile(args: &Args, nodes: usize) -> Option<NodeProfile> {
+    let mut profile = None;
+    let spread = args.f64("profile-spread", 0.0);
+    if spread > 0.0 {
+        let seed = args.usize("profile-seed", 42) as u64;
+        profile = Some(NodeProfile::seeded(nodes, seed, spread));
+    }
+    if let Some(spec) = args.get("straggler") {
+        let (node, factor) = spec
+            .split_once(':')
+            .unwrap_or_else(|| panic!("--straggler expects N:F, got {spec:?}"));
+        let node: usize = node
+            .parse()
+            .unwrap_or_else(|_| panic!("--straggler node index: {node:?}"));
+        let factor: f64 = factor
+            .parse()
+            .unwrap_or_else(|_| panic!("--straggler factor: {factor:?}"));
+        assert!(
+            node < nodes,
+            "--straggler node {node} out of range (cluster has {nodes} \
+             nodes, indices 0..{nodes})"
+        );
+        let mut p =
+            profile.unwrap_or_else(|| NodeProfile::homogeneous(nodes));
+        p.speed[node] = factor;
+        profile = Some(p);
+    }
+    profile
+}
+
 fn train(args: &Args) {
     let cfg = match args.get("config") {
         Some(p) => Config::load(p).expect("config file"),
@@ -169,6 +211,9 @@ fn train(args: &Args) {
     if threads > 0 {
         cluster.threads = threads;
     }
+    if let Some(profile) = node_profile(args, nodes) {
+        cluster.set_profile(profile);
+    }
 
     let method = args.get_or("method", "fs");
     let inner = match args.get_or("inner", "svrg") {
@@ -190,6 +235,7 @@ fn train(args: &Args) {
             None => Safeguard::default(),
         },
         seed,
+        pipeline: args.bool("pipeline", false),
         ..Default::default()
     };
     let driver: Box<dyn Driver> = match method {
@@ -261,6 +307,15 @@ fn train(args: &Args) {
     if let Some(path) = args.get("trace") {
         run.trace.to_table(f_star).save(path).expect("write trace");
         eprintln!("trace written to {path}");
+    }
+    if let Some(path) = args.get("trace-timeline") {
+        std::fs::write(path, cluster.engine.timeline_json().to_json(1))
+            .expect("write timeline");
+        eprintln!(
+            "timeline written to {path} (makespan {:.3}s, {} events)",
+            cluster.engine.makespan(),
+            cluster.engine.events().len()
+        );
     }
 }
 

@@ -1,0 +1,173 @@
+//! Event-engine regression suite.
+//!
+//! The contract the engine must keep:
+//!
+//! 1. **Equivalence** — without pipelining the engine runs the
+//!    barrier schedule, so the event-driven makespan reproduces the
+//!    legacy flat accumulator (`comm_seconds + compute_seconds`) to ε
+//!    on a full FS run, for every inner solver and for heterogeneous
+//!    profiles too. The engine is a strict refinement, not a
+//!    different model.
+//! 2. **Bit-identical arithmetic** — `--pipeline` is a schedule: the
+//!    objective trace and the final iterate of a pipelined run match
+//!    the barrier run exactly.
+//! 3. **Straggler hiding** — with one node 3× slower, the pipelined
+//!    makespan is strictly lower than the barrier schedule's (the
+//!    control plane hides under the straggler's self-paced compute).
+
+use psgd::algo::fs::{FsConfig, FsDriver, InnerSolver};
+use psgd::algo::{Driver, StopRule};
+use psgd::cluster::{Cluster, CostModel, NodeProfile};
+use psgd::data::synth::SynthConfig;
+
+fn make_cluster(nodes: usize, seed: u64, cost: CostModel) -> Cluster {
+    let data = SynthConfig {
+        n_examples: 400,
+        n_features: 60,
+        nnz_per_example: 8,
+        skew: 1.0,
+        ..SynthConfig::default()
+    }
+    .generate(seed);
+    let mut c = Cluster::partition(data, nodes, cost);
+    c.threads = 1; // contention-free measured compute
+    c
+}
+
+fn fs_config(inner: InnerSolver, pipeline: bool) -> FsConfig {
+    FsConfig {
+        lam: 0.5,
+        epochs: 2,
+        inner,
+        lr: if inner == InnerSolver::Sgd { Some(0.01) } else { None },
+        pipeline,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn homogeneous_engine_reproduces_legacy_seconds_for_all_solvers() {
+    for inner in [
+        InnerSolver::Svrg,
+        InnerSolver::Sag,
+        InnerSolver::Sgd,
+        InnerSolver::Lbfgs,
+        InnerSolver::Tron,
+    ] {
+        let mut cluster = make_cluster(4, 11, CostModel::default());
+        assert!(cluster.engine.profile.is_homogeneous());
+        let run = FsDriver::new(fs_config(inner, false)).run(
+            &mut cluster,
+            None,
+            &StopRule::iters(6),
+        );
+        let flat = run.ledger.comm_seconds + run.ledger.compute_seconds;
+        let makespan = run.ledger.seconds();
+        assert!(run.ledger.makespan.is_some(), "{inner:?}: engine idle");
+        assert!(flat > 0.0, "{inner:?}: nothing charged");
+        assert!(
+            (makespan - flat).abs() <= 1e-9 * (1.0 + flat),
+            "{inner:?}: makespan {makespan} vs flat {flat}"
+        );
+    }
+}
+
+#[test]
+fn heterogeneous_barrier_schedule_still_matches_flat_sum() {
+    // the per-node profile scales the barrier charge exactly like the
+    // legacy straggle knob did: a non-pipelined heterogeneous run is
+    // still the flat accumulator (odd node count exercises the
+    // odd-tail tree pairing too)
+    let mut cluster = make_cluster(6, 13, CostModel::default());
+    cluster.set_profile(NodeProfile::seeded(6, 9, 2.0));
+    let run = FsDriver::new(fs_config(InnerSolver::Svrg, false)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(5),
+    );
+    let flat = run.ledger.comm_seconds + run.ledger.compute_seconds;
+    let makespan = run.ledger.seconds();
+    assert!(
+        (makespan - flat).abs() <= 1e-9 * (1.0 + flat),
+        "barrier schedule diverged: makespan {makespan} vs flat {flat}"
+    );
+}
+
+/// A cost model where the control plane is expensive enough to matter
+/// and modeled compute dominates measurement noise.
+fn pipeline_cost() -> CostModel {
+    CostModel {
+        latency_s: 0.05,
+        compute_scale: 20_000.0,
+        ..CostModel::default()
+    }
+}
+
+#[test]
+fn pipelined_schedule_is_bit_identical_and_faster_under_straggler() {
+    let straggler = NodeProfile::with_straggler(4, 0, 3.0);
+
+    let mut barrier = make_cluster(4, 17, pipeline_cost());
+    barrier.set_profile(straggler.clone());
+    let run_b = FsDriver::new(fs_config(InnerSolver::Svrg, false)).run(
+        &mut barrier,
+        None,
+        &StopRule::iters(8),
+    );
+
+    let mut piped = make_cluster(4, 17, pipeline_cost());
+    piped.set_profile(straggler);
+    let run_p = FsDriver::new(fs_config(InnerSolver::Svrg, true)).run(
+        &mut piped,
+        None,
+        &StopRule::iters(8),
+    );
+
+    // pipelining is a schedule, not an algorithm change: the iterates
+    // and the objective trace are bit-identical
+    assert_eq!(run_b.w, run_p.w, "pipelined iterate diverged");
+    assert_eq!(
+        run_b.trace.points.len(),
+        run_p.trace.points.len(),
+        "outer iteration counts diverged"
+    );
+    for (b, p) in run_b.trace.points.iter().zip(&run_p.trace.points) {
+        assert_eq!(b.f, p.f, "objective diverged at iter {}", b.iter);
+    }
+    // the flat component accounting is identical too (same ops ran)
+    assert_eq!(run_b.ledger.comm_passes, run_p.ledger.comm_passes);
+    assert_eq!(run_b.ledger.comm_bytes, run_p.ledger.comm_bytes);
+    assert_eq!(run_b.ledger.scalar_rounds, run_p.ledger.scalar_rounds);
+
+    // ...but the pipelined makespan is strictly lower: the direction
+    // allreduce + line search hide under the straggler's next sweep.
+    // The margin is absolute virtual seconds (≈ the control-plane time
+    // of a couple of rounds), so the assertion is robust to how fast
+    // the host measures compute.
+    let mb = run_b.ledger.seconds();
+    let mp = run_p.ledger.seconds();
+    assert!(
+        mp < mb - 0.2,
+        "pipelined {mp} not meaningfully below barrier {mb}"
+    );
+}
+
+#[test]
+fn timeline_records_phases_and_exports_json() {
+    let mut cluster = make_cluster(3, 23, CostModel::default());
+    let _ = FsDriver::new(fs_config(InnerSolver::Svrg, false)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(3),
+    );
+    let events = cluster.engine.events();
+    assert!(!events.is_empty());
+    assert!(events.iter().any(|e| e.label == "local_solve"));
+    assert!(events.iter().any(|e| e.label == "grad_sweep"));
+    assert!(events.iter().any(|e| e.label == "scalar_round"));
+    assert!(events.iter().all(|e| e.end >= e.start));
+    let json = cluster.engine.timeline_json().to_json(0);
+    assert!(json.contains("\"makespan\""));
+    assert!(json.contains("\"local_solve\""));
+    assert_eq!(cluster.engine.dropped_events(), 0);
+}
