@@ -12,19 +12,24 @@ bench:
 
 # Fast bench smoke for CI: the sparse wire pipeline, the
 # compact-vs-full inner solve (asserts compact is strictly faster and
-# ε-equivalent) and the pipelined-schedule bench (asserts pipelined
+# ε-equivalent), the pipelined-schedule bench (asserts pipelined
 # makespan ≤ barrier everywhere and strictly lower on the straggler
-# scenario, with bit-identical arithmetic).
+# scenario, with bit-identical arithmetic) and the async-FS bench
+# (asserts the bounded-staleness quorum's makespan-to-ε strictly beats
+# the pipelined schedule on the straggler). Each bench writes a
+# machine-readable BENCH_<name>.json that CI uploads as an artifact.
 bench-smoke:
 	cargo bench --bench sparse_grad
 	cargo bench --bench compact_solve
 	cargo bench --bench pipeline
+	cargo bench --bench async_fs
 
 fmt-check:
 	cargo fmt --check
 
+# blocking in CI: new lints fail PRs
 clippy:
-	cargo clippy --all-targets
+	cargo clippy --all-targets -- -D warnings
 
 # AOT-compile the JAX/Pallas kernels to artifacts/*.hlo.txt for the
 # xla-feature runtime (needs the python toolchain; not part of tier-1).

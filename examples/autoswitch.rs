@@ -57,9 +57,11 @@ fn main() {
     }
     {
         let mut c = make();
-        let mut cfg = AutoSwitchConfig::default();
-        cfg.fs = FsConfig { lam, epochs: 2, ..Default::default() };
-        cfg.switch_gnorm = args.f64("switch-gnorm", 3e-2);
+        let cfg = AutoSwitchConfig {
+            fs: FsConfig { lam, epochs: 2, ..Default::default() },
+            switch_gnorm: args.f64("switch-gnorm", 3e-2),
+            ..Default::default()
+        };
         let run = AutoSwitchDriver::new(cfg).run(&mut c, None, &stop);
         traces.push(run.trace);
     }

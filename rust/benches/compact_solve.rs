@@ -14,9 +14,10 @@ use psgd::loss::LossKind;
 use psgd::objective::compact::{CompactApprox, GlobalDots, HybridDir};
 use psgd::objective::{shard_loss_grad, LocalApprox, Objective};
 use psgd::opt::svrg::{svrg_epochs, SvrgParams};
+use psgd::util::json::Value;
 use psgd::util::rng::Rng;
 
-fn bench_at(d: usize, check_equivalence: bool) {
+fn bench_at(d: usize, check_equivalence: bool) -> Value {
     let data = SynthConfig {
         n_examples: 2_000,
         n_features: d,
@@ -87,10 +88,33 @@ fn bench_at(d: usize, check_equivalence: bool) {
         println!("full-vs-compact solve max |Δ| = {diff:.3e}");
         assert!(diff < 1e-8, "solves diverged: {diff}");
     }
+
+    Value::obj(vec![
+        ("dim", Value::Num(d as f64)),
+        ("full_median_s", Value::Num(full_stats.median_s)),
+        ("compact_median_s", Value::Num(compact_stats.median_s)),
+        (
+            "compact_speedup",
+            Value::Num(full_stats.median_s / compact_stats.median_s),
+        ),
+        (
+            "working_set_ratio",
+            Value::Num(ws_full as f64 / ws_compact.max(1) as f64),
+        ),
+    ])
 }
 
 fn main() {
     println!("### compact_solve benches (2k rows × 10 nnz per shard)\n");
-    bench_at(500_000, true);
-    bench_at(5_000_000, false);
+    let at_500k = bench_at(500_000, true);
+    let at_5m = bench_at(5_000_000, false);
+    // machine-readable record for the CI perf trajectory
+    let out = Value::obj(vec![
+        ("bench", Value::Str("compact_solve".to_string())),
+        ("d500k", at_500k),
+        ("d5m", at_5m),
+    ]);
+    std::fs::write("BENCH_compact_solve.json", out.to_json(1))
+        .expect("write BENCH_compact_solve.json");
+    println!("wrote BENCH_compact_solve.json");
 }

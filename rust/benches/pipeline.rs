@@ -14,6 +14,7 @@ use psgd::algo::fs::{FsConfig, FsDriver};
 use psgd::algo::{Driver, RunResult, StopRule};
 use psgd::cluster::{Cluster, CostModel, NodeProfile};
 use psgd::data::synth::SynthConfig;
+use psgd::util::json::Value;
 
 const NODES: usize = 8;
 const ITERS: usize = 10;
@@ -63,6 +64,8 @@ fn main() {
         ("straggler3x", NodeProfile::with_straggler(NODES, 0, 3.0)),
     ];
 
+    let mut scen_json: Vec<(&str, Value)> = Vec::new();
+    let mut straggler_margin = f64::NAN;
     for (name, profile) in &scenarios {
         let barrier = run_fs(&c0, profile, false);
         let piped = run_fs(&c0, profile, true);
@@ -97,12 +100,33 @@ fn main() {
         // margin is absolute virtual seconds (≈ one round's control
         // plane), robust to host speed.
         if *name == "straggler3x" {
+            straggler_margin = mb - mp;
             assert!(
                 mp < mb - 0.25,
                 "straggler: pipelined {mp} not strictly below barrier {mb}"
             );
         }
+        scen_json.push((
+            *name,
+            Value::obj(vec![
+                ("barrier_s", Value::Num(mb)),
+                ("pipelined_s", Value::Num(mp)),
+                ("comm_bytes", Value::Num(piped.ledger.comm_bytes)),
+            ]),
+        ));
     }
+
+    // machine-readable record for the CI perf trajectory
+    let out = Value::obj(vec![
+        ("bench", Value::Str("pipeline".to_string())),
+        ("nodes", Value::Num(NODES as f64)),
+        ("iters", Value::Num(ITERS as f64)),
+        ("scenarios", Value::obj(scen_json)),
+        ("pipeline_margin_s", Value::Num(straggler_margin)),
+    ]);
+    std::fs::write("BENCH_pipeline.json", out.to_json(1))
+        .expect("write BENCH_pipeline.json");
+    println!("\nwrote BENCH_pipeline.json");
 
     println!(
         "\nreading: the barrier schedule serializes every direction \

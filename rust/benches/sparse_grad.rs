@@ -12,6 +12,7 @@ use psgd::cluster::{Cluster, CostModel};
 use psgd::data::synth::SynthConfig;
 use psgd::linalg::SparseVec;
 use psgd::loss::LossKind;
+use psgd::util::json::Value;
 use psgd::util::rng::Rng;
 
 const D: usize = 500_000;
@@ -82,4 +83,26 @@ fn main() {
         "sparse tree wire profile: {}",
         c_sparse.ledger.level_profile()
     );
+
+    // machine-readable record for the CI perf trajectory
+    let out = Value::obj(vec![
+        ("bench", Value::Str("sparse_grad".to_string())),
+        ("dim", Value::Num(D as f64)),
+        ("nodes", Value::Num(NODES as f64)),
+        ("tree_sum_dense_s", Value::Num(results[0].median_s)),
+        ("tree_sum_sparse_s", Value::Num(results[1].median_s)),
+        ("dense_wire_bytes", Value::Num(c_dense.ledger.comm_bytes)),
+        ("sparse_wire_bytes", Value::Num(c_sparse.ledger.comm_bytes)),
+        ("dense_comm_s", Value::Num(c_dense.ledger.comm_seconds)),
+        ("sparse_comm_s", Value::Num(c_sparse.ledger.comm_seconds)),
+        (
+            "wire_ratio",
+            Value::Num(
+                c_dense.ledger.comm_bytes / c_sparse.ledger.comm_bytes,
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_sparse_grad.json", out.to_json(1))
+        .expect("write BENCH_sparse_grad.json");
+    println!("wrote BENCH_sparse_grad.json");
 }

@@ -1,0 +1,533 @@
+//! **Bounded-staleness asynchronous FS** — stale-tolerant directions
+//! in the maths, not just the schedule.
+//!
+//! PR 3's `--pipeline` mode overlapped the *control plane* with node
+//! compute but kept the algorithm synchronous: every outer round's
+//! direction still waits for every node's fresh local solve, so one
+//! straggler gates the whole cluster. This driver relaxes exactly that
+//! barrier, the way the asynchronous SGD literature does (Keuper &
+//! Pfreundt, arXiv:1505.04956) but *without* trading away the paper's
+//! strong-convergence guarantee (the gap sound-combiner approaches,
+//! Maleki et al. arXiv:1705.08030, close only for linear learners):
+//!
+//! - **Solver lanes.** Each node's local solves run on a per-node
+//!   solver lane the driver schedules itself: a solve for round r
+//!   starts when the node is idle and gʳ has landed, and takes the
+//!   node's measured solve seconds × its
+//!   [`NodeProfile`](crate::cluster::NodeProfile) speed. The
+//!   node's *main* lane keeps doing gradient sweeps and line-search
+//!   scalars every round (the cheap, synchronous commit path), so a
+//!   straggler's slow solver never blocks the gradient allreduce.
+//!   A solve whose reference has fallen more than τ rounds behind is
+//!   aborted — the node re-solves against the newest reference
+//!   (bounded staleness, enforced at the node).
+//!
+//! - **Arrival-ordered quorum.** At round r the master combines
+//!   whatever has arrived by the engine's virtual clock: it waits
+//!   until `q` of the P nodes' *round-r* solves have landed (or all
+//!   of them, when stragglers mid-solve leave fewer than q in flight
+//!   for this round), then every node contributes its freshest solve
+//!   available by that deadline — a straggler is represented by its
+//!   most recent completed [`HybridDir`], computed for some round
+//!   r′ ≥ r − τ. Stale hybrids are re-based onto the
+//!   current wʳ through the same affine machinery the wire format
+//!   already uses: d_p = a_w·wʳ′ + a_g·gʳ′ + corr targets the point
+//!   wʳ′ + d_p, so its re-based form is d̃_p = d_p + (wʳ′ − wʳ) —
+//!   per distinct stale reference the master folds
+//!   (a_w + 1, a_g) onto its stored (wʳ′, gʳ′) pair and −1 onto the
+//!   current wʳ. Nodes still ship only (a_w, a_g) + a support-sized
+//!   correction; the master keeps the last τ+1 references (O(τ·d)
+//!   master memory, never per-node).
+//!
+//! - **The safeguard is the correctness gate.** Fresh contributions
+//!   get Algorithm 1's per-direction safeguard at their own reference,
+//!   exactly as the synchronous driver applies it. Stale re-based
+//!   contributions are accepted on faith — and the *combined*
+//!   direction must then pass the same θ-cone test against the
+//!   current −gʳ
+//!   ([`Safeguard::accepts_combined`](crate::algo::safeguard::Safeguard::accepts_combined)).
+//!   A convex
+//!   combination of per-part-safeguarded fresh directions always
+//!   passes, so a rejection isolates genuine stale contamination: the
+//!   round discards the quorum direction, aborts every solver lane
+//!   and falls back to the synchronous barrier direction (fresh
+//!   solves from all P nodes, per-part safeguard, the shared
+//!   [`combine_hybrids`] path) — which is why tier-1 convergence
+//!   holds for any (τ, q): every committed direction is either
+//!   θ-cone descent or the certified synchronous one, and the
+//!   strong-Wolfe line search runs on it unchanged.
+//!
+//! **When async ≡ sync:** with τ = 0 and q = P only fresh solves are
+//! eligible and the deadline is the last of them, so every round is
+//! exactly Algorithm 1's — the driver produces *bit-identical*
+//! iterates to [`FsDriver`](crate::algo::fs::FsDriver)
+//! (`tests/async_fs.rs` pins this). The win appears when q < P under
+//! heterogeneous profiles: rounds advance at the pace of the q-th
+//! node, the straggler contributes stale (≤ τ) directions when they
+//! arrive, and `benches/async_fs.rs` asserts the makespan-to-ε
+//! strictly beats the pipelined synchronous schedule on the straggler
+//! profile.
+//!
+//! Per-round staleness lands in
+//! [`Ledger::staleness_hist`](crate::cluster::Ledger::staleness_hist) /
+//! [`Ledger::fallback_rounds`](crate::cluster::Ledger::fallback_rounds),
+//! per-event staleness in the timeline
+//! export (`--trace-timeline`), and the CLI drives it with
+//! `psgd train --method fs --async-fs --staleness τ --quorum q`.
+
+use std::collections::VecDeque;
+
+use crate::algo::common::{
+    global_value_grad_auto, global_value_grad_cached_auto, test_auprc,
+};
+use crate::algo::fs::{
+    combine_hybrids, combine_weights, local_direction, FsConfig,
+};
+use crate::algo::{Driver, RunResult, StopRule};
+use crate::cluster::allreduce::Reduced;
+use crate::cluster::Cluster;
+use crate::data::dataset::Dataset;
+use crate::linalg::dense;
+use crate::linalg::sparse::SparseVec;
+use crate::metrics::trace::{Trace, TracePoint};
+use crate::objective::compact::{GlobalDots, HybridDir};
+use crate::opt::linesearch::{strong_wolfe, MarginPhi, PhiLambda};
+
+#[derive(Clone, Debug)]
+pub struct AsyncFsConfig {
+    pub fs: FsConfig,
+    /// τ — a contribution combined at round r must have been computed
+    /// against a reference (wʳ′, gʳ′) with r − r′ ≤ τ. 0 = fully
+    /// synchronous (with `quorum = P`, bit-identical to [`FsDriver`]).
+    ///
+    /// [`FsDriver`]: crate::algo::fs::FsDriver
+    pub staleness: usize,
+    /// q — the master combines as soon as q of the P nodes have an
+    /// eligible contribution (clamped to 1..=P at run time;
+    /// `usize::MAX` = wait for everyone).
+    pub quorum: usize,
+}
+
+impl Default for AsyncFsConfig {
+    fn default() -> Self {
+        AsyncFsConfig {
+            fs: FsConfig::default(),
+            staleness: 1,
+            quorum: usize::MAX,
+        }
+    }
+}
+
+pub struct AsyncFsDriver {
+    pub config: AsyncFsConfig,
+}
+
+impl AsyncFsDriver {
+    pub fn new(config: AsyncFsConfig) -> AsyncFsDriver {
+        AsyncFsDriver { config }
+    }
+}
+
+/// One local solve on a node's solver lane.
+struct Solve {
+    /// outer round whose (wʳ, gʳ) the solve used
+    for_round: usize,
+    /// virtual completion time on the solver lane
+    done: f64,
+    dir: HybridDir,
+}
+
+/// A node's solver-lane state: at most one solve in flight plus the
+/// most recent completed one (reusable until it exceeds τ).
+#[derive(Default)]
+struct SolverLane {
+    inflight: Option<Solve>,
+    latest: Option<Solve>,
+}
+
+/// One contribution the master combines at a round.
+struct Contribution {
+    node: usize,
+    /// r − for_round at the combining round
+    staleness: usize,
+    /// virtual time it reached the master (≥ the round start)
+    arrival: f64,
+    dir: HybridDir,
+}
+
+/// The stored (wʳ′, gʳ′) pair a stale hybrid re-bases against.
+fn lookup_ref(
+    history: &VecDeque<(usize, Vec<f64>, Vec<f64>)>,
+    round: usize,
+) -> (&[f64], &[f64]) {
+    history
+        .iter()
+        .find(|(r, _, _)| *r == round)
+        .map(|(_, w, g)| (w.as_slice(), g.as_slice()))
+        .expect("stale reference inside the τ window")
+}
+
+impl Driver for AsyncFsDriver {
+    fn name(&self) -> String {
+        let q = if self.config.quorum == usize::MAX {
+            "all".to_string()
+        } else {
+            self.config.quorum.to_string()
+        };
+        format!(
+            "afs-t{}-q{}-{}",
+            self.config.staleness, q, self.config.fs.epochs
+        )
+    }
+
+    fn run(
+        &self,
+        cluster: &mut Cluster,
+        test: Option<&Dataset>,
+        stop: &StopRule,
+    ) -> RunResult {
+        let c = &self.config.fs;
+        let tau = self.config.staleness;
+        let p_nodes = cluster.n_nodes();
+        let q = self.config.quorum.clamp(1, p_nodes);
+        let dim = cluster.dim;
+        let sparse = cluster.prefer_sparse();
+        // the async schedule is its own: solver lanes self-pace, the
+        // main lanes barrier on the gradient/commit path
+        cluster.set_pipeline(false);
+        let mut w = vec![0.0; dim];
+        let mut trace = Trace::new(self.name());
+        cluster.broadcast_vec(); // ship w⁰
+        let mut gnorm0 = f64::INFINITY;
+        let mut f = f64::INFINITY;
+        let mut last_hits = 0usize;
+        let mut margins: Vec<Vec<f64>> = Vec::new();
+        let mut lanes: Vec<SolverLane> =
+            (0..p_nodes).map(|_| SolverLane::default()).collect();
+        // master-side reference ring for stale re-basing: the last
+        // τ+1 (round, wʳ, gʳ) triples — O(τ·d) at the master only
+        let mut history: VecDeque<(usize, Vec<f64>, Vec<f64>)> =
+            VecDeque::new();
+
+        for r in 0.. {
+            // --- step 1: synchronous gradient allreduce at wʳ (the
+            // cheap commit path every node's main lane walks) ---
+            let (f_r, g, grad_parts) = if margins.is_empty() {
+                let (f_r, g, gp, z) = global_value_grad_auto(
+                    cluster, &w, c.loss, c.lam, true, sparse,
+                );
+                margins = z;
+                (f_r, g, gp)
+            } else {
+                global_value_grad_cached_auto(
+                    cluster, &margins, &w, c.loss, c.lam, true, sparse,
+                )
+            };
+            f = f_r;
+            let gnorm = dense::norm(&g);
+            if r == 0 {
+                gnorm0 = gnorm;
+            }
+            trace.push(TracePoint {
+                iter: r,
+                f,
+                gnorm,
+                comm_passes: cluster.ledger.comm_passes,
+                seconds: cluster.ledger.seconds(),
+                auprc: test_auprc(test, &w),
+                safeguard_hits: last_hits,
+            });
+            if gnorm == 0.0
+                || stop.should_stop(r, f, gnorm, gnorm0, &cluster.ledger)
+            {
+                break;
+            }
+
+            let dots = GlobalDots::compute(&w, &g);
+            history.push_back((r, w.clone(), g.clone()));
+            while history.len() > tau + 1 {
+                history.pop_front();
+            }
+            // gʳ is on every node once the grad allreduce lands
+            let t_round = cluster.engine.makespan();
+
+            // --- solver lanes: promote finished work, abort work the
+            // staleness bound has already expired, refill idle
+            // solvers with fresh round-r solves ---
+            let mut fresh: Vec<usize> = Vec::new();
+            for (p, lane) in lanes.iter_mut().enumerate() {
+                if lane
+                    .inflight
+                    .as_ref()
+                    .is_some_and(|s| s.done <= t_round)
+                {
+                    lane.latest = lane.inflight.take();
+                }
+                if lane
+                    .inflight
+                    .as_ref()
+                    .is_some_and(|s| s.for_round + tau < r)
+                {
+                    lane.inflight = None;
+                }
+                if lane
+                    .latest
+                    .as_ref()
+                    .is_some_and(|s| s.for_round + tau < r)
+                {
+                    lane.latest = None;
+                }
+                if lane.inflight.is_none() {
+                    fresh.push(p);
+                }
+            }
+            let w_ref = &w;
+            let g_ref = &g;
+            let gp_ref = &grad_parts;
+            let solved = cluster.map_nodes_timed(&fresh, |p, shard, s| {
+                local_direction(
+                    c, p, shard, s, dim, &dots, w_ref, g_ref, gp_ref, r,
+                )
+            });
+            let scale = cluster.cost.compute_scale;
+            let mut max_dur = 0.0f64;
+            for (&p, (dir, secs)) in fresh.iter().zip(solved) {
+                let dur = secs * scale * cluster.engine.profile.scale(p);
+                max_dur = max_dur.max(dur);
+                cluster
+                    .engine
+                    .solver_event("async_solve", p, t_round, t_round + dur);
+                lanes[p].inflight =
+                    Some(Solve { for_round: r, done: t_round + dur, dir });
+            }
+            // flat barrier-equivalent component; the schedule itself
+            // lives on the solver lanes
+            cluster.ledger.compute_seconds += max_dur;
+
+            // --- arrival-ordered quorum collection ---
+            // the quorum counts FRESH responses: the master waits
+            // until q nodes' round-r solves have arrived on its
+            // virtual clock (when stragglers mid-solve leave fewer
+            // than q in flight for round r, it waits for all of
+            // those; with none at all it combines immediately)
+            let mut fresh_avail: Vec<f64> = lanes
+                .iter()
+                .filter_map(|lane| {
+                    lane.inflight
+                        .as_ref()
+                        .filter(|s| s.for_round == r)
+                        .map(|s| s.done)
+                })
+                .collect();
+            fresh_avail
+                .sort_by(|a, b| a.partial_cmp(b).expect("finite avail"));
+            let deadline = match fresh_avail.len() {
+                0 => t_round,
+                n => fresh_avail[n.min(q) - 1],
+            };
+            // each node at the deadline delivers its freshest solve
+            // available by then (a finished in-flight beats `latest`)
+            let mut contribs: Vec<Contribution> = Vec::new();
+            for (p, lane) in lanes.iter().enumerate() {
+                let chosen = lane
+                    .inflight
+                    .as_ref()
+                    .filter(|s| s.done <= deadline)
+                    .or_else(|| lane.latest.as_ref());
+                if let Some(s) = chosen {
+                    contribs.push(Contribution {
+                        node: p,
+                        staleness: r - s.for_round,
+                        arrival: s.done.max(t_round),
+                        dir: s.dir.clone(),
+                    });
+                }
+            }
+            let full_fresh = contribs.len() == p_nodes
+                && contribs.iter().all(|cb| cb.staleness == 0);
+
+            // --- step 6 on the fresh parts (Algorithm 1's safeguard
+            // at their own — current — reference) ---
+            let mut hits = 0usize;
+            for cb in contribs.iter_mut().filter(|cb| cb.staleness == 0) {
+                hits += c.safeguard.apply_hybrid(
+                    &dots,
+                    &w,
+                    &g,
+                    std::slice::from_mut(&mut cb.dir),
+                );
+            }
+
+            // --- step 7 over the quorum: fresh parts combine exactly
+            // like the synchronous driver; each stale part re-bases
+            // onto wʳ via its stored reference pair ---
+            let contrib_nodes: Vec<usize> =
+                contribs.iter().map(|cb| cb.node).collect();
+            let weights = combine_weights(cluster, c.combine, &contrib_nodes);
+            let arrivals: Vec<(usize, f64, usize)> = contribs
+                .iter()
+                .map(|cb| (cb.node, cb.arrival, cb.staleness))
+                .collect();
+            let mut d: Vec<f64> = if sparse {
+                let mut a_w_sum = 0.0;
+                let mut a_g_sum = 0.0;
+                // per distinct stale reference round: the (wʳ′, gʳ′)
+                // coefficient pair its re-based hybrids contribute
+                let mut old: Vec<(usize, f64, f64)> = Vec::new();
+                let mut parts: Vec<SparseVec> =
+                    Vec::with_capacity(contribs.len());
+                for (cb, &cw) in contribs.iter().zip(&weights) {
+                    if cb.staleness == 0 {
+                        a_w_sum += cw * cb.dir.a_w;
+                        a_g_sum += cw * cb.dir.a_g;
+                    } else {
+                        // d̃ = a_w·wʳ′ + a_g·gʳ′ + corr + (wʳ′ − wʳ)
+                        let rr = r - cb.staleness;
+                        match old.iter_mut().find(|o| o.0 == rr) {
+                            Some(o) => {
+                                o.1 += cw * (cb.dir.a_w + 1.0);
+                                o.2 += cw * cb.dir.a_g;
+                            }
+                            None => old.push((
+                                rr,
+                                cw * (cb.dir.a_w + 1.0),
+                                cw * cb.dir.a_g,
+                            )),
+                        }
+                        a_w_sum -= cw; // the −wʳ re-basing term
+                    }
+                    let mut sv = cb.dir.corr.clone();
+                    sv.scale(cw);
+                    parts.push(sv);
+                }
+                // the per-contribution (a_w, a_g) pairs ride a scalar
+                // round alongside the corr reduce, as in the sync path
+                cluster.charge_scalar_round(2);
+                let (reduced, _landed) = cluster
+                    .async_quorum_reduce_sparse(&parts, &arrivals, true);
+                let mut d: Vec<f64> = w
+                    .iter()
+                    .zip(&g)
+                    .map(|(wj, gj)| a_w_sum * wj + a_g_sum * gj)
+                    .collect();
+                match reduced {
+                    Reduced::Sparse(sv) => sv.axpy_into(1.0, &mut d),
+                    Reduced::Dense(v) => dense::axpy(1.0, &v, &mut d),
+                }
+                for (rr, aw, ag) in old {
+                    let (w_old, g_old) = lookup_ref(&history, rr);
+                    for ((dj, wj), gj) in
+                        d.iter_mut().zip(w_old).zip(g_old)
+                    {
+                        *dj += aw * wj + ag * gj;
+                    }
+                }
+                d
+            } else {
+                let parts: Vec<Vec<f64>> = contribs
+                    .iter()
+                    .zip(&weights)
+                    .map(|(cb, &cw)| {
+                        let mut dd = if cb.staleness == 0 {
+                            cb.dir.to_dense(&w, &g)
+                        } else {
+                            let (w_old, g_old) =
+                                lookup_ref(&history, r - cb.staleness);
+                            let mut v = cb.dir.to_dense(w_old, g_old);
+                            // re-base the stale target point onto wʳ
+                            for ((vj, wo), wc) in
+                                v.iter_mut().zip(w_old).zip(&w)
+                            {
+                                *vj += wo - wc;
+                            }
+                            v
+                        };
+                        dense::scale(&mut dd, cw);
+                        dd
+                    })
+                    .collect();
+                cluster.async_quorum_reduce(&parts, &arrivals, true).0
+            };
+
+            // --- the correctness gate: a full fresh quorum IS the
+            // synchronous round and skips it; anything less must sit
+            // inside the θ cone around −gʳ or the round falls back to
+            // the synchronous barrier direction ---
+            let mut fell_back = false;
+            if !full_fresh && !c.safeguard.accepts_combined(&g, &d) {
+                fell_back = true;
+                // abort every solver lane (the master broadcasts the
+                // resync); resolve every node freshly at wʳ on the
+                // barrier'd main lanes and run the exact Algorithm-1
+                // round — stale work bought nothing this round
+                for lane in lanes.iter_mut() {
+                    lane.inflight = None;
+                    lane.latest = None;
+                }
+                cluster.engine.set_phase("fallback_solve");
+                let mut dirs: Vec<HybridDir> =
+                    cluster.map_each_scratch(|p, shard, s| {
+                        local_direction(
+                            c, p, shard, s, dim, &dots, w_ref, g_ref,
+                            gp_ref, r,
+                        )
+                    });
+                hits += c.safeguard.apply_hybrid(&dots, &w, &g, &mut dirs);
+                let all_nodes: Vec<usize> = (0..p_nodes).collect();
+                let weights =
+                    combine_weights(cluster, c.combine, &all_nodes);
+                d = combine_hybrids(cluster, dirs, &weights, &w, &g, sparse);
+            }
+            last_hits = hits;
+            let staleness_seen: Vec<usize> =
+                contribs.iter().map(|cb| cb.staleness).collect();
+            cluster.ledger.record_async_round(&staleness_seen, fell_back);
+
+            // --- step 8: distributed line search on margins (the
+            // synchronous driver's, verbatim) ---
+            let d_ref = &d;
+            cluster.engine.set_phase("dir_matvec");
+            let dz_parts: Vec<Vec<f64>> =
+                cluster.map_each_scratch_ctrl(|_, shard, s| {
+                    shard.map.gather(d_ref, &mut s.buf);
+                    let mut dz = vec![0.0; shard.xl.n_rows()];
+                    shard.xl.matvec(&s.buf, &mut dz);
+                    dz
+                });
+            let lam_part = PhiLambda::new(c.lam, &w, &d);
+            let loss_kind = c.loss;
+            let margins_ref = &margins;
+            let dz_ref = &dz_parts;
+            let ls = strong_wolfe(
+                |t| {
+                    let [lsum, dlsum] =
+                        cluster.map_reduce_scalars(|p, shard| {
+                            let phi = MarginPhi {
+                                z: &margins_ref[p],
+                                dz: &dz_ref[p],
+                                y: &shard.y,
+                                loss: loss_kind,
+                            };
+                            let (a, b) = phi.partial(t);
+                            [a, b]
+                        });
+                    lam_part.compose(t, lsum, dlsum)
+                },
+                &c.wolfe,
+            );
+            let t = match ls {
+                Ok(res) => {
+                    f = res.phi_t;
+                    res.t
+                }
+                Err(_) => break,
+            };
+            // --- step 9 ---
+            dense::axpy(t, &d, &mut w);
+            for (z, dz) in margins.iter_mut().zip(&dz_parts) {
+                dense::axpy(t, dz, z);
+            }
+        }
+        RunResult { w, f, trace, ledger: cluster.ledger.clone() }
+    }
+}

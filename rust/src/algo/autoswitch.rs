@@ -163,9 +163,11 @@ mod tests {
     #[test]
     fn switches_and_converges() {
         let mut cluster = make_cluster();
-        let mut cfg = AutoSwitchConfig::default();
-        cfg.fs.lam = 0.5;
-        cfg.switch_gnorm = 1e-2;
+        let cfg = AutoSwitchConfig {
+            fs: FsConfig { lam: 0.5, ..Default::default() },
+            switch_gnorm: 1e-2,
+            ..Default::default()
+        };
         let run = AutoSwitchDriver::new(cfg)
             .run(&mut cluster, None, &StopRule::iters(120));
         let last = run.trace.last().unwrap();

@@ -36,14 +36,21 @@
 //! (arXiv:1505.04956, arXiv:1705.08030): a real async deployment hides
 //! the control plane behind speculative node compute and reconciles
 //! when the committed step lands.
+//!
+//! For asynchrony in the *maths* — stale directions combined under a
+//! bounded-staleness quorum, with this module's safeguard as the
+//! correctness gate — see [`crate::algo::async_fs`], which shares this
+//! driver's per-node solve (`local_direction`) and step-7 combine
+//! (`combine_hybrids`) verbatim.
 
 use crate::algo::common::{
     global_value_grad_auto, global_value_grad_cached_auto, test_auprc,
+    LocalGrads,
 };
 use crate::algo::safeguard::Safeguard;
 use crate::algo::{Driver, RunResult, StopRule};
 use crate::cluster::allreduce::Reduced;
-use crate::cluster::{Cluster, NodeScratch};
+use crate::cluster::{Cluster, NodeScratch, Shard};
 use crate::data::dataset::Dataset;
 use crate::linalg::dense;
 use crate::linalg::sparse::SparseVec;
@@ -133,22 +140,23 @@ impl FsDriver {
     pub fn new(config: FsConfig) -> FsDriver {
         FsDriver { config }
     }
+}
 
-    /// Run the local solver on the compact f̂_p from its own wʳ.
-    fn solve_local(
-        &self,
-        approx: &CompactApprox,
-        node: usize,
-        iter: usize,
-        scratch: &mut NodeScratch,
-    ) -> SolveOut {
-        let c = &self.config;
-        let seed = c
-            .seed
-            .wrapping_mul(0x9E3779B97F4A7C15)
-            .wrapping_add((iter as u64) << 20)
-            .wrapping_add(node as u64);
-        match c.inner {
+/// Run the configured inner solver on the compact f̂_p from its own wʳ
+/// (free function so the async driver reruns the exact same solves).
+fn solve_local(
+    c: &FsConfig,
+    approx: &CompactApprox,
+    node: usize,
+    iter: usize,
+    scratch: &mut NodeScratch,
+) -> SolveOut {
+    let seed = c
+        .seed
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add((iter as u64) << 20)
+        .wrapping_add(node as u64);
+    match c.inner {
             InnerSolver::Svrg => SolveOut::Point(
                 svrg_epochs_with(
                     approx,
@@ -202,18 +210,151 @@ impl FsDriver {
                 )
                 .w,
             ),
-            InnerSolver::Tron => SolveOut::Point(
-                tron::minimize(
-                    approx,
-                    &approx.w_r,
-                    &TronParams {
-                        max_iter: c.epochs.max(1),
-                        eps: 1e-10,
-                        ..Default::default()
-                    },
-                )
-                .w,
-            ),
+        InnerSolver::Tron => SolveOut::Point(
+            tron::minimize(
+                approx,
+                &approx.w_r,
+                &TronParams {
+                    max_iter: c.epochs.max(1),
+                    eps: 1e-10,
+                    ..Default::default()
+                },
+            )
+            .w,
+        ),
+    }
+}
+
+/// One node's steps 3–5: gather (wʳ, gʳ) onto the shard support, build
+/// the compact f̂_p at the given reference, run the inner solver and
+/// package the deviation as a [`HybridDir`]. Shared verbatim by the
+/// synchronous driver (inside `map_each_scratch`) and the
+/// bounded-staleness async driver (on its solver lanes), so the two
+/// produce bit-identical directions from identical references.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn local_direction(
+    c: &FsConfig,
+    p: usize,
+    shard: &Shard,
+    s: &mut NodeScratch,
+    dim: usize,
+    dots: &GlobalDots,
+    w: &[f64],
+    g: &[f64],
+    grads: &LocalGrads,
+    iter: usize,
+) -> HybridDir {
+    shard.map.gather(w, &mut s.wloc);
+    shard.map.gather(g, &mut s.gloc);
+    let glp = grads.support_vals(p, &shard.map, &mut s.vals);
+    let approx = CompactApprox::build(
+        &shard.xl, &shard.y, c.loss, c.lam, dots, &s.wloc, &s.gloc, glp,
+    );
+    let out = solve_local(c, &approx, p, iter, s);
+    match out {
+        SolveOut::Point(w_p) => {
+            let (a_w, a_g) = approx.off_support_coeffs(&w_p);
+            HybridDir::from_compact(
+                &shard.map,
+                dim,
+                a_w,
+                a_g,
+                &w_p,
+                &approx.w_r[..approx.m],
+                &s.gloc,
+            )
+        }
+        SolveOut::Shrink(w_c, shrink) => HybridDir::from_compact(
+            &shard.map,
+            dim,
+            shrink - 1.0,
+            0.0,
+            &w_c,
+            &approx.w_r[..approx.m],
+            &s.gloc,
+        ),
+    }
+}
+
+/// Algorithm 1 step 7 — the convex combination of safeguarded
+/// directions, exactly as the synchronous driver runs it: coefficient
+/// sums + one sparse allreduce of the weighted corrections in the
+/// sparse regime, materialized dense parts through the classic dense
+/// allreduce otherwise. Shared by the FS driver and the async
+/// driver's synchronous-fallback path so "the barrier direction" is
+/// one implementation, not two.
+pub(crate) fn combine_hybrids(
+    cluster: &mut Cluster,
+    dirs: Vec<HybridDir>,
+    weights: &[f64],
+    w: &[f64],
+    g: &[f64],
+    sparse: bool,
+) -> Vec<f64> {
+    if sparse {
+        let mut a_w_sum = 0.0;
+        let mut a_g_sum = 0.0;
+        let mut parts: Vec<SparseVec> = Vec::with_capacity(dirs.len());
+        for (dp, &cw) in dirs.into_iter().zip(weights) {
+            a_w_sum += cw * dp.a_w;
+            a_g_sum += cw * dp.a_g;
+            // scale in place — the direction set is consumed
+            // here, so no support-sized copies
+            let mut sv = dp.corr;
+            sv.scale(cw);
+            parts.push(sv);
+        }
+        // the (a_w, a_g) pair each node contributes rides a
+        // scalar aggregation round alongside the corr reduce;
+        // both land on the control lane so a pipelined
+        // schedule overlaps them with the next round's sweeps
+        cluster.charge_scalar_round(2);
+        let reduced = cluster.reduce_parts_sparse_ctrl(&parts, true);
+        let mut d: Vec<f64> = w
+            .iter()
+            .zip(g)
+            .map(|(wj, gj)| a_w_sum * wj + a_g_sum * gj)
+            .collect();
+        match reduced {
+            Reduced::Sparse(sv) => sv.axpy_into(1.0, &mut d),
+            Reduced::Dense(v) => dense::axpy(1.0, &v, &mut d),
+        }
+        d
+    } else {
+        let parts: Vec<Vec<f64>> = dirs
+            .into_iter()
+            .zip(weights)
+            .map(|(dp, &cw)| {
+                let mut dd = dp.to_dense(w, g);
+                dense::scale(&mut dd, cw);
+                dd
+            })
+            .collect();
+        cluster.reduce_parts_ctrl(&parts, true)
+    }
+}
+
+/// Step 7's convex weights over the given shard set (node indices),
+/// shared by the synchronous and async drivers.
+pub(crate) fn combine_weights(
+    cluster: &Cluster,
+    combine: Combine,
+    nodes: &[usize],
+) -> Vec<f64> {
+    match combine {
+        Combine::Average => {
+            let n = nodes.len() as f64;
+            vec![1.0 / n; nodes.len()]
+        }
+        Combine::SizeWeighted => {
+            let total: f64 = nodes
+                .iter()
+                .map(|&p| cluster.shards[p].n_examples() as f64)
+                .sum();
+            nodes
+                .iter()
+                .map(|&p| cluster.shards[p].n_examples() as f64 / total)
+                .collect()
         }
     }
 }
@@ -298,59 +439,15 @@ impl Driver for FsDriver {
             cluster.engine.set_phase("local_solve");
             let mut dirs: Vec<HybridDir> =
                 cluster.map_each_scratch(|p, shard, s| {
-                    shard.map.gather(w_ref, &mut s.wloc);
-                    shard.map.gather(g_ref, &mut s.gloc);
-                    let glp = gp_ref.support_vals(p, &shard.map, &mut s.vals);
-                    let approx = CompactApprox::build(
-                        &shard.xl, &shard.y, c.loss, c.lam, &dots, &s.wloc,
-                        &s.gloc, glp,
-                    );
-                    let out = self.solve_local(&approx, p, r, s);
-                    match out {
-                        SolveOut::Point(w_p) => {
-                            let (a_w, a_g) = approx.off_support_coeffs(&w_p);
-                            HybridDir::from_compact(
-                                &shard.map,
-                                dim,
-                                a_w,
-                                a_g,
-                                &w_p,
-                                &approx.w_r[..approx.m],
-                                &s.gloc,
-                            )
-                        }
-                        SolveOut::Shrink(w_c, shrink) => {
-                            HybridDir::from_compact(
-                                &shard.map,
-                                dim,
-                                shrink - 1.0,
-                                0.0,
-                                &w_c,
-                                &approx.w_r[..approx.m],
-                                &s.gloc,
-                            )
-                        }
-                    }
+                    local_direction(
+                        c, p, shard, s, dim, &dots, w_ref, g_ref, gp_ref, r,
+                    )
                 });
 
             // --- step 6: safeguard on shared scalars + sparse dots ---
             last_hits = c.safeguard.apply_hybrid(&dots, &w, &g, &mut dirs);
 
             // --- step 7: convex combination ---
-            let weights: Vec<f64> = match c.combine {
-                Combine::Average => {
-                    let n = cluster.n_nodes() as f64;
-                    vec![1.0 / n; dirs.len()]
-                }
-                Combine::SizeWeighted => {
-                    let n_total = cluster.n_examples() as f64;
-                    cluster
-                        .shards
-                        .iter()
-                        .map(|s| s.n_examples() as f64 / n_total)
-                        .collect()
-                }
-            };
             // sparse regime: sum the affine coefficients (two scalars
             // per node on the wire) and sparse-allreduce the weighted
             // corrections; every node can rebuild dʳ from its own
@@ -358,47 +455,9 @@ impl Driver for FsDriver {
             // dense regime: materialize the weighted d_p per node and
             // run the classic dense allreduce (same accounting as the
             // dense gradient path).
-            let d: Vec<f64> = if sparse {
-                let mut a_w_sum = 0.0;
-                let mut a_g_sum = 0.0;
-                let mut parts: Vec<SparseVec> = Vec::with_capacity(dirs.len());
-                for (dp, &cw) in dirs.into_iter().zip(&weights) {
-                    a_w_sum += cw * dp.a_w;
-                    a_g_sum += cw * dp.a_g;
-                    // scale in place — the direction set is consumed
-                    // here, so no support-sized copies
-                    let mut sv = dp.corr;
-                    sv.scale(cw);
-                    parts.push(sv);
-                }
-                // the (a_w, a_g) pair each node contributes rides a
-                // scalar aggregation round alongside the corr reduce;
-                // both land on the control lane so a pipelined
-                // schedule overlaps them with the next round's sweeps
-                cluster.charge_scalar_round(2);
-                let reduced = cluster.reduce_parts_sparse_ctrl(&parts, true);
-                let mut d: Vec<f64> = w
-                    .iter()
-                    .zip(&g)
-                    .map(|(wj, gj)| a_w_sum * wj + a_g_sum * gj)
-                    .collect();
-                match reduced {
-                    Reduced::Sparse(sv) => sv.axpy_into(1.0, &mut d),
-                    Reduced::Dense(v) => dense::axpy(1.0, &v, &mut d),
-                }
-                d
-            } else {
-                let parts: Vec<Vec<f64>> = dirs
-                    .into_iter()
-                    .zip(&weights)
-                    .map(|(dp, &cw)| {
-                        let mut dd = dp.to_dense(&w, &g);
-                        dense::scale(&mut dd, cw);
-                        dd
-                    })
-                    .collect();
-                cluster.reduce_parts_ctrl(&parts, true)
-            };
+            let all_nodes: Vec<usize> = (0..cluster.n_nodes()).collect();
+            let weights = combine_weights(cluster, c.combine, &all_nodes);
+            let d = combine_hybrids(cluster, dirs, &weights, &w, &g, sparse);
 
             // --- step 8: distributed line search on margins ---
             // nodes compute dʳ·xᵢ locally (compute-only phase, compact

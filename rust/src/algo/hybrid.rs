@@ -76,10 +76,14 @@ mod tests {
     }
 
     fn cfg() -> HybridConfig {
-        let mut c = HybridConfig::default();
-        c.sqm.lam = 0.5;
-        c.sqm.loss = LossKind::Logistic;
-        c
+        HybridConfig {
+            sqm: SqmConfig {
+                lam: 0.5,
+                loss: LossKind::Logistic,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
     }
 
     #[test]

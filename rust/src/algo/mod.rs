@@ -11,7 +11,12 @@
 //! - [`autoswitch`] — the §Discussion (c) extension: FS early,
 //!   SQM near the optimum.
 //! - [`safeguard`] — Algorithm 1 step 6 (angle test vs −gʳ).
+//! - [`async_fs`] — bounded-staleness asynchronous FS: an
+//!   arrival-ordered quorum of (possibly stale, re-based) hybrid
+//!   directions, with the safeguard as the correctness gate and a
+//!   synchronous-barrier fallback.
 
+pub mod async_fs;
 pub mod autoswitch;
 pub mod common;
 pub mod fs;
@@ -111,10 +116,8 @@ mod tests {
     #[test]
     fn stop_rule_trips_on_each_bound() {
         let l0 = Ledger::default();
-        let mut l_comm = Ledger::default();
-        l_comm.comm_passes = 100.0;
-        let mut l_time = Ledger::default();
-        l_time.comm_seconds = 50.0;
+        let l_comm = Ledger { comm_passes: 100.0, ..Ledger::default() };
+        let l_time = Ledger { comm_seconds: 50.0, ..Ledger::default() };
 
         let r = StopRule::iters(10);
         assert!(r.should_stop(10, 1.0, 1.0, 1.0, &l0));

@@ -54,6 +54,21 @@ impl Safeguard {
         hits
     }
 
+    /// The async FS *correctness gate*: is the combined (possibly
+    /// stale-contaminated) direction `d` acceptable — inside the θ
+    /// cone around −gʳ and numerically nonzero? This is Algorithm 1's
+    /// safeguard applied to the combined direction rather than a
+    /// per-node one: any convex combination of per-node directions
+    /// that each pass the angle test also passes it (the cosine bound
+    /// survives convex combination), so a *rejection* here can only be
+    /// caused by stale re-based contributions (or a numerically
+    /// vanished sum) — exactly the contamination the bounded-staleness
+    /// driver must discard before falling back to the synchronous
+    /// barrier direction.
+    pub fn accepts_combined(&self, g: &[f64], d: &[f64]) -> bool {
+        !self.rejects(g, d)
+    }
+
     /// Hybrid-direction form of [`Self::apply`]: the angle test runs on
     /// the shared global dots plus O(|support_p|) sparse dots — no node
     /// (or master) materializes any d_p. Mirrors `dense::angle`'s
@@ -151,6 +166,15 @@ mod tests {
                 dense::max_abs_diff(&hd.to_dense(&w, &g), dd) < 1e-12
             );
         }
+    }
+
+    #[test]
+    fn combined_gate_mirrors_rejects() {
+        let g = vec![1.0, 0.0];
+        let sg = Safeguard::default();
+        assert!(sg.accepts_combined(&g, &[-1.0, 0.2]));
+        assert!(!sg.accepts_combined(&g, &[0.0, 1.0]));
+        assert!(!sg.accepts_combined(&g, &[0.0, 0.0]));
     }
 
     #[test]

@@ -137,9 +137,10 @@ pub fn run(cfg: &Figure1Config) -> Figure1Output {
     // Hybrid
     {
         let mut cluster = fresh_cluster();
-        let mut hcfg = HybridConfig::default();
-        hcfg.sqm.loss = cfg.loss;
-        hcfg.sqm.lam = lam;
+        let hcfg = HybridConfig {
+            sqm: SqmConfig { loss: cfg.loss, lam, ..Default::default() },
+            ..Default::default()
+        };
         let run = HybridDriver::with_objective(hcfg).run(
             &mut cluster,
             Some(&test),

@@ -34,10 +34,25 @@
 //!   bound of the async-parallel SGD literature, arXiv:1505.04956 /
 //!   1705.08030); objective traces are bit-identical either way.
 //!
+//! - **Solver lanes and quorum collection (async FS).** The
+//!   bounded-staleness driver ([`crate::algo::async_fs`]) runs each
+//!   node's local solves on a per-node *solver lane* it schedules
+//!   itself ([`Engine::solver_event`] records them), while the node's
+//!   main lane keeps doing gradient sweeps and line-search scalars.
+//!   The direction combine becomes an **arrival-time-ordered quorum
+//!   reduction** ([`Engine::quorum_reduce`]): combining-tree leaves
+//!   inject at each contribution's solver-lane completion time instead
+//!   of the node clocks, `async_arrival` events carry the staleness
+//!   (in outer rounds) each combined contribution had, and the
+//!   committed direction gates the main lanes only.
+//!
 //! Every phase is recorded as a timed [`Event`] (capped; see
 //! [`Engine::dropped_events`]) and exported as a JSON timeline via
 //! [`Engine::timeline_json`] for benches and plots
-//! (`psgd train --trace-timeline out.json`).
+//! (`psgd train --trace-timeline out.json`). The export shape is
+//! `{makespan, nodes, pipeline, profile[], dropped_events,
+//! events[{label, node, level, start, end, staleness}]}` —
+//! `tests/engine.rs` pins it.
 
 use crate::util::json::Value;
 use crate::util::rng::Rng;
@@ -122,7 +137,8 @@ pub enum Lane {
 #[derive(Clone, Debug)]
 pub struct Event {
     /// phase tag: "compute", "local_solve", "grad_sweep", "reduce",
-    /// "broadcast", "scalar_round", "ring", ...
+    /// "broadcast", "scalar_round", "ring", "async_solve",
+    /// "async_arrival", ...
     pub label: &'static str,
     /// owning node for compute events; None for tree/control events
     pub node: Option<usize>,
@@ -130,6 +146,10 @@ pub struct Event {
     pub level: Option<usize>,
     pub start: f64,
     pub end: f64,
+    /// how many outer rounds old the contribution behind this event
+    /// was when the master combined it (async FS quorum arrivals:
+    /// 0 = fresh). None for ordinary schedule events.
+    pub staleness: Option<usize>,
 }
 
 /// Hard cap on recorded events so multi-thousand-round runs cannot
@@ -224,6 +244,7 @@ impl Engine {
                 level: None,
                 start,
                 end: start + dur,
+                staleness: None,
             });
         }
         if !self.pipeline {
@@ -255,6 +276,7 @@ impl Engine {
             level: None,
             start,
             end: start + dur,
+            staleness: None,
         });
         dur
     }
@@ -275,8 +297,38 @@ impl Engine {
         lane: Lane,
     ) -> f64 {
         let floor = self.control_clock;
-        let mut ready: Vec<f64> =
+        let ready: Vec<f64> =
             self.node_clock.iter().map(|&c| c.max(floor)).collect();
+        let root = self.climb(label, ready, hops);
+        let landed = self.descend(root, down);
+        self.control_clock = self.control_clock.max(landed);
+        if !(self.pipeline && lane == Lane::Control) {
+            // barrier schedule: every node waits for the landing time
+            // (in the synchronous algorithm nothing can proceed until
+            // the result is committed — this is what makes the
+            // homogeneous schedule collapse to the legacy flat sum
+            // exactly). Straggler hiding still happens INSIDE the
+            // tree via the max(children) hop starts.
+            for c in self.node_clock.iter_mut() {
+                *c = (*c).max(landed);
+            }
+        }
+        landed
+    }
+
+    /// The pairing loop shared by [`Self::tree_reduce`] and
+    /// [`Self::quorum_reduce`]: climb a binary combining tree whose
+    /// leaves become ready at the given times; a parent at level ℓ is
+    /// ready at `max(children) + hops[ℓ]`, an odd tail joins one level
+    /// up with no hop. Returns the root-ready time and records one
+    /// event per level.
+    fn climb(
+        &mut self,
+        label: &'static str,
+        mut ready: Vec<f64>,
+        hops: &[f64],
+    ) -> f64 {
+        let fallback = self.control_clock;
         let mut level = 0usize;
         while ready.len() > 1 {
             let hop = hops.get(level).copied().unwrap_or(0.0);
@@ -304,13 +356,18 @@ impl Engine {
                     level: Some(level),
                     start,
                     end,
+                    staleness: None,
                 });
             }
             ready = next;
             level += 1;
         }
-        let root = ready.first().copied().unwrap_or(floor);
-        let landed = match down {
+        ready.first().copied().unwrap_or(fallback)
+    }
+
+    /// Optional result broadcast below a combining-tree root.
+    fn descend(&mut self, root: f64, down: Option<(usize, f64)>) -> f64 {
+        match down {
             Some((depth, hop)) => {
                 let arrival = root + depth as f64 * hop;
                 if depth > 0 {
@@ -320,23 +377,72 @@ impl Engine {
                         level: None,
                         start: root,
                         end: arrival,
+                        staleness: None,
                     });
                 }
                 arrival
             }
             None => root,
-        };
+        }
+    }
+
+    /// Record one asynchronously-scheduled local solve on node p's
+    /// *solver lane*. Solver lanes are the async FS driver's own
+    /// bookkeeping (a node's solver grinds on while its main lane
+    /// does gradient sweeps and line-search scalars); the engine only
+    /// records the event for the timeline — no clock is touched.
+    pub fn solver_event(
+        &mut self,
+        label: &'static str,
+        node: usize,
+        start: f64,
+        end: f64,
+    ) {
+        self.push_event(Event {
+            label,
+            node: Some(node),
+            level: None,
+            start,
+            end,
+            staleness: None,
+        });
+    }
+
+    /// Arrival-time-ordered quorum reduction on the control lane — the
+    /// async FS direction combine. Each entry of `arrivals` is one
+    /// contribution `(node, ready, staleness)`: leaf i of the combining
+    /// tree injects at `ready` (a solver-lane completion, or the round
+    /// start for an already-delivered stale hybrid) rather than at the
+    /// node clocks, and one `async_arrival` event per contribution
+    /// records the staleness the master combined at. The committed
+    /// result gates every node's *main* lane (nodes need dʳ for the
+    /// line search) — solver lanes stay self-paced. Returns the time
+    /// the combined result lands.
+    pub fn quorum_reduce(
+        &mut self,
+        label: &'static str,
+        arrivals: &[(usize, f64, usize)],
+        hops: &[f64],
+        down: Option<(usize, f64)>,
+    ) -> f64 {
+        let floor = self.control_clock;
+        for &(node, ready, staleness) in arrivals {
+            self.push_event(Event {
+                label: "async_arrival",
+                node: Some(node),
+                level: None,
+                start: ready,
+                end: ready.max(floor),
+                staleness: Some(staleness),
+            });
+        }
+        let ready: Vec<f64> =
+            arrivals.iter().map(|&(_, t, _)| t.max(floor)).collect();
+        let root = self.climb(label, ready, hops);
+        let landed = self.descend(root, down);
         self.control_clock = self.control_clock.max(landed);
-        if !(self.pipeline && lane == Lane::Control) {
-            // barrier schedule: every node waits for the landing time
-            // (in the synchronous algorithm nothing can proceed until
-            // the result is committed — this is what makes the
-            // homogeneous schedule collapse to the legacy flat sum
-            // exactly). Straggler hiding still happens INSIDE the
-            // tree via the max(children) hop starts.
-            for c in self.node_clock.iter_mut() {
-                *c = (*c).max(landed);
-            }
+        for c in self.node_clock.iter_mut() {
+            *c = (*c).max(landed);
         }
         landed
     }
@@ -362,6 +468,7 @@ impl Engine {
                 level: None,
                 start,
                 end: arrival,
+                staleness: None,
             });
         }
         self.control_clock = arrival;
@@ -386,6 +493,7 @@ impl Engine {
                 level: None,
                 start,
                 end,
+                staleness: None,
             });
         }
         self.control_clock = end;
@@ -432,6 +540,13 @@ impl Engine {
                     ),
                     ("start", Value::Num(e.start)),
                     ("end", Value::Num(e.end)),
+                    (
+                        "staleness",
+                        match e.staleness {
+                            Some(s) => Value::Num(s as f64),
+                            None => Value::Null,
+                        },
+                    ),
                 ])
             })
             .collect();
@@ -587,6 +702,32 @@ mod tests {
         let arrival = e.broadcast(1, 0.5);
         assert!((arrival - 3.5).abs() < 1e-12, "arrival {arrival}");
         assert!((e.makespan() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quorum_reduce_collects_by_arrival_and_gates_main_lanes() {
+        let mut e = Engine::new(NodeProfile::homogeneous(4));
+        e.compute(1.0, &[1.0; 4]); // node clocks at 1
+        // three contributions land at 2, 5 and 3 virtual seconds:
+        // level 0 pairs (2,5) → 6, the odd tail 3 joins one level up,
+        // level 1 merges (6,3) → 7, then a 2-hop broadcast → 9
+        let arrivals = [(0usize, 2.0, 0usize), (1, 5.0, 1), (2, 3.0, 0)];
+        let landed =
+            e.quorum_reduce("async_reduce", &arrivals, &[1.0, 1.0], Some((2, 1.0)));
+        assert!((landed - 9.0).abs() < 1e-12, "landed {landed}");
+        // the committed direction gates every main lane
+        e.compute(1.0, &[1.0; 4]);
+        assert!((e.makespan() - 10.0).abs() < 1e-12);
+        // arrival events carry the combined staleness
+        assert!(e
+            .events()
+            .iter()
+            .any(|ev| ev.label == "async_arrival" && ev.staleness == Some(1)));
+        // solver-lane events are pure records
+        let before = e.makespan();
+        e.solver_event("async_solve", 3, 0.0, 99.0);
+        assert_eq!(e.makespan(), before);
+        assert!(e.events().iter().any(|ev| ev.label == "async_solve"));
     }
 
     #[test]

@@ -45,6 +45,16 @@ pub struct Ledger {
     /// critical-path makespan from the event engine; `None` on a
     /// hand-built ledger (falls back to the flat component sum)
     pub makespan: Option<f64>,
+    /// async FS: histogram of the staleness (in outer rounds) of every
+    /// contribution the master combined — index s counts contributions
+    /// that were s rounds old, so `staleness_hist[0]` is the fresh
+    /// share and the vector never grows past τ+1 entries
+    pub staleness_hist: Vec<usize>,
+    /// async FS combine rounds recorded into `staleness_hist`
+    pub async_rounds: usize,
+    /// async FS rounds whose quorum direction failed the safeguard
+    /// gate and fell back to the synchronous barrier direction
+    pub fallback_rounds: usize,
 }
 
 impl Ledger {
@@ -70,6 +80,45 @@ impl Ledger {
             *slot += b as f64;
         }
         self.sparse_reductions += 1;
+    }
+
+    /// Fold one async FS combine round into the per-run staleness
+    /// histogram: `staleness` holds, per combined contribution, how
+    /// many outer rounds old its reference was; `fallback` marks a
+    /// round whose quorum direction failed the safeguard gate (its
+    /// discarded contributions still count — the histogram describes
+    /// what arrived, not what survived).
+    pub fn record_async_round(&mut self, staleness: &[usize], fallback: bool) {
+        for &s in staleness {
+            if self.staleness_hist.len() <= s {
+                self.staleness_hist.resize(s + 1, 0);
+            }
+            self.staleness_hist[s] += 1;
+        }
+        self.async_rounds += 1;
+        if fallback {
+            self.fallback_rounds += 1;
+        }
+    }
+
+    /// Staleness histogram rendered for bench reports:
+    /// "s0 42 | s1 7, 1 fallback / 20 rounds". Empty when no async
+    /// round ran.
+    pub fn staleness_profile(&self) -> String {
+        if self.async_rounds == 0 {
+            return String::new();
+        }
+        let hist = self
+            .staleness_hist
+            .iter()
+            .enumerate()
+            .map(|(s, &n)| format!("s{s} {n}"))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        format!(
+            "{hist}, {} fallback / {} rounds",
+            self.fallback_rounds, self.async_rounds
+        )
     }
 
     /// Mean per-level payload of the sparse reductions, rendered for
@@ -110,6 +159,20 @@ mod tests {
         let engine_view = Ledger { makespan: Some(3.2), ..l };
         assert_eq!(engine_view.seconds(), 3.2);
         assert_eq!(engine_view.snapshot(), (4.0, 3.2));
+    }
+
+    #[test]
+    fn staleness_histogram_accumulates() {
+        let mut l = Ledger::default();
+        assert_eq!(l.staleness_profile(), "");
+        l.record_async_round(&[0, 0, 1], false);
+        l.record_async_round(&[0, 2], true);
+        assert_eq!(l.staleness_hist, vec![3, 1, 1]);
+        assert_eq!(l.async_rounds, 2);
+        assert_eq!(l.fallback_rounds, 1);
+        let p = l.staleness_profile();
+        assert!(p.starts_with("s0 3 | s1 1 | s2 1"), "{p}");
+        assert!(p.contains("1 fallback / 2 rounds"), "{p}");
     }
 
     #[test]

@@ -231,6 +231,25 @@ impl Cluster {
         outs
     }
 
+    /// Run `f` on a *subset* of nodes (each with its scratch slot),
+    /// returning per-node outputs paired with their measured seconds
+    /// and charging NOTHING — the async FS driver schedules these
+    /// solves on its own per-node solver lanes (see
+    /// [`engine::Engine::solver_event`]) instead of the barrier'd
+    /// node clocks.
+    pub fn map_nodes_timed<T: Send>(
+        &self,
+        nodes: &[usize],
+        f: impl Fn(usize, &Shard, &mut NodeScratch) -> T + Sync,
+    ) -> Vec<(T, f64)> {
+        let scratch = &self.scratch;
+        let g = |p: usize, shard: &Shard| -> T {
+            let mut slot = scratch[p].lock().expect("scratch lock");
+            f(p, shard, &mut slot)
+        };
+        self.run_subset(nodes, &g)
+    }
+
     fn charge_compute(&mut self, times: &[f64]) {
         self.charge_compute_lane(times, false);
     }
@@ -477,6 +496,87 @@ impl Cluster {
         out
     }
 
+    /// Sparse direction combine for the bounded-staleness async FS
+    /// schedule. Arithmetic and flat wire accounting are identical to
+    /// [`Self::reduce_parts_sparse`] (same tree-ordered merge, same
+    /// per-level byte charges), but the *schedule* is arrival-ordered:
+    /// combining-tree leaf i injects at `arrivals[i]`'s ready time (a
+    /// solver-lane completion) instead of the node clocks, and the
+    /// combine rides the control chain
+    /// ([`engine::Engine::quorum_reduce`]). The quorum collection is
+    /// always modeled as a tree — on a Ring topology a partial-arrival
+    /// reduce-scatter has no faithful analogue, so async runs keep the
+    /// tree time model for this one round. Returns the merged result
+    /// and the virtual time it landed.
+    pub fn async_quorum_reduce_sparse(
+        &mut self,
+        parts: &[SparseVec],
+        arrivals: &[(usize, f64, usize)],
+        all: bool,
+    ) -> (Reduced, f64) {
+        debug_assert_eq!(parts.len(), arrivals.len());
+        let (out, level_bytes) = allreduce::tree_sum_sparse(parts);
+        let result_bytes = out.wire_bytes() as f64;
+        let hops: Vec<f64> = level_bytes
+            .iter()
+            .map(|&b| self.cost.hop_seconds(b as f64))
+            .collect();
+        let down_depth = self.tree_depth() as usize;
+        let mut secs: f64 = hops.iter().sum();
+        if all {
+            secs += down_depth as f64 * self.cost.hop_seconds(result_bytes);
+        }
+        self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
+        self.ledger.comm_seconds += secs;
+        self.ledger.comm_bytes +=
+            if all { 2.0 * result_bytes } else { result_bytes };
+        self.ledger.record_sparse_levels(&level_bytes);
+        let down = if all {
+            Some((down_depth, self.cost.hop_seconds(result_bytes)))
+        } else {
+            None
+        };
+        let landed =
+            self.engine.quorum_reduce("async_reduce", arrivals, &hops, down);
+        self.sync_ledger();
+        (out, landed)
+    }
+
+    /// Dense analogue of [`Self::async_quorum_reduce_sparse`]: same
+    /// tree-ordered sum and flat pass charges as
+    /// [`Self::reduce_parts`], arrival-ordered schedule. Returns the
+    /// sum and its landing time.
+    pub fn async_quorum_reduce(
+        &mut self,
+        parts: &[Vec<f64>],
+        arrivals: &[(usize, f64, usize)],
+        all: bool,
+    ) -> (Vec<f64>, f64) {
+        debug_assert_eq!(parts.len(), arrivals.len());
+        let sum = allreduce::tree_sum(parts);
+        self.charge_vector_pass(if all { 2 } else { 1 });
+        let hop = if self.n_nodes() <= 1 {
+            0.0
+        } else {
+            self.cost.pass_seconds(self.dim)
+        };
+        let up_depth = if parts.len() <= 1 {
+            0
+        } else {
+            (parts.len() as f64).log2().ceil() as usize
+        };
+        let hops = vec![hop; up_depth];
+        let down = if all {
+            Some((self.tree_depth() as usize, hop))
+        } else {
+            None
+        };
+        let landed =
+            self.engine.quorum_reduce("async_reduce", arrivals, &hops, down);
+        self.sync_ledger();
+        (sum, landed)
+    }
+
     /// Charge one cross-node aggregation round of `k` scalars that is
     /// not mediated by [`Self::map_reduce_scalars`] — e.g. the hybrid
     /// direction round's per-node affine coefficients. Latency-only
@@ -550,43 +650,55 @@ impl Cluster {
         &self,
         f: &(impl Fn(usize, &Shard) -> T + Sync),
     ) -> (Vec<T>, Vec<f64>) {
-        if self.threads <= 1 || self.n_nodes() == 1 {
-            let mut outs = Vec::with_capacity(self.n_nodes());
-            let mut times = Vec::with_capacity(self.n_nodes());
-            for (p, shard) in self.shards.iter().enumerate() {
-                let t0 = Instant::now();
-                outs.push(f(p, shard));
-                times.push(t0.elapsed().as_secs_f64());
-            }
-            (outs, times)
+        let all: Vec<usize> = (0..self.n_nodes()).collect();
+        self.run_subset(&all, f).into_iter().unzip()
+    }
+
+    /// The shared worker loop behind [`Self::run_nodes`] and
+    /// [`Self::map_nodes_timed`]: run `f` on the given node subset
+    /// (threaded past the sequential cutoffs, outputs slotted by
+    /// position so results are deterministic), returning each node's
+    /// output with its measured seconds.
+    fn run_subset<T: Send>(
+        &self,
+        nodes: &[usize],
+        f: &(impl Fn(usize, &Shard) -> T + Sync),
+    ) -> Vec<(T, f64)> {
+        if self.threads <= 1 || nodes.len() <= 1 {
+            nodes
+                .iter()
+                .map(|&p| {
+                    let t0 = Instant::now();
+                    let out = f(p, &self.shards[p]);
+                    (out, t0.elapsed().as_secs_f64())
+                })
+                .collect()
         } else {
-            let n = self.n_nodes();
-            let mut slots: Vec<Option<(T, f64)>> = (0..n).map(|_| None).collect();
+            let n = nodes.len();
+            let mut slots: Vec<Option<(T, f64)>> =
+                (0..n).map(|_| None).collect();
             let next = std::sync::atomic::AtomicUsize::new(0);
-            let slots_ptr = std::sync::Mutex::new(&mut slots);
+            let slots_ptr = Mutex::new(&mut slots);
             std::thread::scope(|scope| {
                 for _ in 0..self.threads.min(n) {
                     scope.spawn(|| loop {
-                        let p = next
+                        let i = next
                             .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                        if p >= n {
+                        if i >= n {
                             break;
                         }
+                        let p = nodes[i];
                         let t0 = Instant::now();
                         let out = f(p, &self.shards[p]);
                         let dt = t0.elapsed().as_secs_f64();
-                        slots_ptr.lock().unwrap()[p] = Some((out, dt));
+                        slots_ptr.lock().unwrap()[i] = Some((out, dt));
                     });
                 }
             });
-            let mut outs = Vec::with_capacity(n);
-            let mut times = Vec::with_capacity(n);
-            for s in slots {
-                let (o, t) = s.expect("node closure completed");
-                outs.push(o);
-                times.push(t);
-            }
-            (outs, times)
+            slots
+                .into_iter()
+                .map(|s| s.expect("node closure completed"))
+                .collect()
         }
     }
 }
@@ -804,6 +916,37 @@ mod tests {
         let mut t = cluster(5);
         let _ = t.reduce_parts_sparse(&parts, true);
         assert_eq!(t.ledger.level_bytes, c.ledger.level_bytes);
+    }
+
+    #[test]
+    fn async_quorum_reduce_matches_sync_arithmetic_and_charges() {
+        // the arrival-ordered combine must move the same bytes/passes
+        // and produce the same tree-ordered sum as the barrier reduce —
+        // only the schedule differs
+        let parts: Vec<SparseVec> = (0..5)
+            .map(|p| SparseVec::from_pairs(30, vec![(p as u32, 1.0 + p as f64)]))
+            .collect();
+        let mut sync = cluster(5);
+        let want = sync.reduce_parts_sparse(&parts, true).into_dense();
+        let mut async_c = cluster(5);
+        let arrivals: Vec<(usize, f64, usize)> =
+            (0..5).map(|p| (p, 0.5 + p as f64, p % 2)).collect();
+        let (got, landed) =
+            async_c.async_quorum_reduce_sparse(&parts, &arrivals, true);
+        assert_eq!(got.into_dense(), want);
+        assert_eq!(sync.ledger.comm_passes, async_c.ledger.comm_passes);
+        assert_eq!(sync.ledger.comm_bytes, async_c.ledger.comm_bytes);
+        assert_eq!(sync.ledger.level_bytes, async_c.ledger.level_bytes);
+        // the combine cannot land before the last arrival it consumed
+        assert!(landed >= 4.5);
+        assert!(async_c.ledger.seconds() >= landed - 1e-12);
+        // dense analogue sums identically too
+        let dense_parts: Vec<Vec<f64>> =
+            parts.iter().map(|s| s.to_dense()).collect();
+        let mut d = cluster(5);
+        let (sum, _) = d.async_quorum_reduce(&dense_parts, &arrivals, true);
+        assert_eq!(sum, want);
+        assert_eq!(d.ledger.comm_passes, 2.0);
     }
 
     #[test]

@@ -52,12 +52,36 @@
 //!   overlap the next round's self-paced node compute — a schedule
 //!   change only, arithmetic bit-identical. `--trace-timeline out.json`
 //!   exports the schedule as JSON:
-//!   `{makespan, nodes, pipeline, profile[], events[{label, node,
-//!   level, start, end}]}` — what `benches/pipeline.rs` and the plots
-//!   consume.
+//!   `{makespan, nodes, pipeline, profile[], dropped_events,
+//!   events[{label, node, level, start, end, staleness}]}` —
+//!   `tests/engine.rs` pins the shape; `benches/pipeline.rs` and the
+//!   plots consume it. `staleness` is non-null on async quorum
+//!   arrivals only.
+//!
+//!   **Asynchrony in the maths** goes one step further
+//!   ([`algo::async_fs`], CLI `--async-fs --staleness τ --quorum q`):
+//!   local solves run on per-node *solver lanes* while the main lanes
+//!   keep the cheap synchronous gradient/commit path; the master
+//!   combines an arrival-ordered quorum — it waits for q fresh
+//!   round-r solves and represents stragglers by their most recent
+//!   hybrid at most τ rounds old, re-based onto the current wʳ via
+//!   the affine machinery the wire format already carries (the master
+//!   keeps the last τ+1 (wʳ′, gʳ′) references, O(τ·d) master memory).
+//!   The paper's safeguard is the correctness gate: fresh parts get
+//!   the per-direction angle test, and a combined direction that
+//!   fails sufficient descent is discarded — that round falls back to
+//!   the synchronous barrier direction, so strong convergence holds
+//!   for any (τ, q). τ=0 with a full quorum *is* Algorithm 1
+//!   (bit-identical to `--method fs`, pinned by `tests/async_fs.rs`);
+//!   under a straggler profile the quorum stops waiting for the slow
+//!   node and `benches/async_fs.rs` asserts the makespan-to-ε
+//!   strictly beats the pipelined schedule. Per-round staleness
+//!   histograms land on the [`cluster::Ledger`]
+//!   (`staleness_hist` / `fallback_rounds`).
 //! - [`algo`] — FS-s (Algorithm 1) aggregating hybrid directions
 //!   (a_w·wʳ + a_g·gʳ + support-sized sparse corrections — the only
-//!   payload the direction allreduce moves), SQM, Hybrid, parameter
+//!   payload the direction allreduce moves), its bounded-staleness
+//!   asynchronous variant ([`algo::async_fs`]), SQM, Hybrid, parameter
 //!   mixing and the auto-switching extension.
 //! - [`metrics`] — AUPRC, convergence traces, run recording.
 //! - `runtime` — PJRT executor for the AOT-compiled JAX/Pallas
@@ -98,6 +122,7 @@ pub mod util;
 
 /// Convenience re-exports for the common driver workflow.
 pub mod prelude {
+    pub use crate::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
     pub use crate::algo::fs::{FsConfig, FsDriver};
     pub use crate::algo::hybrid::HybridDriver;
     pub use crate::algo::param_mix::ParamMixDriver;

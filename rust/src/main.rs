@@ -10,6 +10,7 @@
 //! `train` accepts either `--data file.libsvm` or synthetic-generator
 //! knobs, and either CLI flags or `--config exp.toml` (CLI wins).
 
+use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::autoswitch::{AutoSwitchConfig, AutoSwitchDriver};
 use psgd::algo::fs::{FsConfig, FsDriver, InnerSolver};
 use psgd::algo::hybrid::{HybridConfig, HybridDriver};
@@ -51,6 +52,17 @@ COMMANDS
                                search with the next round's node compute
                                (fs only; timing model — results are
                                bit-identical to the barrier schedule)
+               [--async-fs]    bounded-staleness asynchronous FS (fs
+                               only): per-node solver lanes, the master
+                               combines an arrival-ordered quorum of
+                               directions at most τ rounds stale; a
+                               combined direction that fails the
+                               safeguard falls back to the synchronous
+                               barrier direction. τ=0 with a full
+                               quorum is bit-identical to plain fs.
+               [--staleness N] τ for --async-fs (default 1)
+               [--quorum N]    quorum size q for --async-fs
+                               (default P−1, min 1)
                [--straggler N:F]    node N runs F× slower (e.g. 0:3)
                [--profile-spread X] seeded heterogeneous node speeds
                                     1 + X·U[0,1)  [--profile-seed S]
@@ -239,6 +251,14 @@ fn train(args: &Args) {
         ..Default::default()
     };
     let driver: Box<dyn Driver> = match method {
+        "fs" if args.bool("async-fs", false) => {
+            Box::new(AsyncFsDriver::new(AsyncFsConfig {
+                fs: fs_config,
+                staleness: args.usize("staleness", 1),
+                quorum: args
+                    .usize("quorum", nodes.saturating_sub(1).max(1)),
+            }))
+        }
         "fs" => Box::new(FsDriver::new(fs_config)),
         "sqm" => Box::new(SqmDriver::new(SqmConfig {
             loss,
@@ -252,9 +272,10 @@ fn train(args: &Args) {
             ..Default::default()
         })),
         "hybrid" => {
-            let mut h = HybridConfig::default();
-            h.sqm.loss = loss;
-            h.sqm.lam = lam;
+            let h = HybridConfig {
+                sqm: SqmConfig { loss, lam, ..Default::default() },
+                ..Default::default()
+            };
             Box::new(HybridDriver::with_objective(h))
         }
         "parammix" => Box::new(ParamMixDriver::new(ParamMixConfig {
@@ -264,11 +285,10 @@ fn train(args: &Args) {
             seed,
             ..Default::default()
         })),
-        "autoswitch" => {
-            let mut a = AutoSwitchConfig::default();
-            a.fs = fs_config;
-            Box::new(AutoSwitchDriver::new(a))
-        }
+        "autoswitch" => Box::new(AutoSwitchDriver::new(AutoSwitchConfig {
+            fs: fs_config,
+            ..Default::default()
+        })),
         other => panic!("unknown method {other:?}"),
     };
 

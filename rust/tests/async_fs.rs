@@ -1,0 +1,248 @@
+//! Bounded-staleness async FS regression suite.
+//!
+//! The contract the driver must keep:
+//!
+//! 1. **Degeneration** — τ = 0 with a full quorum is Algorithm 1: the
+//!    async driver reproduces the synchronous FS run *bit-identically*
+//!    (iterates, objective trace, pass counts), for any node profile.
+//! 2. **Convergence under staleness** — for τ ∈ {1, 2} with a partial
+//!    quorum under a 3× straggler profile, the run still reaches the
+//!    same relative-gap tolerance the synchronous suite pins, every
+//!    combined contribution respects the staleness bound, and the
+//!    objective stays monotone (every committed direction is θ-cone
+//!    descent or the certified fallback).
+//! 3. **The safeguard gate fires** — on an adversarial label-sorted
+//!    shard split with a tight θ and a stale-dominated quorum, at
+//!    least one round's combined direction fails sufficient descent
+//!    and falls back to the synchronous barrier direction.
+
+use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
+use psgd::algo::fs::{FsConfig, FsDriver};
+use psgd::algo::safeguard::Safeguard;
+use psgd::algo::{Driver, StopRule};
+use psgd::cluster::{Cluster, CostModel, NodeProfile};
+use psgd::data::dataset::Dataset;
+use psgd::data::partition::Partition;
+use psgd::data::synth::SynthConfig;
+use psgd::loss::LossKind;
+use psgd::objective::RegularizedLoss;
+use psgd::opt::tron::{self, TronParams};
+
+/// High-dimensional, sparse-regime data (the paper's regime, and the
+/// one where the hybrid wire format is exercised end to end).
+fn make_data(seed: u64) -> Dataset {
+    SynthConfig {
+        n_examples: 400,
+        n_features: 2_000,
+        nnz_per_example: 5,
+        skew: 1.0,
+        ..SynthConfig::default()
+    }
+    .generate(seed)
+}
+
+fn make_cluster(nodes: usize, seed: u64) -> Cluster {
+    let mut c =
+        Cluster::partition(make_data(seed), nodes, CostModel::default());
+    c.threads = 1; // contention-free measured compute
+    c
+}
+
+fn fs_config() -> FsConfig {
+    FsConfig { lam: 0.5, epochs: 2, ..Default::default() }
+}
+
+/// Exact optimum of the stitched problem via TRON (the synchronous
+/// suite's oracle).
+fn f_star(cluster: &Cluster, loss: LossKind, lam: f64) -> f64 {
+    let mut rows = Vec::new();
+    let mut ys = Vec::new();
+    for s in &cluster.shards {
+        for i in 0..s.xl.n_rows() {
+            rows.push(s.row_global(i));
+            ys.push(s.y[i]);
+        }
+    }
+    let x = psgd::linalg::Csr::from_rows(cluster.dim, &rows);
+    let obj = RegularizedLoss { x: &x, y: &ys, loss, lam };
+    tron::minimize(&obj, &vec![0.0; cluster.dim], &TronParams {
+        eps: 1e-12,
+        max_iter: 200,
+        ..Default::default()
+    })
+    .f
+}
+
+#[test]
+fn tau0_full_quorum_is_bit_identical_to_synchronous_fs() {
+    let nodes = 4;
+    let mut sync = make_cluster(nodes, 2);
+    let mut asynch = make_cluster(nodes, 2);
+    // a heterogeneous profile must not matter: with τ=0 and q=P the
+    // deadline is the last fresh solve, i.e. the synchronous barrier
+    let profile = NodeProfile::with_straggler(nodes, 0, 3.0);
+    sync.set_profile(profile.clone());
+    asynch.set_profile(profile);
+    assert!(sync.prefer_sparse(), "test data must be sparse-regime");
+
+    let run_s = FsDriver::new(fs_config()).run(
+        &mut sync,
+        None,
+        &StopRule::iters(8),
+    );
+    let run_a = AsyncFsDriver::new(AsyncFsConfig {
+        fs: fs_config(),
+        staleness: 0,
+        quorum: nodes,
+    })
+    .run(&mut asynch, None, &StopRule::iters(8));
+
+    assert_eq!(run_s.w, run_a.w, "iterates diverged");
+    assert_eq!(
+        run_s.trace.points.len(),
+        run_a.trace.points.len(),
+        "outer iteration counts diverged"
+    );
+    for (s, a) in run_s.trace.points.iter().zip(&run_a.trace.points) {
+        assert_eq!(s.f, a.f, "objective diverged at iter {}", s.iter);
+        assert_eq!(
+            s.comm_passes, a.comm_passes,
+            "pass accounting diverged at iter {}",
+            s.iter
+        );
+        assert_eq!(
+            s.safeguard_hits, a.safeguard_hits,
+            "safeguard counts diverged at iter {}",
+            s.iter
+        );
+    }
+    // every combined contribution was fresh, nothing fell back
+    assert!(asynch.ledger.async_rounds > 0);
+    assert_eq!(
+        asynch.ledger.staleness_hist,
+        vec![nodes * asynch.ledger.async_rounds],
+        "non-fresh contribution under τ=0, q=P"
+    );
+    assert_eq!(asynch.ledger.fallback_rounds, 0);
+}
+
+#[test]
+fn stale_quorum_converges_under_straggler() {
+    for tau in [1usize, 2] {
+        let nodes = 5;
+        let mut cluster = make_cluster(nodes, 3);
+        cluster.set_profile(NodeProfile::with_straggler(nodes, 0, 3.0));
+        let cfg = fs_config();
+        let fstar = f_star(&cluster, cfg.loss, cfg.lam);
+        let run = AsyncFsDriver::new(AsyncFsConfig {
+            fs: cfg,
+            staleness: tau,
+            quorum: nodes - 1,
+        })
+        .run(&mut cluster, None, &StopRule::iters(60));
+
+        // same tolerance the synchronous suite pins
+        let gap = (run.f - fstar) / fstar;
+        assert!(gap < 1e-4, "τ={tau}: gap={gap}");
+        // monotone descent: every committed direction passed a descent
+        // gate (θ-cone quorum direction or the synchronous fallback)
+        for k in 1..run.trace.points.len() {
+            assert!(
+                run.trace.points[k].f <= run.trace.points[k - 1].f + 1e-10,
+                "τ={tau}: f increased at iter {k}"
+            );
+        }
+        // the staleness bound held for everything the master combined
+        assert!(
+            cluster.ledger.staleness_hist.len() <= tau + 1,
+            "τ={tau}: contribution older than the bound: {:?}",
+            cluster.ledger.staleness_hist
+        );
+        assert!(cluster.ledger.async_rounds > 0);
+    }
+}
+
+#[test]
+fn adversarial_split_fires_safeguard_fallback() {
+    // label-sorted shards: each node's local approximation pulls
+    // toward its own class, so re-based stale directions from one
+    // round back quickly leave a tight θ cone around the current −gʳ
+    let data = make_data(7);
+    let nodes = 3;
+    let mut order: Vec<usize> = (0..data.n_examples()).collect();
+    order.sort_by(|&a, &b| {
+        data.y[a]
+            .partial_cmp(&data.y[b])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let chunk = order.len().div_ceil(nodes);
+    let assignment: Vec<Vec<usize>> =
+        order.chunks(chunk).map(|c| c.to_vec()).collect();
+    let part = Partition { assignment };
+    let mut cluster =
+        Cluster::partition_with(data, &part, CostModel::default());
+    cluster.threads = 1;
+
+    // quorum of 1: after round 0 every node always has an immediately
+    // available *stale* contribution, so combines are stale-dominated
+    let run = AsyncFsDriver::new(AsyncFsConfig {
+        fs: FsConfig {
+            lam: 0.5,
+            epochs: 2,
+            safeguard: Safeguard::from_degrees(5.0),
+            ..Default::default()
+        },
+        staleness: 3,
+        quorum: 1,
+    })
+    .run(&mut cluster, None, &StopRule::iters(15));
+
+    assert!(
+        cluster.ledger.fallback_rounds >= 1,
+        "no round fell back to the synchronous barrier direction: {}",
+        cluster.ledger.staleness_profile()
+    );
+    // stale contributions really were combined (or at least attempted)
+    let stale_total: usize =
+        cluster.ledger.staleness_hist.iter().skip(1).sum();
+    assert!(
+        stale_total > 0,
+        "quorum never consumed a stale contribution: {}",
+        cluster.ledger.staleness_profile()
+    );
+    assert!(
+        cluster.ledger.staleness_hist.len() <= 4,
+        "staleness bound violated: {:?}",
+        cluster.ledger.staleness_hist
+    );
+    // ...and the run still descends: fallback rounds keep the paper's
+    // guarantee intact
+    let pts = &run.trace.points;
+    assert!(pts.last().unwrap().f < pts[0].f, "failed to descend");
+}
+
+#[test]
+fn async_run_records_solver_lanes_and_staleness() {
+    let nodes = 4;
+    let mut cluster = make_cluster(nodes, 11);
+    cluster.set_profile(NodeProfile::with_straggler(nodes, 0, 3.0));
+    let _ = AsyncFsDriver::new(AsyncFsConfig {
+        fs: fs_config(),
+        staleness: 2,
+        quorum: nodes - 1,
+    })
+    .run(&mut cluster, None, &StopRule::iters(6));
+
+    let events = cluster.engine.events();
+    assert!(events.iter().any(|e| e.label == "async_solve"));
+    assert!(events.iter().any(|e| e.label == "async_reduce"));
+    assert!(events
+        .iter()
+        .any(|e| e.label == "async_arrival" && e.staleness.is_some()));
+    // the timeline export carries the staleness field
+    let json = cluster.engine.timeline_json().to_json(0);
+    assert!(json.contains("\"staleness\""), "{json}");
+    assert!(cluster.ledger.async_rounds > 0);
+    assert!(cluster.ledger.staleness_hist.iter().sum::<usize>() > 0);
+}

@@ -19,6 +19,7 @@ use psgd::algo::fs::{FsConfig, FsDriver, InnerSolver};
 use psgd::algo::{Driver, StopRule};
 use psgd::cluster::{Cluster, CostModel, NodeProfile};
 use psgd::data::synth::SynthConfig;
+use psgd::util::json::{parse, Value};
 
 fn make_cluster(nodes: usize, seed: u64, cost: CostModel) -> Cluster {
     let data = SynthConfig {
@@ -150,6 +151,55 @@ fn pipelined_schedule_is_bit_identical_and_faster_under_straggler() {
         mp < mb - 0.2,
         "pipelined {mp} not meaningfully below barrier {mb}"
     );
+}
+
+#[test]
+fn timeline_json_schema_matches_documented_shape() {
+    // satellite: the --trace-timeline export can't drift from the
+    // shape lib.rs documents — parse it back through the in-tree JSON
+    // parser and assert every documented key, including the async
+    // `staleness` field on events
+    let mut cluster = make_cluster(4, 29, CostModel::default());
+    let _ = FsDriver::new(fs_config(InnerSolver::Svrg, true)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(2),
+    );
+    let json = cluster.engine.timeline_json().to_json(1);
+    let v = parse(&json).expect("timeline JSON parses");
+    for key in [
+        "makespan",
+        "nodes",
+        "pipeline",
+        "profile",
+        "dropped_events",
+        "events",
+    ] {
+        assert!(v.get(key).is_some(), "missing top-level key {key}");
+    }
+    assert_eq!(v.get("dropped_events").unwrap().as_usize(), Some(0));
+    assert_eq!(v.get("nodes").unwrap().as_usize(), Some(4));
+    assert_eq!(v.get("pipeline").unwrap(), &Value::Bool(true));
+    assert!(v.get("makespan").unwrap().as_f64().unwrap() > 0.0);
+    let profile = match v.get("profile").unwrap() {
+        Value::Arr(p) => p,
+        other => panic!("profile is not an array: {other:?}"),
+    };
+    assert_eq!(profile.len(), 4);
+    let events = match v.get("events").unwrap() {
+        Value::Arr(e) => e,
+        other => panic!("events is not an array: {other:?}"),
+    };
+    assert!(!events.is_empty());
+    for (i, ev) in events.iter().enumerate() {
+        for key in ["label", "node", "level", "start", "end", "staleness"] {
+            assert!(ev.get(key).is_some(), "event {i} missing {key}");
+        }
+        assert!(ev.get("label").unwrap().as_str().is_some());
+        let start = ev.get("start").unwrap().as_f64().unwrap();
+        let end = ev.get("end").unwrap().as_f64().unwrap();
+        assert!(end >= start, "event {i} runs backwards");
+    }
 }
 
 #[test]
