@@ -14,15 +14,20 @@ bench:
 # compact-vs-full inner solve (asserts compact is strictly faster and
 # ε-equivalent), the pipelined-schedule bench (asserts pipelined
 # makespan ≤ barrier everywhere and strictly lower on the straggler
-# scenario, with bit-identical arithmetic) and the async-FS bench
+# scenario, with bit-identical arithmetic), the async-FS bench
 # (asserts the bounded-staleness quorum's makespan-to-ε strictly beats
-# the pipelined schedule on the straggler). Each bench writes a
-# machine-readable BENCH_<name>.json that CI uploads as an artifact.
+# the pipelined schedule on the straggler) and the master_side bench
+# (asserts the union-support compact master is strictly faster per
+# round than the dense master at d = 5M and 50M with ε-identical
+# traces — the 50M case doubles as the O(τ·|U|)-memory proof). Each
+# bench writes a machine-readable BENCH_<name>.json that CI uploads as
+# an artifact.
 bench-smoke:
 	cargo bench --bench sparse_grad
 	cargo bench --bench compact_solve
 	cargo bench --bench pipeline
 	cargo bench --bench async_fs
+	cargo bench --bench master_side
 
 fmt-check:
 	cargo fmt --check

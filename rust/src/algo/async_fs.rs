@@ -36,8 +36,10 @@
 //!   per distinct stale reference the master folds
 //!   (a_w + 1, a_g) onto its stored (wʳ′, gʳ′) pair and −1 onto the
 //!   current wʳ. Nodes still ship only (a_w, a_g) + a support-sized
-//!   correction; the master keeps the last τ+1 references (O(τ·d)
-//!   master memory, never per-node).
+//!   correction; the master keeps the last τ+1 references — O(τ·|U|)
+//!   memory under the union-support compact master (the default in
+//!   the paper's sparse regime; see [`crate::algo::fs`]), O(τ·d) only
+//!   when the dense master is selected. Never per-node.
 //!
 //! - **The safeguard is the correctness gate.** Fresh contributions
 //!   get Algorithm 1's per-direction safeguard at their own reference,
@@ -78,7 +80,7 @@
 use std::collections::VecDeque;
 
 use crate::algo::common::{
-    global_value_grad_auto, global_value_grad_cached_auto, test_auprc,
+    global_value_grad_cached_master, global_value_grad_master, TestProbe,
 };
 use crate::algo::fs::{
     combine_hybrids, combine_weights, local_direction, FsConfig,
@@ -191,13 +193,23 @@ impl Driver for AsyncFsDriver {
         let p_nodes = cluster.n_nodes();
         let q = self.config.quorum.clamp(1, p_nodes);
         let dim = cluster.dim;
-        let sparse = cluster.prefer_sparse();
+        // master frame: the union-support compact master shrinks every
+        // master-side buffer — including the τ+1-deep re-basing ring —
+        // from O(d) to O(|U|) (see algo::fs module docs)
+        let (compact, sparse) = c.master.resolve(cluster);
+        let fdim = if compact { cluster.umap.len() } else { dim };
         // the async schedule is its own: solver lanes self-pace, the
         // main lanes barrier on the gradient/commit path
         cluster.set_pipeline(false);
-        let mut w = vec![0.0; dim];
+        let mut w = vec![0.0; fdim];
         let mut trace = Trace::new(self.name());
-        cluster.broadcast_vec(); // ship w⁰
+        // ship w⁰ — O(|U|) payload in the compact regime
+        if compact {
+            cluster.broadcast_support(fdim);
+        } else {
+            cluster.broadcast_vec();
+        }
+        let probe = TestProbe::new(test, compact.then_some(&cluster.umap));
         let mut gnorm0 = f64::INFINITY;
         let mut f = f64::INFINITY;
         let mut last_hits = 0usize;
@@ -205,7 +217,8 @@ impl Driver for AsyncFsDriver {
         let mut lanes: Vec<SolverLane> =
             (0..p_nodes).map(|_| SolverLane::default()).collect();
         // master-side reference ring for stale re-basing: the last
-        // τ+1 (round, wʳ, gʳ) triples — O(τ·d) at the master only
+        // τ+1 (round, wʳ, gʳ) triples — O(τ·|U|) under the compact
+        // master (O(τ·d) only in the dense regime), master only
         let mut history: VecDeque<(usize, Vec<f64>, Vec<f64>)> =
             VecDeque::new();
 
@@ -213,14 +226,15 @@ impl Driver for AsyncFsDriver {
             // --- step 1: synchronous gradient allreduce at wʳ (the
             // cheap commit path every node's main lane walks) ---
             let (f_r, g, grad_parts) = if margins.is_empty() {
-                let (f_r, g, gp, z) = global_value_grad_auto(
-                    cluster, &w, c.loss, c.lam, true, sparse,
+                let (f_r, g, gp, z) = global_value_grad_master(
+                    cluster, &w, c.loss, c.lam, true, sparse, compact,
                 );
                 margins = z;
                 (f_r, g, gp)
             } else {
-                global_value_grad_cached_auto(
+                global_value_grad_cached_master(
                     cluster, &margins, &w, c.loss, c.lam, true, sparse,
+                    compact,
                 )
             };
             f = f_r;
@@ -234,7 +248,7 @@ impl Driver for AsyncFsDriver {
                 gnorm,
                 comm_passes: cluster.ledger.comm_passes,
                 seconds: cluster.ledger.seconds(),
-                auprc: test_auprc(test, &w),
+                auprc: probe.auprc(&w),
                 safeguard_hits: last_hits,
             });
             if gnorm == 0.0
@@ -286,7 +300,8 @@ impl Driver for AsyncFsDriver {
             let gp_ref = &grad_parts;
             let solved = cluster.map_nodes_timed(&fresh, |p, shard, s| {
                 local_direction(
-                    c, p, shard, s, dim, &dots, w_ref, g_ref, gp_ref, r,
+                    c, p, shard, s, fdim, compact, &dots, w_ref, g_ref,
+                    gp_ref, r,
                 )
             });
             let scale = cluster.cost.compute_scale;
@@ -468,8 +483,8 @@ impl Driver for AsyncFsDriver {
                 let mut dirs: Vec<HybridDir> =
                     cluster.map_each_scratch(|p, shard, s| {
                         local_direction(
-                            c, p, shard, s, dim, &dots, w_ref, g_ref,
-                            gp_ref, r,
+                            c, p, shard, s, fdim, compact, &dots, w_ref,
+                            g_ref, gp_ref, r,
                         )
                     });
                 hits += c.safeguard.apply_hybrid(&dots, &w, &g, &mut dirs);
@@ -484,27 +499,25 @@ impl Driver for AsyncFsDriver {
             cluster.ledger.record_async_round(&staleness_seen, fell_back);
 
             // --- step 8: distributed line search on margins (the
-            // synchronous driver's, verbatim) ---
+            // synchronous driver's, verbatim): dʳ·xᵢ lands in each
+            // node's reusable NodeScratch::dz ---
             let d_ref = &d;
             cluster.engine.set_phase("dir_matvec");
-            let dz_parts: Vec<Vec<f64>> =
-                cluster.map_each_scratch_ctrl(|_, shard, s| {
-                    shard.map.gather(d_ref, &mut s.buf);
-                    let mut dz = vec![0.0; shard.xl.n_rows()];
-                    shard.xl.matvec(&s.buf, &mut dz);
-                    dz
-                });
+            cluster.map_each_scratch_ctrl(|_, shard, s| {
+                shard.gather_frame(compact, d_ref, &mut s.buf);
+                s.dz.resize(shard.xl.n_rows(), 0.0);
+                shard.xl.matvec(&s.buf, &mut s.dz);
+            });
             let lam_part = PhiLambda::new(c.lam, &w, &d);
             let loss_kind = c.loss;
             let margins_ref = &margins;
-            let dz_ref = &dz_parts;
             let ls = strong_wolfe(
                 |t| {
                     let [lsum, dlsum] =
-                        cluster.map_reduce_scalars(|p, shard| {
+                        cluster.map_reduce_scalars_scratch(|p, shard, s| {
                             let phi = MarginPhi {
                                 z: &margins_ref[p],
-                                dz: &dz_ref[p],
+                                dz: &s.dz,
                                 y: &shard.y,
                                 loss: loss_kind,
                             };
@@ -524,10 +537,13 @@ impl Driver for AsyncFsDriver {
             };
             // --- step 9 ---
             dense::axpy(t, &d, &mut w);
-            for (z, dz) in margins.iter_mut().zip(&dz_parts) {
-                dense::axpy(t, dz, z);
+            for (p, z) in margins.iter_mut().enumerate() {
+                let s = cluster.scratch[p].lock().expect("scratch lock");
+                dense::axpy(t, &s.dz, z);
             }
         }
+        // the compact master's single O(d) pass
+        let w = if compact { cluster.umap.expand(&w, dim) } else { w };
         RunResult { w, f, trace, ledger: cluster.ledger.clone() }
     }
 }

@@ -151,7 +151,10 @@ impl LocalGrads {
     }
 
     /// Node p's ∇L_p(wʳ) aligned to its shard support. Sparse parts are
-    /// stored support-aligned already; dense parts gather into `buf`.
+    /// stored support-aligned already (indexed by global column on the
+    /// dense master, by U position on the compact master — `val` is
+    /// the same support-aligned slice either way); dense parts gather
+    /// into `buf`.
     pub fn support_vals<'a>(
         &'a self,
         p: usize,
@@ -160,7 +163,7 @@ impl LocalGrads {
     ) -> &'a [f64] {
         match self {
             LocalGrads::Sparse(gs) => {
-                debug_assert_eq!(gs[p].idx, map.support);
+                debug_assert_eq!(gs[p].val.len(), map.len());
                 &gs[p].val
             }
             LocalGrads::Dense(gs) => {
@@ -184,16 +187,36 @@ pub fn global_value_grad_auto(
     all: bool,
     sparse: bool,
 ) -> (f64, Vec<f64>, LocalGrads, Vec<Vec<f64>>) {
-    if !sparse {
+    global_value_grad_master(cluster, w, loss, lam, all, sparse, false)
+}
+
+/// Master-frame-aware gradient round. With `compact` set the whole
+/// round runs in the cluster's union support U: `w` is the length-|U|
+/// compact iterate, nodes gather it through their composed U
+/// positions, ship U-position-indexed payloads (dim |U|), and the
+/// returned gradient is the length-|U| compact ∇f — no O(d) buffer
+/// anywhere. The index remap is a monotone bijection, so sums land
+/// coordinate-for-coordinate identical to the dense-master sparse
+/// round. `compact` implies the sparse wire format.
+pub fn global_value_grad_master(
+    cluster: &mut Cluster,
+    w: &[f64],
+    loss: LossKind,
+    lam: f64,
+    all: bool,
+    sparse: bool,
+    compact: bool,
+) -> (f64, Vec<f64>, LocalGrads, Vec<Vec<f64>>) {
+    if !sparse && !compact {
         let (f, g, parts, margins) =
             global_value_grad(cluster, w, loss, lam, all);
         return (f, g, LocalGrads::Dense(parts), margins);
     }
-    let dim = cluster.dim;
+    let fdim = if compact { cluster.umap.len() } else { cluster.dim };
     cluster.engine.set_phase("grad_sweep");
     let parts: Vec<(f64, SparseVec, Vec<f64>)> =
         cluster.map_each_scratch(|_, shard, s| {
-            shard.map.gather(w, &mut s.wloc);
+            shard.gather_frame(compact, w, &mut s.wloc);
             let mut z = Vec::new();
             let val = shard_loss_grad_compact(
                 &shard.xl,
@@ -203,7 +226,7 @@ pub fn global_value_grad_auto(
                 &mut s.vals,
                 Some(&mut z),
             );
-            (val, shard.map.to_sparse_aligned(dim, &s.vals), z)
+            (val, shard.support_sparse(compact, fdim, &s.vals), z)
         });
     let mut loss_sum = 0.0;
     let mut grad_parts = Vec::with_capacity(parts.len());
@@ -229,12 +252,29 @@ pub fn global_value_grad_cached_auto(
     all: bool,
     sparse: bool,
 ) -> (f64, Vec<f64>, LocalGrads) {
-    if !sparse {
+    global_value_grad_cached_master(
+        cluster, margins, w, loss, lam, all, sparse, false,
+    )
+}
+
+/// Cached-margin counterpart of [`global_value_grad_master`].
+#[allow(clippy::too_many_arguments)]
+pub fn global_value_grad_cached_master(
+    cluster: &mut Cluster,
+    margins: &[Vec<f64>],
+    w: &[f64],
+    loss: LossKind,
+    lam: f64,
+    all: bool,
+    sparse: bool,
+    compact: bool,
+) -> (f64, Vec<f64>, LocalGrads) {
+    if !sparse && !compact {
         let (f, g, parts) =
             global_value_grad_cached(cluster, margins, w, loss, lam, all);
         return (f, g, LocalGrads::Dense(parts));
     }
-    let dim = cluster.dim;
+    let fdim = if compact { cluster.umap.len() } else { cluster.dim };
     cluster.engine.set_phase("grad_sweep");
     let parts: Vec<(f64, SparseVec)> =
         cluster.map_each_scratch(|p, shard, s| {
@@ -246,7 +286,7 @@ pub fn global_value_grad_cached_auto(
                 loss,
                 &mut s.vals,
             );
-            (val, shard.map.to_sparse_aligned(dim, &s.vals))
+            (val, shard.support_sparse(compact, fdim, &s.vals))
         });
     let mut loss_sum = 0.0;
     let mut grad_parts = Vec::with_capacity(parts.len());
@@ -267,10 +307,23 @@ pub fn global_f_diagnostic(
     loss: LossKind,
     lam: f64,
 ) -> f64 {
+    global_f_frame(cluster, w, loss, lam, false)
+}
+
+/// Frame-aware [`global_f_diagnostic`]: with `compact` the iterate is
+/// the length-|U| compact vector and shards gather through their U
+/// positions. Same value either way (coordinates outside U are 0).
+pub fn global_f_frame(
+    cluster: &Cluster,
+    w: &[f64],
+    loss: LossKind,
+    lam: f64,
+    compact: bool,
+) -> f64 {
     let mut v = 0.5 * lam * dense::norm_sq(w);
     let mut wl = Vec::new();
     for shard in &cluster.shards {
-        shard.map.gather(w, &mut wl);
+        shard.gather_frame(compact, w, &mut wl);
         for i in 0..shard.xl.n_rows() {
             v += loss.value(shard.xl.row_dot(i, &wl), shard.y[i]);
         }
@@ -286,6 +339,50 @@ pub fn test_auprc(test: Option<&Dataset>, w: &[f64]) -> f64 {
             let mut z = vec![0.0; t.n_examples()];
             t.x.matvec(w, &mut z);
             auprc(&z, &t.y)
+        }
+    }
+}
+
+/// Per-round test-set probe that works in whichever frame the driver's
+/// master iterate lives in. The compact variant remaps the test matrix
+/// onto the union support ONCE at construction (columns outside U
+/// carry weight exactly 0 — they have no training data — so dropping
+/// their terms changes no margin), keeping the per-round probe
+/// O(nnz_test) with no full-d materialization.
+pub enum TestProbe<'a> {
+    None,
+    /// dense master: score the size-d iterate directly
+    Dense(&'a Dataset),
+    /// compact master: test matrix with columns remapped to U positions
+    Compact { x: crate::linalg::Csr, y: &'a [f64] },
+}
+
+impl<'a> TestProbe<'a> {
+    /// `umap = Some(U)` selects the compact probe (the master iterate
+    /// is length |U|); `None` keeps the classic dense scoring.
+    pub fn new(
+        test: Option<&'a Dataset>,
+        umap: Option<&SupportMap>,
+    ) -> TestProbe<'a> {
+        match (test, umap) {
+            (None, _) => TestProbe::None,
+            (Some(t), None) => TestProbe::Dense(t),
+            (Some(t), Some(u)) => {
+                TestProbe::Compact { x: u.remap_csr(&t.x), y: &t.y }
+            }
+        }
+    }
+
+    /// AUPRC of the current master iterate (NaN without a test set).
+    pub fn auprc(&self, w: &[f64]) -> f64 {
+        match self {
+            TestProbe::None => f64::NAN,
+            TestProbe::Dense(t) => test_auprc(Some(*t), w),
+            TestProbe::Compact { x, y } => {
+                let mut z = vec![0.0; x.n_rows()];
+                x.matvec(w, &mut z);
+                auprc(&z, y)
+            }
         }
     }
 }
@@ -330,7 +427,11 @@ impl<'a> Objective for DistributedObjective<'a> {
 
     fn value_grad(&self, w: &[f64], out: &mut [f64]) -> f64 {
         let cluster = &mut **self.cluster.borrow_mut();
-        cluster.broadcast_vec(); // master ships the trial w
+        // master ships the trial w — O(|U|) payload under the
+        // compact-master density gate (SQM iterates live in U too:
+        // w⁰ = 0 and every update is a combination of gradients and
+        // Hv products, both supported in U)
+        cluster.broadcast_master();
         let (f, g, _, _) = global_value_grad_auto(
             cluster, w, self.loss, self.lam, false, self.sparse,
         );
@@ -345,7 +446,7 @@ impl<'a> Objective for DistributedObjective<'a> {
     /// wire vector or ship as index/value pairs.
     fn hess_vec(&self, w: &[f64], v: &[f64], out: &mut [f64]) {
         let cluster = &mut **self.cluster.borrow_mut();
-        cluster.broadcast_vec(); // ship v
+        cluster.broadcast_master(); // ship v (CG directions live in U)
         let loss = self.loss;
         let dim = cluster.dim;
         cluster.engine.set_phase("hv_product");

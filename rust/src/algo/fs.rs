@@ -42,10 +42,32 @@
 //! correctness gate — see [`crate::algo::async_fs`], which shares this
 //! driver's per-node solve (`local_direction`) and step-7 combine
 //! (`combine_hybrids`) verbatim.
+//!
+//! **Union-support compact master** ([`MasterMode`], CLI `--master`):
+//! in the paper's regime (d ≫ nnz columns) the *nodes* have been
+//! O(|support_p|) since the compact-coordinate pipeline, but a naive
+//! master still burns several dense O(d) passes per outer round —
+//! ‖gʳ‖, the shared `GlobalDots`, the dʳ materialization of step 7,
+//! the line search's λ scalars and the step-9 axpy. Since every
+//! iterate, gradient and direction of the outer loop is an affine
+//! combination of w⁰ = 0, loss gradients (supported in
+//! U = ⋃_p support_p) and support-sized corrections, the whole loop
+//! provably lives in U: under the density gate
+//! ([`Cluster::prefer_compact_master`]) this driver runs every master
+//! buffer at length |U| — wʳ, gʳ, dʳ, the safeguard dots, `PhiLambda`
+//! and the AUPRC probe — and materializes the full-d vector exactly
+//! once, into [`RunResult::w`]. The U-position index remap is a
+//! monotone bijection of the global columns, so every sum runs in the
+//! same coordinate order and the two masters produce ε-identical
+//! traces and safeguard decisions (`tests/compact_master.rs` pins
+//! this across shard shapes, inner solvers and the async driver).
+//! Wire payloads on the direction/gradient rounds are unchanged
+//! (same nnz); broadcasts shrink to O(|U|)
+//! ([`Cluster::broadcast_support`]).
 
 use crate::algo::common::{
-    global_value_grad_auto, global_value_grad_cached_auto, test_auprc,
-    LocalGrads,
+    global_value_grad_cached_master, global_value_grad_master, LocalGrads,
+    TestProbe,
 };
 use crate::algo::safeguard::Safeguard;
 use crate::algo::{Driver, RunResult, StopRule};
@@ -86,6 +108,21 @@ pub enum Combine {
     SizeWeighted,
 }
 
+/// Which master-side representation the outer loop runs in (see the
+/// module docs). `Auto` follows the cluster's union-support density
+/// gate; the forced modes exist for the equivalence tests and the
+/// `master_side` bench, which time both masters on identical data.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MasterMode {
+    /// compact when `Cluster::prefer_compact_master()` (|U|/d < 0.5)
+    #[default]
+    Auto,
+    /// force the classic full-d dense master
+    Dense,
+    /// force the O(|U|) union-support compact master
+    Compact,
+}
+
 #[derive(Clone, Debug)]
 pub struct FsConfig {
     pub loss: LossKind,
@@ -104,6 +141,9 @@ pub struct FsConfig {
     /// search (control lane) with the next round's node compute.
     /// Timing-model only — results are bit-identical (see module docs).
     pub pipeline: bool,
+    /// master-side frame: `Auto` (density-gated), or forced
+    /// dense/compact for equivalence tests and benches.
+    pub master: MasterMode,
 }
 
 impl Default for FsConfig {
@@ -120,7 +160,25 @@ impl Default for FsConfig {
             inner: InnerSolver::Svrg,
             seed: 0,
             pipeline: false,
+            master: MasterMode::Auto,
         }
+    }
+}
+
+impl MasterMode {
+    /// Resolve the mode against the cluster's density gates. Returns
+    /// `(compact, sparse)`: whether the master runs in the length-|U|
+    /// compact frame, and whether gradient/direction rounds use the
+    /// sparse wire format (the compact master always does — its
+    /// payloads are U-position index/value pairs).
+    pub(crate) fn resolve(self, cluster: &Cluster) -> (bool, bool) {
+        let sparse = cluster.prefer_sparse();
+        let compact = match self {
+            MasterMode::Auto => sparse && cluster.prefer_compact_master(),
+            MasterMode::Compact => true,
+            MasterMode::Dense => false,
+        };
+        (compact, sparse || compact)
     }
 }
 
@@ -231,32 +289,40 @@ fn solve_local(
 /// synchronous driver (inside `map_each_scratch`) and the
 /// bounded-staleness async driver (on its solver lanes), so the two
 /// produce bit-identical directions from identical references.
+///
+/// `fdim`/`compact` name the master frame the reference vectors live
+/// in: (d, false) for the dense master, (|U|, true) for the
+/// union-support compact master — the gathered support values are
+/// identical either way, only the correction's index dictionary
+/// changes ([`Shard::dir_idx`]).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn local_direction(
     c: &FsConfig,
     p: usize,
     shard: &Shard,
     s: &mut NodeScratch,
-    dim: usize,
+    fdim: usize,
+    compact: bool,
     dots: &GlobalDots,
     w: &[f64],
     g: &[f64],
     grads: &LocalGrads,
     iter: usize,
 ) -> HybridDir {
-    shard.map.gather(w, &mut s.wloc);
-    shard.map.gather(g, &mut s.gloc);
+    shard.gather_frame(compact, w, &mut s.wloc);
+    shard.gather_frame(compact, g, &mut s.gloc);
     let glp = grads.support_vals(p, &shard.map, &mut s.vals);
     let approx = CompactApprox::build(
         &shard.xl, &shard.y, c.loss, c.lam, dots, &s.wloc, &s.gloc, glp,
     );
     let out = solve_local(c, &approx, p, iter, s);
+    let idx = shard.dir_idx(compact);
     match out {
         SolveOut::Point(w_p) => {
             let (a_w, a_g) = approx.off_support_coeffs(&w_p);
-            HybridDir::from_compact(
-                &shard.map,
-                dim,
+            HybridDir::from_compact_idx(
+                idx,
+                fdim,
                 a_w,
                 a_g,
                 &w_p,
@@ -264,9 +330,9 @@ pub(crate) fn local_direction(
                 &s.gloc,
             )
         }
-        SolveOut::Shrink(w_c, shrink) => HybridDir::from_compact(
-            &shard.map,
-            dim,
+        SolveOut::Shrink(w_c, shrink) => HybridDir::from_compact_idx(
+            idx,
+            fdim,
             shrink - 1.0,
             0.0,
             &w_c,
@@ -280,7 +346,10 @@ pub(crate) fn local_direction(
 /// directions, exactly as the synchronous driver runs it: coefficient
 /// sums + one sparse allreduce of the weighted corrections in the
 /// sparse regime, materialized dense parts through the classic dense
-/// allreduce otherwise. Shared by the FS driver and the async
+/// allreduce otherwise. Frame-agnostic: `w`/`g` and the correction
+/// indices are whatever master frame the caller runs in (full-d dense
+/// or length-|U| compact — the compact master materializes dʳ in
+/// O(|U|) here, never O(d)). Shared by the FS driver and the async
 /// driver's synchronous-fallback path so "the barrier direction" is
 /// one implementation, not two.
 pub(crate) fn combine_hybrids(
@@ -382,13 +451,24 @@ impl Driver for FsDriver {
         let dim = cluster.dim;
         // route gradient/direction rounds through the sparse phases
         // when the shards' column supports are small relative to d (the
-        // paper's high-dimensional regime); dense-heavy shards keep the
-        // plain dense path
-        let sparse = cluster.prefer_sparse();
+        // paper's high-dimensional regime), and — one gate further —
+        // run the whole master side in union-support compact
+        // coordinates when |U|/d is small too (see module docs)
+        let (compact, sparse) = c.master.resolve(cluster);
+        // the master frame: length-|U| compact buffers or full-d dense
+        let fdim = if compact { cluster.umap.len() } else { dim };
         cluster.set_pipeline(c.pipeline);
-        let mut w = vec![0.0; dim];
+        let mut w = vec![0.0; fdim];
         let mut trace = Trace::new(self.name());
-        cluster.broadcast_vec(); // ship w⁰
+        // ship w⁰ — O(|U|) payload in the compact regime
+        if compact {
+            cluster.broadcast_support(fdim);
+        } else {
+            cluster.broadcast_vec();
+        }
+        // AUPRC probe in the master frame (test columns remapped onto
+        // U once — never a full-d materialization per round)
+        let probe = TestProbe::new(test, compact.then_some(&cluster.umap));
         let mut gnorm0 = f64::INFINITY;
         let mut f = f64::INFINITY;
         let mut last_hits = 0usize;
@@ -396,18 +476,23 @@ impl Driver for FsDriver {
         // (z ← z + t·dz after each line search) so the gradient pass
         // needs one data sweep, not two (§Perf)
         let mut margins: Vec<Vec<f64>> = Vec::new();
+        // step 7's convex weights are round-independent — hoisted out
+        // of the loop along with the node list (§Perf)
+        let all_nodes: Vec<usize> = (0..cluster.n_nodes()).collect();
+        let weights = combine_weights(cluster, c.combine, &all_nodes);
 
         for r in 0.. {
             // --- step 1: gʳ (allreduce: nodes need it for the tilt) ---
             let (f_r, g, grad_parts) = if margins.is_empty() {
-                let (f_r, g, gp, z) = global_value_grad_auto(
-                    cluster, &w, c.loss, c.lam, true, sparse,
+                let (f_r, g, gp, z) = global_value_grad_master(
+                    cluster, &w, c.loss, c.lam, true, sparse, compact,
                 );
                 margins = z;
                 (f_r, g, gp)
             } else {
-                global_value_grad_cached_auto(
+                global_value_grad_cached_master(
                     cluster, &margins, &w, c.loss, c.lam, true, sparse,
+                    compact,
                 )
             };
             f = f_r;
@@ -421,7 +506,7 @@ impl Driver for FsDriver {
                 gnorm,
                 comm_passes: cluster.ledger.comm_passes,
                 seconds: cluster.ledger.seconds(),
-                auprc: test_auprc(test, &w),
+                auprc: probe.auprc(&w),
                 safeguard_hits: last_hits,
             });
             // --- step 2 + stop rules ---
@@ -430,8 +515,8 @@ impl Driver for FsDriver {
             }
 
             // --- steps 3–5: parallel compact local solves on f̂_p ---
-            // shared O(d) dots once at the master; per node everything
-            // below is O(|support_p|)
+            // shared master-frame dots once (O(|U|) compact, O(d)
+            // dense); per node everything below is O(|support_p|)
             let dots = GlobalDots::compute(&w, &g);
             let w_ref = &w;
             let g_ref = &g;
@@ -440,7 +525,8 @@ impl Driver for FsDriver {
             let mut dirs: Vec<HybridDir> =
                 cluster.map_each_scratch(|p, shard, s| {
                     local_direction(
-                        c, p, shard, s, dim, &dots, w_ref, g_ref, gp_ref, r,
+                        c, p, shard, s, fdim, compact, &dots, w_ref, g_ref,
+                        gp_ref, r,
                     )
                 });
 
@@ -451,37 +537,34 @@ impl Driver for FsDriver {
             // sparse regime: sum the affine coefficients (two scalars
             // per node on the wire) and sparse-allreduce the weighted
             // corrections; every node can rebuild dʳ from its own
-            // (wʳ, gʳ) copies, the master materializes it in O(d).
+            // (wʳ, gʳ) copies, the master materializes it in the frame
+            // (O(|U|) compact, O(d) dense).
             // dense regime: materialize the weighted d_p per node and
             // run the classic dense allreduce (same accounting as the
             // dense gradient path).
-            let all_nodes: Vec<usize> = (0..cluster.n_nodes()).collect();
-            let weights = combine_weights(cluster, c.combine, &all_nodes);
             let d = combine_hybrids(cluster, dirs, &weights, &w, &g, sparse);
 
             // --- step 8: distributed line search on margins ---
             // nodes compute dʳ·xᵢ locally (compute-only phase, compact
-            // gather of dʳ onto the support)
+            // gather of dʳ onto the support) into their reusable
+            // NodeScratch::dz — steady-state rounds allocate nothing
             let d_ref = &d;
             cluster.engine.set_phase("dir_matvec");
-            let dz_parts: Vec<Vec<f64>> =
-                cluster.map_each_scratch_ctrl(|_, shard, s| {
-                    shard.map.gather(d_ref, &mut s.buf);
-                    let mut dz = vec![0.0; shard.xl.n_rows()];
-                    shard.xl.matvec(&s.buf, &mut dz);
-                    dz
-                });
+            cluster.map_each_scratch_ctrl(|_, shard, s| {
+                shard.gather_frame(compact, d_ref, &mut s.buf);
+                s.dz.resize(shard.xl.n_rows(), 0.0);
+                shard.xl.matvec(&s.buf, &mut s.dz);
+            });
             let lam_part = PhiLambda::new(c.lam, &w, &d);
             let loss_kind = c.loss;
             let margins_ref = &margins;
-            let dz_ref = &dz_parts;
             let ls = strong_wolfe(
                 |t| {
                     let [lsum, dlsum] =
-                        cluster.map_reduce_scalars(|p, shard| {
+                        cluster.map_reduce_scalars_scratch(|p, shard, s| {
                             let phi = MarginPhi {
                                 z: &margins_ref[p],
-                                dz: &dz_ref[p],
+                                dz: &s.dz,
                                 y: &shard.y,
                                 loss: loss_kind,
                             };
@@ -506,11 +589,16 @@ impl Driver for FsDriver {
             };
             // --- step 9 (nodes reconstruct wʳ⁺¹ locally from t) ---
             dense::axpy(t, &d, &mut w);
-            // nodes update their margin cache: z ← z + t·dz (O(n_p))
-            for (z, dz) in margins.iter_mut().zip(&dz_parts) {
-                dense::axpy(t, dz, z);
+            // nodes update their margin cache from their scratch dz:
+            // z ← z + t·dz (O(n_p))
+            for (p, z) in margins.iter_mut().enumerate() {
+                let s = cluster.scratch[p].lock().expect("scratch lock");
+                dense::axpy(t, &s.dz, z);
             }
         }
+        // the compact master's single O(d) pass: materialize the
+        // returned iterate into full space
+        let w = if compact { cluster.umap.expand(&w, dim) } else { w };
         RunResult { w, f, trace, ledger: cluster.ledger.clone() }
     }
 }
@@ -549,7 +637,8 @@ mod tests {
         }
         let x = crate::linalg::Csr::from_rows(cluster.dim, &rows);
         let obj = RegularizedLoss { x: &x, y: &ys, loss, lam };
-        tron::minimize(&obj, &vec![0.0; cluster.dim], &TronParams {
+        let w0 = vec![0.0; cluster.dim];
+        tron::minimize(&obj, &w0, &TronParams {
             eps: 1e-12,
             max_iter: 200,
             ..Default::default()

@@ -44,10 +44,14 @@ impl Driver for HybridDriver {
         stop: &StopRule,
     ) -> RunResult {
         // phase 1: one parameter-mixing round (1 SGD epoch per node,
-        // average) — 1 bcast + 1 allreduce
+        // average) — 1 bcast + 1 allreduce. SQM consumes the warm
+        // start as a full-d vector, so the mixing round stays in the
+        // dense frame here; the zero start is a named binding rather
+        // than a throwaway temporary on the call.
         cluster.broadcast_vec();
         let mixer = ParamMixDriver::new(self.config.mix.clone());
-        let w_init = mixer.round(cluster, &vec![0.0; cluster.dim], 0);
+        let w0 = vec![0.0; cluster.dim];
+        let w_init = mixer.round(cluster, &w0, 0);
 
         // phase 2: SQM from the mixed start; ledger carries over
         let sqm = SqmDriver::with_start(self.config.sqm.clone(), w_init);

@@ -8,7 +8,8 @@
 //! (b) large epoch counts make each node converge to argmin f̃_p,
 //! rendering the major iterations useless (no contraction).
 
-use crate::algo::common::{global_f_diagnostic, test_auprc};
+use crate::algo::common::{global_f_frame, TestProbe};
+use crate::algo::fs::MasterMode;
 use crate::algo::{Driver, RunResult, StopRule};
 use crate::cluster::Cluster;
 use crate::data::dataset::Dataset;
@@ -55,11 +56,28 @@ impl ParamMixDriver {
     /// correction reconstructs the full iterate. Charges 2 passes
     /// (allreduce); on sparse clusters only the corrections travel —
     /// every node rebuilds the average from its own copy of w.
+    /// `w` is a full-d dense iterate (the Hybrid warm start's frame).
     pub fn round(&self, cluster: &mut Cluster, w: &[f64], iter: usize) -> Vec<f64> {
+        self.round_frame(cluster, w, iter, false)
+    }
+
+    /// [`Self::round`] in an explicit master frame: with `compact` the
+    /// iterate is the length-|U| union-support vector, gathers run
+    /// through the shards' U positions and the correction reduce is
+    /// U-position-indexed — the averaged iterate never touches a
+    /// full-d buffer (same arithmetic as the dense frame; see
+    /// `algo::fs`).
+    fn round_frame(
+        &self,
+        cluster: &mut Cluster,
+        w: &[f64],
+        iter: usize,
+        compact: bool,
+    ) -> Vec<f64> {
         let c = &self.config;
         let n_nodes = cluster.n_nodes() as f64;
-        let dim = cluster.dim;
-        let sparse = cluster.prefer_sparse();
+        let fdim = if compact { cluster.umap.len() } else { cluster.dim };
+        let sparse = cluster.prefer_sparse() || compact;
         cluster.engine.set_phase("mix_sgd");
         let parts: Vec<(f64, SparseVec)> =
             cluster.map_each_scratch(|p, shard, s| {
@@ -67,7 +85,7 @@ impl ParamMixDriver {
                     .seed
                     .wrapping_add((iter as u64) << 24)
                     .wrapping_add(p as u64);
-                shard.map.gather(w, &mut s.wloc);
+                shard.gather_frame(compact, w, &mut s.wloc);
                 let (w_c, shrink) = sgd_epochs_shrink(
                     &shard.xl,
                     &shard.y,
@@ -81,8 +99,11 @@ impl ParamMixDriver {
                     .zip(s.wloc.iter())
                     .map(|(a, b)| a - shrink * b)
                     .collect();
-                let corr =
-                    SparseVec::from_support(dim, &shard.map.support, &vals);
+                let corr = SparseVec::from_support(
+                    fdim,
+                    shard.dir_idx(compact),
+                    &vals,
+                );
                 (shrink, corr)
             });
         let shrink_avg: f64 = parts.iter().map(|(sh, _)| sh / n_nodes).sum();
@@ -107,7 +128,8 @@ impl ParamMixDriver {
             out
         } else {
             // dense wire: materialize each node's scaled w_p (classic
-            // parameter-mixing accounting)
+            // parameter-mixing accounting; never taken in the compact
+            // frame — `sparse` is forced on there)
             let dense_parts: Vec<Vec<f64>> = parts
                 .iter()
                 .map(|(sh, sv)| {
@@ -134,10 +156,23 @@ impl Driver for ParamMixDriver {
         stop: &StopRule,
     ) -> RunResult {
         let dim = cluster.dim;
-        let mut w = vec![0.0; dim];
+        // density-gated union-support compact master, exactly as in FS:
+        // the iterate, every correction and the averaged result live in
+        // U, so the driver's own loop never allocates O(d)
+        let (compact, _) = MasterMode::Auto.resolve(cluster);
+        let fdim = if compact { cluster.umap.len() } else { dim };
+        let mut w = vec![0.0; fdim];
         let mut trace = Trace::new(self.name());
-        cluster.broadcast_vec(); // w⁰
-        let mut f = global_f_diagnostic(cluster, &w, self.config.loss, self.config.lam);
+        // w⁰ — O(|U|) payload in the compact regime
+        if compact {
+            cluster.broadcast_support(fdim);
+        } else {
+            cluster.broadcast_vec();
+        }
+        let probe = TestProbe::new(test, compact.then_some(&cluster.umap));
+        let mut f = global_f_frame(
+            cluster, &w, self.config.loss, self.config.lam, compact,
+        );
         for r in 0.. {
             trace.push(TracePoint {
                 iter: r,
@@ -145,15 +180,19 @@ impl Driver for ParamMixDriver {
                 gnorm: f64::NAN, // gradient never formed — that's the point
                 comm_passes: cluster.ledger.comm_passes,
                 seconds: cluster.ledger.seconds(),
-                auprc: test_auprc(test, &w),
+                auprc: probe.auprc(&w),
                 safeguard_hits: 0,
             });
             if stop.should_stop(r, f, f64::INFINITY, 1.0, &cluster.ledger) {
                 break;
             }
-            w = self.round(cluster, &w, r);
-            f = global_f_diagnostic(cluster, &w, self.config.loss, self.config.lam);
+            w = self.round_frame(cluster, &w, r, compact);
+            f = global_f_frame(
+                cluster, &w, self.config.loss, self.config.lam, compact,
+            );
         }
+        // single O(d) materialization at RunResult construction
+        let w = if compact { cluster.umap.expand(&w, dim) } else { w };
         RunResult { w, f, trace, ledger: cluster.ledger.clone() }
     }
 }
@@ -223,9 +262,10 @@ mod tests {
             loss: LossKind::Logistic,
             lam: 0.5,
         };
+        let w0 = vec![0.0; cluster.dim];
         let fstar = tron::minimize(
             &obj,
-            &vec![0.0; cluster.dim],
+            &w0,
             &TronParams { eps: 1e-12, ..Default::default() },
         )
         .f;

@@ -36,11 +36,17 @@ pub use scratch::NodeScratch;
 
 use crate::data::dataset::Dataset;
 use crate::data::partition::Partition;
-use crate::linalg::sparse::SparseVec;
+use crate::linalg::sparse::{SparseVec, SupportMap};
 use self::allreduce::Reduced;
 use self::engine::Lane;
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// Union-support density below which drivers run their outer loop on
+/// the compact master (see [`Cluster::prefer_compact_master`]). Matches
+/// the `prefer_sparse` wire threshold: past 0.5 the support-position
+/// indirection stops paying for itself.
+pub const COMPACT_MASTER_MAX_DENSITY: f64 = 0.5;
 
 /// Default worker-thread count for map phases: every available core.
 /// The `--threads` CLI flag (0 = this auto value) overrides it.
@@ -55,6 +61,12 @@ pub struct Cluster {
     pub shards: Vec<Shard>,
     pub cost: CostModel,
     pub dim: usize,
+    /// union support U = ⋃_p support_p, built once at partition time —
+    /// the global column dictionary the union-support compact master
+    /// runs its entire outer loop in (length-|U| buffers instead of
+    /// full-d vectors; see `algo::fs`). Each shard carries its
+    /// composed positions within U (`Shard::upos`).
+    pub umap: SupportMap,
     pub ledger: Ledger,
     /// worker threads for map phases (defaults to every available
     /// core; set to 1 for sequential execution). Results are
@@ -84,7 +96,7 @@ impl Cluster {
         cost: CostModel,
     ) -> Cluster {
         let dim = data.n_features();
-        let shards: Vec<Shard> = partition
+        let mut shards: Vec<Shard> = partition
             .assignment
             .iter()
             .map(|rows| {
@@ -92,6 +104,12 @@ impl Cluster {
                 Shard::new(sub.x, sub.y)
             })
             .collect();
+        // union support + each shard's composed positions within it —
+        // the compact master's global dictionary (built once, O(Σ|S_p|))
+        let umap = SupportMap::union_of(shards.iter().map(|s| &s.map));
+        for shard in &mut shards {
+            shard.upos = umap.positions_of(&shard.map);
+        }
         let scratch = NodeScratch::pool(shards.len());
         // the deprecated CostModel::straggle knob becomes a NodeProfile
         // at partition time (straggle == 0 ⇒ homogeneous); replace it
@@ -104,6 +122,7 @@ impl Cluster {
             shards,
             cost,
             dim,
+            umap,
             ledger: Ledger::default(),
             threads: default_threads(),
             scratch,
@@ -122,6 +141,7 @@ impl Cluster {
             shards: self.shards.clone(),
             cost: self.cost,
             dim: self.dim,
+            umap: self.umap.clone(),
             ledger: Ledger::default(),
             threads: self.threads,
             scratch: NodeScratch::pool(self.shards.len()),
@@ -178,6 +198,30 @@ impl Cluster {
     /// merged nnz payload (see [`CostModel::ring_sparse_traversal_seconds`]).
     pub fn prefer_sparse(&self) -> bool {
         self.support_density() < 0.5
+    }
+
+    /// Fraction of the d columns the *union* support covers — the
+    /// density the compact-master gate tests. Always ≥ the mean shard
+    /// density [`Self::support_density`], so `prefer_compact_master`
+    /// implies `prefer_sparse`.
+    pub fn union_density(&self) -> f64 {
+        self.umap.density(self.dim)
+    }
+
+    /// Density gate for the union-support compact master (the
+    /// companion of [`Self::prefer_sparse`], same 0.5 threshold): run
+    /// the drivers' entire outer loop in O(|U|) compact buffers when
+    /// the union support covers less than
+    /// [`COMPACT_MASTER_MAX_DENSITY`] of the d columns. Below the
+    /// threshold the compact master wins on every O(d) pass it
+    /// replaces (norms, dots, the step-7 combine, the line-search λ
+    /// scalars, the step-9 axpy) *and* on master memory; above it the
+    /// |U|-indirection buys nothing over plain dense vectors, so
+    /// drivers fall back to the dense master. Arithmetic is
+    /// ε-identical either way (`tests/compact_master.rs` pins it);
+    /// only buffer sizes and wire/byte accounting change.
+    pub fn prefer_compact_master(&self) -> bool {
+        self.union_density() < COMPACT_MASTER_MAX_DENSITY
     }
 
     /// Compute-only phase: run `f` on every node, charge the clock with
@@ -597,8 +641,65 @@ impl Cluster {
     /// (The data flow itself is implicit — nodes read the master copy —
     /// but the cost is real.)
     pub fn broadcast_vec(&mut self) {
-        self.charge_vector_pass(1);
-        self.engine_dense_traversal(false, true, false);
+        let bytes = (self.dim * self.cost.bytes_per_scalar) as f64;
+        self.broadcast_payload(bytes);
+    }
+
+    /// Master → nodes broadcast of a support-sized payload (`len`
+    /// coordinates, len·8 wire bytes): what shipping w costs in the
+    /// compact regime, where the iterate provably lives in the union
+    /// support U. Still 1 logical pass (the paper's footnote-5 count is
+    /// wire-format independent, exactly as for the sparse reductions);
+    /// bytes and modeled seconds follow the actual |U|·8 payload
+    /// instead of d·8.
+    pub fn broadcast_support(&mut self, len: usize) {
+        let bytes = (len * self.cost.bytes_per_scalar) as f64;
+        self.broadcast_payload(bytes);
+    }
+
+    /// The one broadcast charge/schedule implementation behind both
+    /// sizes above (for a dim-sized payload it reproduces the classic
+    /// `traversal_seconds` charge exactly: depth × per-hop on the
+    /// Tree, (P−1) chunk hops on the Ring, zero wire on one node).
+    /// Flat charge and engine schedule stay mirror images so the
+    /// barrier makespan equivalence (`tests/engine.rs`) is preserved.
+    fn broadcast_payload(&mut self, bytes: f64) {
+        let depth = self.tree_depth() as usize;
+        self.ledger.comm_passes += 1.0;
+        self.ledger.comm_bytes += bytes;
+        match self.cost.topology {
+            cost::Topology::Tree => {
+                let hop = if self.n_nodes() <= 1 {
+                    0.0
+                } else {
+                    self.cost.hop_seconds(bytes)
+                };
+                self.ledger.comm_seconds += depth as f64 * hop;
+                self.engine.broadcast(depth, hop);
+            }
+            cost::Topology::Ring => {
+                let secs = self
+                    .cost
+                    .ring_sparse_traversal_seconds(bytes, self.n_nodes());
+                self.ledger.comm_seconds += secs;
+                self.engine.ring_traversal("ring", secs);
+            }
+        }
+        self.sync_ledger();
+    }
+
+    /// Broadcast the master iterate in its cheapest representation:
+    /// O(|U|) support values under the compact-master density gate,
+    /// the dense size-d vector otherwise. SQM's per-iteration w and v
+    /// broadcasts route through this so the compact regime's ledger
+    /// stops overcharging d·8 for payloads that live in U.
+    pub fn broadcast_master(&mut self) {
+        if self.prefer_compact_master() {
+            let len = self.umap.len();
+            self.broadcast_support(len);
+        } else {
+            self.broadcast_vec();
+        }
     }
 
     /// Scalar aggregation round (line-search trial): each node returns
@@ -608,11 +709,40 @@ impl Cluster {
         &mut self,
         f: impl Fn(usize, &Shard) -> [f64; K] + Sync,
     ) -> [f64; K] {
-        // the per-node evaluation is tiny (margins are cached); in
-        // pipelined mode it rides the control lane with the round
-        // itself (line-search trials ARE the control plane)
         let (outs, times) = self.run_nodes(&f);
-        self.charge_compute_lane(&times, true);
+        self.finish_scalar_round(outs, &times)
+    }
+
+    /// [`Self::map_reduce_scalars`] handing every node its reusable
+    /// [`NodeScratch`] slot — the line-search trials read the dʳ·xᵢ
+    /// margin deltas straight out of `NodeScratch::dz` instead of a
+    /// per-round allocation (same lane/charge semantics otherwise).
+    pub fn map_reduce_scalars_scratch<const K: usize>(
+        &mut self,
+        f: impl Fn(usize, &Shard, &mut NodeScratch) -> [f64; K] + Sync,
+    ) -> [f64; K] {
+        let (outs, times) = {
+            let scratch = &self.scratch;
+            let g = |p: usize, shard: &Shard| -> [f64; K] {
+                let mut slot = scratch[p].lock().expect("scratch lock");
+                f(p, shard, &mut slot)
+            };
+            self.run_nodes(&g)
+        };
+        self.finish_scalar_round(outs, &times)
+    }
+
+    /// The one scalar-round charge-and-sum body behind both variants
+    /// above: the per-node evaluation is tiny (margins are cached) and
+    /// in pipelined mode rides the control lane with the round itself
+    /// (line-search trials ARE the control plane); the K scalars
+    /// tree-sum and cost one scalar round.
+    fn finish_scalar_round<const K: usize>(
+        &mut self,
+        outs: Vec<[f64; K]>,
+        times: &[f64],
+    ) -> [f64; K] {
+        self.charge_compute_lane(times, true);
         let mut acc = [0.0; K];
         for o in outs {
             for (a, v) in acc.iter_mut().zip(o) {
@@ -835,6 +965,71 @@ mod tests {
             c_dense.ledger.comm_bytes
         );
         assert!(c_sparse.ledger.comm_seconds <= c_dense.ledger.comm_seconds);
+    }
+
+    #[test]
+    fn partition_builds_union_support_and_positions() {
+        let c = cluster(4);
+        // every shard support column appears in U at its composed slot
+        for s in &c.shards {
+            assert_eq!(s.upos.len(), s.map.len());
+            for (l, &p) in s.upos.iter().enumerate() {
+                assert_eq!(c.umap.support[p as usize], s.map.support[l]);
+            }
+        }
+        // U is exactly the set of columns with data
+        let mut want: Vec<u32> = c
+            .shards
+            .iter()
+            .flat_map(|s| s.map.support.iter().copied())
+            .collect();
+        want.sort_unstable();
+        want.dedup();
+        assert_eq!(c.umap.support, want);
+        // fork_fresh preserves the dictionary
+        let f = c.fork_fresh();
+        assert_eq!(f.umap.support, c.umap.support);
+        assert_eq!(f.shards[0].upos, c.shards[0].upos);
+    }
+
+    #[test]
+    fn compact_broadcast_charges_support_bytes() {
+        // satellite regression: the compact regime ships O(|U|)
+        // broadcast payloads (w lives in U), not d·8
+        let data = SynthConfig {
+            n_examples: 60,
+            n_features: 5_000,
+            nnz_per_example: 4,
+            ..SynthConfig::default()
+        }
+        .generate(23);
+        let c0 = Cluster::partition(data, 4, CostModel::default());
+        assert!(c0.prefer_compact_master());
+        let u = c0.umap.len();
+        assert!(u < c0.dim / 2);
+        let mut c_compact = c0.fork_fresh();
+        c_compact.broadcast_master();
+        // bytes pinned to the support payload, 1 logical pass
+        assert_eq!(c_compact.ledger.comm_bytes, (u * 8) as f64);
+        assert_eq!(c_compact.ledger.comm_passes, 1.0);
+        let mut c_dense = c0.fork_fresh();
+        c_dense.broadcast_vec();
+        assert_eq!(c_dense.ledger.comm_bytes, (c0.dim * 8) as f64);
+        assert!(c_compact.ledger.comm_seconds < c_dense.ledger.comm_seconds);
+        // the engine schedule stays consistent with the flat charge
+        assert!(
+            (c_compact.ledger.seconds()
+                - (c_compact.ledger.comm_seconds
+                    + c_compact.ledger.compute_seconds))
+                .abs()
+                < 1e-12
+        );
+        // dense-regime clusters keep the classic d·8 broadcast
+        let dense_cluster = cluster(4);
+        assert!(!dense_cluster.prefer_compact_master());
+        let mut d = dense_cluster.fork_fresh();
+        d.broadcast_master();
+        assert_eq!(d.ledger.comm_bytes, (d.dim * 8) as f64);
     }
 
     #[test]

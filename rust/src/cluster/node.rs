@@ -7,7 +7,7 @@
 //! the support at phase entry and results scatter back as sparse
 //! index/value payloads.
 
-use crate::linalg::sparse::SupportMap;
+use crate::linalg::sparse::{SparseVec, SupportMap};
 use crate::linalg::Csr;
 
 #[derive(Clone, Debug)]
@@ -21,14 +21,60 @@ pub struct Shard {
     pub map: SupportMap,
     /// global feature dimension d
     pub dim: usize,
+    /// position of each support column inside the cluster's *union*
+    /// support U (strictly increasing; filled by `Cluster::partition`
+    /// via `SupportMap::positions_of`) — the local↔U translation every
+    /// compact-master phase gathers/scatters through
+    pub upos: Vec<u32>,
 }
 
 impl Shard {
     /// Build from a global-column sub-matrix (remaps and drops it).
+    /// `upos` stays empty until the owning cluster composes the shard
+    /// support into its union map.
     pub fn new(x: Csr, y: Vec<f64>) -> Shard {
         let dim = x.n_cols;
         let (map, xl) = SupportMap::compact(&x);
-        Shard { xl, y, map, dim }
+        Shard { xl, y, map, dim, upos: Vec::new() }
+    }
+
+    /// Gather the master iterate onto the shard support. The master
+    /// frame is either the full-d dense vector (gather through the
+    /// global support columns) or the length-|U| compact vector
+    /// (gather through the composed U positions) — same values either
+    /// way, which is what keeps the two masters ε-identical.
+    pub fn gather_frame(&self, compact: bool, v: &[f64], out: &mut Vec<f64>) {
+        if compact {
+            debug_assert_eq!(self.upos.len(), self.map.len());
+            out.clear();
+            out.extend(self.upos.iter().map(|&p| v[p as usize]));
+        } else {
+            self.map.gather(v, out);
+        }
+    }
+
+    /// Support-aligned values as a [`SparseVec`] in the master frame:
+    /// global column indices over dim d (dense master) or U positions
+    /// over dim |U| (compact master). The index sets are related by a
+    /// monotone bijection, so tree merges produce bit-identical sums.
+    pub fn support_sparse(
+        &self,
+        compact: bool,
+        fdim: usize,
+        vals: &[f64],
+    ) -> SparseVec {
+        if compact {
+            debug_assert_eq!(vals.len(), self.upos.len());
+            SparseVec { dim: fdim, idx: self.upos.clone(), val: vals.to_vec() }
+        } else {
+            self.map.to_sparse_aligned(fdim, vals)
+        }
+    }
+
+    /// The index dictionary direction corrections use in the given
+    /// master frame (see [`Self::support_sparse`]).
+    pub fn dir_idx(&self, compact: bool) -> &[u32] {
+        if compact { &self.upos } else { &self.map.support }
     }
 
     pub fn n_examples(&self) -> usize {

@@ -20,6 +20,10 @@ pub struct NodeScratch {
     pub vals: Vec<f64>,
     /// general compact buffer (direction gathers, corrections)
     pub buf: Vec<f64>,
+    /// per-row direction margins dz = X·dʳ for the line search
+    /// (length n_p, reused across outer iterations — the dir-matvec
+    /// phase allocates nothing in steady state)
+    pub dz: Vec<f64>,
     /// SVRG inner-solver working set
     pub svrg: SvrgScratch,
     /// SAG inner-solver working set

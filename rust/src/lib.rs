@@ -27,13 +27,36 @@
 //!   column-remapped CSRs ([`cluster::Shard::xl`]); map phases are
 //!   **threaded by default** (`--threads 0` = auto-detect cores) and
 //!   hand each node a [`cluster::NodeScratch`] so steady-state solves
-//!   allocate nothing. Gradient/direction rounds auto-route through
+//!   allocate nothing (including the line search's dʳ·xᵢ margins,
+//!   `NodeScratch::dz`). Gradient/direction rounds auto-route through
 //!   sparse merge-by-index reductions when shard supports are small
 //!   relative to d (`Cluster::prefer_sparse`), charging by actual
 //!   bytes moved (nnz·12 vs d·8) on both Tree (per-level messages) and
 //!   Ring (chunked nnz payload) topologies, with per-level wire
 //!   profiles recorded on the [`cluster::Ledger`] under both time
 //!   models.
+//!
+//!   **Union-support compact master.** The cluster also builds the
+//!   global union support U = ⋃_p support_p at partition time
+//!   ([`cluster::Cluster::umap`], with each shard's composed positions
+//!   in [`cluster::Shard::upos`]). Because every outer-loop quantity —
+//!   wʳ, gʳ, dʳ, every hybrid correction, SQM's CG directions — is an
+//!   affine combination of w⁰ = 0, loss gradients (supported in U)
+//!   and support-sized corrections, the whole master side provably
+//!   lives in U: under the density gate
+//!   (`Cluster::prefer_compact_master`, |U|/d < 0.5 — the companion
+//!   of `prefer_sparse` with the same threshold) the FS, async-FS and
+//!   parameter-mixing drivers run *every master buffer* at length |U|
+//!   (wire payloads become U-position index/value pairs — a monotone
+//!   index bijection, so reductions sum coordinate-for-coordinate
+//!   identically and traces are ε-identical to the dense master,
+//!   pinned by `tests/compact_master.rs`), broadcasts ship O(|U|)
+//!   bytes (`Cluster::broadcast_support`), the async re-basing ring
+//!   drops from O(τ·d) to O(τ·|U|), and the full-d vector is
+//!   materialized exactly once into `RunResult::w`.
+//!   `benches/master_side.rs` gates the win in CI: strictly faster
+//!   seconds/round than the dense master at d = 5M and 50M with
+//!   |U| ≈ 100k. CLI `--master auto|dense|compact` overrides the gate.
 //!
 //!   **Timing** is an event-driven schedule computed by
 //!   [`cluster::Engine`]: one virtual clock per node, scaled by a

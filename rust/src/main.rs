@@ -12,7 +12,7 @@
 
 use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::autoswitch::{AutoSwitchConfig, AutoSwitchDriver};
-use psgd::algo::fs::{FsConfig, FsDriver, InnerSolver};
+use psgd::algo::fs::{FsConfig, FsDriver, InnerSolver, MasterMode};
 use psgd::algo::hybrid::{HybridConfig, HybridDriver};
 use psgd::algo::param_mix::{ParamMixConfig, ParamMixDriver};
 use psgd::algo::safeguard::Safeguard;
@@ -52,6 +52,15 @@ COMMANDS
                                search with the next round's node compute
                                (fs only; timing model — results are
                                bit-identical to the barrier schedule)
+               [--master M]    master-side frame (fs only, like
+                               --pipeline; other methods follow the
+                               density gate automatically): auto
+                               (default; union-support compact when
+                               |U|/d < 0.5), dense, or compact. The
+                               compact master runs the whole outer
+                               loop in O(|U|) buffers and materializes
+                               full-d w once; traces are ε-identical
+                               either way.
                [--async-fs]    bounded-staleness asynchronous FS (fs
                                only): per-node solver lanes, the master
                                combines an arrival-ordered quorum of
@@ -248,6 +257,12 @@ fn train(args: &Args) {
         },
         seed,
         pipeline: args.bool("pipeline", false),
+        master: match args.get_or("master", "auto") {
+            "auto" => MasterMode::Auto,
+            "dense" => MasterMode::Dense,
+            "compact" => MasterMode::Compact,
+            other => panic!("unknown --master {other:?} (auto|dense|compact)"),
+        },
         ..Default::default()
     };
     let driver: Box<dyn Driver> = match method {

@@ -273,7 +273,26 @@ impl HybridDir {
         wr_c: &[f64],
         g_c: &[f64],
     ) -> HybridDir {
-        let m = map.len();
+        Self::from_compact_idx(&map.support, dim, a_w, a_g, w_p, wr_c, g_c)
+    }
+
+    /// [`Self::from_compact`] over an explicit support dictionary —
+    /// the corr indices are whatever master frame the driver runs in:
+    /// global columns over dim d (dense master, `map.support`) or
+    /// union-support positions over dim |U| (compact master,
+    /// `Shard::upos`). The two encodings are related by a monotone
+    /// index bijection, so every downstream dot/merge sums in the same
+    /// order and the frames stay ε-identical.
+    pub fn from_compact_idx(
+        idx: &[u32],
+        dim: usize,
+        a_w: f64,
+        a_g: f64,
+        w_p: &[f64],
+        wr_c: &[f64],
+        g_c: &[f64],
+    ) -> HybridDir {
+        let m = idx.len();
         debug_assert!(w_p.len() >= m && wr_c.len() >= m && g_c.len() >= m);
         let vals: Vec<f64> = (0..m)
             .map(|l| (w_p[l] - wr_c[l]) - a_w * wr_c[l] - a_g * g_c[l])
@@ -281,7 +300,7 @@ impl HybridDir {
         HybridDir {
             a_w,
             a_g,
-            corr: SparseVec::from_support(dim, &map.support, &vals),
+            corr: SparseVec::from_support(dim, idx, &vals),
         }
     }
 

@@ -1,0 +1,298 @@
+//! Union-support compact-master regression suite.
+//!
+//! The contract: the compact master is a *representation* change, not
+//! an algorithm change. Running the entire outer loop in length-|U|
+//! buffers (U = ⋃_p support_p) must reproduce the dense master's run
+//! ε-identically — objective trace, gradient norms, safeguard
+//! decisions, pass accounting and the final iterate — across shard
+//! shapes (skewed, all-dense, 1-nnz, overlapping supports), all five
+//! inner solvers, and the bounded-staleness async driver. Wire bytes
+//! and modeled seconds are allowed to differ (the compact regime
+//! ships O(|U|) broadcasts — that is the point); the maths is not.
+//!
+//! Async note: with a full quorum the round composition is
+//! deterministic for any τ (every solve is fresh by the deadline), so
+//! τ ∈ {0, 2} pin trace equality exactly — τ = 2 still exercises the
+//! O(τ·|U|) master reference ring. Partial-quorum staleness depends
+//! on *measured* solve seconds (which differ run to run), so the
+//! stale re-basing path is exercised on the compact master alone
+//! against the synchronous oracle's tolerance instead.
+
+use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
+use psgd::algo::fs::{FsConfig, FsDriver, InnerSolver, MasterMode};
+use psgd::algo::{Driver, RunResult, StopRule};
+use psgd::cluster::{Cluster, CostModel, NodeProfile};
+use psgd::data::dataset::Dataset;
+use psgd::data::synth::SynthConfig;
+use psgd::linalg::{dense, Csr};
+use psgd::loss::LossKind;
+use psgd::objective::RegularizedLoss;
+use psgd::opt::tron::{self, TronParams};
+
+/// High-dimensional sparse-regime data: |U| ≪ d, overlapping shard
+/// supports (the Zipf head features appear in every shard).
+fn sparse_data(seed: u64) -> Dataset {
+    SynthConfig {
+        n_examples: 400,
+        n_features: 2_000,
+        nnz_per_example: 5,
+        skew: 1.0,
+        ..SynthConfig::default()
+    }
+    .generate(seed)
+}
+
+/// Every column populated: support = U = all of d (the degenerate
+/// frame where compact == dense up to the identity index map).
+fn all_dense_data(seed: u64) -> Dataset {
+    SynthConfig {
+        n_examples: 200,
+        n_features: 25,
+        nnz_per_example: 30,
+        ..SynthConfig::default()
+    }
+    .generate(seed)
+}
+
+/// One nonzero per example over a much larger column space.
+fn one_nnz_data(seed: u64) -> Dataset {
+    SynthConfig {
+        n_examples: 300,
+        n_features: 1_500,
+        nnz_per_example: 1,
+        ..SynthConfig::default()
+    }
+    .generate(seed)
+}
+
+fn fs_cfg(inner: InnerSolver, master: MasterMode) -> FsConfig {
+    FsConfig {
+        lam: 0.5,
+        epochs: 2,
+        inner,
+        lr: if inner == InnerSolver::Sgd { Some(0.01) } else { None },
+        master,
+        ..Default::default()
+    }
+}
+
+/// ε-identity of two runs: trajectory, safeguard decisions, pass
+/// accounting and final iterate (bytes/seconds deliberately excluded).
+///
+/// `tol`: in the sparse regime both masters ride the same sparse wire
+/// and every sum runs in the same coordinate order, so the runs are
+/// near-bitwise (1e-9). Forcing the compact master on *dense* shards
+/// crosses the wire divide — step 7 associates its sums differently
+/// (coefficient sums + corr reduce vs per-node dense parts), an
+/// ulp-level difference the line search can amplify — so that case
+/// pins ε-identity at 1e-6 instead.
+fn assert_runs_match(d: &RunResult, c: &RunResult, tag: &str, tol: f64) {
+    assert_eq!(
+        d.trace.points.len(),
+        c.trace.points.len(),
+        "{tag}: outer iteration counts diverged"
+    );
+    for (pd, pc) in d.trace.points.iter().zip(&c.trace.points) {
+        let k = pd.iter;
+        assert!(
+            (pd.f - pc.f).abs() <= tol * (1.0 + pd.f.abs()),
+            "{tag}: f diverged at iter {k}: {} vs {}",
+            pd.f,
+            pc.f
+        );
+        assert!(
+            (pd.gnorm - pc.gnorm).abs() <= tol * (1.0 + pd.gnorm),
+            "{tag}: ‖g‖ diverged at iter {k}: {} vs {}",
+            pd.gnorm,
+            pc.gnorm
+        );
+        assert_eq!(
+            pd.safeguard_hits, pc.safeguard_hits,
+            "{tag}: safeguard decisions diverged at iter {k}"
+        );
+        assert_eq!(
+            pd.comm_passes, pc.comm_passes,
+            "{tag}: pass accounting diverged at iter {k}"
+        );
+        assert!(
+            (pd.auprc.is_nan() && pc.auprc.is_nan())
+                || (pd.auprc - pc.auprc).abs() <= tol.max(1e-9),
+            "{tag}: AUPRC diverged at iter {k}: {} vs {}",
+            pd.auprc,
+            pc.auprc
+        );
+    }
+    assert_eq!(d.w.len(), c.w.len(), "{tag}: iterate dims diverged");
+    let diff = dense::max_abs_diff(&d.w, &c.w);
+    assert!(diff <= tol, "{tag}: final iterates diverged by {diff}");
+}
+
+/// Run the same config under both forced masters on forked clusters.
+fn run_both(
+    data: &Dataset,
+    nodes: usize,
+    inner: InnerSolver,
+    iters: usize,
+    asynchronous: Option<(usize, usize)>, // (τ, quorum)
+) -> (RunResult, RunResult) {
+    let (train, test) = data.split(0.85, 3);
+    let c0 = Cluster::partition(train, nodes, CostModel::default());
+    let mut out = Vec::new();
+    for master in [MasterMode::Dense, MasterMode::Compact] {
+        let mut cluster = c0.fork_fresh();
+        cluster.threads = 1;
+        let cfg = fs_cfg(inner, master);
+        let run = match asynchronous {
+            None => FsDriver::new(cfg).run(
+                &mut cluster,
+                Some(&test),
+                &StopRule::iters(iters),
+            ),
+            Some((tau, quorum)) => AsyncFsDriver::new(AsyncFsConfig {
+                fs: cfg,
+                staleness: tau,
+                quorum,
+            })
+            .run(&mut cluster, Some(&test), &StopRule::iters(iters)),
+        };
+        out.push(run);
+    }
+    let compact = out.pop().unwrap();
+    let dense_run = out.pop().unwrap();
+    (dense_run, compact)
+}
+
+#[test]
+fn compact_master_matches_dense_for_all_solvers_on_sparse_shards() {
+    for inner in [
+        InnerSolver::Svrg,
+        InnerSolver::Sag,
+        InnerSolver::Sgd,
+        InnerSolver::Lbfgs,
+        InnerSolver::Tron,
+    ] {
+        let data = sparse_data(2);
+        let (d, c) = run_both(&data, 4, inner, 8, None);
+        assert_runs_match(&d, &c, &format!("sparse/{inner:?}"), 1e-9);
+    }
+}
+
+#[test]
+fn compact_master_matches_dense_across_shard_shapes() {
+    // all-dense (U = every column — the gate would never pick compact,
+    // and the dense master rides the dense wire there: cross-wire
+    // tolerance), 1-nnz, and skewed/overlapping (same-wire: tight)
+    for (data, tag, tol) in [
+        (all_dense_data(5), "all-dense", 1e-6),
+        (one_nnz_data(7), "one-nnz", 1e-9),
+        (sparse_data(11), "overlapping", 1e-9),
+    ] {
+        let (d, c) = run_both(&data, 3, InnerSolver::Svrg, 6, None);
+        assert_runs_match(&d, &c, tag, tol);
+    }
+}
+
+#[test]
+fn compact_master_matches_dense_under_async_quorum() {
+    // full quorum keeps the round composition deterministic for any τ
+    // (see module docs); τ = 2 exercises the τ+1-deep reference ring
+    let nodes = 4;
+    for tau in [0usize, 2] {
+        let data = sparse_data(13);
+        let (d, c) =
+            run_both(&data, nodes, InnerSolver::Svrg, 8, Some((tau, nodes)));
+        assert_runs_match(&d, &c, &format!("async-τ{tau}"), 1e-9);
+    }
+}
+
+#[test]
+fn compact_async_with_stale_quorum_still_converges() {
+    // the nondeterministic regime (partial quorum, straggler, real
+    // measured solve seconds): the compact master's stale re-basing —
+    // O(τ·|U|) ring, U-position corrections — must keep the paper's
+    // convergence guarantee, exactly as the dense suite pins it
+    let nodes = 5;
+    let data = sparse_data(17);
+    let mut cluster = Cluster::partition(data, nodes, CostModel::default());
+    cluster.threads = 1;
+    cluster.set_profile(NodeProfile::with_straggler(nodes, 0, 3.0));
+    assert!(cluster.prefer_compact_master());
+
+    // oracle on the stitched problem
+    let mut rows = Vec::new();
+    let mut ys = Vec::new();
+    for s in &cluster.shards {
+        for i in 0..s.xl.n_rows() {
+            rows.push(s.row_global(i));
+            ys.push(s.y[i]);
+        }
+    }
+    let x = Csr::from_rows(cluster.dim, &rows);
+    let obj =
+        RegularizedLoss { x: &x, y: &ys, loss: LossKind::Logistic, lam: 0.5 };
+    let w0 = vec![0.0; cluster.dim];
+    let fstar = tron::minimize(&obj, &w0, &TronParams {
+        eps: 1e-12,
+        max_iter: 200,
+        ..Default::default()
+    })
+    .f;
+
+    let run = AsyncFsDriver::new(AsyncFsConfig {
+        fs: fs_cfg(InnerSolver::Svrg, MasterMode::Compact),
+        staleness: 2,
+        quorum: nodes - 1,
+    })
+    .run(&mut cluster, None, &StopRule::iters(60));
+
+    let gap = (run.f - fstar) / fstar;
+    assert!(gap < 1e-4, "compact async gap {gap}");
+    for k in 1..run.trace.points.len() {
+        assert!(
+            run.trace.points[k].f <= run.trace.points[k - 1].f + 1e-10,
+            "f increased at iter {k}"
+        );
+    }
+    assert!(
+        cluster.ledger.staleness_hist.len() <= 3,
+        "staleness bound violated: {:?}",
+        cluster.ledger.staleness_hist
+    );
+}
+
+#[test]
+fn features_outside_union_support_stay_exactly_zero() {
+    let data = sparse_data(19);
+    let dim = data.n_features();
+    let cluster = Cluster::partition(data, 4, CostModel::default());
+    assert!(
+        cluster.prefer_compact_master(),
+        "union density {} should gate compact on",
+        cluster.union_density()
+    );
+    // there must be columns outside U for this test to mean anything
+    assert!(cluster.umap.len() < dim);
+    let mut c = cluster.fork_fresh();
+    let run = FsDriver::new(fs_cfg(InnerSolver::Svrg, MasterMode::Auto))
+        .run(&mut c, None, &StopRule::iters(6));
+    assert_eq!(run.w.len(), dim, "RunResult::w materializes full d");
+    let mut in_u = vec![false; dim];
+    for &col in &c.umap.support {
+        in_u[col as usize] = true;
+    }
+    let mut outside = 0usize;
+    for (j, &wj) in run.w.iter().enumerate() {
+        if !in_u[j] {
+            outside += 1;
+            assert!(
+                wj == 0.0,
+                "feature {j} outside U moved to {wj} — the compact \
+                 master must keep it exactly 0.0"
+            );
+        }
+    }
+    assert!(outside > 0, "no feature outside U — test is vacuous");
+    // and the run actually optimized something
+    let pts = &run.trace.points;
+    assert!(pts.last().unwrap().f < pts[0].f);
+}
