@@ -1,8 +1,19 @@
 # Tier-1 verification — the invariant every PR must keep green.
 # Runs fully offline: no registry dependencies, no xla_extension .so
 # (the PJRT runtime is gated behind the off-by-default `xla` feature).
-verify:
+# The invariant lint rides along: a tree that violates the compact/
+# deterministic-core rules fails verify even before CI sees it.
+verify: lint-invariants
 	cargo build --release && cargo test -q
+
+# Repo-invariant static check (lint/ — the pallas-lint workspace
+# member): no O(d) master allocations, no wall clocks in virtual-clock
+# code, no unordered iteration near reductions, ledger-paired comm
+# calls, no steady-state allocation in scratch-served bodies, and
+# SAFETY-documented Miri-covered unsafe. Exits nonzero on any finding
+# that isn't covered by a justified `// lint: allow(...)`.
+lint-invariants:
+	cargo run --release --package pallas-lint -- rust/src
 
 test:
 	cargo test
@@ -41,4 +52,5 @@ clippy:
 artifacts:
 	python3 python/compile/aot.py --out artifacts
 
-.PHONY: verify test bench bench-smoke fmt-check clippy artifacts
+.PHONY: verify test bench bench-smoke fmt-check clippy artifacts \
+	lint-invariants

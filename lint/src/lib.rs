@@ -1,0 +1,873 @@
+//! `pallas-lint` — static checker for the repo-specific invariants the
+//! compiler cannot see (see the "Invariants" section of
+//! `rust/src/lib.rs` for the rationale of each rule):
+//!
+//! 1. `no-dense-master` — no `vec![_; dim]` / `with_capacity(dim)`
+//!    O(d) allocations in the outer-loop driver files.
+//! 2. `no-wall-clock` — `Instant`/`SystemTime` banned where timing
+//!    must flow through the engine's virtual clocks.
+//! 3. `no-unordered-iteration` — `HashMap`/`HashSet` banned in code
+//!    feeding reductions or wire payloads.
+//! 4. `ledger-pairing` — comm methods only on a cluster handle; raw
+//!    `tree_sum` banned outside `cluster/`.
+//! 5. `no-alloc-in-steady-state` — no allocation inside the per-round
+//!    closure bodies `NodeScratch` serves.
+//! 6. `unsafe-contract` — `unsafe` needs a `// SAFETY:` comment and a
+//!    Miri-covered module.
+//!
+//! The scanner is a hand-rolled lexer (no syn — the build must stay
+//! offline-dependency-free): it splits each file into per-line *code*
+//! (comments and string/char-literal bodies blanked) and per-line
+//! *comment text*, masks `#[cfg(test)] mod` bodies, and honors the
+//! escape hatches
+//! `// lint: allow(<rule>[, <rule>]) — <reason>` (this line or carried
+//! onto the next code line) and
+//! `// lint: allow-file(<rule>) — <reason>` (whole file). The reason
+//! is mandatory: an allow without one is ignored.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Files whose `unsafe` blocks are exercised by the Miri CI job.
+const MIRI_COVERED: [&str; 3] =
+    ["linalg/csr.rs", "linalg/sparse.rs", "linalg/dense.rs"];
+
+/// Outer-loop driver files rule 1 protects.
+const DENSE_MASTER_FILES: [&str; 5] = [
+    "algo/fs.rs",
+    "algo/async_fs.rs",
+    "algo/param_mix.rs",
+    "algo/common.rs",
+    "algo/theory.rs",
+];
+
+/// Ledger-threading comm methods (rule 4): callable only on a
+/// `cluster`-named receiver.
+const COMM_METHODS: [&str; 16] = [
+    "reduce_parts",
+    "reduce_parts_ctrl",
+    "reduce_parts_sparse",
+    "reduce_parts_sparse_ctrl",
+    "map_reduce_vec",
+    "map_allreduce_vec",
+    "map_reduce_sparse",
+    "map_allreduce_sparse",
+    "map_reduce_scalars",
+    "map_reduce_scalars_scratch",
+    "broadcast_vec",
+    "broadcast_support",
+    "broadcast_master",
+    "async_quorum_reduce",
+    "async_quorum_reduce_sparse",
+    "charge_scalar_round",
+];
+
+/// The scratch-served per-round phases rule 5 keeps allocation-free.
+const SCRATCH_PHASES: [&str; 4] = [
+    ".map_each_scratch_ctrl(",
+    ".map_each_scratch(",
+    ".map_reduce_scalars_scratch(",
+    ".map_nodes_timed(",
+];
+
+/// Allocation/copy tokens banned inside those bodies.
+const BANNED_ALLOC: [&str; 5] =
+    ["Vec::new", "Vec::with_capacity", "vec![", ".to_vec(", ".clone("];
+
+/// One rule violation at a source line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// path relative to the scanned root, `/`-separated
+    pub file: String,
+    /// 1-based line number
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// lexer: split source into per-line code / per-line comment text
+// ---------------------------------------------------------------------
+
+#[derive(PartialEq, Clone, Copy)]
+enum LexState {
+    Code,
+    LineComment,
+    BlockComment,
+    Str,
+    RawStr,
+    CharLit,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Blank comments and string/char bodies out of the code stream while
+/// capturing comment text, both per line. Handles nested block
+/// comments, raw strings with `#` fences, and the `'a` lifetime vs
+/// `'a'` char-literal ambiguity (a quote is a char literal when it is
+/// escaped or closes two characters later).
+fn strip_source(src: &str) -> (Vec<String>, Vec<String>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = LexState::Code;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if st == LexState::LineComment {
+                st = LexState::Code;
+            }
+            code_lines.push(std::mem::take(&mut code));
+            comment_lines.push(std::mem::take(&mut comment));
+            i += 1;
+            continue;
+        }
+        match st {
+            LexState::Code => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                    st = LexState::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    st = LexState::BlockComment;
+                    block_depth = 1;
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    st = LexState::Str;
+                    code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                if c == 'r' && (i == 0 || !is_ident_char(chars[i - 1])) {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && chars[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        st = LexState::RawStr;
+                        raw_hashes = h;
+                        code.push(' ');
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    if i + 1 < n && chars[i + 1] == '\\' {
+                        st = LexState::CharLit;
+                        i += 2;
+                        continue;
+                    }
+                    if i + 2 < n && chars[i + 2] == '\'' {
+                        st = LexState::CharLit;
+                        i += 1;
+                        continue;
+                    }
+                    // lifetime: keep the quote in the code stream
+                    code.push(c);
+                    i += 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            LexState::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            LexState::BlockComment => {
+                if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    block_depth -= 1;
+                    i += 2;
+                    if block_depth == 0 {
+                        st = LexState::Code;
+                    }
+                    continue;
+                }
+                if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    block_depth += 1;
+                    i += 2;
+                    continue;
+                }
+                comment.push(c);
+                i += 1;
+            }
+            LexState::Str => {
+                if c == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    st = LexState::Code;
+                }
+                i += 1;
+            }
+            LexState::RawStr => {
+                if c == '"'
+                    && i + raw_hashes < n
+                    && chars[i + 1..i + 1 + raw_hashes]
+                        .iter()
+                        .all(|&h| h == '#')
+                {
+                    st = LexState::Code;
+                    i += 1 + raw_hashes;
+                    continue;
+                }
+                i += 1;
+            }
+            LexState::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if c == '\'' {
+                    st = LexState::Code;
+                }
+                i += 1;
+            }
+        }
+    }
+    code_lines.push(code);
+    comment_lines.push(comment);
+    (code_lines, comment_lines)
+}
+
+/// Token-boundary substring match (identifiers don't run into `tok`).
+fn has_token(line: &str, tok: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = line[start..].find(tok) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_ident_byte(bytes[p - 1]);
+        let after = p + tok.len();
+        let after_ok = after >= bytes.len() || !is_ident_byte(bytes[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Per-line mask of `#[cfg(test)] mod ... { }` bodies (brace-depth
+/// tracked on the stripped code, so strings/comments can't confuse it).
+fn test_mask(code_lines: &[String]) -> Vec<bool> {
+    let mut mask = Vec::with_capacity(code_lines.len());
+    let mut pending = false; // saw #[cfg(test)], waiting for `mod`
+    let mut waiting = false; // saw mod, waiting for its `{`
+    let mut in_test = false;
+    let mut depth = 0i64;
+    let mut test_depth = 0i64;
+    for line in code_lines {
+        let mut line_test = in_test || waiting;
+        if pending && has_token(line, "mod") {
+            waiting = true;
+            pending = false;
+            line_test = true;
+        }
+        for ch in line.chars() {
+            if waiting && ch == '{' {
+                in_test = true;
+                test_depth = depth;
+                waiting = false;
+                depth += 1;
+                line_test = true;
+                continue;
+            }
+            if ch == '{' {
+                depth += 1;
+            } else if ch == '}' {
+                depth -= 1;
+                if in_test && depth == test_depth {
+                    in_test = false;
+                }
+            }
+        }
+        if line.replace(' ', "").contains("#[cfg(test)]") {
+            pending = true;
+            line_test = true;
+        }
+        mask.push(line_test);
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------
+// allow-comment parsing
+// ---------------------------------------------------------------------
+
+/// `lint: allow(...)` / `lint: allow-file(...)` occurrences in one
+/// comment line. The reason after the closing paren is mandatory.
+fn parse_allows(com: &str) -> (Vec<String>, Vec<String>) {
+    let mut line_rules = Vec::new();
+    let mut file_rules = Vec::new();
+    let mut idx = 0usize;
+    while let Some(rel) = com[idx..].find("lint:") {
+        let p = idx + rel;
+        idx = p + 5;
+        let rest = com[p + 5..].trim_start();
+        let (is_file, body) =
+            if let Some(r) = rest.strip_prefix("allow-file(") {
+                (true, r)
+            } else if let Some(r) = rest.strip_prefix("allow(") {
+                (false, r)
+            } else {
+                continue;
+            };
+        let Some(close) = body.find(')') else { break };
+        let reason = body[close + 1..].trim_matches(|c: char| {
+            c.is_whitespace() || matches!(c, '-' | '—' | ':' | '·')
+        });
+        if reason.is_empty() {
+            continue; // no justification, no exemption
+        }
+        for rule in body[..close].split(',') {
+            let rule = rule.trim();
+            if !rule.is_empty() {
+                if is_file {
+                    file_rules.push(rule.to_string());
+                } else {
+                    line_rules.push(rule.to_string());
+                }
+            }
+        }
+    }
+    (line_rules, file_rules)
+}
+
+/// Per-line allow sets (allows on comment-only lines carry forward to
+/// the next code line) and the file-wide allow set.
+fn collect_allows(
+    code_lines: &[String],
+    comment_lines: &[String],
+) -> (Vec<Vec<String>>, Vec<String>) {
+    let mut line_allows: Vec<Vec<String>> =
+        vec![Vec::new(); code_lines.len()];
+    let mut file_allows = Vec::new();
+    let mut carry: Vec<String> = Vec::new();
+    for (i, (code, com)) in
+        code_lines.iter().zip(comment_lines).enumerate()
+    {
+        let (found, file_found) = parse_allows(com);
+        file_allows.extend(file_found);
+        if code.trim().is_empty() {
+            carry.extend(found);
+        } else {
+            line_allows[i].extend(carry.drain(..));
+            line_allows[i].extend(found);
+        }
+    }
+    (line_allows, file_allows)
+}
+
+// ---------------------------------------------------------------------
+// text helpers over the joined code stream
+// ---------------------------------------------------------------------
+
+/// 0-based line index of a byte offset into the joined code text.
+fn line_of(line_starts: &[usize], offset: usize) -> usize {
+    match line_starts.binary_search(&offset) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    }
+}
+
+/// Byte offset of the delimiter matching `text[start]`.
+fn find_matching(
+    text: &str,
+    start: usize,
+    open: u8,
+    close: u8,
+) -> Option<usize> {
+    let bytes = text.as_bytes();
+    let mut depth = 0i64;
+    for (k, &b) in bytes.iter().enumerate().skip(start) {
+        if b == open {
+            depth += 1;
+        } else if b == close {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+fn dim_shaped(expr: &str) -> bool {
+    let e = expr.trim();
+    e == "d" || e == "dim" || e.ends_with(".dim")
+}
+
+/// For `vec![ ... ]` starting with the `[` at `lb`: the count
+/// expression after the last top-level `;`, if the macro uses the
+/// `vec![elem; count]` form.
+fn vec_count_expr(text: &str, lb: usize) -> Option<(usize, usize)> {
+    let bytes = text.as_bytes();
+    let (mut sq, mut par, mut br) = (0i64, 0i64, 0i64);
+    let mut last_semi: Option<usize> = None;
+    for (k, &b) in bytes.iter().enumerate().skip(lb) {
+        match b {
+            b'[' => sq += 1,
+            b']' => {
+                sq -= 1;
+                if sq == 0 {
+                    return last_semi.map(|s| (s + 1, k));
+                }
+            }
+            b'(' => par += 1,
+            b')' => par -= 1,
+            b'{' => br += 1,
+            b'}' => br -= 1,
+            b';' if sq == 1 && par == 0 && br == 0 => last_semi = Some(k),
+            _ => {}
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// the rule engine
+// ---------------------------------------------------------------------
+
+struct FileLint<'a> {
+    relpath: &'a str,
+    code_lines: Vec<String>,
+    comment_lines: Vec<String>,
+    mask: Vec<bool>,
+    line_allows: Vec<Vec<String>>,
+    file_allows: Vec<String>,
+    text: String,
+    line_starts: Vec<usize>,
+    findings: Vec<Finding>,
+}
+
+impl<'a> FileLint<'a> {
+    fn new(relpath: &'a str, src: &str) -> FileLint<'a> {
+        let (code_lines, comment_lines) = strip_source(src);
+        let mask = test_mask(&code_lines);
+        let (line_allows, file_allows) =
+            collect_allows(&code_lines, &comment_lines);
+        let text = code_lines.join("\n");
+        let mut line_starts = vec![0usize];
+        for (off, b) in text.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(off + 1);
+            }
+        }
+        FileLint {
+            relpath,
+            code_lines,
+            comment_lines,
+            mask,
+            line_allows,
+            file_allows,
+            text,
+            line_starts,
+            findings: Vec::new(),
+        }
+    }
+
+    fn report(&mut self, rule: &'static str, line_idx: usize, msg: String) {
+        if self.mask.get(line_idx).copied().unwrap_or(false) {
+            return;
+        }
+        if self.file_allows.iter().any(|r| r == rule) {
+            return;
+        }
+        if let Some(allows) = self.line_allows.get(line_idx) {
+            if allows.iter().any(|r| r == rule) {
+                return;
+            }
+        }
+        self.findings.push(Finding {
+            file: self.relpath.to_string(),
+            line: line_idx + 1,
+            rule,
+            msg,
+        });
+    }
+
+    fn in_algo(&self) -> bool {
+        self.relpath.starts_with("algo/")
+    }
+
+    fn run(mut self) -> Vec<Finding> {
+        self.rule_no_dense_master();
+        self.rule_no_wall_clock();
+        self.rule_no_unordered_iteration();
+        self.rule_ledger_pairing();
+        self.rule_no_alloc_in_steady_state();
+        self.rule_unsafe_contract();
+        self.findings
+    }
+
+    fn rule_no_dense_master(&mut self) {
+        if !DENSE_MASTER_FILES.contains(&self.relpath) {
+            return;
+        }
+        let text = self.text.clone();
+        let mut start = 0usize;
+        while let Some(rel) = text[start..].find("vec![") {
+            let p = start + rel;
+            start = p + 5;
+            if let Some((lo, hi)) = vec_count_expr(&text, p + 4) {
+                let expr = &text[lo..hi];
+                if dim_shaped(expr) {
+                    self.report(
+                        "no-dense-master",
+                        line_of(&self.line_starts, p),
+                        format!(
+                            "O(d) allocation `vec![..; {}]` in \
+                             master-loop code",
+                            expr.trim()
+                        ),
+                    );
+                }
+            }
+        }
+        let mut start = 0usize;
+        while let Some(rel) = text[start..].find("with_capacity(") {
+            let p = start + rel;
+            let open = p + "with_capacity(".len() - 1;
+            start = open + 1;
+            if let Some(close) = find_matching(&text, open, b'(', b')') {
+                if dim_shaped(&text[open + 1..close]) {
+                    self.report(
+                        "no-dense-master",
+                        line_of(&self.line_starts, p),
+                        "O(d) with_capacity in master-loop code".into(),
+                    );
+                }
+            }
+        }
+    }
+
+    fn rule_no_wall_clock(&mut self) {
+        if !(self.in_algo()
+            || self.relpath == "cluster/engine.rs"
+            || self.relpath == "cluster/allreduce.rs")
+        {
+            return;
+        }
+        for i in 0..self.code_lines.len() {
+            for tok in ["Instant", "SystemTime"] {
+                if has_token(&self.code_lines[i], tok) {
+                    self.report(
+                        "no-wall-clock",
+                        i,
+                        format!(
+                            "wall-clock `{tok}` in virtual-clock code"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    fn rule_no_unordered_iteration(&mut self) {
+        if !(self.in_algo()
+            || self.relpath.starts_with("cluster/")
+            || self.relpath.starts_with("objective/")
+            || self.relpath.starts_with("linalg/"))
+        {
+            return;
+        }
+        for i in 0..self.code_lines.len() {
+            for tok in ["HashMap", "HashSet"] {
+                if has_token(&self.code_lines[i], tok) {
+                    self.report(
+                        "no-unordered-iteration",
+                        i,
+                        format!(
+                            "`{tok}` in reduction/wire-feeding code — \
+                             iteration order must be deterministic"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    fn rule_ledger_pairing(&mut self) {
+        if !(self.in_algo()
+            || self.relpath.starts_with("objective/")
+            || self.relpath.starts_with("opt/"))
+        {
+            return;
+        }
+        for i in 0..self.code_lines.len() {
+            for tok in ["tree_sum", "tree_sum_sparse"] {
+                if has_token(&self.code_lines[i], tok) {
+                    self.report(
+                        "ledger-pairing",
+                        i,
+                        format!(
+                            "raw `{tok}` bypasses the Cluster ledger"
+                        ),
+                    );
+                }
+            }
+        }
+        let text = self.text.clone();
+        let bytes = text.as_bytes();
+        let mut start = 0usize;
+        while let Some(rel) = text[start..].find('.') {
+            let p = start + rel;
+            start = p + 1;
+            // maximal [a-z_]+ method name followed by `(`
+            let mut k = p + 1;
+            while k < bytes.len()
+                && (bytes[k].is_ascii_lowercase() || bytes[k] == b'_')
+            {
+                k += 1;
+            }
+            if k == p + 1 || k >= bytes.len() || bytes[k] != b'(' {
+                continue;
+            }
+            let name = &text[p + 1..k];
+            if !COMM_METHODS.contains(&name) {
+                continue;
+            }
+            // receiver: skip whitespace backwards (method chains may
+            // break the line before the dot), then take the ident/dot
+            // run
+            let mut j = p as i64 - 1;
+            while j >= 0
+                && (bytes[j as usize] == b' ' || bytes[j as usize] == b'\n')
+            {
+                j -= 1;
+            }
+            let recv_end = (j + 1) as usize;
+            while j >= 0
+                && (is_ident_byte(bytes[j as usize])
+                    || bytes[j as usize] == b'.')
+            {
+                j -= 1;
+            }
+            let receiver = &text[(j + 1) as usize..recv_end];
+            if !receiver.to_ascii_lowercase().contains("cluster") {
+                self.report(
+                    "ledger-pairing",
+                    line_of(&self.line_starts, p),
+                    format!(
+                        "comm call `.{name}()` on `{receiver}` — not a \
+                         ledger-threading cluster handle"
+                    ),
+                );
+            }
+        }
+    }
+
+    fn rule_no_alloc_in_steady_state(&mut self) {
+        if !self.in_algo() {
+            return;
+        }
+        let text = self.text.clone();
+        for phase in SCRATCH_PHASES {
+            let mut start = 0usize;
+            while let Some(rel) = text[start..].find(phase) {
+                let p = start + rel;
+                start = p + phase.len();
+                let open_paren = p + phase.len() - 1;
+                let call_close =
+                    find_matching(&text, open_paren, b'(', b')')
+                        .unwrap_or(text.len());
+                // the per-round closure: |args| { body } or |args| expr
+                let Some(bar) = text[open_paren..call_close]
+                    .find('|')
+                    .map(|b| open_paren + b)
+                else {
+                    continue;
+                };
+                let body_start = if text.as_bytes().get(bar + 1)
+                    == Some(&b'|')
+                {
+                    bar + 2
+                } else {
+                    let Some(bar2) = text[bar + 1..call_close]
+                        .find('|')
+                        .map(|b| bar + 1 + b)
+                    else {
+                        continue;
+                    };
+                    bar2 + 1
+                };
+                let mut k = body_start;
+                let bytes = text.as_bytes();
+                while k < text.len()
+                    && (bytes[k] == b' ' || bytes[k] == b'\n')
+                {
+                    k += 1;
+                }
+                let body_end = if k < text.len() && bytes[k] == b'{' {
+                    find_matching(&text, k, b'{', b'}')
+                        .unwrap_or(call_close)
+                } else {
+                    call_close
+                };
+                let body = &text[body_start..body_end];
+                for pat in BANNED_ALLOC {
+                    let mut bpos = 0usize;
+                    while let Some(q) = body[bpos..].find(pat) {
+                        let q = bpos + q;
+                        bpos = q + pat.len();
+                        self.report(
+                            "no-alloc-in-steady-state",
+                            line_of(&self.line_starts, body_start + q),
+                            format!(
+                                "`{pat}` inside a scratch-served \
+                                 per-round body"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn rule_unsafe_contract(&mut self) {
+        for i in 0..self.code_lines.len() {
+            if !has_token(&self.code_lines[i], "unsafe") {
+                continue;
+            }
+            let lo = i.saturating_sub(4);
+            let near = self.comment_lines[lo..=i].join(" ");
+            if !near.contains("SAFETY:") {
+                self.report(
+                    "unsafe-contract",
+                    i,
+                    "`unsafe` without a `// SAFETY:` comment".into(),
+                );
+            }
+            if !MIRI_COVERED.contains(&self.relpath) {
+                self.report(
+                    "unsafe-contract",
+                    i,
+                    format!(
+                        "`unsafe` in `{}` — not in the Miri-covered \
+                         module list",
+                        self.relpath
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Lint one file's source under its root-relative path (the path
+/// decides which rules are in scope).
+pub fn lint_source(relpath: &str, src: &str) -> Vec<Finding> {
+    FileLint::new(relpath, src).run()
+}
+
+/// Recursively lint every `.rs` file under `root` (deterministic
+/// order). `root` is typically `rust/src`.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(&path)?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_strips_comments_and_strings() {
+        let src = "let a = \"vec![0.0; dim]\"; // vec![0.0; dim]\n\
+                   /* block\nvec![0.0; dim] */ let b = 1;\n";
+        let (code, com) = strip_source(src);
+        assert!(!code.join("\n").contains("vec!"));
+        assert!(com.join("\n").contains("vec![0.0; dim]"));
+        assert!(code[1].contains("let b = 1;") || code[2].contains("let b"));
+    }
+
+    #[test]
+    fn lexer_handles_lifetimes_and_raw_strings() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'y'; let r = r#\"hi\"#; }";
+        let (code, _) = strip_source(src);
+        assert!(code[0].contains("fn f<'a>(x: &'a str)"));
+        assert!(!code[0].contains('y'), "{}", code[0]);
+        assert!(!code[0].contains("hi"));
+    }
+
+    #[test]
+    fn allow_requires_a_reason() {
+        let src = "// lint: allow(no-dense-master)\nlet g = vec![0.0; dim];\n";
+        let hits = lint_source("algo/fs.rs", src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        let src = "// lint: allow(no-dense-master) — wire payload\n\
+                   let g = vec![0.0; dim];\n";
+        assert!(lint_source("algo/fs.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_mod_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(dim: usize) {\n        \
+                   let g = vec![0.0; dim];\n    }\n}\n";
+        assert!(lint_source("algo/fs.rs", src).is_empty());
+    }
+
+    #[test]
+    fn scope_is_path_dependent() {
+        let src = "let t = Instant::now();\n";
+        assert!(!lint_source("algo/fs.rs", src).is_empty());
+        // the measured-threading sites live here: out of scope
+        assert!(lint_source("cluster/mod.rs", src).is_empty());
+        assert!(lint_source("util/timer.rs", src).is_empty());
+    }
+}

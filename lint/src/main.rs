@@ -1,0 +1,33 @@
+//! `pallas-lint <dir>...` — lint every `.rs` file under each given
+//! directory (default `rust/src`) against the repo invariants and exit
+//! nonzero if any finding survives the allow comments. Wired into
+//! `make lint-invariants`, which `make verify` and CI both run.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut roots: Vec<String> = std::env::args().skip(1).collect();
+    if roots.is_empty() {
+        roots.push("rust/src".to_string());
+    }
+    let mut findings = Vec::new();
+    for root in &roots {
+        match pallas_lint::lint_tree(Path::new(root)) {
+            Ok(f) => findings.extend(f),
+            Err(e) => {
+                eprintln!("pallas-lint: cannot scan {root}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    println!("-- {} finding(s)", findings.len());
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

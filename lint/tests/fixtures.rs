@@ -1,0 +1,166 @@
+//! Fixture-driven checks: one failing and one passing fixture per
+//! rule (the fixtures live under `tests/fixtures/` as data — cargo
+//! does not compile `tests/` subdirectories), plus the meta-test that
+//! the shipped `rust/src` tree itself is lint-clean. Each fixture is
+//! linted under an explicit relpath because the path decides rule
+//! scope.
+
+use pallas_lint::{lint_source, lint_tree, Finding};
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+fn rules(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn dense_master_fail_fixture_fires() {
+    let hits = lint_source("algo/fs.rs", &fixture("fail_dense_master.rs"));
+    assert_eq!(hits.len(), 3, "{hits:#?}");
+    assert!(rules(&hits).iter().all(|r| *r == "no-dense-master"));
+    let lines: Vec<usize> = hits.iter().map(|f| f.line).collect();
+    assert!(lines.contains(&3), "vec![_; dim] missed: {lines:?}");
+    assert!(lines.contains(&4), "with_capacity(d) missed: {lines:?}");
+    assert!(lines.contains(&16), "vec![_; p.dim] missed: {lines:?}");
+}
+
+#[test]
+fn dense_master_pass_fixture_is_clean() {
+    let hits =
+        lint_source("algo/fs.rs", &fixture("pass_dense_master.rs"));
+    assert!(hits.is_empty(), "{hits:#?}");
+}
+
+#[test]
+fn dense_master_scope_is_limited_to_driver_files() {
+    // the same dense code outside the protected file list is fine
+    let hits =
+        lint_source("linalg/dense.rs", &fixture("fail_dense_master.rs"));
+    assert!(hits.is_empty(), "{hits:#?}");
+}
+
+#[test]
+fn wall_clock_fail_fixture_fires() {
+    let hits =
+        lint_source("cluster/engine.rs", &fixture("fail_wall_clock.rs"));
+    assert_eq!(hits.len(), 3, "{hits:#?}");
+    assert!(rules(&hits).iter().all(|r| *r == "no-wall-clock"));
+}
+
+#[test]
+fn wall_clock_pass_fixture_is_clean() {
+    let hits =
+        lint_source("cluster/engine.rs", &fixture("pass_wall_clock.rs"));
+    assert!(hits.is_empty(), "{hits:#?}");
+}
+
+#[test]
+fn unordered_fail_fixture_fires() {
+    let hits =
+        lint_source("objective/loss.rs", &fixture("fail_unordered.rs"));
+    assert_eq!(hits.len(), 3, "{hits:#?}");
+    assert!(rules(&hits)
+        .iter()
+        .all(|r| *r == "no-unordered-iteration"));
+}
+
+#[test]
+fn unordered_pass_fixture_is_clean() {
+    let hits =
+        lint_source("objective/loss.rs", &fixture("pass_unordered.rs"));
+    assert!(hits.is_empty(), "{hits:#?}");
+}
+
+#[test]
+fn ledger_fail_fixture_fires() {
+    let hits = lint_source("algo/fs.rs", &fixture("fail_ledger.rs"));
+    assert_eq!(hits.len(), 4, "{hits:#?}");
+    assert!(rules(&hits).iter().all(|r| *r == "ledger-pairing"));
+    // the multiline-chain receiver (`self\n.inner\n.method(`) must be
+    // resolved across the line break, not skipped
+    assert!(
+        hits.iter().any(|f| f.msg.contains("map_allreduce_sparse")),
+        "{hits:#?}"
+    );
+}
+
+#[test]
+fn ledger_pass_fixture_is_clean() {
+    let hits = lint_source("algo/fs.rs", &fixture("pass_ledger.rs"));
+    assert!(hits.is_empty(), "{hits:#?}");
+}
+
+#[test]
+fn steady_alloc_fail_fixture_fires() {
+    let hits =
+        lint_source("algo/fs.rs", &fixture("fail_steady_alloc.rs"));
+    assert_eq!(hits.len(), 4, "{hits:#?}");
+    assert!(rules(&hits)
+        .iter()
+        .all(|r| *r == "no-alloc-in-steady-state"));
+}
+
+#[test]
+fn steady_alloc_pass_fixture_is_clean() {
+    let hits =
+        lint_source("algo/fs.rs", &fixture("pass_steady_alloc.rs"));
+    assert!(hits.is_empty(), "{hits:#?}");
+}
+
+#[test]
+fn unsafe_fail_fixture_fires() {
+    let hits = lint_source("algo/fs.rs", &fixture("fail_unsafe.rs"));
+    // first unsafe: missing SAFETY + wrong module; second: SAFETY
+    // present but still the wrong module
+    assert_eq!(hits.len(), 3, "{hits:#?}");
+    assert!(rules(&hits).iter().all(|r| *r == "unsafe-contract"));
+    assert_eq!(
+        hits.iter()
+            .filter(|f| f.msg.contains("SAFETY"))
+            .count(),
+        1,
+        "{hits:#?}"
+    );
+}
+
+#[test]
+fn unsafe_pass_fixture_is_clean() {
+    let hits = lint_source("linalg/csr.rs", &fixture("pass_unsafe.rs"));
+    assert!(hits.is_empty(), "{hits:#?}");
+}
+
+#[test]
+fn allow_without_reason_is_ignored() {
+    let src = "// lint: allow(no-wall-clock)\nlet t = Instant::now();\n";
+    let hits = lint_source("algo/fs.rs", src);
+    assert_eq!(hits.len(), 1, "{hits:#?}");
+}
+
+#[test]
+fn allow_file_covers_the_whole_file() {
+    let src = "// lint: allow-file(no-wall-clock) — simulation seam\n\
+               let t = Instant::now();\nlet u = Instant::now();\n";
+    assert!(lint_source("algo/fs.rs", src).is_empty());
+}
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust/src");
+    let findings = lint_tree(&root).expect("scan rust/src");
+    assert!(
+        findings.is_empty(),
+        "shipped tree has lint findings:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

@@ -1,0 +1,17 @@
+// fixture: linted as algo/fs.rs — every O(d) allocation here must fire
+pub fn bad(dim: usize, d: usize) -> Vec<f64> {
+    let g = vec![0.0f64; dim];
+    let mut h: Vec<f64> = Vec::with_capacity(d);
+    h.extend_from_slice(&g);
+    let z = vec![0u32; g.len().min(dim)]; // count expr not dim-shaped: ok
+    assert_eq!(z.len(), h.capacity().min(dim));
+    g
+}
+
+pub struct P {
+    pub dim: usize,
+}
+
+pub fn bad_field(p: &P) -> Vec<f64> {
+    vec![1.0; p.dim]
+}

@@ -1,0 +1,11 @@
+// fixture: linted as algo/fs.rs — comm calls off a non-cluster
+// receiver and raw tree_sum tokens must fire
+pub fn bad(engine: &mut Engine, parts: &[Vec<f64>]) -> Vec<f64> {
+    let a = engine.reduce_parts(parts);
+    let b = self
+        .inner
+        .map_allreduce_sparse(parts);
+    let c = tree_sum(parts);
+    let d = crate::cluster::allreduce::tree_sum_sparse(parts);
+    merge(a, b, c, d)
+}

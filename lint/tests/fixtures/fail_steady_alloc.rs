@@ -1,0 +1,15 @@
+// fixture: linted as algo/fs.rs — allocation inside a scratch-served
+// per-round body must fire
+pub fn bad(cluster: &mut Cluster, g: &[f64]) -> f64 {
+    cluster.map_each_scratch_ctrl(|node, scratch| {
+        let mut tmp = Vec::new();
+        tmp.extend_from_slice(g);
+        let copy = g.to_vec();
+        let snapshot = scratch.buf.clone();
+        node.consume(&tmp, &copy, &snapshot);
+    });
+    cluster.map_reduce_scalars_scratch(|node, s| {
+        let pad = vec![0.0; 4];
+        node.score(s) + pad.len() as f64
+    })
+}

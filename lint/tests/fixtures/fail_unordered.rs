@@ -1,0 +1,11 @@
+// fixture: linted as objective/loss.rs — unordered containers fire
+use std::collections::HashMap;
+
+pub fn bad(keys: &[u32]) -> usize {
+    let mut m: HashMap<u32, f64> = HashMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0.0) += 1.0;
+    }
+    let s: std::collections::HashSet<u32> = keys.iter().copied().collect();
+    m.len() + s.len()
+}

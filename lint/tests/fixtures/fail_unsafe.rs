@@ -1,0 +1,10 @@
+// fixture: linted as algo/fs.rs — unsafe without SAFETY fires once,
+// and unsafe outside the Miri-covered modules fires regardless
+pub fn bad(w: &[f64], c: usize) -> f64 {
+    unsafe { *w.get_unchecked(c) }
+}
+
+pub fn bad_even_with_comment(w: &[f64], c: usize) -> f64 {
+    // SAFETY: c < w.len() checked by the caller
+    unsafe { *w.get_unchecked(c) }
+}

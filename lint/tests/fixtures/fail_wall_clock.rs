@@ -1,0 +1,9 @@
+// fixture: linted as cluster/engine.rs — wall-clock reads must fire
+use std::time::Instant;
+
+pub fn bad() -> f64 {
+    let t0 = Instant::now();
+    let t1 = std::time::SystemTime::now();
+    drop(t1);
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,24 @@
+// fixture: linted as algo/fs.rs — compact shapes, allows, and the
+// #[cfg(test)] exemption must all stay clean
+pub fn good(u: usize, nnz: usize) -> Vec<f64> {
+    let v = vec![0.0f64; u]; // |U|-sized: fine
+    let mut idx: Vec<u32> = Vec::with_capacity(nnz);
+    idx.push(0);
+    v
+}
+
+pub fn justified(dim: usize) -> Vec<f64> {
+    // lint: allow(no-dense-master) — wire payload: this buffer IS the
+    // dense message the reduction moves
+    vec![0.0; dim]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_scaffolding_may_be_dense() {
+        let dim = 8;
+        let w = vec![1.0f64; dim];
+        assert_eq!(w.len(), dim);
+    }
+}

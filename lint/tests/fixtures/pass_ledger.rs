@@ -1,0 +1,10 @@
+// fixture: linted as algo/fs.rs — cluster-named receivers (including
+// multiline method chains) thread the ledger and stay clean
+pub fn good(cluster: &mut Cluster, parts: &[Vec<f64>]) -> Vec<f64> {
+    let a = cluster.reduce_parts(parts);
+    let b = self.cluster.map_allreduce_vec(parts);
+    let c = cluster
+        .async_quorum_reduce_sparse(parts);
+    cluster.charge_scalar_round(1);
+    merge(a, b, c)
+}

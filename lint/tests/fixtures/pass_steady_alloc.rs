@@ -1,0 +1,16 @@
+// fixture: linted as algo/fs.rs — scratch reuse inside the body and
+// allocation OUTSIDE the closure are both fine
+pub fn good(cluster: &mut Cluster, g: &[f64]) -> f64 {
+    let staged = g.to_vec(); // outside the per-round body: fine
+    cluster.map_each_scratch_ctrl(|node, scratch| {
+        scratch.buf.clear();
+        scratch.buf.extend_from_slice(&staged);
+        node.consume(&scratch.buf);
+    });
+    cluster.map_reduce_scalars_scratch(|node, s| {
+        // lint: allow(no-alloc-in-steady-state) — cold-start round:
+        // the scratch is seeded exactly once here
+        let seed = Vec::with_capacity(4);
+        node.score(s) + seed.capacity() as f64
+    })
+}

@@ -1,0 +1,11 @@
+// fixture: linted as objective/loss.rs — BTreeMap iterates in key
+// order, so reductions stay deterministic
+use std::collections::BTreeMap;
+
+pub fn good(keys: &[u32]) -> usize {
+    let mut m: BTreeMap<u32, f64> = BTreeMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0.0) += 1.0;
+    }
+    m.len()
+}

@@ -1,0 +1,7 @@
+// fixture: linted as linalg/csr.rs — SAFETY within the previous four
+// comment lines, inside a Miri-covered module
+pub fn good(w: &[f64], c: usize) -> f64 {
+    // SAFETY: c < w.len() is enforced by push_row at construction
+    // time, so the unchecked read cannot go out of bounds.
+    unsafe { *w.get_unchecked(c) }
+}

@@ -1,0 +1,9 @@
+// fixture: linted as cluster/engine.rs — virtual clocks only; the
+// word Instant may appear in comments and strings without firing
+pub fn good(clock: &mut f64, dur: f64) -> f64 {
+    // an Instant would be wrong here: time flows through the engine
+    let label = "Instant";
+    assert_eq!(label.len(), 7);
+    *clock += dur;
+    *clock
+}

@@ -81,14 +81,26 @@ impl Safeguard {
         dirs: &mut [HybridDir],
     ) -> usize {
         let gnorm = dots.gg.sqrt();
+        debug_assert!(
+            gnorm.is_finite(),
+            "non-finite ‖g‖ reached the safeguard angle test"
+        );
         let mut hits = 0;
         for d in dirs.iter_mut() {
             let dnorm = d.norm_sq(dots, w, g).sqrt();
+            debug_assert!(
+                dnorm.is_finite(),
+                "non-finite hybrid-direction norm in the safeguard"
+            );
             let reject = if gnorm <= f64::EPSILON || dnorm <= f64::EPSILON {
                 true
             } else {
-                let cosang = (-d.dot_g(dots, g) / (gnorm * dnorm))
-                    .clamp(-1.0, 1.0);
+                let dg = d.dot_g(dots, g);
+                debug_assert!(
+                    dg.is_finite(),
+                    "non-finite safeguard dot product d·g"
+                );
+                let cosang = (-dg / (gnorm * dnorm)).clamp(-1.0, 1.0);
                 cosang.acos() >= self.theta
             };
             if reject {

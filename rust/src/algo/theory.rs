@@ -14,36 +14,42 @@ use crate::loss::LossKind;
 
 /// Power-iteration estimate of λ_max(XᵀX) over ALL shards (the global
 /// data matrix), giving L̂ = λ + l''_max · λ_max.
+///
+/// Runs entirely in the cluster's union support U: columns outside U
+/// are identically zero in every shard, so XᵀX is supported on U×U and
+/// the U-compact iteration walks the exact same Krylov sequence as the
+/// dense one — identical σ, O(|U|) buffers instead of two O(d) ones.
+/// The U remap is a monotone column bijection, so partial sums land in
+/// the same order and the estimate is bit-identical.
 pub fn lipschitz_global(
     cluster: &Cluster,
     loss: LossKind,
     lam: f64,
     iters: usize,
 ) -> f64 {
-    let d = cluster.dim;
-    let mut v = vec![0.0f64; d];
-    for shard in &cluster.shards {
-        for &c in &shard.map.support {
-            v[c as usize] = 1.0;
-        }
-    }
+    let u = cluster.umap.len();
+    // the dense iteration starts from the union-support indicator; in U
+    // coordinates that indicator is all-ones
+    let mut v = vec![1.0f64; u];
     let n0 = dense::norm(&v).max(f64::MIN_POSITIVE);
     dense::scale(&mut v, 1.0 / n0);
     let mut sigma = 0.0;
     let mut vl = Vec::new();
     let mut gl: Vec<f64> = Vec::new();
     for _ in 0..iters {
-        let mut vnew = vec![0.0f64; d];
+        let mut vnew = vec![0.0f64; u];
         for shard in &cluster.shards {
-            // shards store local column ids: gather v onto the support,
-            // run the compact mat-vecs, scatter the product back
-            shard.map.gather(&v, &mut vl);
+            // gather v onto the shard support through the composed U
+            // positions, run the compact mat-vecs, scatter back into U
+            shard.gather_frame(true, &v, &mut vl);
             let mut z = vec![0.0; shard.xl.n_rows()];
             shard.xl.matvec(&vl, &mut z);
             gl.clear();
             gl.resize(shard.xl.n_cols, 0.0);
             shard.xl.tmatvec(&z, &mut gl);
-            shard.map.scatter_add(&gl, 1.0, &mut vnew);
+            for (l, &p) in shard.upos.iter().enumerate() {
+                vnew[p as usize] += gl[l];
+            }
         }
         sigma = dense::norm(&vnew);
         if sigma <= f64::MIN_POSITIVE {

@@ -1,0 +1,186 @@
+//! Runtime audit layer (`--features audit`): a counting global
+//! allocator plus the inline Cluster/Engine asserts, so CI can prove —
+//! at the allocator and virtual-clock level — the invariants
+//! `pallas-lint` checks statically:
+//!
+//! - a compact-master round must not allocate an O(d) buffer (the one
+//!   sanctioned size-d allocation is the final `RunResult::w`
+//!   expansion): `tests/audit.rs` sets the large-allocation threshold
+//!   to d·8 bytes around a run and asserts the counter;
+//! - a virtual clock must never run backwards (asserts in
+//!   [`crate::cluster::Engine`]);
+//! - comm bytes must never be charged to the [`crate::cluster::Ledger`]
+//!   without a matching engine event
+//!   ([`crate::cluster::Engine::comm_marks`]).
+//!
+//! With the feature off every function here is a no-op returning zero,
+//! so callers need no `cfg` of their own.
+//!
+//! The counters are process-global (a `#[global_allocator]` cannot be
+//! anything else), so tests that read them must serialize themselves —
+//! `tests/audit.rs` shares one mutex.
+
+#[cfg(feature = "audit")]
+mod imp {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    pub static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+    pub static BYTES: AtomicUsize = AtomicUsize::new(0);
+    pub static MAX_SINGLE: AtomicUsize = AtomicUsize::new(0);
+    pub static LARGE_THRESHOLD: AtomicUsize = AtomicUsize::new(usize::MAX);
+    pub static LARGE_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+    fn record(size: usize) {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(size, Ordering::Relaxed);
+        MAX_SINGLE.fetch_max(size, Ordering::Relaxed);
+        if size >= LARGE_THRESHOLD.load(Ordering::Relaxed) {
+            LARGE_COUNT.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Pure pass-through to the system allocator with lock-free
+    /// counter updates on every acquisition path (alloc, alloc_zeroed
+    /// — `vec![0.0; d]` lands there — and realloc growth).
+    pub struct CountingAlloc;
+
+    // lint: allow-file(unsafe-contract) — delegating GlobalAlloc impl:
+    // every method forwards verbatim to `System` after touching only
+    // lock-free atomics, and the audit CI job runs the whole tier-1
+    // suite through it.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        // SAFETY: same contract as `System::alloc` — layout is
+        // non-zero-sized per GlobalAlloc's caller contract; counting
+        // first cannot allocate (atomics only), so no reentrancy.
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            record(layout.size());
+            System.alloc(layout)
+        }
+
+        // SAFETY: delegates to `System::alloc_zeroed` unchanged.
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            record(layout.size());
+            System.alloc_zeroed(layout)
+        }
+
+        // SAFETY: ptr/layout come from a previous alloc on this
+        // allocator, which is exactly `System`'s dealloc contract.
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        // SAFETY: same contract as `System::realloc`; the new size is
+        // counted as a fresh acquisition.
+        unsafe fn realloc(
+            &self,
+            ptr: *mut u8,
+            layout: Layout,
+            new_size: usize,
+        ) -> *mut u8 {
+            record(new_size);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static AUDIT_ALLOC: CountingAlloc = CountingAlloc;
+}
+
+/// Total heap acquisitions observed so far (0 with the feature off).
+pub fn alloc_count() -> usize {
+    #[cfg(feature = "audit")]
+    {
+        imp::ALLOCS.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "audit"))]
+    {
+        0
+    }
+}
+
+/// Total bytes requested from the allocator (0 with the feature off).
+pub fn alloc_bytes() -> usize {
+    #[cfg(feature = "audit")]
+    {
+        imp::BYTES.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "audit"))]
+    {
+        0
+    }
+}
+
+/// Largest single acquisition seen since process start.
+pub fn max_single_alloc() -> usize {
+    #[cfg(feature = "audit")]
+    {
+        imp::MAX_SINGLE.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "audit"))]
+    {
+        0
+    }
+}
+
+/// Count every future acquisition of at least `bytes` bytes (the O(d)
+/// detector: set it to d·8 around a compact-master run). `usize::MAX`
+/// disarms it. No-op with the feature off.
+pub fn set_large_alloc_threshold(bytes: usize) {
+    #[cfg(feature = "audit")]
+    imp::LARGE_THRESHOLD.store(bytes, std::sync::atomic::Ordering::Relaxed);
+    #[cfg(not(feature = "audit"))]
+    let _ = bytes;
+}
+
+/// Zero the large-acquisition counter.
+pub fn reset_large_allocs() {
+    #[cfg(feature = "audit")]
+    imp::LARGE_COUNT.store(0, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Acquisitions at or above the configured threshold since the last
+/// reset (0 with the feature off).
+pub fn large_alloc_count() -> usize {
+    #[cfg(feature = "audit")]
+    {
+        imp::LARGE_COUNT.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "audit"))]
+    {
+        0
+    }
+}
+
+/// Snapshot-style view over the global counters: `begin()` before the
+/// region of interest, then read deltas.
+pub struct AllocWatch {
+    count0: usize,
+    bytes0: usize,
+    large0: usize,
+}
+
+impl AllocWatch {
+    pub fn begin() -> AllocWatch {
+        AllocWatch {
+            count0: alloc_count(),
+            bytes0: alloc_bytes(),
+            large0: large_alloc_count(),
+        }
+    }
+
+    /// Acquisitions since `begin()`.
+    pub fn allocations(&self) -> usize {
+        alloc_count() - self.count0
+    }
+
+    /// Bytes requested since `begin()`.
+    pub fn bytes(&self) -> usize {
+        alloc_bytes() - self.bytes0
+    }
+
+    /// Threshold-sized acquisitions since `begin()`.
+    pub fn large_allocs(&self) -> usize {
+        large_alloc_count() - self.large0
+    }
+}

@@ -157,6 +157,18 @@ pub struct Event {
 /// [`Engine::dropped_events`] counts the overflow.
 const MAX_EVENTS: usize = 1 << 18;
 
+/// Audit-mode invariant: virtual clocks only ever advance. A landing
+/// time before the floor it chained from means a negative hop/duration
+/// snuck into the schedule — the "clock ran backwards" class of bug the
+/// `audit` feature exists to catch at the source.
+#[cfg(feature = "audit")]
+fn audit_clock_advances(before: f64, after: f64, what: &str) {
+    assert!(
+        after >= before,
+        "engine clock ran backwards in {what}: {before} -> {after}"
+    );
+}
+
 #[derive(Clone, Debug)]
 pub struct Engine {
     pub profile: NodeProfile,
@@ -171,6 +183,12 @@ pub struct Engine {
     /// label the next compute phase's events carry (set by drivers via
     /// [`Engine::set_phase`]; consumed once)
     next_label: Option<&'static str>,
+    /// count of scheduled comm operations (tree/quorum reduces,
+    /// broadcasts, ring traversals, scalar rounds) — the audit layer
+    /// pairs every ledger byte charge against this, so no wire crossing
+    /// can be charged without a matching engine event. Unlike
+    /// `events`, marks are never capped or dropped.
+    comm_marks: usize,
 }
 
 impl Engine {
@@ -184,6 +202,7 @@ impl Engine {
             events: Vec::new(),
             dropped_events: 0,
             next_label: None,
+            comm_marks: 0,
         }
     }
 
@@ -212,6 +231,13 @@ impl Engine {
         self.dropped_events
     }
 
+    /// How many comm operations have been scheduled on the engine.
+    /// The [`Cluster`](super::Cluster) audit asserts compare this
+    /// before/after each ledger byte charge.
+    pub fn comm_marks(&self) -> usize {
+        self.comm_marks
+    }
+
     fn push_event(&mut self, ev: Event) {
         if self.events.len() < MAX_EVENTS {
             self.events.push(ev);
@@ -234,6 +260,11 @@ impl Engine {
         let mut max_end = 0.0f64;
         for (p, &t) in times.iter().enumerate() {
             let dur = t * scale * self.profile.scale(p);
+            #[cfg(feature = "audit")]
+            assert!(
+                dur >= 0.0,
+                "negative compute duration {dur} on node {p}"
+            );
             max_dur = max_dur.max(dur);
             let start = self.node_clock[p];
             self.node_clock[p] = start + dur;
@@ -269,6 +300,8 @@ impl Engine {
             .map(|(p, &t)| t * scale * self.profile.scale(p))
             .fold(0.0f64, f64::max);
         let start = self.control_clock;
+        #[cfg(feature = "audit")]
+        audit_clock_advances(start, start + dur, "compute_control");
         self.control_clock = start + dur;
         self.push_event(Event {
             label,
@@ -296,11 +329,18 @@ impl Engine {
         down: Option<(usize, f64)>,
         lane: Lane,
     ) -> f64 {
+        self.comm_marks += 1;
+        #[cfg(feature = "audit")]
+        let span0 = self.makespan();
         let floor = self.control_clock;
         let ready: Vec<f64> =
             self.node_clock.iter().map(|&c| c.max(floor)).collect();
         let root = self.climb(label, ready, hops);
         let landed = self.descend(root, down);
+        // every leaf injects at or after its clock, so a landing time
+        // before the pre-reduce makespan means a hop ran backwards
+        #[cfg(feature = "audit")]
+        audit_clock_advances(span0, landed, "tree_reduce");
         self.control_clock = self.control_clock.max(landed);
         if !(self.pipeline && lane == Lane::Control) {
             // barrier schedule: every node waits for the landing time
@@ -425,6 +465,7 @@ impl Engine {
         hops: &[f64],
         down: Option<(usize, f64)>,
     ) -> f64 {
+        self.comm_marks += 1;
         let floor = self.control_clock;
         for &(node, ready, staleness) in arrivals {
             self.push_event(Event {
@@ -440,6 +481,11 @@ impl Engine {
             arrivals.iter().map(|&(_, t, _)| t.max(floor)).collect();
         let root = self.climb(label, ready, hops);
         let landed = self.descend(root, down);
+        // every leaf is floored at the control clock (a round combines
+        // only after the previous one committed), so a landing time
+        // before that floor means a quorum hop ran backwards
+        #[cfg(feature = "audit")]
+        audit_clock_advances(floor, landed, "quorum_reduce");
         self.control_clock = self.control_clock.max(landed);
         for c in self.node_clock.iter_mut() {
             *c = (*c).max(landed);
@@ -455,12 +501,17 @@ impl Engine {
     /// entirely behind stale node clocks and underreport the
     /// makespan); in pipelined mode it is a pure control-lane op.
     pub fn broadcast(&mut self, depth: usize, hop: f64) -> f64 {
+        self.comm_marks += 1;
+        #[cfg(feature = "audit")]
+        let span0 = self.makespan();
         let start = if self.pipeline {
             self.control_clock
         } else {
             self.makespan()
         };
         let arrival = start + depth as f64 * hop;
+        #[cfg(feature = "audit")]
+        audit_clock_advances(span0.min(start), arrival, "broadcast");
         if depth > 0 {
             self.push_event(Event {
                 label: "broadcast",
@@ -484,8 +535,11 @@ impl Engine {
     /// the end. Pipelined overlap therefore only hides ring traffic
     /// behind nothing; the pipeline bench runs on the Tree topology.
     pub fn ring_traversal(&mut self, label: &'static str, secs: f64) -> f64 {
+        self.comm_marks += 1;
         let start = self.makespan();
         let end = start + secs;
+        #[cfg(feature = "audit")]
+        audit_clock_advances(start, end, "ring_traversal");
         if secs > 0.0 {
             self.push_event(Event {
                 label,

@@ -56,6 +56,33 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Debug/audit invariant: every coordinate leaving a reduction must be
+/// finite. A NaN/Inf gradient or direction should fail loudly at the
+/// reduce that produced it, not surface three modules later as a silent
+/// AUPRC regression.
+#[cfg(any(debug_assertions, feature = "audit"))]
+fn assert_reduced_finite(label: &str, vals: &[f64]) {
+    for (j, v) in vals.iter().enumerate() {
+        assert!(
+            v.is_finite(),
+            "non-finite coordinate {j} ({v}) out of {label}"
+        );
+    }
+}
+
+#[cfg(not(any(debug_assertions, feature = "audit")))]
+#[inline(always)]
+fn assert_reduced_finite(_label: &str, _vals: &[f64]) {}
+
+/// The reduced values behind either wire format, for the finite guard.
+#[cfg(any(debug_assertions, feature = "audit"))]
+fn reduced_vals(out: &Reduced) -> &[f64] {
+    match out {
+        Reduced::Sparse(s) => &s.val,
+        Reduced::Dense(v) => v,
+    }
+}
+
 /// The simulated cluster: P shards + the accounting state.
 pub struct Cluster {
     pub shards: Vec<Shard>,
@@ -360,6 +387,7 @@ impl Cluster {
     ) -> Vec<f64> {
         let outs = self.map_each(f);
         let sum = allreduce::tree_sum(&outs);
+        assert_reduced_finite("map_reduce_vec", &sum);
         self.charge_vector_pass(1);
         self.engine_dense_traversal(true, false, false);
         sum
@@ -374,6 +402,7 @@ impl Cluster {
     ) -> Vec<f64> {
         let outs = self.map_each(f);
         let sum = allreduce::tree_sum(&outs);
+        assert_reduced_finite("map_allreduce_vec", &sum);
         self.charge_vector_pass(2);
         self.engine_dense_traversal(true, true, false);
         sum
@@ -406,8 +435,16 @@ impl Cluster {
         ctrl: bool,
     ) -> Vec<f64> {
         let sum = allreduce::tree_sum(parts);
+        assert_reduced_finite("reduce_parts", &sum);
+        #[cfg(feature = "audit")]
+        let marks = self.engine.comm_marks();
         self.charge_vector_pass(if all { 2 } else { 1 });
         self.engine_dense_traversal(true, all, ctrl);
+        #[cfg(feature = "audit")]
+        assert!(
+            self.engine.comm_marks() > marks,
+            "reduce_parts charged comm bytes with no matching engine event"
+        );
         sum
     }
 
@@ -469,6 +506,10 @@ impl Cluster {
         ctrl: bool,
     ) -> Reduced {
         let (out, level_bytes) = allreduce::tree_sum_sparse(parts);
+        #[cfg(any(debug_assertions, feature = "audit"))]
+        assert_reduced_finite("reduce_parts_sparse", reduced_vals(&out));
+        #[cfg(feature = "audit")]
+        let marks = self.engine.comm_marks();
         let result_bytes = out.wire_bytes() as f64;
         let nodes = self.n_nodes();
         let secs = match self.cost.topology {
@@ -536,6 +577,11 @@ impl Cluster {
                 self.engine.ring_traversal("ring", secs);
             }
         }
+        #[cfg(feature = "audit")]
+        assert!(
+            self.engine.comm_marks() > marks,
+            "reduce_parts_sparse charged bytes with no matching engine event"
+        );
         self.sync_ledger();
         out
     }
@@ -560,6 +606,8 @@ impl Cluster {
     ) -> (Reduced, f64) {
         debug_assert_eq!(parts.len(), arrivals.len());
         let (out, level_bytes) = allreduce::tree_sum_sparse(parts);
+        #[cfg(any(debug_assertions, feature = "audit"))]
+        assert_reduced_finite("async_quorum_reduce_sparse", reduced_vals(&out));
         let result_bytes = out.wire_bytes() as f64;
         let hops: Vec<f64> = level_bytes
             .iter()
@@ -598,6 +646,7 @@ impl Cluster {
     ) -> (Vec<f64>, f64) {
         debug_assert_eq!(parts.len(), arrivals.len());
         let sum = allreduce::tree_sum(parts);
+        assert_reduced_finite("async_quorum_reduce", &sum);
         self.charge_vector_pass(if all { 2 } else { 1 });
         let hop = if self.n_nodes() <= 1 {
             0.0
@@ -665,6 +714,8 @@ impl Cluster {
     /// barrier makespan equivalence (`tests/engine.rs`) is preserved.
     fn broadcast_payload(&mut self, bytes: f64) {
         let depth = self.tree_depth() as usize;
+        #[cfg(feature = "audit")]
+        let marks = self.engine.comm_marks();
         self.ledger.comm_passes += 1.0;
         self.ledger.comm_bytes += bytes;
         match self.cost.topology {
@@ -685,6 +736,11 @@ impl Cluster {
                 self.engine.ring_traversal("ring", secs);
             }
         }
+        #[cfg(feature = "audit")]
+        assert!(
+            self.engine.comm_marks() > marks,
+            "broadcast charged comm bytes with no matching engine event"
+        );
         self.sync_ledger();
     }
 

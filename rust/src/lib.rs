@@ -114,6 +114,57 @@
 //! - [`util`], [`bench`] — in-tree CLI/config/JSON/RNG/property-test/
 //!   bench-harness substrates (offline registry: see Cargo.toml).
 //!
+//! ## Invariants
+//!
+//! The properties above rest on rules the compiler cannot see. They
+//! are enforced statically by the workspace's `pallas-lint` crate
+//! (`make lint-invariants`, blocking in CI and part of `make verify`)
+//! and dynamically by the [`audit`] layer (`--features audit`):
+//!
+//! 1. **no-dense-master** — no `vec![_; dim]` / `with_capacity(dim)`
+//!    O(d) allocation in the outer-loop driver files
+//!    (`algo/{fs,async_fs,param_mix,common,theory}.rs`). The compact
+//!    master materializes full-d exactly once, into `RunResult::w`;
+//!    any other O(d) buffer silently re-densifies the O(|U|) loop.
+//! 2. **no-wall-clock** — `Instant`/`SystemTime` are banned in `algo/`,
+//!    `cluster/engine.rs` and `cluster/allreduce.rs`: all timing flows
+//!    through the engine's virtual clocks so runs are reproducible.
+//!    (The measured-threading sites in `cluster/mod.rs` and
+//!    `util/timer.rs` are outside the rule's scope by design — they
+//!    *feed* the virtual clocks.)
+//! 3. **no-unordered-iteration** — `HashMap`/`HashSet` are banned in
+//!    code feeding reductions or wire payloads (`algo/`, `cluster/`,
+//!    `objective/`, `linalg/`): iteration order must be deterministic
+//!    or bit-identical traces die. Use BTree or sorted Vecs.
+//! 4. **ledger-pairing** — `reduce_parts*`/`broadcast*`/`map_reduce*`/
+//!    `async_quorum_reduce*` may only be called on a cluster handle
+//!    (receiver containing `cluster`), and raw `tree_sum` calls are
+//!    banned outside `cluster/` — so no wire crossing can bypass the
+//!    [`cluster::Ledger`] charge.
+//! 5. **no-alloc-in-steady-state** — `Vec::new`/`vec![`/`.clone()` are
+//!    banned inside the per-round closure bodies served by
+//!    [`cluster::NodeScratch`] (`map_each_scratch*`,
+//!    `map_reduce_scalars_scratch`, `map_nodes_timed`): steady-state
+//!    rounds must be allocation-free.
+//! 6. **unsafe-contract** — every `unsafe` block needs a `// SAFETY:`
+//!    comment on/above it and must live in a Miri-covered module
+//!    (`linalg/{csr,sparse,dense}.rs`; CI runs Miri over the `linalg`
+//!    tests).
+//!
+//! Escape hatch: a justified inline comment on (or immediately above)
+//! the offending line —
+//! `// lint: allow(<rule>[, <rule>]) — <reason>` — or
+//! `// lint: allow-file(<rule>) — <reason>` anywhere in the file. The
+//! reason is mandatory; an allow without one is ignored. `#[cfg(test)]
+//! mod` bodies are exempt.
+//!
+//! The [`audit`] feature backs rules 1/2/4 at runtime: a counting
+//! global allocator (`tests/audit.rs` fails if a compact-master run
+//! makes an O(d·8) acquisition beyond the single sanctioned `w`
+//! expansion), clock-monotonicity asserts in [`cluster::Engine`], and
+//! comm-byte↔event pairing asserts in [`cluster::Cluster`]. CI runs
+//! the full tier-1 suite under `--features audit`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -131,6 +182,7 @@
 //! ```
 
 pub mod algo;
+pub mod audit;
 pub mod bench;
 pub mod cluster;
 pub mod data;

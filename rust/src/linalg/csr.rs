@@ -87,29 +87,48 @@ impl Csr {
     /// zᵢ = xᵢ·w
     ///
     /// §Perf: column indices are validated once at construction
-    /// (`push_row` asserts c < n_cols), so the hot loop uses unchecked
-    /// indexing — bounds checks cost ~15% on the scatter/gather paths.
+    /// (`push_row` asserts c < n_cols), so the release hot loop uses
+    /// unchecked indexing — bounds checks cost ~15% on the
+    /// scatter/gather paths. Debug builds (and therefore Miri and the
+    /// audit CI jobs) take the checked-index path instead, so the
+    /// construction-time invariant is re-verified on every access
+    /// wherever we can afford it.
     #[inline]
     pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
         debug_assert!(w.len() >= self.n_cols);
         let (cols, vals) = self.row(i);
         let mut s = 0.0;
         for (c, v) in cols.iter().zip(vals) {
-            // SAFETY: c < n_cols ≤ w.len(), enforced by push_row
-            s += *v as f64 * unsafe { *w.get_unchecked(*c as usize) };
+            #[cfg(debug_assertions)]
+            {
+                s += *v as f64 * w[*c as usize];
+            }
+            #[cfg(not(debug_assertions))]
+            {
+                // SAFETY: c < n_cols ≤ w.len(), enforced by push_row
+                s += *v as f64 * unsafe { *w.get_unchecked(*c as usize) };
+            }
         }
         s
     }
 
-    /// g ← g + α·xᵢ (the nnz-sparse gradient scatter)
+    /// g ← g + α·xᵢ (the nnz-sparse gradient scatter; checked indexing
+    /// on debug/Miri builds, see [`Csr::row_dot`])
     #[inline]
     pub fn add_row_scaled(&self, i: usize, alpha: f64, g: &mut [f64]) {
         debug_assert!(g.len() >= self.n_cols);
         let (cols, vals) = self.row(i);
         for (c, v) in cols.iter().zip(vals) {
-            // SAFETY: c < n_cols ≤ g.len(), enforced by push_row
-            unsafe {
-                *g.get_unchecked_mut(*c as usize) += alpha * *v as f64;
+            #[cfg(debug_assertions)]
+            {
+                g[*c as usize] += alpha * *v as f64;
+            }
+            #[cfg(not(debug_assertions))]
+            {
+                // SAFETY: c < n_cols ≤ g.len(), enforced by push_row
+                unsafe {
+                    *g.get_unchecked_mut(*c as usize) += alpha * *v as f64;
+                }
             }
         }
     }
