@@ -40,6 +40,15 @@ bench-smoke:
 	cargo bench --bench async_fs
 	cargo bench --bench master_side
 
+# Seeded fleet-weather chaos gate (the CI `chaos` job): a 3-seed ×
+# {crash, flap, degrade} matrix of the async FS driver under fault
+# injection — every cell must reach the clean run's objective target,
+# record its scripted fault activity on the Ledger, and the replay
+# gate must reproduce one seed's fault timeline + iterate bitwise.
+# Writes BENCH_fault_tolerance.json for the artifact upload.
+chaos:
+	cargo bench --bench fault_tolerance
+
 fmt-check:
 	cargo fmt --check
 
@@ -52,5 +61,5 @@ clippy:
 artifacts:
 	python3 python/compile/aot.py --out artifacts
 
-.PHONY: verify test bench bench-smoke fmt-check clippy artifacts \
+.PHONY: verify test bench bench-smoke chaos fmt-check clippy artifacts \
 	lint-invariants

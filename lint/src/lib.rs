@@ -45,30 +45,41 @@ const DENSE_MASTER_FILES: [&str; 5] = [
 
 /// Ledger-threading comm methods (rule 4): callable only on a
 /// `cluster`-named receiver.
-const COMM_METHODS: [&str; 16] = [
+const COMM_METHODS: [&str; 24] = [
     "reduce_parts",
     "reduce_parts_ctrl",
     "reduce_parts_sparse",
     "reduce_parts_sparse_ctrl",
+    "reduce_parts_members",
+    "reduce_parts_ctrl_members",
+    "reduce_parts_sparse_members",
+    "reduce_parts_sparse_ctrl_members",
     "map_reduce_vec",
     "map_allreduce_vec",
     "map_reduce_sparse",
     "map_allreduce_sparse",
     "map_reduce_scalars",
     "map_reduce_scalars_scratch",
+    "map_reduce_scalars_scratch_members",
     "broadcast_vec",
     "broadcast_support",
     "broadcast_master",
     "async_quorum_reduce",
     "async_quorum_reduce_sparse",
+    "async_quorum_reduce_members",
+    "async_quorum_reduce_sparse_members",
     "charge_scalar_round",
+    "charge_scalar_round_members",
 ];
 
 /// The scratch-served per-round phases rule 5 keeps allocation-free.
-const SCRATCH_PHASES: [&str; 4] = [
+const SCRATCH_PHASES: [&str; 7] = [
     ".map_each_scratch_ctrl(",
     ".map_each_scratch(",
+    ".map_each_scratch_members(",
+    ".map_each_scratch_ctrl_members(",
     ".map_reduce_scalars_scratch(",
+    ".map_reduce_scalars_scratch_members(",
     ".map_nodes_timed(",
 ];
 
@@ -568,9 +579,12 @@ impl<'a> FileLint<'a> {
     }
 
     fn rule_no_wall_clock(&mut self) {
+        // faults.rs joins the list: a wall clock in the fault layer
+        // would break the seeded-replay determinism contract
         if !(self.in_algo()
             || self.relpath == "cluster/engine.rs"
-            || self.relpath == "cluster/allreduce.rs")
+            || self.relpath == "cluster/allreduce.rs"
+            || self.relpath == "cluster/faults.rs")
         {
             return;
         }
@@ -869,5 +883,33 @@ mod tests {
         // the measured-threading sites live here: out of scope
         assert!(lint_source("cluster/mod.rs", src).is_empty());
         assert!(lint_source("util/timer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fault_layer_is_wall_clock_free() {
+        // the seeded-replay contract: no wall clocks in faults.rs
+        let src = "let t = SystemTime::now();\n";
+        let hits = lint_source("cluster/faults.rs", src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].rule, "no-wall-clock");
+    }
+
+    #[test]
+    fn member_subset_phases_and_comm_calls_are_covered() {
+        // elastic-membership comm must still thread the ledger...
+        let src = "let d = engine.reduce_parts_sparse_members(&p, true, m);\n";
+        let hits = lint_source("algo/async_fs.rs", src);
+        assert!(
+            hits.iter().any(|f| f.rule == "ledger-pairing"),
+            "{hits:?}"
+        );
+        // ...and the members scratch bodies stay allocation-free
+        let src = "cluster.map_each_scratch_members(m, |p, shard, s| {\n\
+                   let z = Vec::new();\n});\n";
+        let hits = lint_source("algo/async_fs.rs", src);
+        assert!(
+            hits.iter().any(|f| f.rule == "no-alloc-in-steady-state"),
+            "{hits:?}"
+        );
     }
 }

@@ -79,11 +79,9 @@
 
 use std::collections::VecDeque;
 
-use crate::algo::common::{
-    global_value_grad_cached_master, global_value_grad_master, TestProbe,
-};
+use crate::algo::common::{global_value_grad_fleet, TestProbe};
 use crate::algo::fs::{
-    combine_hybrids, combine_weights, local_direction, FsConfig,
+    combine_hybrids_members, combine_weights, local_direction, FsConfig,
 };
 use crate::algo::{Driver, RunResult, StopRule};
 use crate::cluster::allreduce::Reduced;
@@ -223,20 +221,39 @@ impl Driver for AsyncFsDriver {
             VecDeque::new();
 
         for r in 0.. {
-            // --- step 1: synchronous gradient allreduce at wʳ (the
-            // cheap commit path every node's main lane walks) ---
-            let (f_r, g, grad_parts) = if margins.is_empty() {
-                let (f_r, g, gp, z) = global_value_grad_master(
-                    cluster, &w, c.loss, c.lam, true, sparse, compact,
-                );
-                margins = z;
-                (f_r, g, gp)
-            } else {
-                global_value_grad_cached_master(
-                    cluster, &margins, &w, c.loss, c.lam, true, sparse,
-                    compact,
-                )
-            };
+            // --- step 0: this round's fleet weather (clear skies and
+            // full membership without a fault plan — the zero-fault
+            // path is bit-identical to the pre-fault driver) ---
+            let weather = cluster.apply_fault_weather(r);
+            for &p in &weather.crashed {
+                // a crashed node loses its solver-lane state and its
+                // margin cache; its shard is simply absent until it
+                // rejoins
+                lanes[p] = SolverLane::default();
+                if p < margins.len() {
+                    margins[p].clear();
+                }
+            }
+            for &p in &weather.restarted {
+                // rejoin: the master re-bases the node onto the
+                // current iterate via the O(fdim) compact unicast;
+                // its margins recompute cold in the next sweep
+                cluster.rejoin_rebase(p, fdim);
+                lanes[p] = SolverLane::default();
+                if p < margins.len() {
+                    margins[p].clear();
+                }
+            }
+            let members = &weather.members;
+
+            // --- step 1: synchronous gradient allreduce at wʳ over
+            // the members (the cheap commit path every surviving
+            // node's main lane walks); per-member warm/cold handled
+            // inside the fleet round ---
+            let (f_r, g, grad_parts) = global_value_grad_fleet(
+                cluster, members, &mut margins, &w, c.loss, c.lam, true,
+                sparse, compact,
+            );
             f = f_r;
             let gnorm = dense::norm(&g);
             if r == 0 {
@@ -291,7 +308,10 @@ impl Driver for AsyncFsDriver {
                 {
                     lane.latest = None;
                 }
-                if lane.inflight.is_none() {
+                // only members start new solves: a dead node has no
+                // lane, a flapped one sits this round out (its
+                // in-flight solve keeps running)
+                if lane.inflight.is_none() && members.contains(&p) {
                     fresh.push(p);
                 }
             }
@@ -340,20 +360,32 @@ impl Driver for AsyncFsDriver {
                 0 => t_round,
                 n => fresh_avail[n.min(q) - 1],
             };
-            // each node at the deadline delivers its freshest solve
-            // available by then (a finished in-flight beats `latest`)
+            // each member at the deadline delivers its freshest solve
+            // available by then (a finished in-flight beats `latest`);
+            // non-members deliver nothing, a dropped member's message
+            // was lost even after the retry, a delayed member's retry
+            // pushes its arrival
             let mut contribs: Vec<Contribution> = Vec::new();
             for (p, lane) in lanes.iter().enumerate() {
+                if !members.contains(&p) || weather.dropped.contains(&p) {
+                    continue;
+                }
                 let chosen = lane
                     .inflight
                     .as_ref()
                     .filter(|s| s.done <= deadline)
                     .or_else(|| lane.latest.as_ref());
                 if let Some(s) = chosen {
+                    let delay = weather
+                        .delayed
+                        .iter()
+                        .find(|&&(dp, _)| dp == p)
+                        .map(|&(_, d)| d)
+                        .unwrap_or(0.0);
                     contribs.push(Contribution {
                         node: p,
                         staleness: r - s.for_round,
-                        arrival: s.done.max(t_round),
+                        arrival: s.done.max(t_round) + delay,
                         dir: s.dir.clone(),
                     });
                 }
@@ -383,7 +415,13 @@ impl Driver for AsyncFsDriver {
                 .iter()
                 .map(|cb| (cb.node, cb.arrival, cb.staleness))
                 .collect();
-            let mut d: Vec<f64> = if sparse {
+            let mut d: Vec<f64> = if contribs.is_empty() {
+                // every member contribution was lost on the wire (or
+                // no solve has ever finished): nothing to combine —
+                // the round routes straight to the synchronous
+                // fallback below instead of hanging on the quorum
+                Vec::new()
+            } else if sparse {
                 let mut a_w_sum = 0.0;
                 let mut a_g_sum = 0.0;
                 // per distinct stale reference round: the (wʳ′, gʳ′)
@@ -417,9 +455,11 @@ impl Driver for AsyncFsDriver {
                 }
                 // the per-contribution (a_w, a_g) pairs ride a scalar
                 // round alongside the corr reduce, as in the sync path
-                cluster.charge_scalar_round(2);
+                cluster.charge_scalar_round_members(2, members);
                 let (reduced, _landed) = cluster
-                    .async_quorum_reduce_sparse(&parts, &arrivals, true);
+                    .async_quorum_reduce_sparse_members(
+                        &parts, &arrivals, true, members,
+                    );
                 let mut d: Vec<f64> = w
                     .iter()
                     .zip(&g)
@@ -461,7 +501,11 @@ impl Driver for AsyncFsDriver {
                         dd
                     })
                     .collect();
-                cluster.async_quorum_reduce(&parts, &arrivals, true).0
+                cluster
+                    .async_quorum_reduce_members(
+                        &parts, &arrivals, true, members,
+                    )
+                    .0
             };
 
             // --- the correctness gate: a full fresh quorum IS the
@@ -469,29 +513,32 @@ impl Driver for AsyncFsDriver {
             // inside the θ cone around −gʳ or the round falls back to
             // the synchronous barrier direction ---
             let mut fell_back = false;
-            if !full_fresh && !c.safeguard.accepts_combined(&g, &d) {
+            if contribs.is_empty()
+                || (!full_fresh && !c.safeguard.accepts_combined(&g, &d))
+            {
                 fell_back = true;
                 // abort every solver lane (the master broadcasts the
-                // resync); resolve every node freshly at wʳ on the
+                // resync); resolve every *member* freshly at wʳ on the
                 // barrier'd main lanes and run the exact Algorithm-1
-                // round — stale work bought nothing this round
+                // round over the current membership — stale work
+                // bought nothing this round
                 for lane in lanes.iter_mut() {
                     lane.inflight = None;
                     lane.latest = None;
                 }
                 cluster.engine.set_phase("fallback_solve");
-                let mut dirs: Vec<HybridDir> =
-                    cluster.map_each_scratch(|p, shard, s| {
+                let mut dirs: Vec<HybridDir> = cluster
+                    .map_each_scratch_members(members, |p, shard, s| {
                         local_direction(
                             c, p, shard, s, fdim, compact, &dots, w_ref,
                             g_ref, gp_ref, r,
                         )
                     });
                 hits += c.safeguard.apply_hybrid(&dots, &w, &g, &mut dirs);
-                let all_nodes: Vec<usize> = (0..p_nodes).collect();
-                let weights =
-                    combine_weights(cluster, c.combine, &all_nodes);
-                d = combine_hybrids(cluster, dirs, &weights, &w, &g, sparse);
+                let weights = combine_weights(cluster, c.combine, members);
+                d = combine_hybrids_members(
+                    cluster, dirs, &weights, &w, &g, sparse, members,
+                );
             }
             last_hits = hits;
             let staleness_seen: Vec<usize> =
@@ -503,7 +550,7 @@ impl Driver for AsyncFsDriver {
             // node's reusable NodeScratch::dz ---
             let d_ref = &d;
             cluster.engine.set_phase("dir_matvec");
-            cluster.map_each_scratch_ctrl(|_, shard, s| {
+            cluster.map_each_scratch_ctrl_members(members, |_, shard, s| {
                 shard.gather_frame(compact, d_ref, &mut s.buf);
                 s.dz.resize(shard.xl.n_rows(), 0.0);
                 shard.xl.matvec(&s.buf, &mut s.dz);
@@ -513,17 +560,20 @@ impl Driver for AsyncFsDriver {
             let margins_ref = &margins;
             let ls = strong_wolfe(
                 |t| {
-                    let [lsum, dlsum] =
-                        cluster.map_reduce_scalars_scratch(|p, shard, s| {
-                            let phi = MarginPhi {
-                                z: &margins_ref[p],
-                                dz: &s.dz,
-                                y: &shard.y,
-                                loss: loss_kind,
-                            };
-                            let (a, b) = phi.partial(t);
-                            [a, b]
-                        });
+                    let [lsum, dlsum] = cluster
+                        .map_reduce_scalars_scratch_members(
+                            members,
+                            |p, shard, s| {
+                                let phi = MarginPhi {
+                                    z: &margins_ref[p],
+                                    dz: &s.dz,
+                                    y: &shard.y,
+                                    loss: loss_kind,
+                                };
+                                let (a, b) = phi.partial(t);
+                                [a, b]
+                            },
+                        );
                     lam_part.compose(t, lsum, dlsum)
                 },
                 &c.wolfe,
@@ -535,11 +585,12 @@ impl Driver for AsyncFsDriver {
                 }
                 Err(_) => break,
             };
-            // --- step 9 ---
+            // --- step 9: members advance their margin caches (only
+            // they have current margins and a fresh dʳ·xᵢ in dz) ---
             dense::axpy(t, &d, &mut w);
-            for (p, z) in margins.iter_mut().enumerate() {
+            for &p in members {
                 let s = cluster.scratch[p].lock().expect("scratch lock");
-                dense::axpy(t, &s.dz, z);
+                dense::axpy(t, &s.dz, &mut margins[p]);
             }
         }
         // the compact master's single O(d) pass

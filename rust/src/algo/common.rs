@@ -312,6 +312,176 @@ pub fn global_value_grad_cached_master(
     (f, g, LocalGrads::Sparse(grad_parts))
 }
 
+/// Elastic-membership gradient round for the fault-tolerant drivers:
+/// only `members` (the round's [`RoundWeather`] survivors) sweep their
+/// shards, and each member runs warm (cached margins) or cold (fresh
+/// X·w matvec — a node re-based after a rejoin) *per node*, so one
+/// recovering straggler doesn't force the whole fleet back to the
+/// two-pass round. `margins` is the driver's full-length cache: member
+/// entries are refreshed in place (cold members get brand-new margins),
+/// non-member entries are left untouched. The returned [`LocalGrads`]
+/// is full-length with empty placeholders for non-members — drivers
+/// index it by node id and only ever read member slots.
+///
+/// With full membership this delegates outright to
+/// [`global_value_grad_master`] (all-cold) or
+/// [`global_value_grad_cached_master`] (all-warm), so a zero-fault run
+/// is structurally bit-identical to the pre-fault path. The returned f
+/// during a degraded round is the objective over the *member* shards
+/// (plus the full λ‖w‖²/2) — the honest value the quorum can see.
+///
+/// [`RoundWeather`]: crate::cluster::RoundWeather
+#[allow(clippy::too_many_arguments)]
+pub fn global_value_grad_fleet(
+    cluster: &mut Cluster,
+    members: &[usize],
+    margins: &mut Vec<Vec<f64>>,
+    w: &[f64],
+    loss: LossKind,
+    lam: f64,
+    all: bool,
+    sparse: bool,
+    compact: bool,
+) -> (f64, Vec<f64>, LocalGrads) {
+    let n = cluster.n_nodes();
+    let full = members.len() == n;
+    if full && margins.is_empty() {
+        let (f, g, gp, z) = global_value_grad_master(
+            cluster, w, loss, lam, all, sparse, compact,
+        );
+        *margins = z;
+        return (f, g, gp);
+    }
+    if margins.len() != n {
+        margins.resize(n, Vec::new());
+    }
+    let all_warm = (0..n)
+        .all(|p| margins[p].len() == cluster.shards[p].xl.n_rows());
+    if full && all_warm {
+        return global_value_grad_cached_master(
+            cluster, margins, w, loss, lam, all, sparse, compact,
+        );
+    }
+    let fdim = if compact { cluster.umap.len() } else { cluster.dim };
+    cluster.engine.set_phase("grad_sweep");
+    if sparse || compact {
+        let parts: Vec<(f64, SparseVec, Option<Vec<f64>>)> = {
+            let margins_ref: &Vec<Vec<f64>> = margins;
+            cluster.map_each_scratch_members(members, |p, shard, s| {
+                if margins_ref[p].len() == shard.xl.n_rows() {
+                    let val = shard_loss_grad_compact_cached(
+                        &shard.xl,
+                        &shard.y,
+                        &margins_ref[p],
+                        loss,
+                        &mut s.vals,
+                    );
+                    (val, shard.support_sparse(compact, fdim, &s.vals), None)
+                } else {
+                    shard.gather_frame(compact, w, &mut s.wloc);
+                    // lint: allow(no-alloc-in-steady-state) — cold rejoin
+                    // round: the fresh margins are this round's product
+                    // (the caller keeps them); warm members stay cached
+                    let mut z = Vec::new();
+                    let val = shard_loss_grad_compact(
+                        &shard.xl,
+                        &shard.y,
+                        &s.wloc,
+                        loss,
+                        &mut s.vals,
+                        Some(&mut z),
+                    );
+                    (
+                        val,
+                        shard.support_sparse(compact, fdim, &s.vals),
+                        Some(z),
+                    )
+                }
+            })
+        };
+        let mut loss_sum = 0.0;
+        let mut member_parts: Vec<SparseVec> =
+            Vec::with_capacity(parts.len());
+        for (&p, (v, gpart, z)) in members.iter().zip(parts) {
+            loss_sum += v;
+            if let Some(z) = z {
+                margins[p] = z;
+            }
+            member_parts.push(gpart);
+        }
+        let mut g = cluster
+            .reduce_parts_sparse_members(&member_parts, all, members)
+            .into_dense();
+        dense::axpy(lam, w, &mut g);
+        let f = loss_sum + 0.5 * lam * dense::norm_sq(w);
+        let mut grads: Vec<SparseVec> =
+            (0..n).map(|_| SparseVec::new(fdim)).collect();
+        for (&p, gpart) in members.iter().zip(member_parts) {
+            grads[p] = gpart;
+        }
+        (f, g, LocalGrads::Sparse(grads))
+    } else {
+        let dim = cluster.dim;
+        let parts: Vec<(f64, Vec<f64>, Option<Vec<f64>>)> = {
+            let margins_ref: &Vec<Vec<f64>> = margins;
+            cluster.map_each_scratch_members(members, |p, shard, s| {
+                let (val, z) = if margins_ref[p].len()
+                    == shard.xl.n_rows()
+                {
+                    let val = shard_loss_grad_compact_cached(
+                        &shard.xl,
+                        &shard.y,
+                        &margins_ref[p],
+                        loss,
+                        &mut s.vals,
+                    );
+                    (val, None)
+                } else {
+                    shard.map.gather(w, &mut s.wloc);
+                    // lint: allow(no-alloc-in-steady-state) — cold rejoin
+                    // round: the fresh margins are this round's product
+                    let mut z = Vec::new();
+                    let val = shard_loss_grad_compact(
+                        &shard.xl,
+                        &shard.y,
+                        &s.wloc,
+                        loss,
+                        &mut s.vals,
+                        Some(&mut z),
+                    );
+                    (val, Some(z))
+                };
+                // lint: allow(no-dense-master, no-alloc-in-steady-state) — dense
+                // regime wire payload: support ≈ d here and this O(d)
+                // buffer IS the message the dense reduction moves
+                let mut grad = vec![0.0; dim];
+                shard.map.scatter_add(&s.vals, 1.0, &mut grad);
+                (val, grad, z)
+            })
+        };
+        let mut loss_sum = 0.0;
+        let mut member_parts: Vec<Vec<f64>> =
+            Vec::with_capacity(parts.len());
+        for (&p, (v, gpart, z)) in members.iter().zip(parts) {
+            loss_sum += v;
+            if let Some(z) = z {
+                margins[p] = z;
+            }
+            member_parts.push(gpart);
+        }
+        let mut g =
+            cluster.reduce_parts_members(&member_parts, all, members);
+        dense::axpy(lam, w, &mut g);
+        let f = loss_sum + 0.5 * lam * dense::norm_sq(w);
+        let mut grads: Vec<Vec<f64>> =
+            (0..n).map(|_| Vec::new()).collect();
+        for (&p, gpart) in members.iter().zip(member_parts) {
+            grads[p] = gpart;
+        }
+        (f, g, LocalGrads::Dense(grads))
+    }
+}
+
 /// Ledger-free objective evaluation (plot diagnostics, f* computation).
 pub fn global_f_diagnostic(
     cluster: &Cluster,

@@ -360,6 +360,27 @@ pub(crate) fn combine_hybrids(
     g: &[f64],
     sparse: bool,
 ) -> Vec<f64> {
+    let members: Vec<usize> = (0..cluster.n_nodes()).collect();
+    combine_hybrids_members(cluster, dirs, weights, w, g, sparse, &members)
+}
+
+/// [`combine_hybrids`] under elastic membership: `dirs[i]` is member
+/// `members[i]`'s safeguarded direction and the reduction tree spans
+/// only those members — the fault-tolerant fallback path resolves the
+/// barrier direction over whoever is actually alive this round. With
+/// the full node set this IS [`combine_hybrids`] (the legacy entry
+/// point delegates here).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn combine_hybrids_members(
+    cluster: &mut Cluster,
+    dirs: Vec<HybridDir>,
+    weights: &[f64],
+    w: &[f64],
+    g: &[f64],
+    sparse: bool,
+    members: &[usize],
+) -> Vec<f64> {
+    debug_assert_eq!(dirs.len(), members.len());
     if sparse {
         let mut a_w_sum = 0.0;
         let mut a_g_sum = 0.0;
@@ -377,8 +398,9 @@ pub(crate) fn combine_hybrids(
         // scalar aggregation round alongside the corr reduce;
         // both land on the control lane so a pipelined
         // schedule overlaps them with the next round's sweeps
-        cluster.charge_scalar_round(2);
-        let reduced = cluster.reduce_parts_sparse_ctrl(&parts, true);
+        cluster.charge_scalar_round_members(2, members);
+        let reduced =
+            cluster.reduce_parts_sparse_ctrl_members(&parts, true, members);
         let mut d: Vec<f64> = w
             .iter()
             .zip(g)
@@ -399,7 +421,7 @@ pub(crate) fn combine_hybrids(
                 dd
             })
             .collect();
-        cluster.reduce_parts_ctrl(&parts, true)
+        cluster.reduce_parts_ctrl_members(&parts, true, members)
     }
 }
 

@@ -210,6 +210,13 @@ impl Engine {
         self.node_clock.len()
     }
 
+    /// The full node set — what every legacy (membership-unaware)
+    /// entry point delegates with, so the zero-fault schedule is the
+    /// members schedule with `members = 0..n` by construction.
+    fn all_members(&self) -> Vec<usize> {
+        (0..self.node_clock.len()).collect()
+    }
+
     /// The simulated wall clock: when the last node AND the control
     /// chain are done — the critical path of the whole schedule.
     pub fn makespan(&self) -> f64 {
@@ -255,10 +262,26 @@ impl Engine {
     /// duration) for the ledger's legacy component breakdown.
     pub fn compute(&mut self, scale: f64, times: &[f64]) -> f64 {
         debug_assert_eq!(times.len(), self.node_clock.len());
+        let members = self.all_members();
+        self.compute_members(scale, &members, times)
+    }
+
+    /// Membership-aware compute phase: `times[i]` is member
+    /// `members[i]`'s measured seconds; nodes outside `members` (dead
+    /// or flapped out of the round) are untouched — their clocks stay
+    /// frozen where the fault left them, and the barrier only gates
+    /// the members. With `members = 0..n` this IS [`Engine::compute`].
+    pub fn compute_members(
+        &mut self,
+        scale: f64,
+        members: &[usize],
+        times: &[f64],
+    ) -> f64 {
+        debug_assert_eq!(times.len(), members.len());
         let label = self.next_label.take().unwrap_or("compute");
         let mut max_dur = 0.0f64;
         let mut max_end = 0.0f64;
-        for (p, &t) in times.iter().enumerate() {
+        for (&p, &t) in members.iter().zip(times.iter()) {
             let dur = t * scale * self.profile.scale(p);
             #[cfg(feature = "audit")]
             assert!(
@@ -279,7 +302,8 @@ impl Engine {
             });
         }
         if !self.pipeline {
-            for c in self.node_clock.iter_mut() {
+            for &p in members {
+                let c = &mut self.node_clock[p];
                 *c = (*c).max(max_end);
             }
         }
@@ -293,11 +317,29 @@ impl Engine {
     /// briefly preempt the workers in a real async pipeline. Returns
     /// the charged duration.
     pub fn compute_control(&mut self, scale: f64, times: &[f64]) -> f64 {
+        debug_assert_eq!(times.len(), self.node_clock.len());
+        let members = self.all_members();
+        self.compute_control_members(scale, &members, times)
+    }
+
+    /// Membership-aware control-lane compute: `times[i]` is member
+    /// `members[i]`'s measured seconds, scaled by *that node's* speed
+    /// (position in the subset is not a node id). Nodes are never
+    /// stalled on this lane, so non-members need no special casing —
+    /// they simply contribute no duration. With `members = 0..n` this
+    /// IS [`Engine::compute_control`].
+    pub fn compute_control_members(
+        &mut self,
+        scale: f64,
+        members: &[usize],
+        times: &[f64],
+    ) -> f64 {
+        debug_assert_eq!(times.len(), members.len());
         let label = self.next_label.take().unwrap_or("compute");
-        let dur = times
+        let dur = members
             .iter()
-            .enumerate()
-            .map(|(p, &t)| t * scale * self.profile.scale(p))
+            .zip(times.iter())
+            .map(|(&p, &t)| t * scale * self.profile.scale(p))
             .fold(0.0f64, f64::max);
         let start = self.control_clock;
         #[cfg(feature = "audit")]
@@ -329,27 +371,50 @@ impl Engine {
         down: Option<(usize, f64)>,
         lane: Lane,
     ) -> f64 {
+        let members = self.all_members();
+        self.tree_reduce_members(label, hops, down, lane, &members)
+    }
+
+    /// Membership-aware tree reduce: only `members` contribute leaves
+    /// and only their main lanes are gated by the landing — a dead
+    /// node's frozen clock neither feeds the tree nor waits on it.
+    /// With `members = 0..n` this IS [`Engine::tree_reduce`].
+    pub fn tree_reduce_members(
+        &mut self,
+        label: &'static str,
+        hops: &[f64],
+        down: Option<(usize, f64)>,
+        lane: Lane,
+        members: &[usize],
+    ) -> f64 {
         self.comm_marks += 1;
         #[cfg(feature = "audit")]
-        let span0 = self.makespan();
+        let span0 = members
+            .iter()
+            .fold(self.control_clock, |a, &p| a.max(self.node_clock[p]));
         let floor = self.control_clock;
-        let ready: Vec<f64> =
-            self.node_clock.iter().map(|&c| c.max(floor)).collect();
+        let ready: Vec<f64> = members
+            .iter()
+            .map(|&p| self.node_clock[p].max(floor))
+            .collect();
         let root = self.climb(label, ready, hops);
         let landed = self.descend(root, down);
-        // every leaf injects at or after its clock, so a landing time
-        // before the pre-reduce makespan means a hop ran backwards
+        // every member leaf injects at or after its clock, so a landing
+        // time before the members' pre-reduce span means a hop ran
+        // backwards (dead nodes' frozen clocks are excluded on purpose:
+        // a node that crashed mid-solve can sit ahead of the quorum)
         #[cfg(feature = "audit")]
         audit_clock_advances(span0, landed, "tree_reduce");
         self.control_clock = self.control_clock.max(landed);
         if !(self.pipeline && lane == Lane::Control) {
-            // barrier schedule: every node waits for the landing time
+            // barrier schedule: every member waits for the landing time
             // (in the synchronous algorithm nothing can proceed until
             // the result is committed — this is what makes the
             // homogeneous schedule collapse to the legacy flat sum
             // exactly). Straggler hiding still happens INSIDE the
             // tree via the max(children) hop starts.
-            for c in self.node_clock.iter_mut() {
+            for &p in members {
+                let c = &mut self.node_clock[p];
                 *c = (*c).max(landed);
             }
         }
@@ -465,6 +530,23 @@ impl Engine {
         hops: &[f64],
         down: Option<(usize, f64)>,
     ) -> f64 {
+        let members = self.all_members();
+        self.quorum_reduce_members(label, arrivals, hops, down, &members)
+    }
+
+    /// Membership-aware quorum reduction: the committed direction gates
+    /// only the members' main lanes — a dead node's clock stays frozen
+    /// at its crash point (it re-syncs through the rejoin re-base, not
+    /// through a reduce it never saw). With `members = 0..n` this IS
+    /// [`Engine::quorum_reduce`].
+    pub fn quorum_reduce_members(
+        &mut self,
+        label: &'static str,
+        arrivals: &[(usize, f64, usize)],
+        hops: &[f64],
+        down: Option<(usize, f64)>,
+        members: &[usize],
+    ) -> f64 {
         self.comm_marks += 1;
         let floor = self.control_clock;
         for &(node, ready, staleness) in arrivals {
@@ -487,7 +569,8 @@ impl Engine {
         #[cfg(feature = "audit")]
         audit_clock_advances(floor, landed, "quorum_reduce");
         self.control_clock = self.control_clock.max(landed);
-        for c in self.node_clock.iter_mut() {
+        for &p in members {
+            let c = &mut self.node_clock[p];
             *c = (*c).max(landed);
         }
         landed
@@ -501,17 +584,28 @@ impl Engine {
     /// entirely behind stale node clocks and underreport the
     /// makespan); in pipelined mode it is a pure control-lane op.
     pub fn broadcast(&mut self, depth: usize, hop: f64) -> f64 {
+        let members = self.all_members();
+        self.broadcast_members(depth, hop, &members)
+    }
+
+    /// Membership-aware broadcast: the barrier start and the arrival
+    /// gate consider only `members` — dead nodes neither delay the
+    /// send nor advance on it. With `members = 0..n` this IS
+    /// [`Engine::broadcast`].
+    pub fn broadcast_members(
+        &mut self,
+        depth: usize,
+        hop: f64,
+        members: &[usize],
+    ) -> f64 {
         self.comm_marks += 1;
-        #[cfg(feature = "audit")]
-        let span0 = self.makespan();
-        let start = if self.pipeline {
-            self.control_clock
-        } else {
-            self.makespan()
-        };
+        let span = members
+            .iter()
+            .fold(self.control_clock, |a, &p| a.max(self.node_clock[p]));
+        let start = if self.pipeline { self.control_clock } else { span };
         let arrival = start + depth as f64 * hop;
         #[cfg(feature = "audit")]
-        audit_clock_advances(span0.min(start), arrival, "broadcast");
+        audit_clock_advances(span.min(start), arrival, "broadcast");
         if depth > 0 {
             self.push_event(Event {
                 label: "broadcast",
@@ -523,7 +617,8 @@ impl Engine {
             });
         }
         self.control_clock = arrival;
-        for c in self.node_clock.iter_mut() {
+        for &p in members {
+            let c = &mut self.node_clock[p];
             *c = (*c).max(arrival);
         }
         arrival
@@ -568,6 +663,94 @@ impl Engine {
             Some((depth, hop)),
             Lane::Control,
         )
+    }
+
+    /// Membership-aware scalar round (see [`Engine::scalar_round`]).
+    pub fn scalar_round_members(
+        &mut self,
+        depth: usize,
+        hop: f64,
+        members: &[usize],
+    ) -> f64 {
+        let hops = vec![hop; depth];
+        self.tree_reduce_members(
+            "scalar_round",
+            &hops,
+            Some((depth, hop)),
+            Lane::Control,
+            members,
+        )
+    }
+
+    // ---- fault-injection hooks (see `cluster/faults.rs`) ----------
+
+    /// In-place speed change for one node (mid-run compute/link
+    /// degradation). Unlike swapping the whole [`NodeProfile`] via
+    /// `Cluster::set_profile`, this does NOT reset any clock — the node
+    /// simply runs at the new speed from its current virtual time on.
+    pub fn set_speed(&mut self, node: usize, speed: f64) {
+        if let Some(s) = self.profile.speed.get_mut(node) {
+            *s = speed;
+        }
+    }
+
+    /// When node p's main lane is next free (its virtual clock).
+    pub fn node_ready(&self, node: usize) -> f64 {
+        self.node_clock.get(node).copied().unwrap_or(0.0)
+    }
+
+    /// Advance node p's clock to at least `t` — a revived node cannot
+    /// do work in its own past, so rejoin pulls its frozen clock
+    /// forward to the recovery completion time. Never moves a clock
+    /// backwards.
+    pub fn hold_node_until(&mut self, node: usize, t: f64) {
+        if let Some(c) = self.node_clock.get_mut(node) {
+            *c = c.max(t);
+        }
+    }
+
+    /// Zero-duration fault marker on the timeline ("fault_crash",
+    /// "fault_restart", "fault_degrade", "fault_flap", "fault_drop").
+    /// Pure record — clocks and membership are the caller's job.
+    pub fn fault_event(&mut self, label: &'static str, node: usize, at: f64) {
+        self.push_event(Event {
+            label,
+            node: Some(node),
+            level: None,
+            start: at,
+            end: at,
+            staleness: None,
+        });
+    }
+
+    /// Master → one node unicast (rejoin state transfer): the payload
+    /// leaves the control chain at `at`, lands `secs` later on node
+    /// `node`'s clock only. Counts as a comm operation so the ledger
+    /// pairing audit sees the wire crossing.
+    pub fn unicast(
+        &mut self,
+        label: &'static str,
+        node: usize,
+        at: f64,
+        secs: f64,
+    ) -> f64 {
+        self.comm_marks += 1;
+        let end = at + secs;
+        #[cfg(feature = "audit")]
+        audit_clock_advances(at, end, "unicast");
+        self.push_event(Event {
+            label,
+            node: Some(node),
+            level: None,
+            start: at,
+            end,
+            staleness: None,
+        });
+        self.control_clock = self.control_clock.max(at);
+        if let Some(c) = self.node_clock.get_mut(node) {
+            *c = c.max(end);
+        }
+        end
     }
 
     /// Export the recorded schedule for plots/benches.
@@ -782,6 +965,63 @@ mod tests {
         e.solver_event("async_solve", 3, 0.0, 99.0);
         assert_eq!(e.makespan(), before);
         assert!(e.events().iter().any(|ev| ev.label == "async_solve"));
+    }
+
+    #[test]
+    fn member_subset_leaves_dead_clocks_frozen() {
+        let mut e = Engine::new(NodeProfile::homogeneous(4));
+        e.compute(1.0, &[1.0; 4]); // everyone at 1
+        // node 3 "dies": the next phase runs on members {0,1,2} only
+        let members = [0usize, 1, 2];
+        e.compute_members(1.0, &members, &[2.0, 1.0, 1.0]);
+        // barrier gates members at 3, the dead clock stays at 1
+        assert!((e.node_ready(0) - 3.0).abs() < 1e-12);
+        assert!((e.node_ready(3) - 1.0).abs() < 1e-12);
+        let landed =
+            e.tree_reduce_members("reduce", &[1.0], None, Lane::Node, &members);
+        assert!((landed - 4.0).abs() < 1e-12, "landed {landed}");
+        assert!((e.node_ready(3) - 1.0).abs() < 1e-12);
+        // degrade in place: no clock reset, future compute is slower
+        e.set_speed(0, 4.0);
+        e.compute_members(1.0, &members, &[1.0, 1.0, 1.0]);
+        assert!((e.node_ready(0) - 8.0).abs() < 1e-12);
+        // rejoin: the unicast pulls the frozen clock to the transfer end
+        let end = e.unicast("rejoin_rebase", 3, 8.0, 0.5);
+        assert!((end - 8.5).abs() < 1e-12);
+        assert!((e.node_ready(3) - 8.5).abs() < 1e-12);
+        e.fault_event("fault_crash", 3, 1.0);
+        assert!(e.events().iter().any(|ev| ev.label == "fault_crash"));
+        assert!(e.events().iter().any(|ev| ev.label == "rejoin_rebase"));
+    }
+
+    #[test]
+    fn full_membership_delegation_is_identical() {
+        // the legacy entry points and the members variants with the
+        // full node set must produce the same clocks and events —
+        // this is the structural half of zero-fault bit-identity
+        let run = |via_members: bool| {
+            let mut e = Engine::new(NodeProfile::with_straggler(4, 1, 3.0));
+            let all: Vec<usize> = (0..4).collect();
+            if via_members {
+                e.compute_members(2.0, &all, &[1.0, 1.5, 1.0, 2.0]);
+                e.tree_reduce_members(
+                    "reduce",
+                    &[1.0, 1.0],
+                    Some((2, 1.0)),
+                    Lane::Node,
+                    &all,
+                );
+                e.broadcast_members(2, 0.5, &all);
+                e.scalar_round_members(2, 0.25, &all);
+            } else {
+                e.compute(2.0, &[1.0, 1.5, 1.0, 2.0]);
+                e.tree_reduce("reduce", &[1.0, 1.0], Some((2, 1.0)), Lane::Node);
+                e.broadcast(2, 0.5);
+                e.scalar_round(2, 0.25);
+            }
+            (e.makespan(), e.events().len(), e.comm_marks())
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

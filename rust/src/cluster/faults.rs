@@ -1,0 +1,450 @@
+//! Deterministic, seeded fault injection for the virtual-clock
+//! cluster — "fleet weather" the algorithm layer must survive.
+//!
+//! A [`FaultPlan`] schedules node **crash/restart** (elastic
+//! membership: a dead node's shard is absent from the round, a
+//! restarted node is re-based onto the current iterate), transient
+//! **flaps** (a node sits one round out, nothing to recover),
+//! **compute degradation** (the node's [`NodeProfile`] speed changes
+//! in place mid-run), and **message loss** on the direction wire (a
+//! lost contribution retries once after a virtual timeout; a second
+//! loss drops it for the round, absorbed by the partial quorum + the
+//! paper's safeguard). Plans come from an explicit CLI script
+//! (`--fault crash:3@r2,restart:3@r6,degrade:1@5s:0.25x,flap:2:p=0.05`)
+//! or the seeded generator ([`FaultPlan::seeded`]).
+//!
+//! **Determinism.** Nothing here draws from a sequential RNG stream or
+//! a wall clock. Scripted events fire on outer-round indices (`@rN`)
+//! or virtual-time thresholds (`@Ts`, quantized to the first round
+//! boundary at or past `T`), and every probabilistic decision (flap,
+//! wire loss) is a pure hash of `(seed, round, node, salt)` — so the
+//! same seed replays the identical fault timeline regardless of
+//! thread count or event order, and the [`FaultState::log`] of applied
+//! faults is bit-comparable across runs. `@rN` triggers replay exactly
+//! under *measured* compute too; `@Ts` thresholds are exact only when
+//! compute is modeled (`CostModel::free()`-style scales), since
+//! measured per-node seconds move the round boundaries.
+
+/// When a scripted fault fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trigger {
+    /// at the start of outer round `r`
+    Round(usize),
+    /// at the first round boundary whose virtual clock is ≥ `t` secs
+    Time(f64),
+}
+
+/// What fails.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// node leaves the membership: shard absent, quorum shrinks
+    Crash(usize),
+    /// a crashed node rejoins (the driver re-bases it onto the
+    /// current iterate and rebuilds its margin cache)
+    Restart(usize),
+    /// node's throughput multiplies by `factor` (0.25 = quarter
+    /// speed, i.e. compute durations ×4) from now on
+    Degrade(usize, f64),
+}
+
+/// One applied fault, as recorded in [`FaultState::log`] — the
+/// replayable chaos record the determinism tests compare.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AppliedFault {
+    pub round: usize,
+    pub node: usize,
+    /// "crash" | "restart" | "degrade" | "flap" | "retry" | "drop"
+    pub what: &'static str,
+}
+
+/// The per-round weather the driver acts on: who rejoined (needs a
+/// re-base), who participates, and what happened on the wire.
+#[derive(Clone, Debug, Default)]
+pub struct RoundWeather {
+    /// nodes alive and not flapped this round, ascending
+    pub members: Vec<usize>,
+    /// nodes that crashed out this round (driver clears their lanes)
+    pub crashed: Vec<usize>,
+    /// nodes that rejoined this round (driver re-bases them)
+    pub restarted: Vec<usize>,
+    /// members whose direction contribution is lost even after the
+    /// retry — absent from the quorum this round
+    pub dropped: Vec<usize>,
+    /// members whose contribution needed one retry: extra virtual
+    /// seconds added to its quorum arrival
+    pub delayed: Vec<(usize, f64)>,
+}
+
+impl RoundWeather {
+    /// Weather for a cluster with no fault plan: everyone plays.
+    pub fn clear(n: usize) -> RoundWeather {
+        RoundWeather { members: (0..n).collect(), ..RoundWeather::default() }
+    }
+}
+
+const SALT_FLAP: u64 = 0xF1A9;
+const SALT_LOSS: u64 = 0x10E5;
+const SALT_RETRY: u64 = 0x9E7B;
+const SALT_GEN: u64 = 0x5EED;
+
+/// SplitMix64 over a mix of the inputs: an order-independent,
+/// replayable hash — NOT a sequential stream, so fault decisions do
+/// not depend on how many other decisions were drawn before them.
+fn mix(seed: u64, a: u64, b: u64, salt: u64) -> u64 {
+    let mut z = seed
+        ^ a.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ b.wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ salt.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Bernoulli(p) from the hash of `(seed, round, node, salt)`.
+fn coin(seed: u64, round: usize, node: usize, salt: u64, p: f64) -> bool {
+    if p <= 0.0 {
+        return false;
+    }
+    if p >= 1.0 {
+        return true;
+    }
+    let u = (mix(seed, round as u64, node as u64, salt) >> 11) as f64
+        / (1u64 << 53) as f64;
+    u < p
+}
+
+/// A seeded fault schedule. `Default` is the empty plan (no faults) —
+/// installing it must leave every run bit-identical to no plan at all
+/// (`tests/faults.rs` pins this).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// scripted crash/restart/degrade events
+    pub events: Vec<(Trigger, FaultKind)>,
+    /// `(node, p)`: node flaps out of any given round w.p. `p`
+    pub flaps: Vec<(usize, f64)>,
+    /// per-member per-round probability a direction contribution is
+    /// lost on the wire (retry once, then drop)
+    pub loss_p: f64,
+    /// virtual seconds a retried contribution arrives late
+    pub retry_delay_s: f64,
+    /// seed driving the flap/loss coins
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.flaps.is_empty() && self.loss_p <= 0.0
+    }
+
+    /// Parse a comma-separated CLI fault script. Grammar (one spec per
+    /// comma-separated item; `N` a node index < `nodes`):
+    ///
+    /// - `crash:N@rR` / `crash:N@T s`-style `crash:N@12.5s`
+    /// - `restart:N@rR` / `restart:N@30s`
+    /// - `degrade:N@rR:Fx` / `degrade:N@5s:0.25x` (`F` = throughput
+    ///   multiplier, 0 < F)
+    /// - `flap:N:p=P` (0 ≤ P ≤ 1)
+    /// - `loss:p=P` (0 ≤ P ≤ 1, applies to every member's wire)
+    ///
+    /// Returns a one-line error naming the offending spec otherwise.
+    pub fn parse(script: &str, nodes: usize) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan { retry_delay_s: 0.005, ..FaultPlan::default() };
+        for spec in script.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let mut parts = spec.split(':');
+            let kind = parts.next().unwrap_or("");
+            let rest: Vec<&str> = parts.collect();
+            match kind {
+                "crash" | "restart" => {
+                    let (node, trig) = parse_node_at(spec, &rest, nodes)?;
+                    let ev = if kind == "crash" {
+                        FaultKind::Crash(node)
+                    } else {
+                        FaultKind::Restart(node)
+                    };
+                    plan.events.push((trig, ev));
+                }
+                "degrade" => {
+                    if rest.len() != 2 {
+                        return Err(bad(spec, "want degrade:N@T:Fx"));
+                    }
+                    let (node, trig) =
+                        parse_node_at(spec, &rest[..1], nodes)?;
+                    let f = rest[1]
+                        .strip_suffix('x')
+                        .ok_or_else(|| bad(spec, "factor must end in 'x'"))?
+                        .parse::<f64>()
+                        .map_err(|_| bad(spec, "bad degrade factor"))?;
+                    if f.is_nan() || f <= 0.0 {
+                        return Err(bad(spec, "degrade factor must be > 0"));
+                    }
+                    plan.events.push((trig, FaultKind::Degrade(node, f)));
+                }
+                "flap" => {
+                    if rest.len() != 2 {
+                        return Err(bad(spec, "want flap:N:p=P"));
+                    }
+                    let node = parse_node(spec, rest[0], nodes)?;
+                    let p = parse_prob(spec, rest[1])?;
+                    plan.flaps.push((node, p));
+                }
+                "loss" => {
+                    if rest.len() != 1 {
+                        return Err(bad(spec, "want loss:p=P"));
+                    }
+                    plan.loss_p = parse_prob(spec, rest[0])?;
+                }
+                _ => {
+                    return Err(bad(
+                        spec,
+                        "unknown fault kind (crash|restart|degrade|flap|loss)",
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Seeded fleet-weather generator: one crash + later restart of a
+    /// hashed victim, one degrade of a different node, a low-rate flap
+    /// and a low-rate wire loss — all round-indexed so the plan
+    /// replays exactly under measured compute. The bench matrix runs
+    /// this across seeds.
+    pub fn seeded(nodes: usize, seed: u64) -> FaultPlan {
+        if nodes < 2 {
+            return FaultPlan { seed, ..FaultPlan::default() };
+        }
+        let pick = |k: u64, m: usize| (mix(seed, k, 0, SALT_GEN) as usize) % m;
+        let victim = pick(1, nodes);
+        let crash_r = 2 + pick(2, 4);
+        let down_for = 2 + pick(3, 4);
+        let slow = (victim + 1 + pick(4, nodes - 1)) % nodes;
+        let flappy = (victim + 1 + pick(5, nodes - 1)) % nodes;
+        FaultPlan {
+            events: vec![
+                (Trigger::Round(crash_r), FaultKind::Crash(victim)),
+                (
+                    Trigger::Round(crash_r + down_for),
+                    FaultKind::Restart(victim),
+                ),
+                (Trigger::Round(1), FaultKind::Degrade(slow, 0.5)),
+            ],
+            flaps: vec![(flappy, 0.1)],
+            loss_p: 0.05,
+            retry_delay_s: 0.005,
+            seed,
+        }
+    }
+}
+
+fn bad(spec: &str, why: &str) -> String {
+    format!("bad --fault spec {spec:?}: {why}")
+}
+
+fn parse_node(spec: &str, s: &str, nodes: usize) -> Result<usize, String> {
+    let node = s
+        .parse::<usize>()
+        .map_err(|_| bad(spec, "node must be an integer"))?;
+    if node >= nodes {
+        return Err(bad(
+            spec,
+            &format!("node {node} out of range (P = {nodes})"),
+        ));
+    }
+    Ok(node)
+}
+
+fn parse_prob(spec: &str, s: &str) -> Result<f64, String> {
+    let p = s
+        .strip_prefix("p=")
+        .ok_or_else(|| bad(spec, "probability must be written p=P"))?
+        .parse::<f64>()
+        .map_err(|_| bad(spec, "bad probability"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(bad(spec, "probability must be in [0, 1]"));
+    }
+    Ok(p)
+}
+
+/// `N@rR` or `N@Ts` → (node, trigger).
+fn parse_node_at(
+    spec: &str,
+    rest: &[&str],
+    nodes: usize,
+) -> Result<(usize, Trigger), String> {
+    let [nat] = rest else {
+        return Err(bad(spec, "want N@rR or N@Ts"));
+    };
+    let (n, at) = nat
+        .split_once('@')
+        .ok_or_else(|| bad(spec, "missing @trigger"))?;
+    let node = parse_node(spec, n, nodes)?;
+    let trig = if let Some(r) = at.strip_prefix('r') {
+        Trigger::Round(
+            r.parse::<usize>()
+                .map_err(|_| bad(spec, "bad round trigger"))?,
+        )
+    } else {
+        let t = at
+            .strip_suffix('s')
+            .unwrap_or(at)
+            .parse::<f64>()
+            .map_err(|_| bad(spec, "bad time trigger"))?;
+        if t.is_nan() || t < 0.0 {
+            return Err(bad(spec, "time trigger must be ≥ 0"));
+        }
+        Trigger::Time(t)
+    };
+    Ok((node, trig))
+}
+
+/// Runtime state of a plan: which scripted events already fired, and
+/// the applied-fault log.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    pub plan: FaultPlan,
+    fired: Vec<bool>,
+    /// every fault actually applied, in application order
+    pub log: Vec<AppliedFault>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> FaultState {
+        let fired = vec![false; plan.events.len()];
+        FaultState { plan, fired, log: Vec::new() }
+    }
+
+    /// Scripted events due at round `r` / virtual time `now`, in
+    /// script order; each fires exactly once.
+    pub fn due(&mut self, r: usize, now: f64) -> Vec<FaultKind> {
+        let mut out = Vec::new();
+        for (i, &(trig, kind)) in self.plan.events.iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            let hit = match trig {
+                Trigger::Round(tr) => r >= tr,
+                Trigger::Time(t) => now >= t,
+            };
+            if hit {
+                self.fired[i] = true;
+                out.push(kind);
+            }
+        }
+        out
+    }
+
+    /// Does `node` flap out of round `r`?
+    pub fn flaps(&self, r: usize, node: usize) -> bool {
+        self.plan
+            .flaps
+            .iter()
+            .any(|&(p, prob)| p == node && coin(self.plan.seed, r, node, SALT_FLAP, prob))
+    }
+
+    /// Fate of `node`'s direction contribution in round `r` under the
+    /// wire-loss model: `None` = delivered, `Some(Some(delay))` =
+    /// retried (arrives `delay` late), `Some(None)` = dropped after
+    /// the retry also failed.
+    pub fn wire_fate(&self, r: usize, node: usize) -> Option<Option<f64>> {
+        let p = self.plan.loss_p;
+        if !coin(self.plan.seed, r, node, SALT_LOSS, p) {
+            return None;
+        }
+        if coin(self.plan.seed, r, node, SALT_RETRY, p) {
+            Some(None) // lost twice: dropped for the round
+        } else {
+            Some(Some(self.plan.retry_delay_s))
+        }
+    }
+
+    pub fn record(&mut self, round: usize, node: usize, what: &'static str) {
+        self.log.push(AppliedFault { round, node, what });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_script() {
+        let plan = FaultPlan::parse(
+            "crash:3@12.5s,restart:3@30s,degrade:1@5s:0.25x,flap:2:p=0.05",
+            4,
+        )
+        .unwrap();
+        assert_eq!(plan.events.len(), 3);
+        assert_eq!(plan.events[0], (Trigger::Time(12.5), FaultKind::Crash(3)));
+        assert_eq!(
+            plan.events[2],
+            (Trigger::Time(5.0), FaultKind::Degrade(1, 0.25))
+        );
+        assert_eq!(plan.flaps, vec![(2, 0.05)]);
+        let r = FaultPlan::parse("crash:0@r4,loss:p=0.1", 2).unwrap();
+        assert_eq!(r.events, vec![(Trigger::Round(4), FaultKind::Crash(0))]);
+        assert!((r.loss_p - 0.1).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for s in [
+            "crash:9@r2",       // node out of range
+            "crash:1",          // missing trigger
+            "degrade:1@r2:0.5", // factor missing 'x'
+            "degrade:1@r2:0x",  // zero factor
+            "flap:1:0.05",      // probability missing p=
+            "flap:1:p=1.5",     // out of [0,1]
+            "loss:p=nope",
+            "reboot:1@r2", // unknown kind
+        ] {
+            let e = FaultPlan::parse(s, 4).unwrap_err();
+            assert!(e.starts_with("bad --fault spec"), "{s}: {e}");
+            assert!(!e.contains('\n'), "one-line error: {e}");
+        }
+    }
+
+    #[test]
+    fn coins_replay_and_events_fire_once() {
+        let plan = FaultPlan::parse("crash:1@r3,restart:1@r5", 4)
+            .unwrap();
+        let mut st = FaultState::new(FaultPlan { seed: 7, ..plan });
+        assert!(st.due(0, 0.0).is_empty());
+        assert_eq!(st.due(3, 0.0), vec![FaultKind::Crash(1)]);
+        assert!(st.due(3, 0.0).is_empty(), "fires once");
+        assert_eq!(st.due(9, 0.0), vec![FaultKind::Restart(1)]);
+        // hashes are pure in (seed, round, node)
+        let a = FaultState::new(FaultPlan {
+            flaps: vec![(2, 0.5)],
+            loss_p: 0.5,
+            seed: 11,
+            ..FaultPlan::default()
+        });
+        let b = a.clone();
+        for r in 0..64 {
+            assert_eq!(a.flaps(r, 2), b.flaps(r, 2));
+            assert_eq!(a.wire_fate(r, 3), b.wire_fate(r, 3));
+        }
+        // and at p=0.5 both branches actually occur
+        assert!((0..64).any(|r| a.flaps(r, 2)));
+        assert!((0..64).any(|r| !a.flaps(r, 2)));
+    }
+
+    #[test]
+    fn seeded_generator_is_deterministic_and_in_range() {
+        for seed in [1u64, 2, 3, 1234] {
+            let p = FaultPlan::seeded(5, seed);
+            assert_eq!(p, FaultPlan::seeded(5, seed));
+            assert!(!p.is_empty());
+            for &(_, k) in &p.events {
+                let node = match k {
+                    FaultKind::Crash(n)
+                    | FaultKind::Restart(n)
+                    | FaultKind::Degrade(n, _) => n,
+                };
+                assert!(node < 5);
+            }
+        }
+        assert_ne!(FaultPlan::seeded(5, 1), FaultPlan::seeded(5, 2));
+    }
+}

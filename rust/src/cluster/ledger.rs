@@ -55,6 +55,22 @@ pub struct Ledger {
     /// async FS rounds whose quorum direction failed the safeguard
     /// gate and fell back to the synchronous barrier direction
     pub fallback_rounds: usize,
+    /// fault layer: nodes that crashed out of the membership
+    pub crash_events: usize,
+    /// crashed nodes that rejoined and were re-based onto the current
+    /// iterate via the compact wire format
+    pub rejoin_rebases: usize,
+    /// direction contributions lost on the wire even after the retry
+    /// (absorbed by the partial quorum + safeguard, never a hang)
+    pub lost_messages: usize,
+    /// direction contributions that needed one retry before delivery
+    pub retry_rounds: usize,
+    /// in-place compute-degradation events applied to the profile
+    pub degrade_events: usize,
+    /// node-rounds lost to transient flaps (no state to recover)
+    pub flap_events: usize,
+    /// virtual seconds of rejoin state transfer on the critical path
+    pub recovery_seconds: f64,
 }
 
 impl Ledger {
@@ -121,6 +137,36 @@ impl Ledger {
         )
     }
 
+    /// Did the fault layer touch this run at all?
+    pub fn has_fault_activity(&self) -> bool {
+        self.crash_events
+            + self.rejoin_rebases
+            + self.lost_messages
+            + self.retry_rounds
+            + self.degrade_events
+            + self.flap_events
+            > 0
+    }
+
+    /// Fault counters rendered for bench reports:
+    /// "2 crash | 2 rejoin (0.1s recovery) | 3 lost | 5 retry |
+    /// 1 degrade | 4 flap". Empty when the run saw no fault activity.
+    pub fn fault_profile(&self) -> String {
+        if !self.has_fault_activity() {
+            return String::new();
+        }
+        format!(
+            "{} crash | {} rejoin ({:.3}s recovery) | {} lost | {} retry | {} degrade | {} flap",
+            self.crash_events,
+            self.rejoin_rebases,
+            self.recovery_seconds,
+            self.lost_messages,
+            self.retry_rounds,
+            self.degrade_events,
+            self.flap_events,
+        )
+    }
+
     /// Mean per-level payload of the sparse reductions, rendered for
     /// bench reports: "L0 24.0KB | L1 31.5KB | ...". Empty string when
     /// no sparse reduction ran.
@@ -173,6 +219,25 @@ mod tests {
         let p = l.staleness_profile();
         assert!(p.starts_with("s0 3 | s1 1 | s2 1"), "{p}");
         assert!(p.contains("1 fallback / 2 rounds"), "{p}");
+    }
+
+    #[test]
+    fn fault_profile_renders_counters() {
+        let quiet = Ledger::default();
+        assert!(!quiet.has_fault_activity());
+        assert_eq!(quiet.fault_profile(), "");
+        let l = Ledger {
+            crash_events: 2,
+            rejoin_rebases: 2,
+            recovery_seconds: 0.125,
+            lost_messages: 3,
+            retry_rounds: 5,
+            ..Ledger::default()
+        };
+        assert!(l.has_fault_activity());
+        let p = l.fault_profile();
+        assert!(p.starts_with("2 crash | 2 rejoin (0.125s recovery)"), "{p}");
+        assert!(p.contains("3 lost | 5 retry"), "{p}");
     }
 
     #[test]

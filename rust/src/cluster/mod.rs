@@ -24,12 +24,14 @@
 pub mod allreduce;
 pub mod cost;
 pub mod engine;
+pub mod faults;
 pub mod ledger;
 pub mod node;
 pub mod scratch;
 
 pub use cost::CostModel;
 pub use engine::{Engine, NodeProfile};
+pub use faults::{FaultPlan, FaultState, RoundWeather};
 pub use ledger::Ledger;
 pub use node::Shard;
 pub use scratch::NodeScratch;
@@ -37,6 +39,7 @@ pub use scratch::NodeScratch;
 use crate::data::dataset::Dataset;
 use crate::data::partition::Partition;
 use crate::linalg::sparse::{SparseVec, SupportMap};
+use crate::util::json::Value;
 use self::allreduce::Reduced;
 use self::engine::Lane;
 use std::sync::Mutex;
@@ -108,6 +111,15 @@ pub struct Cluster {
     /// the event-driven timing engine: per-node virtual clocks, the
     /// control lane, and the recorded timeline (see [`engine`])
     pub engine: Engine,
+    /// per-node liveness under the fault layer: `alive[p] == false`
+    /// means node p crashed out of the membership (its shard is absent
+    /// from the round) and has not yet been restarted. All-true
+    /// without a fault plan.
+    pub alive: Vec<bool>,
+    /// seeded fault-injection state ([`faults::FaultState`]); `None`
+    /// when no plan is installed — and an installed *empty* plan
+    /// behaves bit-identically to `None` (`tests/faults.rs` pins it)
+    pub faults: Option<FaultState>,
 }
 
 impl Cluster {
@@ -145,6 +157,7 @@ impl Cluster {
             shards.len(),
             cost.straggle,
         ));
+        let alive = vec![true; engine.n_nodes()];
         Cluster {
             shards,
             cost,
@@ -154,6 +167,8 @@ impl Cluster {
             threads: default_threads(),
             scratch,
             engine,
+            alive,
+            faults: None,
         }
     }
 
@@ -173,6 +188,12 @@ impl Cluster {
             threads: self.threads,
             scratch: NodeScratch::pool(self.shards.len()),
             engine,
+            alive: vec![true; self.shards.len()],
+            // same plan, fresh runtime state (nothing fired, empty log)
+            faults: self
+                .faults
+                .as_ref()
+                .map(|s| FaultState::new(s.plan.clone())),
         }
     }
 
@@ -193,6 +214,198 @@ impl Cluster {
     /// config; it affects *timing only* — results are bit-identical).
     pub fn set_pipeline(&mut self, on: bool) {
         self.engine.pipeline = on;
+    }
+
+    /// Install a seeded fault plan (see [`faults`]). Call before
+    /// running a method; the fault-tolerant async FS driver advances
+    /// it once per outer round via [`Self::apply_fault_weather`].
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.faults = Some(FaultState::new(plan));
+    }
+
+    /// The currently-alive node ids, ascending.
+    pub fn alive_nodes(&self) -> Vec<usize> {
+        (0..self.n_nodes()).filter(|&p| self.alive[p]).collect()
+    }
+
+    /// Advance the fault layer to round `r` and apply everything due:
+    /// crashes flip `alive` off (never the last survivor — the final
+    /// member ignores its crash order so the membership can't empty),
+    /// restarts flip it back on and are reported for the driver to
+    /// re-base, degrades rescale the profile in place, flaps pick this
+    /// round's transient dropouts, and the wire-loss coins decide
+    /// which member contributions retry or drop. Without a plan this
+    /// returns clear weather over the full membership and touches
+    /// nothing — the zero-fault path.
+    pub fn apply_fault_weather(&mut self, r: usize) -> RoundWeather {
+        let n = self.n_nodes();
+        if self.faults.is_none() {
+            return RoundWeather::clear(n);
+        }
+        let now = self.engine.makespan();
+        let mut weather = RoundWeather::default();
+        let due = self
+            .faults
+            .as_mut()
+            .map(|s| s.due(r, now))
+            .unwrap_or_default();
+        for kind in due {
+            match kind {
+                faults::FaultKind::Crash(p) => {
+                    let survivors =
+                        self.alive.iter().filter(|&&a| a).count();
+                    if p < n && self.alive[p] && survivors > 1 {
+                        self.alive[p] = false;
+                        weather.crashed.push(p);
+                        self.ledger.crash_events += 1;
+                        if let Some(s) = self.faults.as_mut() {
+                            s.record(r, p, "crash");
+                        }
+                        self.engine.fault_event("fault_crash", p, now);
+                    }
+                }
+                faults::FaultKind::Restart(p) => {
+                    if p < n && !self.alive[p] {
+                        self.alive[p] = true;
+                        weather.restarted.push(p);
+                        if let Some(s) = self.faults.as_mut() {
+                            s.record(r, p, "restart");
+                        }
+                        self.engine.fault_event("fault_restart", p, now);
+                    }
+                }
+                faults::FaultKind::Degrade(p, factor) => {
+                    if p < n {
+                        // 0.25x throughput ⇒ 4× the compute seconds,
+                        // in place — clocks are NOT reset
+                        let speed = self.engine.profile.scale(p) / factor;
+                        self.engine.set_speed(p, speed);
+                        self.ledger.degrade_events += 1;
+                        if let Some(s) = self.faults.as_mut() {
+                            s.record(r, p, "degrade");
+                        }
+                        self.engine.fault_event("fault_degrade", p, now);
+                    }
+                }
+            }
+        }
+        // transient flaps: alive nodes sitting this round out, capped
+        // so the round always keeps at least one member
+        let alive_now = self.alive_nodes();
+        let mut out: Vec<usize> = Vec::new();
+        if let Some(s) = self.faults.as_ref() {
+            for &p in &alive_now {
+                if s.flaps(r, p) {
+                    out.push(p);
+                }
+            }
+        }
+        while !out.is_empty() && out.len() >= alive_now.len() {
+            out.pop();
+        }
+        for &p in &out {
+            self.ledger.flap_events += 1;
+            if let Some(s) = self.faults.as_mut() {
+                s.record(r, p, "flap");
+            }
+            self.engine.fault_event("fault_flap", p, now);
+        }
+        let members: Vec<usize> = alive_now
+            .into_iter()
+            .filter(|p| !out.contains(p))
+            .collect();
+        // wire loss on each member's direction contribution:
+        // retry-then-timeout, absorbed by the partial quorum
+        for &p in &members {
+            match self.faults.as_ref().and_then(|s| s.wire_fate(r, p)) {
+                None => {}
+                Some(Some(delay)) => {
+                    weather.delayed.push((p, delay));
+                    self.ledger.retry_rounds += 1;
+                    if let Some(s) = self.faults.as_mut() {
+                        s.record(r, p, "retry");
+                    }
+                }
+                Some(None) => {
+                    weather.dropped.push(p);
+                    self.ledger.lost_messages += 1;
+                    if let Some(s) = self.faults.as_mut() {
+                        s.record(r, p, "drop");
+                    }
+                    self.engine.fault_event("fault_drop", p, now);
+                }
+            }
+        }
+        weather.members = members;
+        weather
+    }
+
+    /// Re-base a restarted node onto the current iterate: the master
+    /// unicasts the O(`len`) compact state down the node's tree path,
+    /// the node's frozen clock resumes at the transfer's completion
+    /// (it cannot act in its own past), and the recovery rides the
+    /// ledger (`rejoin_rebases`, `recovery_seconds`, plus the wire
+    /// bytes). The payload reuses the affine wire format's compact
+    /// representation, so it doubles as the O(|U|) checkpoint.
+    pub fn rejoin_rebase(&mut self, node: usize, len: usize) {
+        let now = self.engine.makespan();
+        let bytes = (len * self.cost.bytes_per_scalar) as f64;
+        let secs = self.tree_depth() as f64 * self.cost.hop_seconds(bytes);
+        self.ledger.comm_passes += 1.0;
+        self.ledger.comm_bytes += bytes;
+        self.ledger.comm_seconds += secs;
+        self.ledger.rejoin_rebases += 1;
+        self.ledger.recovery_seconds += secs;
+        self.engine.unicast("rejoin_rebase", node, now, secs);
+        self.sync_ledger();
+    }
+
+    /// The engine timeline plus a `resilience` block: the PR-4
+    /// staleness/fallback counters and the fault-layer accounting, so
+    /// `--trace-timeline` exports carry the whole robustness story.
+    /// The engine's own export shape is unchanged (`tests/engine.rs`);
+    /// the added fields are pinned by `tests/faults.rs`.
+    pub fn timeline_json(&self) -> Value {
+        let mut v = self.engine.timeline_json();
+        if let Value::Obj(map) = &mut v {
+            let l = &self.ledger;
+            let hist: Vec<Value> = l
+                .staleness_hist
+                .iter()
+                .map(|&c| Value::Num(c as f64))
+                .collect();
+            let alive: Vec<Value> =
+                self.alive.iter().map(|&a| Value::Bool(a)).collect();
+            map.insert(
+                "resilience".to_string(),
+                Value::obj(vec![
+                    ("staleness_hist", Value::Arr(hist)),
+                    ("async_rounds", Value::Num(l.async_rounds as f64)),
+                    (
+                        "fallback_rounds",
+                        Value::Num(l.fallback_rounds as f64),
+                    ),
+                    ("crash_events", Value::Num(l.crash_events as f64)),
+                    (
+                        "rejoin_rebases",
+                        Value::Num(l.rejoin_rebases as f64),
+                    ),
+                    ("lost_messages", Value::Num(l.lost_messages as f64)),
+                    ("retry_rounds", Value::Num(l.retry_rounds as f64)),
+                    (
+                        "degrade_events",
+                        Value::Num(l.degrade_events as f64),
+                    ),
+                    ("flap_events", Value::Num(l.flap_events as f64)),
+                    (
+                        "recovery_seconds",
+                        Value::Num(l.recovery_seconds),
+                    ),
+                    ("alive", Value::Arr(alive)),
+                ]),
+            );
+        }
+        v
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -812,12 +1025,380 @@ impl Cluster {
     /// Depth of the reduction tree: 0 on a single node (no wire at
     /// all — charging a lone node per-hop latency was a bug).
     fn tree_depth(&self) -> u32 {
-        let n = self.n_nodes();
-        if n <= 1 {
+        Self::subset_depth(self.n_nodes())
+    }
+
+    /// Tree depth over an `m`-member subset — the same 0-on-one-node
+    /// rule the full tree uses, so a degraded round's wire shrinks
+    /// with its membership.
+    fn subset_depth(m: usize) -> u32 {
+        if m <= 1 {
             0
         } else {
-            (n as f64).log2().ceil() as u32
+            (m as f64).log2().ceil() as u32
         }
+    }
+
+    /// Is this membership the full cluster? Full-membership calls on
+    /// every `*_members` entry point below delegate to the legacy
+    /// body, so a zero-fault run is *structurally* bit-identical to
+    /// the pre-fault code path (`tests/faults.rs` pins it).
+    fn full_membership(&self, members: &[usize]) -> bool {
+        members.len() == self.n_nodes()
+    }
+
+    /// [`Self::map_each_scratch`] over a node subset: only `members`
+    /// run (and get charged on their clocks); dead nodes' shards are
+    /// absent from the round. Outputs are slotted by *member
+    /// position*, not node id.
+    pub fn map_each_scratch_members<T: Send>(
+        &mut self,
+        members: &[usize],
+        f: impl Fn(usize, &Shard, &mut NodeScratch) -> T + Sync,
+    ) -> Vec<T> {
+        self.map_each_scratch_members_lane(members, f, false)
+    }
+
+    /// [`Self::map_each_scratch_ctrl`] over a node subset.
+    pub fn map_each_scratch_ctrl_members<T: Send>(
+        &mut self,
+        members: &[usize],
+        f: impl Fn(usize, &Shard, &mut NodeScratch) -> T + Sync,
+    ) -> Vec<T> {
+        self.map_each_scratch_members_lane(members, f, true)
+    }
+
+    fn map_each_scratch_members_lane<T: Send>(
+        &mut self,
+        members: &[usize],
+        f: impl Fn(usize, &Shard, &mut NodeScratch) -> T + Sync,
+        ctrl: bool,
+    ) -> Vec<T> {
+        if self.full_membership(members) {
+            return self.map_each_scratch_lane(f, ctrl);
+        }
+        let scratch = &self.scratch;
+        let g = |p: usize, shard: &Shard| -> T {
+            let mut slot = scratch[p].lock().expect("scratch lock");
+            f(p, shard, &mut slot)
+        };
+        let (outs, times): (Vec<T>, Vec<f64>) =
+            self.run_subset(members, &g).into_iter().unzip();
+        self.charge_compute_members_lane(members, &times, ctrl);
+        outs
+    }
+
+    /// Member-subset analogue of [`Self::charge_compute_lane`]: only
+    /// member clocks advance and only members are barrier'd; a dead
+    /// node's clock stays frozen where the fault left it.
+    fn charge_compute_members_lane(
+        &mut self,
+        members: &[usize],
+        times: &[f64],
+        ctrl: bool,
+    ) {
+        let max = if ctrl && self.engine.pipeline {
+            self.engine.compute_control_members(
+                self.cost.compute_scale,
+                members,
+                times,
+            )
+        } else {
+            self.engine
+                .compute_members(self.cost.compute_scale, members, times)
+        };
+        self.ledger.compute_seconds += max;
+        self.sync_ledger();
+    }
+
+    /// [`Self::reduce_parts`] over a member subset: `parts[i]` is
+    /// member `members[i]`'s vector, the tree has
+    /// [`Self::subset_depth`] levels, and only member clocks gate on
+    /// the landing. A partial-membership ring has no faithful
+    /// reduce-scatter analogue, so degraded rounds use the tree time
+    /// model regardless of topology (mirroring the async quorum).
+    pub fn reduce_parts_members(
+        &mut self,
+        parts: &[Vec<f64>],
+        all: bool,
+        members: &[usize],
+    ) -> Vec<f64> {
+        self.reduce_parts_members_lane(parts, all, members, false)
+    }
+
+    /// [`Self::reduce_parts_ctrl`] over a member subset.
+    pub fn reduce_parts_ctrl_members(
+        &mut self,
+        parts: &[Vec<f64>],
+        all: bool,
+        members: &[usize],
+    ) -> Vec<f64> {
+        self.reduce_parts_members_lane(parts, all, members, true)
+    }
+
+    fn reduce_parts_members_lane(
+        &mut self,
+        parts: &[Vec<f64>],
+        all: bool,
+        members: &[usize],
+        ctrl: bool,
+    ) -> Vec<f64> {
+        if self.full_membership(members) {
+            return self.reduce_parts_lane(parts, all, ctrl);
+        }
+        debug_assert_eq!(parts.len(), members.len());
+        let sum = allreduce::tree_sum(parts);
+        assert_reduced_finite("reduce_parts_members", &sum);
+        let m = members.len();
+        let depth = Self::subset_depth(m) as usize;
+        let hop = if m <= 1 {
+            0.0
+        } else {
+            self.cost.pass_seconds(self.dim)
+        };
+        let passes = if all { 2.0 } else { 1.0 };
+        self.ledger.comm_passes += passes;
+        self.ledger.comm_seconds +=
+            passes * depth as f64 * hop;
+        self.ledger.comm_bytes +=
+            passes * (self.dim * self.cost.bytes_per_scalar) as f64;
+        let hops = vec![hop; depth];
+        let down = if all { Some((depth, hop)) } else { None };
+        self.engine.tree_reduce_members(
+            "reduce",
+            &hops,
+            down,
+            Self::lane(ctrl),
+            members,
+        );
+        self.sync_ledger();
+        sum
+    }
+
+    /// [`Self::reduce_parts_sparse`] over a member subset: same
+    /// tree-ordered merge over the members' parts, per-level byte
+    /// charges from the subset combining tree, and only member clocks
+    /// gated. Tree time model regardless of topology (see
+    /// [`Self::reduce_parts_members`]).
+    pub fn reduce_parts_sparse_members(
+        &mut self,
+        parts: &[SparseVec],
+        all: bool,
+        members: &[usize],
+    ) -> Reduced {
+        self.reduce_parts_sparse_members_lane(parts, all, members, false)
+    }
+
+    /// [`Self::reduce_parts_sparse_ctrl`] over a member subset.
+    pub fn reduce_parts_sparse_ctrl_members(
+        &mut self,
+        parts: &[SparseVec],
+        all: bool,
+        members: &[usize],
+    ) -> Reduced {
+        self.reduce_parts_sparse_members_lane(parts, all, members, true)
+    }
+
+    fn reduce_parts_sparse_members_lane(
+        &mut self,
+        parts: &[SparseVec],
+        all: bool,
+        members: &[usize],
+        ctrl: bool,
+    ) -> Reduced {
+        if self.full_membership(members) {
+            return self.reduce_parts_sparse_lane(parts, all, ctrl);
+        }
+        debug_assert_eq!(parts.len(), members.len());
+        let (out, level_bytes) = allreduce::tree_sum_sparse(parts);
+        #[cfg(any(debug_assertions, feature = "audit"))]
+        assert_reduced_finite(
+            "reduce_parts_sparse_members",
+            reduced_vals(&out),
+        );
+        let result_bytes = out.wire_bytes() as f64;
+        let hops: Vec<f64> = level_bytes
+            .iter()
+            .map(|&b| self.cost.hop_seconds(b as f64))
+            .collect();
+        let down_depth = Self::subset_depth(members.len()) as usize;
+        let mut secs: f64 = hops.iter().sum();
+        if all {
+            secs += down_depth as f64 * self.cost.hop_seconds(result_bytes);
+        }
+        self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
+        self.ledger.comm_seconds += secs;
+        self.ledger.comm_bytes +=
+            if all { 2.0 * result_bytes } else { result_bytes };
+        self.ledger.record_sparse_levels(&level_bytes);
+        let down = if all {
+            Some((down_depth, self.cost.hop_seconds(result_bytes)))
+        } else {
+            None
+        };
+        self.engine.tree_reduce_members(
+            "sparse_reduce",
+            &hops,
+            down,
+            Self::lane(ctrl),
+            members,
+        );
+        self.sync_ledger();
+        out
+    }
+
+    /// [`Self::async_quorum_reduce_sparse`] under elastic membership:
+    /// same arrival-ordered combine over whatever contributions made
+    /// the quorum, but the result broadcast only spans (and only
+    /// gates) the current members — a dead node neither receives the
+    /// direction nor delays it.
+    pub fn async_quorum_reduce_sparse_members(
+        &mut self,
+        parts: &[SparseVec],
+        arrivals: &[(usize, f64, usize)],
+        all: bool,
+        members: &[usize],
+    ) -> (Reduced, f64) {
+        if self.full_membership(members) {
+            return self.async_quorum_reduce_sparse(parts, arrivals, all);
+        }
+        debug_assert_eq!(parts.len(), arrivals.len());
+        let (out, level_bytes) = allreduce::tree_sum_sparse(parts);
+        #[cfg(any(debug_assertions, feature = "audit"))]
+        assert_reduced_finite(
+            "async_quorum_reduce_sparse_members",
+            reduced_vals(&out),
+        );
+        let result_bytes = out.wire_bytes() as f64;
+        let hops: Vec<f64> = level_bytes
+            .iter()
+            .map(|&b| self.cost.hop_seconds(b as f64))
+            .collect();
+        let down_depth = Self::subset_depth(members.len()) as usize;
+        let mut secs: f64 = hops.iter().sum();
+        if all {
+            secs += down_depth as f64 * self.cost.hop_seconds(result_bytes);
+        }
+        self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
+        self.ledger.comm_seconds += secs;
+        self.ledger.comm_bytes +=
+            if all { 2.0 * result_bytes } else { result_bytes };
+        self.ledger.record_sparse_levels(&level_bytes);
+        let down = if all {
+            Some((down_depth, self.cost.hop_seconds(result_bytes)))
+        } else {
+            None
+        };
+        let landed = self.engine.quorum_reduce_members(
+            "async_reduce",
+            arrivals,
+            &hops,
+            down,
+            members,
+        );
+        self.sync_ledger();
+        (out, landed)
+    }
+
+    /// Dense analogue of
+    /// [`Self::async_quorum_reduce_sparse_members`].
+    pub fn async_quorum_reduce_members(
+        &mut self,
+        parts: &[Vec<f64>],
+        arrivals: &[(usize, f64, usize)],
+        all: bool,
+        members: &[usize],
+    ) -> (Vec<f64>, f64) {
+        if self.full_membership(members) {
+            return self.async_quorum_reduce(parts, arrivals, all);
+        }
+        debug_assert_eq!(parts.len(), arrivals.len());
+        let sum = allreduce::tree_sum(parts);
+        assert_reduced_finite("async_quorum_reduce_members", &sum);
+        let m = members.len();
+        let hop = if m <= 1 {
+            0.0
+        } else {
+            self.cost.pass_seconds(self.dim)
+        };
+        let up_depth = if parts.len() <= 1 {
+            0
+        } else {
+            (parts.len() as f64).log2().ceil() as usize
+        };
+        let passes = if all { 2.0 } else { 1.0 };
+        self.ledger.comm_passes += passes;
+        self.ledger.comm_seconds += passes
+            * Self::subset_depth(m) as f64
+            * hop;
+        self.ledger.comm_bytes +=
+            passes * (self.dim * self.cost.bytes_per_scalar) as f64;
+        let hops = vec![hop; up_depth];
+        let down = if all {
+            Some((Self::subset_depth(m) as usize, hop))
+        } else {
+            None
+        };
+        let landed = self.engine.quorum_reduce_members(
+            "async_reduce",
+            arrivals,
+            &hops,
+            down,
+            members,
+        );
+        self.sync_ledger();
+        (sum, landed)
+    }
+
+    /// [`Self::charge_scalar_round`] over a member subset: the
+    /// aggregation tree spans only the members, and only their clocks
+    /// are gated.
+    pub fn charge_scalar_round_members(
+        &mut self,
+        k: usize,
+        members: &[usize],
+    ) {
+        if self.full_membership(members) {
+            return self.charge_scalar_round(k);
+        }
+        let depth = Self::subset_depth(members.len()) as usize;
+        let hop = self.cost.latency_s
+            + (k * 8) as f64 / self.cost.bandwidth_bytes_per_s;
+        self.ledger.comm_seconds += 2.0 * depth as f64 * hop;
+        self.ledger.scalar_rounds += 1;
+        self.engine.scalar_round_members(depth, hop, members);
+        self.sync_ledger();
+    }
+
+    /// [`Self::map_reduce_scalars_scratch`] over a member subset —
+    /// line-search trials during a degraded round sum only the
+    /// members' contributions (their margins are the only current
+    /// ones).
+    pub fn map_reduce_scalars_scratch_members<const K: usize>(
+        &mut self,
+        members: &[usize],
+        f: impl Fn(usize, &Shard, &mut NodeScratch) -> [f64; K] + Sync,
+    ) -> [f64; K] {
+        if self.full_membership(members) {
+            return self.map_reduce_scalars_scratch(f);
+        }
+        let (outs, times): (Vec<[f64; K]>, Vec<f64>) = {
+            let scratch = &self.scratch;
+            let g = |p: usize, shard: &Shard| -> [f64; K] {
+                let mut slot = scratch[p].lock().expect("scratch lock");
+                f(p, shard, &mut slot)
+            };
+            self.run_subset(members, &g).into_iter().unzip()
+        };
+        self.charge_compute_members_lane(members, &times, true);
+        let mut acc = [0.0; K];
+        for o in outs {
+            for (a, v) in acc.iter_mut().zip(o) {
+                *a += v;
+            }
+        }
+        self.charge_scalar_round_members(K, members);
+        acc
     }
 
     /// Flat ledger accounting for dense passes (passes/seconds/bytes);
@@ -1208,5 +1789,132 @@ mod tests {
         c16.broadcast_vec();
         assert!(c16.ledger.comm_seconds > c4.ledger.comm_seconds);
         assert_eq!(c4.ledger.comm_passes, c16.ledger.comm_passes);
+    }
+
+    #[test]
+    fn fault_weather_tracks_membership_and_ledger() {
+        let mut c = cluster(4);
+        let plan = FaultPlan::parse(
+            "crash:1@r2,restart:1@r5,degrade:2@r1:0.5x",
+            4,
+        )
+        .unwrap();
+        c.set_fault_plan(plan);
+        // round 0: clear weather, full membership, nothing charged
+        let w = c.apply_fault_weather(0);
+        assert_eq!(w.members, vec![0, 1, 2, 3]);
+        assert!(!c.ledger.has_fault_activity());
+        // round 1: the degrade fires (profile rescaled in place)
+        let w = c.apply_fault_weather(1);
+        assert_eq!(w.members, vec![0, 1, 2, 3]);
+        assert_eq!(c.ledger.degrade_events, 1);
+        // round 2: node 1 crashes out
+        let w = c.apply_fault_weather(2);
+        assert_eq!(w.crashed, vec![1]);
+        assert_eq!(w.members, vec![0, 2, 3]);
+        assert_eq!(c.alive_nodes(), vec![0, 2, 3]);
+        assert_eq!(c.ledger.crash_events, 1);
+        // rounds 3–4: it stays dead, no double-fire
+        let w = c.apply_fault_weather(3);
+        assert!(w.crashed.is_empty());
+        assert_eq!(w.members, vec![0, 2, 3]);
+        assert_eq!(c.ledger.crash_events, 1);
+        let _ = c.apply_fault_weather(4);
+        // round 5: restart reported so the driver can re-base
+        let w = c.apply_fault_weather(5);
+        assert_eq!(w.restarted, vec![1]);
+        assert_eq!(w.members, vec![0, 1, 2, 3]);
+        c.rejoin_rebase(1, c.dim);
+        assert_eq!(c.ledger.rejoin_rebases, 1);
+        assert!(c.ledger.recovery_seconds > 0.0);
+        // the fault log replays the whole story in order
+        let log = &c.faults.as_ref().unwrap().log;
+        let kinds: Vec<&str> = log.iter().map(|a| a.what).collect();
+        assert_eq!(kinds, vec!["degrade", "crash", "restart"]);
+    }
+
+    #[test]
+    fn crash_never_empties_the_membership() {
+        let mut c = cluster(2);
+        let plan =
+            FaultPlan::parse("crash:0@r1,crash:1@r1", 2).unwrap();
+        c.set_fault_plan(plan);
+        let w = c.apply_fault_weather(1);
+        // one crash lands, the survivor's crash order is ignored
+        assert_eq!(w.members.len(), 1);
+        assert_eq!(c.ledger.crash_events, 1);
+        let w = c.apply_fault_weather(2);
+        assert_eq!(w.members.len(), 1);
+    }
+
+    #[test]
+    fn member_subset_ops_charge_less_and_skip_dead_clocks() {
+        let mut c = cluster(4);
+        let members = vec![0, 2, 3];
+        let outs = c.map_each_scratch_members(&members, |p, _, _| p);
+        assert_eq!(outs, vec![0, 2, 3]);
+        // dead node 1's clock never moved
+        assert_eq!(c.engine.node_ready(1), 0.0);
+        let parts: Vec<Vec<f64>> =
+            members.iter().map(|_| vec![1.0; 30]).collect();
+        let sum = c.reduce_parts_members(&parts, true, &members);
+        assert_eq!(sum[0], 3.0);
+        assert_eq!(c.engine.node_ready(1), 0.0);
+        // subset tree is shallower than the full tree: 3 members ⇒
+        // depth 2 (same here), but 2 members ⇒ depth 1 < depth 2
+        let mut c2 = cluster(4);
+        let two = vec![0, 3];
+        let parts2: Vec<Vec<f64>> = vec![vec![1.0; 30]; 2];
+        let _ = c2.reduce_parts_members(&parts2, false, &two);
+        let mut c3 = cluster(4);
+        let _ = c3.reduce_parts(&[vec![1.0; 30]; 4], false);
+        assert!(c2.ledger.comm_seconds < c3.ledger.comm_seconds);
+    }
+
+    #[test]
+    fn full_membership_members_calls_match_legacy_exactly() {
+        let all: Vec<usize> = (0..4).collect();
+        let mut legacy = cluster(4);
+        let mut via = cluster(4);
+        let parts: Vec<SparseVec> = (0..4)
+            .map(|p| {
+                SparseVec::from_pairs(30, vec![(p as u32, 1.0), (7, 0.5)])
+            })
+            .collect();
+        let a = legacy.reduce_parts_sparse(&parts, true);
+        let b = via.reduce_parts_sparse_members(&parts, true, &all);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(legacy.ledger, via.ledger);
+        let sa = legacy.map_reduce_scalars_scratch(|_, s, _| {
+            [s.xl.n_rows() as f64]
+        });
+        let sb = via.map_reduce_scalars_scratch_members(&all, |_, s, _| {
+            [s.xl.n_rows() as f64]
+        });
+        assert_eq!(sa, sb);
+        assert_eq!(legacy.ledger.scalar_rounds, via.ledger.scalar_rounds);
+    }
+
+    #[test]
+    fn timeline_json_carries_resilience_block() {
+        let mut c = cluster(3);
+        c.ledger.record_async_round(&[0, 1], true);
+        c.ledger.crash_events = 2;
+        c.ledger.recovery_seconds = 0.25;
+        let v = c.timeline_json();
+        let r = v.get("resilience").expect("resilience block");
+        assert_eq!(r.get("crash_events").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            r.get("fallback_rounds").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            r.get("recovery_seconds").unwrap().as_f64(),
+            Some(0.25)
+        );
+        match r.get("alive") {
+            Some(Value::Arr(a)) => assert_eq!(a.len(), 3),
+            other => panic!("alive not an array: {other:?}"),
+        }
     }
 }

@@ -101,6 +101,37 @@
 //!   strictly beats the pipelined schedule. Per-round staleness
 //!   histograms land on the [`cluster::Ledger`]
 //!   (`staleness_hist` / `fallback_rounds`).
+//!   **Fault model** ([`cluster::faults`], CLI `--fault SCRIPT
+//!   --fault-seed S`): deterministic, seeded fleet weather on top of
+//!   the virtual clocks. A [`cluster::FaultPlan`] — parsed from a
+//!   script like
+//!   `crash:3@12.5s,restart:3@30s,degrade:1@5s:0.25x,flap:2:p=0.05,loss:p=0.1`
+//!   or generated by `FaultPlan::seeded` — schedules node
+//!   **crash/restart** (elastic membership: the dead node's shard is
+//!   absent, the quorum shrinks, combine weights recompute over the
+//!   survivors; a restarted node re-bases onto the current iterate
+//!   through the same affine wire format, charged as a
+//!   `rejoin_rebase` unicast), transient **flaps** (one round out,
+//!   nothing to recover), in-place **compute degradation** (the
+//!   node's profile speed changes mid-run), and **wire loss** on
+//!   direction contributions (retry once after a virtual timeout,
+//!   then drop — absorbed by the partial quorum, and an empty quorum
+//!   routes through the certified synchronous fallback, so no fault
+//!   can hang a round). Every decision is a pure hash of
+//!   `(seed, round, node)` — no sequential RNG, no wall clock
+//!   (pallas-lint extends its no-wall-clock rule over
+//!   `cluster/faults.rs`) — so one seed replays the identical fault
+//!   timeline and bit-identical trace, and the empty plan is
+//!   bit-identical to no plan at all: full-membership rounds delegate
+//!   structurally to the exact pre-fault code paths
+//!   (`tests/faults.rs` pins all three, `benches/fault_tolerance.rs`
+//!   + the CI `chaos` job gate convergence under a 3-seed ×
+//!   crash/flap/degrade matrix). Fault accounting lands on the
+//!   [`cluster::Ledger`] (`crash_events`, `rejoin_rebases` +
+//!   `recovery_seconds`, `lost_messages`, `retry_rounds`,
+//!   `degrade_events`, `flap_events`), in the timeline JSON's
+//!   `resilience` block, and in the experiment report's resilience
+//!   table.
 //! - [`algo`] — FS-s (Algorithm 1) aggregating hybrid directions
 //!   (a_w·wʳ + a_g·gʳ + support-sized sparse corrections — the only
 //!   payload the direction allreduce moves), its bounded-staleness
@@ -127,8 +158,10 @@
 //!    master materializes full-d exactly once, into `RunResult::w`;
 //!    any other O(d) buffer silently re-densifies the O(|U|) loop.
 //! 2. **no-wall-clock** — `Instant`/`SystemTime` are banned in `algo/`,
-//!    `cluster/engine.rs` and `cluster/allreduce.rs`: all timing flows
-//!    through the engine's virtual clocks so runs are reproducible.
+//!    `cluster/engine.rs`, `cluster/allreduce.rs` and
+//!    `cluster/faults.rs`: all timing flows through the engine's
+//!    virtual clocks so runs (and seeded fault replays) are
+//!    reproducible.
 //!    (The measured-threading sites in `cluster/mod.rs` and
 //!    `util/timer.rs` are outside the rule's scope by design — they
 //!    *feed* the virtual clocks.)

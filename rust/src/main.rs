@@ -18,7 +18,7 @@ use psgd::algo::param_mix::{ParamMixConfig, ParamMixDriver};
 use psgd::algo::safeguard::Safeguard;
 use psgd::algo::sqm::{CoreOpt, SqmConfig, SqmDriver};
 use psgd::algo::{Driver, StopRule};
-use psgd::cluster::{Cluster, CostModel, NodeProfile};
+use psgd::cluster::{Cluster, CostModel, FaultPlan, NodeProfile};
 use psgd::data::dataset::Dataset;
 use psgd::data::stats::DataStats;
 use psgd::data::synth::SynthConfig;
@@ -28,6 +28,7 @@ use psgd::bench::figure1::{self, Figure1Config, Panel};
 use psgd::bench::plot::AsciiPlot;
 use psgd::util::cli::Args;
 use psgd::util::config::Config;
+use psgd::util::validate::validate_train;
 
 const USAGE: &str = "\
 psgd — A Parallel SGD Method with Strong Convergence (reproduction)
@@ -75,8 +76,20 @@ COMMANDS
                [--straggler N:F]    node N runs F× slower (e.g. 0:3)
                [--profile-spread X] seeded heterogeneous node speeds
                                     1 + X·U[0,1)  [--profile-seed S]
+               [--fault SCRIPT]     seeded fault injection (--async-fs
+                                    only): comma-separated events, flag
+                                    repeatable. crash:N@rR | crash:N@Ts
+                                    restart:N@... degrade:N@T:Fx
+                                    flap:N:p=P loss:p=P — or the single
+                                    word `seeded` for a generated plan.
+                                    e.g. --fault crash:3@12.5s,restart:3@30s
+                                         --fault degrade:1@5s:0.25x
+                                         --fault flap:2:p=0.05
+               [--fault-seed S]     seed for flap/loss coins and the
+                                    `seeded` plan generator (default 42)
                [--trace-timeline out.json]  export the event engine's
-                                            per-node schedule
+                                            per-node schedule + the
+                                            resilience counter block
   figure1    regenerate the paper's Figure 1 panels for one node count
                --nodes P [--full] [--out-dir results/] [--iters N]
   info       show the AOT artifact manifest and PJRT platform
@@ -222,6 +235,13 @@ fn train(args: &Args) {
     let seed = args.usize("seed", 42) as u64;
     let test_frac = args.f64("test-frac", 0.1);
 
+    // reject bad flag combinations up front with a one-line error
+    // (instead of a panic after the data is already loaded)
+    if let Err(e) = validate_train(args, nodes) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+
     let data = load_data(args, &cfg);
     eprintln!("data: {}", DataStats::compute(&data).render());
     let (train_set, test_set) = data.split(1.0 - test_frac, seed ^ 1);
@@ -234,6 +254,21 @@ fn train(args: &Args) {
     }
     if let Some(profile) = node_profile(args, nodes) {
         cluster.set_profile(profile);
+    }
+    if let Some(spec) = args.get("fault") {
+        let fseed = args.usize("fault-seed", 42) as u64;
+        let plan = if spec == "seeded" {
+            FaultPlan::seeded(nodes, fseed)
+        } else {
+            let mut plan =
+                FaultPlan::parse(spec, nodes).unwrap_or_else(|e| {
+                    eprintln!("error: {e}");
+                    std::process::exit(2);
+                });
+            plan.seed = fseed;
+            plan
+        };
+        cluster.set_fault_plan(plan);
     }
 
     let method = args.get_or("method", "fs");
@@ -344,7 +379,9 @@ fn train(args: &Args) {
         eprintln!("trace written to {path}");
     }
     if let Some(path) = args.get("trace-timeline") {
-        std::fs::write(path, cluster.engine.timeline_json().to_json(1))
+        // the cluster export = engine timeline + the resilience block
+        // (staleness/fallback counters, fault accounting, liveness)
+        std::fs::write(path, cluster.timeline_json().to_json(1))
             .expect("write timeline");
         eprintln!(
             "timeline written to {path} (makespan {:.3}s, {} events)",

@@ -1,7 +1,10 @@
 //! Experiment report generation: turn a set of traces into the
 //! markdown tables EXPERIMENTS.md records — passes/time to target gaps,
-//! final metrics, safeguard counts.
+//! final metrics, safeguard counts, and (when a run carried a
+//! [`Ledger`]) the resilience story: async staleness/fallback counters
+//! plus the fault-layer accounting.
 
+use crate::cluster::Ledger;
 use crate::metrics::trace::Trace;
 use std::fmt::Write as _;
 
@@ -11,11 +14,29 @@ pub struct Report<'a> {
     pub f_star: f64,
     /// relative-gap milestones for the to-target table
     pub targets: Vec<f64>,
+    /// per-method run ledgers for the resilience table (label, ledger);
+    /// empty = the table is omitted (pre-async reports)
+    pub ledgers: Vec<(String, Ledger)>,
 }
 
 impl<'a> Report<'a> {
     pub fn new(traces: &'a [Trace], f_star: f64) -> Report<'a> {
-        Report { traces, f_star, targets: vec![1e-1, 1e-2, 1e-3, 1e-4] }
+        Report {
+            traces,
+            f_star,
+            targets: vec![1e-1, 1e-2, 1e-3, 1e-4],
+            ledgers: Vec::new(),
+        }
+    }
+
+    /// Attach run ledgers so [`Self::render`] includes the resilience
+    /// table.
+    pub fn with_ledgers(
+        mut self,
+        ledgers: Vec<(String, Ledger)>,
+    ) -> Report<'a> {
+        self.ledgers = ledgers;
+        self
     }
 
     /// First (passes, seconds) at which a trace's relative gap ≤ t.
@@ -78,13 +99,59 @@ impl<'a> Report<'a> {
         out
     }
 
+    /// Markdown: the resilience counters each attached ledger carries —
+    /// async staleness histogram + fallbacks, and the fault accounting
+    /// (crashes, rejoins + recovery seconds, wire losses, retries,
+    /// degrades, flaps). Empty string when no ledger was attached.
+    pub fn resilience_table(&self) -> String {
+        if self.ledgers.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from(
+            "| method | async rounds | fallbacks | staleness | crashes | rejoins | recovery s | lost | retries | degrades | flaps |\n|---|---|---|---|---|---|---|---|---|---|---|\n",
+        );
+        for (label, l) in &self.ledgers {
+            let hist = if l.staleness_hist.is_empty() {
+                "—".to_string()
+            } else {
+                l.staleness_hist
+                    .iter()
+                    .enumerate()
+                    .map(|(s, &n)| format!("s{s}:{n}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            let _ = writeln!(
+                out,
+                "| {} | {} | {} | {} | {} | {} | {:.3} | {} | {} | {} | {} |",
+                label,
+                l.async_rounds,
+                l.fallback_rounds,
+                hist,
+                l.crash_events,
+                l.rejoin_rebases,
+                l.recovery_seconds,
+                l.lost_messages,
+                l.retry_rounds,
+                l.degrade_events,
+                l.flap_events,
+            );
+        }
+        out
+    }
+
     pub fn render(&self, title: &str) -> String {
-        format!(
+        let mut out = format!(
             "## {title}\n\nf* = {:.8e}\n\n### passes to target gap\n\n{}\n### final state\n\n{}",
             self.f_star,
             self.passes_table(),
             self.summary_table()
-        )
+        );
+        let resilience = self.resilience_table();
+        if !resilience.is_empty() {
+            let _ = write!(out, "\n### resilience\n\n{resilience}");
+        }
+        out
     }
 }
 
@@ -129,5 +196,28 @@ mod tests {
         assert!(s.contains("| a |") && s.contains("| b |"));
         let full = r.render("test run");
         assert!(full.contains("## test run"));
+        // no ledgers attached: the resilience section is omitted
+        assert!(!full.contains("### resilience"));
+    }
+
+    #[test]
+    fn resilience_table_surfaces_fault_counters() {
+        let traces = vec![trace("afs", &[0.1])];
+        let mut ledger = Ledger {
+            crash_events: 1,
+            rejoin_rebases: 1,
+            recovery_seconds: 0.125,
+            lost_messages: 2,
+            retry_rounds: 3,
+            ..Ledger::default()
+        };
+        ledger.record_async_round(&[0, 0, 1], false);
+        ledger.record_async_round(&[0], true);
+        let r = Report::new(&traces, 1.0)
+            .with_ledgers(vec![("afs".to_string(), ledger)]);
+        let t = r.resilience_table();
+        assert!(t.contains("| afs | 2 | 1 | s0:3 s1:1 | 1 | 1 | 0.125 | 2 | 3 | 0 | 0 |"), "{t}");
+        let full = r.render("chaos run");
+        assert!(full.contains("### resilience"), "{full}");
     }
 }

@@ -11,29 +11,45 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse raw argv (excluding the binary name).
+    /// Parse raw argv (excluding the binary name). A repeated
+    /// `--key value` accumulates comma-joined (`--fault a --fault b`
+    /// ≡ `--fault a,b` — fault scripts, like every comma-separated
+    /// spec here, merge instead of silently last-wins).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(body) = a.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    Self::put(&mut out.flags, k, v.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    out.flags.insert(body.to_string(), v);
+                    Self::put(&mut out.flags, body, v);
                 } else {
-                    out.flags.insert(body.to_string(), "true".to_string());
+                    Self::put(&mut out.flags, body, "true".to_string());
                 }
             } else {
                 out.positional.push(a);
             }
         }
         out
+    }
+
+    /// Insert a flag value, comma-joining onto any previous occurrence.
+    fn put(flags: &mut BTreeMap<String, String>, key: &str, val: String) {
+        match flags.get_mut(key) {
+            Some(old) => {
+                old.push(',');
+                old.push_str(&val);
+            }
+            None => {
+                flags.insert(key.to_string(), val);
+            }
+        }
     }
 
     pub fn from_env() -> Args {
@@ -120,5 +136,13 @@ mod tests {
     #[should_panic]
     fn bad_int_panics() {
         args("--nodes abc").usize("nodes", 0);
+    }
+
+    #[test]
+    fn repeated_flags_comma_join() {
+        let a = args("--fault crash:3@r2 --fault flap:2:p=0.05");
+        assert_eq!(a.get("fault"), Some("crash:3@r2,flap:2:p=0.05"));
+        let b = args("--fault=crash:1@r2 --fault restart:1@r6");
+        assert_eq!(b.get("fault"), Some("crash:1@r2,restart:1@r6"));
     }
 }

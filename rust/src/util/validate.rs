@@ -1,0 +1,211 @@
+//! Up-front validation for `psgd train` flags: every rejection is a
+//! clear one-line error *before* the run starts, instead of a panic
+//! three modules deep once the cluster is already built (`--quorum 9`
+//! on 4 nodes used to die inside the quorum clamp; `--staleness` with
+//! plain `--fs` was silently ignored; a malformed `--straggler` spec
+//! panicked mid-profile-construction). `main` prints the message and
+//! exits 2; the checks themselves are pure so every rejection is
+//! unit-testable.
+
+use crate::cluster::FaultPlan;
+use crate::util::cli::Args;
+
+/// Validate the `train` flag set against the resolved node count.
+/// Returns the first problem found as a one-line message.
+pub fn validate_train(args: &Args, nodes: usize) -> Result<(), String> {
+    let method = args.get_or("method", "fs");
+    let is_async = method == "fs"
+        && matches!(args.get("async-fs"), Some("true" | "1" | "yes"));
+
+    if let Some(q) = args.get("quorum") {
+        if !is_async {
+            return Err(
+                "--quorum only applies to --async-fs runs (method fs)"
+                    .to_string(),
+            );
+        }
+        let q: usize = q.parse().map_err(|_| {
+            format!("--quorum expects a positive integer, got {q:?}")
+        })?;
+        if q == 0 {
+            return Err("--quorum must be at least 1".to_string());
+        }
+        if q > nodes {
+            return Err(format!(
+                "--quorum {q} exceeds the cluster size (P = {nodes})"
+            ));
+        }
+    }
+
+    if let Some(t) = args.get("staleness") {
+        if !is_async {
+            return Err(
+                "--staleness only applies to --async-fs runs (method fs)"
+                    .to_string(),
+            );
+        }
+        t.parse::<usize>().map_err(|_| {
+            format!("--staleness expects a non-negative integer, got {t:?}")
+        })?;
+    }
+
+    if let Some(spec) = args.get("straggler") {
+        parse_straggler(spec, nodes)?;
+    }
+
+    if let Some(x) = args.get("profile-spread") {
+        let x: f64 = x.parse().map_err(|_| {
+            format!("--profile-spread expects a number, got {x:?}")
+        })?;
+        if x.is_nan() || x < 0.0 {
+            return Err(format!(
+                "--profile-spread must be non-negative, got {x}"
+            ));
+        }
+    }
+    if let Some(s) = args.get("profile-seed") {
+        s.parse::<u64>().map_err(|_| {
+            format!("--profile-seed expects an integer, got {s:?}")
+        })?;
+    }
+
+    if let Some(spec) = args.get("fault") {
+        if !is_async {
+            return Err(
+                "--fault requires --async-fs (the fault-tolerant driver)"
+                    .to_string(),
+            );
+        }
+        if spec != "seeded" {
+            FaultPlan::parse(spec, nodes)?;
+        }
+    }
+    if let Some(s) = args.get("fault-seed") {
+        s.parse::<u64>().map_err(|_| {
+            format!("--fault-seed expects an integer, got {s:?}")
+        })?;
+    }
+
+    Ok(())
+}
+
+/// Parse and range-check a `--straggler N:F` spec.
+pub fn parse_straggler(
+    spec: &str,
+    nodes: usize,
+) -> Result<(usize, f64), String> {
+    let (node, factor) = spec
+        .split_once(':')
+        .ok_or_else(|| format!("--straggler expects N:F, got {spec:?}"))?;
+    let node: usize = node.parse().map_err(|_| {
+        format!("--straggler node index must be an integer, got {node:?}")
+    })?;
+    let factor: f64 = factor.parse().map_err(|_| {
+        format!("--straggler factor must be a number, got {factor:?}")
+    })?;
+    if node >= nodes {
+        return Err(format!(
+            "--straggler node {node} out of range (cluster has {nodes} \
+             nodes, indices 0..{nodes})"
+        ));
+    }
+    if factor.is_nan() || factor <= 0.0 {
+        return Err(format!(
+            "--straggler factor must be positive, got {factor}"
+        ));
+    }
+    Ok((node, factor))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    fn err(s: &str, nodes: usize) -> String {
+        validate_train(&args(s), nodes).unwrap_err()
+    }
+
+    #[test]
+    fn quorum_over_cluster_size_is_rejected() {
+        let e = err("train --async-fs --quorum 9", 4);
+        assert!(e.contains("exceeds the cluster size"), "{e}");
+        assert!(!e.contains('\n'), "one line: {e}");
+    }
+
+    #[test]
+    fn quorum_and_staleness_require_async() {
+        let e = err("train --quorum 2", 4);
+        assert!(e.contains("--async-fs"), "{e}");
+        let e = err("train --staleness 1", 4);
+        assert!(e.contains("--async-fs"), "{e}");
+        // fine on the async driver
+        assert!(validate_train(
+            &args("train --async-fs --quorum 2 --staleness 1"),
+            4
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn quorum_zero_and_garbage_are_rejected() {
+        assert!(err("train --async-fs --quorum 0", 4)
+            .contains("at least 1"));
+        assert!(err("train --async-fs --quorum abc", 4)
+            .contains("positive integer"));
+        assert!(err("train --async-fs --staleness -1", 4)
+            .contains("non-negative"));
+    }
+
+    #[test]
+    fn malformed_straggler_specs_are_rejected() {
+        for (spec, what) in [
+            ("3", "expects N:F"),
+            ("a:2", "must be an integer"),
+            ("0:x", "must be a number"),
+            ("9:2", "out of range"),
+            ("0:0", "must be positive"),
+            ("0:-3", "must be positive"),
+        ] {
+            let e = err(&format!("train --straggler {spec}"), 4);
+            assert!(e.contains(what), "{spec}: {e}");
+            assert!(!e.contains('\n'), "one line: {e}");
+        }
+        assert_eq!(parse_straggler("2:3.5", 4), Ok((2, 3.5)));
+    }
+
+    #[test]
+    fn profile_spread_is_range_checked() {
+        assert!(err("train --profile-spread -0.5", 4)
+            .contains("non-negative"));
+        assert!(err("train --profile-spread abc", 4)
+            .contains("expects a number"));
+        assert!(err("train --profile-seed 1.5", 4)
+            .contains("expects an integer"));
+        assert!(
+            validate_train(&args("train --profile-spread 0.5"), 4).is_ok()
+        );
+    }
+
+    #[test]
+    fn fault_flag_requires_async_and_a_parsable_plan() {
+        let e = err("train --fault crash:1@r2", 4);
+        assert!(e.contains("requires --async-fs"), "{e}");
+        let e = err("train --async-fs --fault crash:9@r2", 4);
+        assert!(e.contains("bad --fault spec"), "{e}");
+        assert!(!e.contains('\n'), "one line: {e}");
+        assert!(validate_train(
+            &args("train --async-fs --fault crash:1@r2,restart:1@r5"),
+            4
+        )
+        .is_ok());
+        assert!(validate_train(
+            &args("train --async-fs --fault seeded --fault-seed 7"),
+            4
+        )
+        .is_ok());
+    }
+}

@@ -1,0 +1,420 @@
+//! Fault-injection / elastic-membership acceptance suite.
+//!
+//! The contract the fault layer must keep:
+//!
+//! 1. **Zero-fault bit-identity** — installing the empty
+//!    [`FaultPlan`] leaves both the synchronous and the async FS runs
+//!    bit-identical (iterates, trace, ledger) to a run with no plan
+//!    installed at all. The fault layer is structurally absent when
+//!    the weather is clear: full-membership rounds delegate to the
+//!    exact pre-fault code paths.
+//! 2. **Seeded determinism** — the same seed replays the identical
+//!    fault timeline (the [`FaultState::log`] of applied faults) and
+//!    the bit-identical objective trace, run after run.
+//! 3. **Crash + restart convergence** — a run that loses a node
+//!    mid-flight and gets it back still reaches the synchronous
+//!    suite's relative-gap tolerance, while the ledger records the
+//!    crash, the rejoin re-base, and its recovery seconds.
+//! 4. **No hangs at the edges** — quorum 1 with all-but-one node
+//!    dead, every contribution lost on the wire, and a virtual-time
+//!    crash landing mid-run each terminate through the partial
+//!    quorum + safeguard fallback, never a deadlock or panic.
+
+use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
+use psgd::algo::fs::{FsConfig, FsDriver};
+use psgd::algo::{Driver, StopRule};
+use psgd::cluster::{Cluster, CostModel, FaultPlan, NodeProfile};
+use psgd::data::dataset::Dataset;
+use psgd::data::synth::SynthConfig;
+use psgd::loss::LossKind;
+use psgd::metrics::trace::Trace;
+use psgd::objective::RegularizedLoss;
+use psgd::opt::tron::{self, TronParams};
+use psgd::util::json;
+
+/// Same sparse-regime data the async suite pins.
+fn make_data(seed: u64) -> Dataset {
+    SynthConfig {
+        n_examples: 400,
+        n_features: 2_000,
+        nnz_per_example: 5,
+        skew: 1.0,
+        ..SynthConfig::default()
+    }
+    .generate(seed)
+}
+
+/// Modeled-time cluster: `CostModel::free()` zeroes the measured
+/// compute share, so clocks — and therefore `Trigger::Time`
+/// boundaries and ledger seconds — are bit-reproducible across runs.
+fn make_cluster(nodes: usize, seed: u64) -> Cluster {
+    let mut c = Cluster::partition(make_data(seed), nodes, CostModel::free());
+    c.threads = 1;
+    c
+}
+
+/// Default cost model: clocks actually advance, so `Trigger::Time`
+/// thresholds fire and rejoin state transfer charges virtual seconds.
+fn make_cluster_timed(nodes: usize, seed: u64) -> Cluster {
+    let mut c =
+        Cluster::partition(make_data(seed), nodes, CostModel::default());
+    c.threads = 1;
+    c
+}
+
+fn fs_config() -> FsConfig {
+    FsConfig { lam: 0.5, epochs: 2, ..Default::default() }
+}
+
+fn async_config(staleness: usize, quorum: usize) -> AsyncFsConfig {
+    AsyncFsConfig { fs: fs_config(), staleness, quorum }
+}
+
+/// Exact optimum of the stitched problem (the synchronous oracle).
+fn f_star(cluster: &Cluster, loss: LossKind, lam: f64) -> f64 {
+    let mut rows = Vec::new();
+    let mut ys = Vec::new();
+    for s in &cluster.shards {
+        for i in 0..s.xl.n_rows() {
+            rows.push(s.row_global(i));
+            ys.push(s.y[i]);
+        }
+    }
+    let x = psgd::linalg::Csr::from_rows(cluster.dim, &rows);
+    let obj = RegularizedLoss { x: &x, y: &ys, loss, lam };
+    tron::minimize(&obj, &vec![0.0; cluster.dim], &TronParams {
+        eps: 1e-12,
+        max_iter: 200,
+        ..Default::default()
+    })
+    .f
+}
+
+/// Bitwise trace comparison: objective, pass accounting, simulated
+/// seconds, and safeguard counts per outer iteration.
+fn assert_traces_identical(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{what}: iteration counts");
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.f, q.f, "{what}: objective diverged at iter {}", p.iter);
+        assert_eq!(
+            p.comm_passes, q.comm_passes,
+            "{what}: pass accounting diverged at iter {}",
+            p.iter
+        );
+        assert_eq!(
+            p.seconds, q.seconds,
+            "{what}: simulated seconds diverged at iter {}",
+            p.iter
+        );
+        assert_eq!(
+            p.safeguard_hits, q.safeguard_hits,
+            "{what}: safeguard counts diverged at iter {}",
+            p.iter
+        );
+    }
+}
+
+#[test]
+fn empty_fault_plan_is_bit_identical_to_no_plan_sync_fs() {
+    let nodes = 4;
+    let mut bare = make_cluster(nodes, 2);
+    let mut planned = make_cluster(nodes, 2);
+    planned.set_fault_plan(FaultPlan::default());
+
+    let run_bare =
+        FsDriver::new(fs_config()).run(&mut bare, None, &StopRule::iters(8));
+    let run_planned =
+        FsDriver::new(fs_config()).run(&mut planned, None, &StopRule::iters(8));
+
+    assert_eq!(run_bare.w, run_planned.w, "sync iterates diverged");
+    assert_traces_identical(&run_bare.trace, &run_planned.trace, "sync FS");
+    assert_eq!(bare.ledger, planned.ledger, "sync ledgers diverged");
+    let faults = planned.faults.as_ref().expect("plan installed");
+    assert!(faults.log.is_empty(), "empty plan applied a fault");
+}
+
+#[test]
+fn empty_fault_plan_is_bit_identical_to_no_plan_async_fs() {
+    let nodes = 4;
+    let mut bare = make_cluster(nodes, 2);
+    let mut planned = make_cluster(nodes, 2);
+    // heterogeneous speeds exercise the member compute lanes too
+    let profile = NodeProfile::with_straggler(nodes, 0, 3.0);
+    bare.set_profile(profile.clone());
+    planned.set_profile(profile);
+    planned.set_fault_plan(FaultPlan::default());
+
+    let run_bare = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut bare,
+        None,
+        &StopRule::iters(12),
+    );
+    let run_planned = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut planned,
+        None,
+        &StopRule::iters(12),
+    );
+
+    assert_eq!(run_bare.w, run_planned.w, "async iterates diverged");
+    assert_traces_identical(&run_bare.trace, &run_planned.trace, "async FS");
+    assert_eq!(bare.ledger, planned.ledger, "async ledgers diverged");
+    assert!(!planned.ledger.has_fault_activity());
+    assert!(planned
+        .faults
+        .as_ref()
+        .expect("plan installed")
+        .log
+        .is_empty());
+}
+
+#[test]
+fn same_seed_replays_identical_fault_timeline_and_trace() {
+    let nodes = 5;
+    let script =
+        "crash:1@r2,restart:1@r5,degrade:2@r1:0.5x,flap:3:p=0.2,loss:p=0.15";
+    let run = |seed: u64| {
+        let mut cluster = make_cluster(nodes, 3);
+        let mut plan = FaultPlan::parse(script, nodes).unwrap();
+        plan.seed = seed;
+        cluster.set_fault_plan(plan);
+        let run = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+            &mut cluster,
+            None,
+            &StopRule::iters(20),
+        );
+        let log = cluster.faults.as_ref().unwrap().log.clone();
+        (run, log, cluster.ledger.clone())
+    };
+
+    let (run_a, log_a, ledger_a) = run(9);
+    let (run_b, log_b, ledger_b) = run(9);
+    assert!(!log_a.is_empty(), "the chaos script never fired");
+    assert_eq!(log_a, log_b, "fault timelines diverged under one seed");
+    assert_eq!(run_a.w, run_b.w, "iterates diverged under one seed");
+    assert_traces_identical(&run_a.trace, &run_b.trace, "seeded replay");
+    assert_eq!(ledger_a, ledger_b, "ledgers diverged under one seed");
+
+    // a different seed re-rolls the flap/loss coins: some divergence
+    // in the applied-fault log is overwhelmingly likely at p=0.2/0.15
+    let (_, log_c, _) = run(10);
+    assert_ne!(log_a, log_c, "seed had no effect on the weather");
+}
+
+#[test]
+fn crash_and_restart_converges_to_sync_tolerance() {
+    let nodes = 5;
+    let mut cluster = make_cluster_timed(nodes, 3);
+    let cfg = fs_config();
+    let fstar = f_star(&cluster, cfg.loss, cfg.lam);
+    cluster.set_fault_plan(
+        FaultPlan::parse("crash:1@r2,restart:1@r6", nodes).unwrap(),
+    );
+
+    let run = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(60),
+    );
+
+    // same tolerance the synchronous and async suites pin
+    let gap = (run.f - fstar) / fstar;
+    assert!(gap < 1e-4, "crash+restart run stalled: gap={gap}");
+    assert!(cluster.ledger.crash_events >= 1, "no crash recorded");
+    assert!(cluster.ledger.rejoin_rebases >= 1, "no rejoin re-base recorded");
+    assert!(
+        cluster.ledger.recovery_seconds > 0.0,
+        "rejoin state transfer charged no virtual time"
+    );
+    // the fault log carries the scripted pair in application order
+    let log = &cluster.faults.as_ref().unwrap().log;
+    assert!(log.iter().any(|f| f.what == "crash" && f.node == 1));
+    assert!(log.iter().any(|f| f.what == "restart" && f.node == 1));
+    // the engine timeline shows the membership events
+    let events = cluster.engine.events();
+    assert!(events.iter().any(|e| e.label == "fault_crash"));
+    assert!(events.iter().any(|e| e.label == "fault_restart"));
+    assert!(events.iter().any(|e| e.label == "rejoin_rebase"));
+}
+
+#[test]
+fn quorum_one_with_all_but_one_node_dead_terminates() {
+    let nodes = 4;
+    let mut cluster = make_cluster(nodes, 5);
+    cluster.set_fault_plan(
+        FaultPlan::parse("crash:1@r1,crash:2@r1,crash:3@r1", nodes).unwrap(),
+    );
+
+    let run = AsyncFsDriver::new(async_config(1, 1)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(10),
+    );
+
+    assert_eq!(cluster.ledger.crash_events, 3, "all three crashes apply");
+    assert_eq!(cluster.alive_nodes(), vec![0], "one survivor");
+    assert!(run.f.is_finite(), "sole-survivor run produced a non-finite f");
+    // the surviving shard's problem still descends through the
+    // safeguarded rounds
+    let pts = &run.trace.points;
+    assert!(pts.last().unwrap().f < pts[0].f, "failed to descend");
+}
+
+#[test]
+fn total_wire_loss_routes_every_round_through_the_fallback() {
+    // loss:p=1 drops every contribution even after the retry: the
+    // quorum is empty each round — the same empty-contribution path an
+    // all-over-stale lane set hits — and each round must terminate
+    // through the certified synchronous fallback, never a hang.
+    let nodes = 4;
+    let mut cluster = make_cluster(nodes, 7);
+    cluster.set_fault_plan(FaultPlan::parse("loss:p=1", nodes).unwrap());
+
+    let run = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(8),
+    );
+
+    assert!(cluster.ledger.lost_messages >= nodes, "wire never dropped");
+    assert!(
+        cluster.ledger.fallback_rounds >= 1,
+        "empty quorum failed to fall back: {}",
+        cluster.ledger.staleness_profile()
+    );
+    // the safeguard invariant holds: every committed direction came
+    // from the synchronous fallback, so descent is monotone
+    for k in 1..run.trace.points.len() {
+        assert!(
+            run.trace.points[k].f <= run.trace.points[k - 1].f + 1e-10,
+            "f increased at iter {k} despite certified fallbacks"
+        );
+    }
+}
+
+#[test]
+fn time_triggered_crash_mid_run_terminates_and_recovers() {
+    // virtual-time triggers quantize to the first round boundary at or
+    // past T — a crash "landing mid-allreduce" takes effect before the
+    // next reduce begins, so no hop is ever half-charged
+    let nodes = 4;
+    let mut cluster = make_cluster_timed(nodes, 11);
+    cluster.set_fault_plan(
+        FaultPlan::parse("crash:2@1e-9s,restart:2@r5", nodes).unwrap(),
+    );
+
+    let run = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(30),
+    );
+
+    assert_eq!(cluster.ledger.crash_events, 1);
+    assert_eq!(cluster.ledger.rejoin_rebases, 1);
+    assert_eq!(cluster.alive_nodes().len(), nodes, "node 2 never rejoined");
+    assert!(run.f.is_finite());
+    let log = &cluster.faults.as_ref().unwrap().log;
+    // the time trigger fired after round 0's work moved the clock
+    let crash = log.iter().find(|f| f.what == "crash").unwrap();
+    assert!(crash.round >= 1, "time trigger fired before any clock moved");
+}
+
+#[test]
+fn flap_and_degrade_weather_converges_and_is_accounted() {
+    let nodes = 5;
+    let mut cluster = make_cluster(nodes, 13);
+    let cfg = fs_config();
+    let fstar = f_star(&cluster, cfg.loss, cfg.lam);
+    cluster.set_fault_plan(
+        FaultPlan::parse("degrade:1@r1:0.25x,flap:3:p=0.3,loss:p=0.1", nodes)
+            .unwrap(),
+    );
+
+    let run = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(60),
+    );
+
+    let gap = (run.f - fstar) / fstar;
+    assert!(gap < 1e-4, "fleet weather stalled the run: gap={gap}");
+    assert_eq!(cluster.ledger.degrade_events, 1);
+    assert!(cluster.ledger.flap_events >= 1, "p=0.3 flap never fired");
+    assert!(cluster.ledger.has_fault_activity());
+    assert!(!cluster.ledger.fault_profile().is_empty());
+}
+
+#[test]
+fn timeline_json_schema_carries_the_resilience_block() {
+    let nodes = 4;
+    let mut cluster = make_cluster(nodes, 17);
+    cluster.set_fault_plan(
+        FaultPlan::parse("crash:1@r2,restart:1@r5,loss:p=0.2", nodes).unwrap(),
+    );
+    let _ = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(12),
+    );
+
+    // round-trip through the serialized form: the schema the chaos CI
+    // job archives must parse back and carry every resilience field
+    let text = cluster.timeline_json().to_json(0);
+    let v = json::parse(&text).expect("timeline JSON must parse");
+    let r = v.get("resilience").expect("resilience block missing");
+    for key in [
+        "async_rounds",
+        "fallback_rounds",
+        "crash_events",
+        "rejoin_rebases",
+        "lost_messages",
+        "retry_rounds",
+        "degrade_events",
+        "flap_events",
+        "recovery_seconds",
+    ] {
+        assert!(r.get(key).is_some(), "resilience field {key} missing");
+    }
+    assert_eq!(
+        r.get("crash_events").and_then(|x| x.as_usize()),
+        Some(1),
+        "{text}"
+    );
+    assert_eq!(
+        r.get("rejoin_rebases").and_then(|x| x.as_usize()),
+        Some(1)
+    );
+    let alive = match r.get("alive") {
+        Some(json::Value::Arr(a)) => a.len(),
+        other => panic!("alive roster missing or not an array: {other:?}"),
+    };
+    assert_eq!(alive, nodes);
+    let hist = r.get("staleness_hist").expect("staleness_hist missing");
+    assert!(matches!(hist, json::Value::Arr(_)));
+}
+
+#[test]
+fn seeded_fleet_weather_matrix_never_hangs() {
+    // the chaos-bench matrix in miniature: three seeds of generated
+    // weather, each must terminate with a finite objective and a
+    // replayable fault log
+    for seed in [1u64, 2, 3] {
+        let nodes = 5;
+        let mut cluster = make_cluster(nodes, 19);
+        cluster.set_fault_plan(FaultPlan::seeded(nodes, seed));
+        let run = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+            &mut cluster,
+            None,
+            &StopRule::iters(25),
+        );
+        assert!(run.f.is_finite(), "seed {seed}: non-finite objective");
+        assert!(
+            cluster.ledger.has_fault_activity(),
+            "seed {seed}: generated weather was a no-op"
+        );
+        assert!(
+            cluster.ledger.crash_events >= 1
+                && cluster.ledger.rejoin_rebases >= 1,
+            "seed {seed}: generator must crash and restart a victim"
+        );
+    }
+}
