@@ -40,6 +40,19 @@ bench-smoke:
 	cargo bench --bench async_fs
 	cargo bench --bench master_side
 
+# Flight-recorder smoke (the CI `telemetry` job): a seeded async+fault
+# run streams one typed JSONL record per outer round into run.jsonl,
+# then the offline reader validates the stream (manifest header first,
+# matching schema, one record per round in order). The same stream
+# feeds `--report-from run.jsonl` for the full offline report and
+# `--report-from a.jsonl b.jsonl` for run diffing.
+telemetry:
+	cargo run --release -p psgd -- train --method fs --async-fs \
+		--nodes 5 --examples 400 --features 2000 --iters 12 \
+		--lambda 0.5 --threads 1 --fault seeded \
+		--metrics-out run.jsonl
+	cargo run --release -p psgd -- --report-from run.jsonl --check
+
 # Seeded fleet-weather chaos gate (the CI `chaos` job): a 3-seed ×
 # {crash, flap, degrade} matrix of the async FS driver under fault
 # injection — every cell must reach the clean run's objective target,
@@ -61,5 +74,5 @@ clippy:
 artifacts:
 	python3 python/compile/aot.py --out artifacts
 
-.PHONY: verify test bench bench-smoke chaos fmt-check clippy artifacts \
-	lint-invariants
+.PHONY: verify test bench bench-smoke chaos telemetry fmt-check clippy \
+	artifacts lint-invariants

@@ -580,11 +580,14 @@ impl<'a> FileLint<'a> {
 
     fn rule_no_wall_clock(&mut self) {
         // faults.rs joins the list: a wall clock in the fault layer
-        // would break the seeded-replay determinism contract
+        // would break the seeded-replay determinism contract; obs/
+        // likewise — a timestamped telemetry record would make two
+        // runs of one seed line-diff unequal
         if !(self.in_algo()
             || self.relpath == "cluster/engine.rs"
             || self.relpath == "cluster/allreduce.rs"
-            || self.relpath == "cluster/faults.rs")
+            || self.relpath == "cluster/faults.rs"
+            || self.relpath.starts_with("obs/"))
         {
             return;
         }
@@ -604,10 +607,13 @@ impl<'a> FileLint<'a> {
     }
 
     fn rule_no_unordered_iteration(&mut self) {
+        // obs/ is in scope: record fields and JSONL keys must come
+        // out in a fixed order or recorded streams stop line-diffing
         if !(self.in_algo()
             || self.relpath.starts_with("cluster/")
             || self.relpath.starts_with("objective/")
-            || self.relpath.starts_with("linalg/"))
+            || self.relpath.starts_with("linalg/")
+            || self.relpath.starts_with("obs/"))
         {
             return;
         }
@@ -892,6 +898,28 @@ mod tests {
         let hits = lint_source("cluster/faults.rs", src);
         assert_eq!(hits.len(), 1, "{hits:?}");
         assert_eq!(hits[0].rule, "no-wall-clock");
+    }
+
+    #[test]
+    fn flight_recorder_is_wall_clock_free() {
+        // recorded streams of one seed must line-diff equal: no
+        // timestamps in the telemetry layer
+        let src = "let t = Instant::now();\n";
+        let hits = lint_source("obs/jsonl.rs", src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].rule, "no-wall-clock");
+    }
+
+    #[test]
+    fn flight_recorder_emits_in_deterministic_order() {
+        // a HashMap-backed registry would shuffle JSONL keys between
+        // builds — obs/ is inside the no-unordered-iteration scope
+        let src = "let m: HashMap<String, f64> = HashMap::new();\n";
+        let hits = lint_source("obs/registry.rs", src);
+        assert!(
+            hits.iter().any(|f| f.rule == "no-unordered-iteration"),
+            "{hits:?}"
+        );
     }
 
     #[test]

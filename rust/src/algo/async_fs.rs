@@ -91,6 +91,7 @@ use crate::linalg::dense;
 use crate::linalg::sparse::SparseVec;
 use crate::metrics::trace::{Trace, TracePoint};
 use crate::objective::compact::{GlobalDots, HybridDir};
+use crate::obs::RoundObs;
 use crate::opt::linesearch::{strong_wolfe, MarginPhi, PhiLambda};
 
 #[derive(Clone, Debug)]
@@ -219,8 +220,12 @@ impl Driver for AsyncFsDriver {
         // master (O(τ·d) only in the dense regime), master only
         let mut history: VecDeque<(usize, Vec<f64>, Vec<f64>)> =
             VecDeque::new();
+        // flight recorder: begin() runs before the weather so this
+        // round's fault events land inside its record window
+        let mut obs = RoundObs::new(cluster);
 
         for r in 0.. {
+            obs.begin(cluster, r);
             // --- step 0: this round's fleet weather (clear skies and
             // full membership without a fault plan — the zero-fault
             // path is bit-identical to the pre-fault driver) ---
@@ -245,6 +250,9 @@ impl Driver for AsyncFsDriver {
                 }
             }
             let members = &weather.members;
+            if obs.on() {
+                obs.rec().rebased = weather.restarted.len();
+            }
 
             // --- step 1: synchronous gradient allreduce at wʳ over
             // the members (the cheap commit path every surviving
@@ -259,7 +267,7 @@ impl Driver for AsyncFsDriver {
             if r == 0 {
                 gnorm0 = gnorm;
             }
-            trace.push(TracePoint {
+            let pt = TracePoint {
                 iter: r,
                 f,
                 gnorm,
@@ -267,10 +275,19 @@ impl Driver for AsyncFsDriver {
                 seconds: cluster.ledger.seconds(),
                 auprc: probe.auprc(&w),
                 safeguard_hits: last_hits,
-            });
+            };
+            obs.trace_point(&pt);
+            if obs.on() {
+                let rec = obs.rec();
+                rec.compact = compact;
+                rec.live_u = fdim;
+                rec.members.extend_from_slice(members);
+            }
+            trace.push(pt);
             if gnorm == 0.0
                 || stop.should_stop(r, f, gnorm, gnorm0, &cluster.ledger)
             {
+                obs.commit(cluster);
                 break;
             }
 
@@ -392,17 +409,28 @@ impl Driver for AsyncFsDriver {
             }
             let full_fresh = contribs.len() == p_nodes
                 && contribs.iter().all(|cb| cb.staleness == 0);
+            if obs.on() {
+                let rec = obs.rec();
+                for cb in &contribs {
+                    rec.quorum.push(cb.node);
+                    rec.staleness.push(cb.staleness);
+                }
+            }
 
             // --- step 6 on the fresh parts (Algorithm 1's safeguard
             // at their own — current — reference) ---
             let mut hits = 0usize;
             for cb in contribs.iter_mut().filter(|cb| cb.staleness == 0) {
-                hits += c.safeguard.apply_hybrid(
+                let h = c.safeguard.apply_hybrid(
                     &dots,
                     &w,
                     &g,
                     std::slice::from_mut(&mut cb.dir),
                 );
+                if h > 0 && obs.on() {
+                    obs.rec().sg_replaced.push(cb.node);
+                }
+                hits += h;
             }
 
             // --- step 7 over the quorum: fresh parts combine exactly
@@ -513,10 +541,26 @@ impl Driver for AsyncFsDriver {
             // inside the θ cone around −gʳ or the round falls back to
             // the synchronous barrier direction ---
             let mut fell_back = false;
-            if contribs.is_empty()
-                || (!full_fresh && !c.safeguard.accepts_combined(&g, &d))
-            {
+            if contribs.is_empty() {
                 fell_back = true;
+                if obs.on() {
+                    obs.rec().fallback = Some("empty-quorum");
+                }
+            } else if !full_fresh {
+                // (a full fresh quorum IS the synchronous round and
+                // skips the combined test, exactly as before)
+                let ok = c.safeguard.accepts_combined(&g, &d);
+                if obs.on() {
+                    obs.rec().combined_ok = Some(ok);
+                }
+                if !ok {
+                    fell_back = true;
+                    if obs.on() {
+                        obs.rec().fallback = Some("safeguard");
+                    }
+                }
+            }
+            if fell_back {
                 // abort every solver lane (the master broadcasts the
                 // resync); resolve every *member* freshly at wʳ on the
                 // barrier'd main lanes and run the exact Algorithm-1
@@ -534,7 +578,25 @@ impl Driver for AsyncFsDriver {
                             g_ref, gp_ref, r,
                         )
                     });
-                hits += c.safeguard.apply_hybrid(&dots, &w, &g, &mut dirs);
+                hits += if obs.on() {
+                    let rec = obs.rec();
+                    let start = rec.sg_replaced.len();
+                    let h = c.safeguard.apply_hybrid_flagged(
+                        &dots,
+                        &w,
+                        &g,
+                        &mut dirs,
+                        Some(&mut rec.sg_replaced),
+                    );
+                    // flagged indices are positions into `dirs` —
+                    // remap onto the member node ids
+                    for v in rec.sg_replaced[start..].iter_mut() {
+                        *v = members[*v];
+                    }
+                    h
+                } else {
+                    c.safeguard.apply_hybrid(&dots, &w, &g, &mut dirs)
+                };
                 let weights = combine_weights(cluster, c.combine, members);
                 d = combine_hybrids_members(
                     cluster, dirs, &weights, &w, &g, sparse, members,
@@ -544,6 +606,12 @@ impl Driver for AsyncFsDriver {
             let staleness_seen: Vec<usize> =
                 contribs.iter().map(|cb| cb.staleness).collect();
             cluster.ledger.record_async_round(&staleness_seen, fell_back);
+            if obs.on() {
+                // marks the record as having run the quorum path —
+                // the offline reader replays `record_async_round`
+                // from exactly the (staleness, fallback) pair above
+                obs.rec().is_async = true;
+            }
 
             // --- step 8: distributed line search on margins (the
             // synchronous driver's, verbatim): dʳ·xᵢ lands in each
@@ -581,9 +649,17 @@ impl Driver for AsyncFsDriver {
             let t = match ls {
                 Ok(res) => {
                     f = res.phi_t;
+                    if obs.on() {
+                        let rec = obs.rec();
+                        rec.step = Some(res.t);
+                        rec.ls_evals = Some(res.evals);
+                    }
                     res.t
                 }
-                Err(_) => break,
+                Err(_) => {
+                    obs.commit(cluster);
+                    break;
+                }
             };
             // --- step 9: members advance their margin caches (only
             // they have current margins and a fresh dʳ·xᵢ in dz) ---
@@ -592,6 +668,7 @@ impl Driver for AsyncFsDriver {
                 let s = cluster.scratch[p].lock().expect("scratch lock");
                 dense::axpy(t, &s.dz, &mut margins[p]);
             }
+            obs.commit(cluster);
         }
         // the compact master's single O(d) pass
         let w = if compact { cluster.umap.expand(&w, dim) } else { w };

@@ -79,6 +79,7 @@ use crate::linalg::sparse::SparseVec;
 use crate::loss::LossKind;
 use crate::metrics::trace::{Trace, TracePoint};
 use crate::objective::compact::{CompactApprox, GlobalDots, HybridDir};
+use crate::obs::RoundObs;
 use crate::opt::lbfgs::{self, LbfgsParams};
 use crate::opt::linesearch::{strong_wolfe, MarginPhi, PhiLambda, WolfeParams};
 use crate::opt::sag::{sag_epochs_with, SagParams};
@@ -502,8 +503,12 @@ impl Driver for FsDriver {
         // of the loop along with the node list (§Perf)
         let all_nodes: Vec<usize> = (0..cluster.n_nodes()).collect();
         let weights = combine_weights(cluster, c.combine, &all_nodes);
+        // flight recorder: every hook below is an early-return when no
+        // sink is installed — the off path is the pre-recorder loop
+        let mut obs = RoundObs::new(cluster);
 
         for r in 0.. {
+            obs.begin(cluster, r);
             // --- step 1: gʳ (allreduce: nodes need it for the tilt) ---
             let (f_r, g, grad_parts) = if margins.is_empty() {
                 let (f_r, g, gp, z) = global_value_grad_master(
@@ -522,7 +527,7 @@ impl Driver for FsDriver {
             if r == 0 {
                 gnorm0 = gnorm;
             }
-            trace.push(TracePoint {
+            let p = TracePoint {
                 iter: r,
                 f,
                 gnorm,
@@ -530,9 +535,18 @@ impl Driver for FsDriver {
                 seconds: cluster.ledger.seconds(),
                 auprc: probe.auprc(&w),
                 safeguard_hits: last_hits,
-            });
+            };
+            obs.trace_point(&p);
+            if obs.on() {
+                let rec = obs.rec();
+                rec.compact = compact;
+                rec.live_u = fdim;
+                rec.members.extend_from_slice(&all_nodes);
+            }
+            trace.push(p);
             // --- step 2 + stop rules ---
             if gnorm == 0.0 || stop.should_stop(r, f, gnorm, gnorm0, &cluster.ledger) {
+                obs.commit(cluster);
                 break;
             }
 
@@ -553,7 +567,15 @@ impl Driver for FsDriver {
                 });
 
             // --- step 6: safeguard on shared scalars + sparse dots ---
-            last_hits = c.safeguard.apply_hybrid(&dots, &w, &g, &mut dirs);
+            // (the flagged form also logs *which* nodes were replaced;
+            // identical arithmetic — see `apply_hybrid_flagged`)
+            let flags = if obs.on() {
+                Some(&mut obs.rec().sg_replaced)
+            } else {
+                None
+            };
+            last_hits =
+                c.safeguard.apply_hybrid_flagged(&dots, &w, &g, &mut dirs, flags);
 
             // --- step 7: convex combination ---
             // sparse regime: sum the affine coefficients (two scalars
@@ -600,12 +622,18 @@ impl Driver for FsDriver {
             let t = match ls {
                 Ok(res) => {
                     f = res.phi_t;
+                    if obs.on() {
+                        let rec = obs.rec();
+                        rec.step = Some(res.t);
+                        rec.ls_evals = Some(res.evals);
+                    }
                     res.t
                 }
                 Err(_) => {
                     // dʳ not descent (can only happen when every node's
                     // safeguarded −gʳ got averaged into numerically
                     // nothing) — bail out rather than loop forever
+                    obs.commit(cluster);
                     break;
                 }
             };
@@ -617,6 +645,7 @@ impl Driver for FsDriver {
                 let s = cluster.scratch[p].lock().expect("scratch lock");
                 dense::axpy(t, &s.dz, z);
             }
+            obs.commit(cluster);
         }
         // the compact master's single O(d) pass: materialize the
         // returned iterate into full space

@@ -16,6 +16,7 @@ use crate::data::dataset::Dataset;
 use crate::linalg::sparse::SparseVec;
 use crate::loss::LossKind;
 use crate::metrics::trace::{Trace, TracePoint};
+use crate::obs::RoundObs;
 use crate::opt::sgd::{sgd_epochs_shrink, SgdParams};
 
 #[derive(Clone, Debug)]
@@ -173,8 +174,11 @@ impl Driver for ParamMixDriver {
         let mut f = global_f_frame(
             cluster, &w, self.config.loss, self.config.lam, compact,
         );
+        let mut obs = RoundObs::new(cluster);
+        let all_nodes: Vec<usize> = (0..cluster.n_nodes()).collect();
         for r in 0.. {
-            trace.push(TracePoint {
+            obs.begin(cluster, r);
+            let p = TracePoint {
                 iter: r,
                 f,
                 gnorm: f64::NAN, // gradient never formed — that's the point
@@ -182,14 +186,24 @@ impl Driver for ParamMixDriver {
                 seconds: cluster.ledger.seconds(),
                 auprc: probe.auprc(&w),
                 safeguard_hits: 0,
-            });
+            };
+            obs.trace_point(&p);
+            if obs.on() {
+                let rec = obs.rec();
+                rec.compact = compact;
+                rec.live_u = fdim;
+                rec.members.extend_from_slice(&all_nodes);
+            }
+            trace.push(p);
             if stop.should_stop(r, f, f64::INFINITY, 1.0, &cluster.ledger) {
+                obs.commit(cluster);
                 break;
             }
             w = self.round_frame(cluster, &w, r, compact);
             f = global_f_frame(
                 cluster, &w, self.config.loss, self.config.lam, compact,
             );
+            obs.commit(cluster);
         }
         // single O(d) materialization at RunResult construction
         let w = if compact { cluster.umap.expand(&w, dim) } else { w };

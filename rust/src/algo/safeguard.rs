@@ -80,13 +80,29 @@ impl Safeguard {
         g: &[f64],
         dirs: &mut [HybridDir],
     ) -> usize {
+        self.apply_hybrid_flagged(dots, w, g, dirs, None)
+    }
+
+    /// [`Self::apply_hybrid`] with per-direction outcome capture: when
+    /// `replaced` is given, the index of every rejected direction is
+    /// pushed onto it (in slice order) — the flight recorder's
+    /// `sg_replaced` field. Arithmetic is identical with or without
+    /// the flag; `apply_hybrid` is this with `None`.
+    pub fn apply_hybrid_flagged(
+        &self,
+        dots: &GlobalDots,
+        w: &[f64],
+        g: &[f64],
+        dirs: &mut [HybridDir],
+        mut replaced: Option<&mut Vec<usize>>,
+    ) -> usize {
         let gnorm = dots.gg.sqrt();
         debug_assert!(
             gnorm.is_finite(),
             "non-finite ‖g‖ reached the safeguard angle test"
         );
         let mut hits = 0;
-        for d in dirs.iter_mut() {
+        for (i, d) in dirs.iter_mut().enumerate() {
             let dnorm = d.norm_sq(dots, w, g).sqrt();
             debug_assert!(
                 dnorm.is_finite(),
@@ -106,6 +122,9 @@ impl Safeguard {
             if reject {
                 *d = HybridDir::neg_gradient(w.len());
                 hits += 1;
+                if let Some(out) = replaced.as_deref_mut() {
+                    out.push(i);
+                }
             }
         }
         hits
@@ -177,6 +196,47 @@ mod tests {
             assert!(
                 dense::max_abs_diff(&hd.to_dense(&w, &g), dd) < 1e-12
             );
+        }
+    }
+
+    #[test]
+    fn flagged_apply_reports_replaced_indices() {
+        use crate::linalg::sparse::SparseVec;
+        let w = vec![0.2, -0.5, 1.0, 0.0];
+        let g = vec![1.0, 0.5, -0.25, 2.0];
+        let dots = GlobalDots::compute(&w, &g);
+        let mk = |a_w: f64, a_g: f64, pairs: Vec<(u32, f64)>| HybridDir {
+            a_w,
+            a_g,
+            corr: SparseVec::from_pairs(4, pairs),
+        };
+        let fixture = || {
+            vec![
+                mk(0.0, -1.0, vec![(1, 0.1)]), // near −g: kept
+                mk(0.0, 1.0, vec![]),          // along +g: replaced
+                mk(0.0, 0.0, vec![]),          // zero: replaced
+            ]
+        };
+        let sg = Safeguard::default();
+
+        let mut plain = fixture();
+        let hits_plain = sg.apply_hybrid(&dots, &w, &g, &mut plain);
+
+        let mut flagged = fixture();
+        let mut replaced = Vec::new();
+        let hits_flagged = sg.apply_hybrid_flagged(
+            &dots,
+            &w,
+            &g,
+            &mut flagged,
+            Some(&mut replaced),
+        );
+
+        assert_eq!(hits_plain, hits_flagged);
+        assert_eq!(replaced, vec![1, 2]);
+        assert_eq!(replaced.len(), hits_flagged);
+        for (a, b) in plain.iter().zip(&flagged) {
+            assert_eq!(a.to_dense(&w, &g), b.to_dense(&w, &g));
         }
     }
 

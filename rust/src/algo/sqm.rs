@@ -23,6 +23,7 @@ use crate::cluster::Cluster;
 use crate::data::dataset::Dataset;
 use crate::loss::LossKind;
 use crate::metrics::trace::{Trace, TracePoint};
+use crate::obs::RoundObs;
 use crate::opt::lbfgs::{self, LbfgsParams};
 use crate::opt::tron::{self, TronParams};
 
@@ -84,9 +85,16 @@ impl Driver for SqmDriver {
         stop: &StopRule,
     ) -> RunResult {
         let dim = cluster.dim;
+        let n_nodes = cluster.n_nodes();
         let w0 = self.w0.clone().unwrap_or_else(|| vec![0.0; dim]);
         let trace = std::cell::RefCell::new(Trace::new(self.name()));
         let counter = std::cell::Cell::new(0usize);
+        // flight recorder: the optimizer owns the loop here, so the
+        // callback commits round i and opens round i+1 (the last
+        // opened round has no trace point and is never emitted)
+        let mut ob = RoundObs::new(cluster);
+        ob.begin(cluster, 0);
+        let obs = std::cell::RefCell::new(ob);
 
         // The objective holds the cluster; the per-iteration callback
         // snapshots the ledger through it.
@@ -106,8 +114,8 @@ impl Driver for SqmDriver {
                 let res = tron::minimize_cb(&obj, &w0, &params, |it, w_now| {
                     let i = counter.get();
                     counter.set(i + 1);
-                    let c = obj.cluster.borrow();
-                    trace.borrow_mut().push(TracePoint {
+                    let mut c = obj.cluster.borrow_mut();
+                    let p = TracePoint {
                         iter: i,
                         f: it.f,
                         gnorm: it.gnorm,
@@ -115,7 +123,17 @@ impl Driver for SqmDriver {
                         seconds: c.ledger.seconds(),
                         auprc: test_auprc(test, w_now),
                         safeguard_hits: 0,
-                    });
+                    };
+                    let mut ob = obs.borrow_mut();
+                    ob.trace_point(&p);
+                    if ob.on() {
+                        let rec = ob.rec();
+                        rec.live_u = dim;
+                        rec.members.extend(0..n_nodes);
+                    }
+                    trace.borrow_mut().push(p);
+                    ob.commit(&mut c);
+                    ob.begin(&c, i + 1);
                 });
                 (res.w, res.f)
             }
@@ -128,8 +146,8 @@ impl Driver for SqmDriver {
                 let res = lbfgs::minimize_cb(&obj, &w0, &params, |it, w_now| {
                     let i = counter.get();
                     counter.set(i + 1);
-                    let c = obj.cluster.borrow();
-                    trace.borrow_mut().push(TracePoint {
+                    let mut c = obj.cluster.borrow_mut();
+                    let p = TracePoint {
                         iter: i,
                         f: it.f,
                         gnorm: it.gnorm,
@@ -137,7 +155,17 @@ impl Driver for SqmDriver {
                         seconds: c.ledger.seconds(),
                         auprc: test_auprc(test, w_now),
                         safeguard_hits: 0,
-                    });
+                    };
+                    let mut ob = obs.borrow_mut();
+                    ob.trace_point(&p);
+                    if ob.on() {
+                        let rec = ob.rec();
+                        rec.live_u = dim;
+                        rec.members.extend(0..n_nodes);
+                    }
+                    trace.borrow_mut().push(p);
+                    ob.commit(&mut c);
+                    ob.begin(&c, i + 1);
                 });
                 (res.w, res.f)
             }

@@ -245,6 +245,16 @@ impl Engine {
         self.comm_marks
     }
 
+    /// Publish the engine-level run gauges into an ordered
+    /// [`Registry`](crate::obs::Registry) — same render path as the
+    /// ledger profiles.
+    pub fn publish(&self, reg: &mut crate::obs::Registry) {
+        reg.gauge("makespan", self.makespan(), 3, "s");
+        reg.counter("events", self.events.len() as u64);
+        reg.counter("dropped_events", self.dropped_events as u64);
+        reg.counter("comm_marks", self.comm_marks as u64);
+    }
+
     fn push_event(&mut self, ev: Event) {
         if self.events.len() < MAX_EVENTS {
             self.events.push(ev);
@@ -754,7 +764,27 @@ impl Engine {
     }
 
     /// Export the recorded schedule for plots/benches.
+    ///
+    /// **Check `dropped_events` before trusting `events`.** The ring
+    /// caps at [`MAX_EVENTS`] (2¹⁸) records; past the cap the clocks
+    /// stay exact but further events are *silently absent from
+    /// `events[]`* — `dropped_events` in the exported JSON counts
+    /// exactly how many. A truncated timeline looks complete (it ends
+    /// mid-schedule with no marker), so any consumer plotting or
+    /// diffing `events[]` must treat `dropped_events > 0` as "this is
+    /// a prefix, not the run". This exporter also warns on stderr in
+    /// that case so an interactive `--trace-timeline` can't silently
+    /// pass a prefix off as the full schedule.
     pub fn timeline_json(&self) -> Value {
+        if self.dropped_events > 0 {
+            eprintln!(
+                "warning: engine timeline dropped {} event(s) past \
+                 the {MAX_EVENTS}-event cap; the exported `events[]` \
+                 is a prefix of the schedule (clocks remain exact — \
+                 see `dropped_events` in the JSON)",
+                self.dropped_events
+            );
+        }
         let events: Vec<Value> = self
             .events
             .iter()
@@ -1037,5 +1067,19 @@ mod tests {
         assert!(json.contains("\"makespan\""));
         assert!(json.contains("\"ring\""));
         assert_eq!(e.dropped_events(), 0);
+    }
+
+    #[test]
+    fn engine_publishes_ordered_gauges() {
+        let mut e = Engine::new(NodeProfile::homogeneous(2));
+        e.compute(1.0, &[1.0, 1.0]);
+        e.broadcast(2, 0.5);
+        let mut reg = crate::obs::Registry::new();
+        e.publish(&mut reg);
+        assert_eq!(reg.items()[0].name, "makespan");
+        assert_eq!(reg.get("makespan"), Some(e.makespan()));
+        assert_eq!(reg.get("events"), Some(e.events().len() as f64));
+        assert_eq!(reg.get("dropped_events"), Some(0.0));
+        assert_eq!(reg.get("comm_marks"), Some(e.comm_marks() as f64));
     }
 }

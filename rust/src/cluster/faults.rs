@@ -361,6 +361,18 @@ impl FaultState {
     pub fn record(&mut self, round: usize, node: usize, what: &'static str) {
         self.log.push(AppliedFault { round, node, what });
     }
+
+    /// Publish the applied-fault log as per-kind counters, in the
+    /// fixed kind order, through the one
+    /// [`Registry`](crate::obs::Registry) render path.
+    pub fn publish(&self, reg: &mut crate::obs::Registry) {
+        reg.counter("applied", self.log.len() as u64);
+        for what in ["crash", "restart", "degrade", "flap", "retry", "drop"]
+        {
+            let n = self.log.iter().filter(|e| e.what == what).count();
+            reg.counter(what, n as u64);
+        }
+    }
 }
 
 #[cfg(test)]

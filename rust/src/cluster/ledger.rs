@@ -14,6 +14,8 @@
 //! smaller, honest number (control-lane overlap and in-tree straggler
 //! hiding).
 
+use crate::obs::Registry;
+
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Ledger {
     /// size-d vector traversals (paper footnote 5)
@@ -117,24 +119,37 @@ impl Ledger {
         }
     }
 
-    /// Staleness histogram rendered for bench reports:
-    /// "s0 42 | s1 7, 1 fallback / 20 rounds". Empty when no async
-    /// round ran.
-    pub fn staleness_profile(&self) -> String {
+    /// Publish the cross-cutting run counters into an ordered
+    /// [`Registry`] — the machine-readable face of this ledger.
+    pub fn publish(&self, reg: &mut Registry) {
+        reg.counter("passes", self.comm_passes as u64);
+        reg.gauge("bytes", self.comm_bytes, 0, "B");
+        reg.gauge("comm", self.comm_seconds, 3, "s");
+        reg.gauge("compute", self.compute_seconds, 3, "s");
+        reg.counter("scalar_rounds", self.scalar_rounds as u64);
+        reg.gauge("seconds", self.seconds(), 3, "s");
+        self.publish_staleness(reg);
+        self.publish_faults(reg);
+    }
+
+    /// Publish the async-FS staleness histogram + fallback counters.
+    /// Publishes nothing when no async round ran (quiet profile).
+    pub fn publish_staleness(&self, reg: &mut Registry) {
         if self.async_rounds == 0 {
-            return String::new();
+            return;
         }
-        let hist = self
-            .staleness_hist
-            .iter()
-            .enumerate()
-            .map(|(s, &n)| format!("s{s} {n}"))
-            .collect::<Vec<_>>()
-            .join(" | ");
-        format!(
-            "{hist}, {} fallback / {} rounds",
-            self.fallback_rounds, self.async_rounds
-        )
+        reg.histogram("s", &self.staleness_hist);
+        reg.counter("fallback", self.fallback_rounds as u64);
+        reg.counter("rounds", self.async_rounds as u64);
+    }
+
+    /// Staleness histogram rendered for bench reports through the one
+    /// registry render path: "s0 42 | s1 7 | fallback 1 | rounds 20".
+    /// Empty when no async round ran.
+    pub fn staleness_profile(&self) -> String {
+        let mut reg = Registry::new();
+        self.publish_staleness(&mut reg);
+        reg.render()
     }
 
     /// Did the fault layer touch this run at all?
@@ -148,39 +163,52 @@ impl Ledger {
             > 0
     }
 
-    /// Fault counters rendered for bench reports:
-    /// "2 crash | 2 rejoin (0.1s recovery) | 3 lost | 5 retry |
-    /// 1 degrade | 4 flap". Empty when the run saw no fault activity.
-    pub fn fault_profile(&self) -> String {
+    /// Publish the fault-layer counters. Publishes nothing when the
+    /// run saw no fault activity (quiet profile).
+    pub fn publish_faults(&self, reg: &mut Registry) {
         if !self.has_fault_activity() {
-            return String::new();
+            return;
         }
-        format!(
-            "{} crash | {} rejoin ({:.3}s recovery) | {} lost | {} retry | {} degrade | {} flap",
-            self.crash_events,
-            self.rejoin_rebases,
-            self.recovery_seconds,
-            self.lost_messages,
-            self.retry_rounds,
-            self.degrade_events,
-            self.flap_events,
-        )
+        reg.counter("crash", self.crash_events as u64);
+        reg.counter("rejoin", self.rejoin_rebases as u64);
+        reg.gauge("recovery", self.recovery_seconds, 3, "s");
+        reg.counter("lost", self.lost_messages as u64);
+        reg.counter("retry", self.retry_rounds as u64);
+        reg.counter("degrade", self.degrade_events as u64);
+        reg.counter("flap", self.flap_events as u64);
+    }
+
+    /// Fault counters rendered for bench reports through the one
+    /// registry render path: "crash 2 | rejoin 2 | recovery 0.125s |
+    /// lost 3 | retry 5 | degrade 1 | flap 4". Empty when the run saw
+    /// no fault activity.
+    pub fn fault_profile(&self) -> String {
+        let mut reg = Registry::new();
+        self.publish_faults(&mut reg);
+        reg.render()
+    }
+
+    /// Publish the mean per-level payload of the sparse reductions as
+    /// `L0..Ln` KB gauges. Publishes nothing when no sparse reduction
+    /// ran.
+    pub fn publish_levels(&self, reg: &mut Registry) {
+        if self.sparse_reductions == 0 {
+            return;
+        }
+        let n = self.sparse_reductions as f64;
+        for (l, &b) in self.level_bytes.iter().enumerate() {
+            reg.gauge(format!("L{l}"), b / n / 1024.0, 1, "KB");
+        }
     }
 
     /// Mean per-level payload of the sparse reductions, rendered for
-    /// bench reports: "L0 24.0KB | L1 31.5KB | ...". Empty string when
-    /// no sparse reduction ran.
+    /// bench reports through the one registry render path:
+    /// "L0 24.0KB | L1 31.5KB | ...". Empty string when no sparse
+    /// reduction ran.
     pub fn level_profile(&self) -> String {
-        if self.sparse_reductions == 0 {
-            return String::new();
-        }
-        let n = self.sparse_reductions as f64;
-        self.level_bytes
-            .iter()
-            .enumerate()
-            .map(|(l, &b)| format!("L{l} {:.1}KB", b / n / 1024.0))
-            .collect::<Vec<_>>()
-            .join(" | ")
+        let mut reg = Registry::new();
+        self.publish_levels(&mut reg);
+        reg.render()
     }
 }
 
@@ -218,7 +246,11 @@ mod tests {
         assert_eq!(l.fallback_rounds, 1);
         let p = l.staleness_profile();
         assert!(p.starts_with("s0 3 | s1 1 | s2 1"), "{p}");
-        assert!(p.contains("1 fallback / 2 rounds"), "{p}");
+        assert!(p.contains("fallback 1 | rounds 2"), "{p}");
+        // the profile IS the registry render — one render path
+        let mut reg = Registry::new();
+        l.publish_staleness(&mut reg);
+        assert_eq!(p, reg.render());
     }
 
     #[test]
@@ -236,8 +268,16 @@ mod tests {
         };
         assert!(l.has_fault_activity());
         let p = l.fault_profile();
-        assert!(p.starts_with("2 crash | 2 rejoin (0.125s recovery)"), "{p}");
-        assert!(p.contains("3 lost | 5 retry"), "{p}");
+        assert!(
+            p.starts_with("crash 2 | rejoin 2 | recovery 0.125s"),
+            "{p}"
+        );
+        assert!(p.contains("lost 3 | retry 5"), "{p}");
+        assert!(p.contains("degrade 0 | flap 0"), "{p}");
+        let mut reg = Registry::new();
+        l.publish_faults(&mut reg);
+        assert_eq!(p, reg.render());
+        assert_eq!(reg.get("crash"), Some(2.0));
     }
 
     #[test]
@@ -251,5 +291,26 @@ mod tests {
         let profile = l.level_profile();
         assert!(profile.starts_with("L0 2.0KB"), "{profile}");
         assert!(profile.contains("L2 0.2KB"), "{profile}");
+        let mut reg = Registry::new();
+        l.publish_levels(&mut reg);
+        assert_eq!(profile, reg.render());
+    }
+
+    #[test]
+    fn full_publish_orders_core_counters_first() {
+        let l = Ledger {
+            comm_passes: 4.0,
+            comm_bytes: 320.0,
+            scalar_rounds: 3,
+            ..Ledger::default()
+        };
+        let mut reg = Registry::new();
+        l.publish(&mut reg);
+        assert_eq!(reg.items()[0].name, "passes");
+        assert_eq!(reg.get("passes"), Some(4.0));
+        assert_eq!(reg.get("scalar_rounds"), Some(3.0));
+        // quiet run: no staleness / fault metrics published
+        assert_eq!(reg.get("rounds"), None);
+        assert_eq!(reg.get("crash"), None);
     }
 }

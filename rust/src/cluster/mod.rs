@@ -39,6 +39,7 @@ pub use scratch::NodeScratch;
 use crate::data::dataset::Dataset;
 use crate::data::partition::Partition;
 use crate::linalg::sparse::{SparseVec, SupportMap};
+use crate::obs;
 use crate::util::json::Value;
 use self::allreduce::Reduced;
 use self::engine::Lane;
@@ -120,6 +121,11 @@ pub struct Cluster {
     /// when no plan is installed — and an installed *empty* plan
     /// behaves bit-identically to `None` (`tests/faults.rs` pins it)
     pub faults: Option<FaultState>,
+    /// flight-recorder sink (`--metrics-out`); `None` means recording
+    /// is off and every `record_*` hook is an early-return — the off
+    /// path is bit-identical (`tests/obs.rs` pins it). The recorder
+    /// only *observes*: it charges no virtual time, passes, or bytes.
+    recorder: Option<Box<dyn obs::Recorder>>,
 }
 
 impl Cluster {
@@ -169,6 +175,7 @@ impl Cluster {
             engine,
             alive,
             faults: None,
+            recorder: None,
         }
     }
 
@@ -194,7 +201,60 @@ impl Cluster {
                 .faults
                 .as_ref()
                 .map(|s| FaultState::new(s.plan.clone())),
+            // a fork is a new run: it does not inherit the sink
+            recorder: None,
         }
+    }
+
+    /// Install a flight-recorder sink (see [`crate::obs`]). The
+    /// manifest should be recorded immediately after, before the
+    /// driver runs.
+    pub fn set_recorder(&mut self, rec: Box<dyn obs::Recorder>) {
+        self.recorder = Some(rec);
+    }
+
+    /// Is a recorder installed? Drivers cache this once per run
+    /// (via [`crate::obs::RoundObs`]) so the off path costs one branch.
+    pub fn is_recording(&self) -> bool {
+        self.recorder.is_some()
+    }
+
+    /// Emit the run-manifest header record (no-op when off).
+    pub fn record_manifest(&mut self, m: &obs::RunManifest) {
+        if let Some(r) = self.recorder.as_mut() {
+            r.manifest(m);
+        }
+    }
+
+    /// Emit one round record (no-op when off).
+    pub fn record_round(&mut self, rec: &obs::RoundRecord) {
+        if let Some(r) = self.recorder.as_mut() {
+            r.round(rec);
+        }
+    }
+
+    /// Flush and drop the sink (end of run). Safe to call when off.
+    pub fn finish_recording(&mut self) {
+        if let Some(mut r) = self.recorder.take() {
+            r.close();
+        }
+    }
+
+    /// Applied-fault log length — the watermark [`crate::obs::RoundObs`]
+    /// diffs to attribute fault events to rounds. 0 without a plan.
+    pub fn fault_log_len(&self) -> usize {
+        self.faults.as_ref().map_or(0, |s| s.log.len())
+    }
+
+    /// One applied-fault log entry as `(round, node, what)`.
+    pub fn fault_log_entry(
+        &self,
+        i: usize,
+    ) -> Option<(usize, usize, &'static str)> {
+        self.faults
+            .as_ref()
+            .and_then(|s| s.log.get(i))
+            .map(|e| (e.round, e.node, e.what))
     }
 
     /// Install a per-node speed profile (resets the engine's clocks —

@@ -137,7 +137,11 @@
 //!   payload the direction allreduce moves), its bounded-staleness
 //!   asynchronous variant ([`algo::async_fs`]), SQM, Hybrid, parameter
 //!   mixing and the auto-switching extension.
-//! - [`metrics`] — AUPRC, convergence traces, run recording.
+//! - [`metrics`] — AUPRC, convergence traces, run recording, and the
+//!   offline report reader (`metrics::report::RecordedRun`).
+//! - [`obs`] — the flight recorder: per-round telemetry records, the
+//!   ordered metrics registry, and the JSONL sink (see
+//!   `## Observability` below).
 //! - `runtime` — PJRT executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); the dense three-layer path.
 //!   Gated behind the off-by-default `xla` cargo feature so the
@@ -158,17 +162,20 @@
 //!    master materializes full-d exactly once, into `RunResult::w`;
 //!    any other O(d) buffer silently re-densifies the O(|U|) loop.
 //! 2. **no-wall-clock** — `Instant`/`SystemTime` are banned in `algo/`,
-//!    `cluster/engine.rs`, `cluster/allreduce.rs` and
-//!    `cluster/faults.rs`: all timing flows through the engine's
-//!    virtual clocks so runs (and seeded fault replays) are
-//!    reproducible.
+//!    `cluster/engine.rs`, `cluster/allreduce.rs`, `cluster/faults.rs`
+//!    and `obs/`: all timing flows through the engine's virtual
+//!    clocks so runs (and seeded fault replays, and recorded
+//!    telemetry streams) are reproducible.
 //!    (The measured-threading sites in `cluster/mod.rs` and
 //!    `util/timer.rs` are outside the rule's scope by design — they
 //!    *feed* the virtual clocks.)
 //! 3. **no-unordered-iteration** — `HashMap`/`HashSet` are banned in
-//!    code feeding reductions or wire payloads (`algo/`, `cluster/`,
-//!    `objective/`, `linalg/`): iteration order must be deterministic
-//!    or bit-identical traces die. Use BTree or sorted Vecs.
+//!    code feeding reductions, wire payloads, or telemetry streams
+//!    (`algo/`, `cluster/`, `objective/`, `linalg/`, `obs/`):
+//!    iteration order must be deterministic or bit-identical traces
+//!    (and line-diffable record streams) die. Use BTree or sorted
+//!    Vecs — the [`obs::Registry`] is `Vec`-indexed for exactly this
+//!    reason.
 //! 4. **ledger-pairing** — `reduce_parts*`/`broadcast*`/`map_reduce*`/
 //!    `async_quorum_reduce*` may only be called on a cluster handle
 //!    (receiver containing `cluster`), and raw `tree_sum` calls are
@@ -198,6 +205,61 @@
 //! comm-byte↔event pairing asserts in [`cluster::Cluster`]. CI runs
 //! the full tier-1 suite under `--features audit`.
 //!
+//! ## Observability
+//!
+//! The flight recorder ([`obs`]) turns a run into a replayable record
+//! stream: `--metrics-out run.jsonl` streams one JSON line per outer
+//! round behind the [`obs::Recorder`] trait.
+//!
+//! **Record schema** (version [`obs::SCHEMA_VERSION`]). Line 1 is the
+//! run manifest (`kind:"manifest"`): config, seeds, dataset shape and
+//! git-describe-free build info (package name + version). Every
+//! following line is one `kind:"round"` record — [`obs::RoundRecord`]
+//! is the authoritative field list — carrying
+//!
+//! - the round's trace mirror (`f`, `gnorm`, `auprc`, cumulative
+//!   `passes`/`secs`, `sg_hits`) — exactly the round's
+//!   [`metrics::TracePoint`], so the trace rebuilds bit-for-bit;
+//! - algorithm decisions: per-node safeguard replacements
+//!   (`sg_replaced`), the combined-test verdict (`combined_ok`), the
+//!   fallback reason (`"empty-quorum"` | `"safeguard"`), the accepted
+//!   step size and the strong-Wolfe trial count (`null` on rounds
+//!   that stopped before the decision);
+//! - async state: quorum composition, per-contribution staleness,
+//!   rejoin re-base count; fleet weather: live membership + the fault
+//!   events applied this round; compact-master state: density-gate
+//!   decision + live |U|;
+//! - ledger/engine *deltas* over the round (`d_passes`, `d_bytes`,
+//!   `d_scalar`, `d_makespan`, `d_level_bytes`) and the cumulative
+//!   `recovery_s`.
+//!
+//! Non-finite floats serialize as `null` (the auprc NaN sentinel);
+//! finite floats print shortest-round-trip, so
+//! [`util::json::parse`] recovers identical bits.
+//!
+//! **Sink guarantees.** Recording charges zero virtual time, passes,
+//! or bytes — a recorder only *reads* the [`cluster::Ledger`] and
+//! [`cluster::Engine`]. Steady-state rounds stay allocation-free: the
+//! record's vectors and the JSONL sink's buffers are pre-sized and
+//! reused (the `audit` feature pins zero acquisitions per recorded
+//! round in `tests/obs.rs`).
+//!
+//! **Off-path bit-identity.** With no recorder installed every hook
+//! is an early-return on one cached branch; traces, iterates and
+//! ledgers are byte-for-byte the pre-recorder behavior
+//! (`tests/obs.rs` pins this against a seeded async+fault run).
+//!
+//! **Post-hoc analysis.** `metrics::report::RecordedRun::from_jsonl`
+//! validates a stream (manifest first, consecutive rounds) and
+//! rebuilds the trace + ledger, so `psgd --report-from run.jsonl`
+//! reproduces the in-process markdown report byte-for-byte offline;
+//! `--report-from a.jsonl b.jsonl` diffs two runs and flags the first
+//! divergent round (the PR-7 bitwise-replay property, made
+//! diagnosable); `--check` validates the schema for CI. The ordered
+//! [`obs::Registry`] (counters/gauges/histograms) is the one render
+//! path behind every `*_profile()` string the ledger, engine and
+//! fault layer expose.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -223,6 +285,7 @@ pub mod linalg;
 pub mod loss;
 pub mod metrics;
 pub mod objective;
+pub mod obs;
 pub mod opt;
 #[cfg(feature = "xla")]
 pub mod runtime;

@@ -26,6 +26,8 @@ use psgd::data::libsvm;
 use psgd::loss::LossKind;
 use psgd::bench::figure1::{self, Figure1Config, Panel};
 use psgd::bench::plot::AsciiPlot;
+use psgd::metrics::report::{diff_recorded, render_run_report, RecordedRun};
+use psgd::obs::{JsonlRecorder, RunManifest};
 use psgd::util::cli::Args;
 use psgd::util::config::Config;
 use psgd::util::validate::validate_train;
@@ -90,6 +92,25 @@ COMMANDS
                [--trace-timeline out.json]  export the event engine's
                                             per-node schedule + the
                                             resilience counter block
+               [--metrics-out run.jsonl]    flight recorder: stream one
+                                            typed record per outer round
+                                            (JSONL; manifest header
+                                            first) and print the run
+                                            report. Recording charges
+                                            no simulated time or bytes;
+                                            results are bit-identical
+                                            with or without it.
+
+MODES (no subcommand)
+  --report-from run.jsonl          offline run report from a recorded
+                                   stream (byte-identical to the one
+                                   the recording run printed)
+  --report-from run.jsonl --check  validate only: manifest first,
+                                   matching schema, one record per
+                                   round in order
+  --report-from a.jsonl b.jsonl    diff two recorded runs; names the
+                                   first divergent round and fields
+                                   (exit 1 when they differ)
   figure1    regenerate the paper's Figure 1 panels for one node count
                --nodes P [--full] [--out-dir results/] [--iters N]
   info       show the AOT artifact manifest and PJRT platform
@@ -99,12 +120,76 @@ COMMANDS
 
 fn main() {
     let args = Args::from_env();
+    // `--report-from a.jsonl [b.jsonl]` is a top-level mode, not a
+    // subcommand: the parser binds the first file as the flag's value
+    // and any second file lands as a positional, so this dispatch must
+    // run before the positional match below.
+    if args.has("report-from") {
+        report_from(&args);
+        return;
+    }
     match args.positional.first().map(String::as_str) {
         Some("gen-data") => gen_data(&args),
         Some("train") => train(&args),
         Some("figure1") => figure1_cmd(&args),
         Some("info") => info(&args),
         _ => print!("{USAGE}"),
+    }
+}
+
+/// Post-hoc analysis of `--metrics-out` streams, fully offline: one
+/// file renders the run report (or just validates with `--check`),
+/// two files diff round-by-round and name the first divergence.
+fn report_from(args: &Args) {
+    let mut files: Vec<&str> = args
+        .get("report-from")
+        .map(|v| v.split(',').filter(|s| !s.is_empty()).collect())
+        .unwrap_or_default();
+    files.extend(args.positional.iter().map(String::as_str));
+    let load = |path: &str| -> RecordedRun {
+        let src = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("error: cannot read {path}: {e}");
+            std::process::exit(2);
+        });
+        RecordedRun::from_jsonl(&src).unwrap_or_else(|e| {
+            eprintln!("error: {path}: {e}");
+            std::process::exit(2);
+        })
+    };
+    match files.as_slice() {
+        [one] => {
+            let run = load(one);
+            if args.bool("check", false) {
+                println!(
+                    "{one}: ok ({} rounds, method {})",
+                    run.rounds.len(),
+                    run.trace.label
+                );
+            } else {
+                println!("{}", run.report());
+            }
+        }
+        [a, b] => {
+            let ra = load(a);
+            let rb = load(b);
+            match diff_recorded(&ra, &rb) {
+                None => println!(
+                    "runs are identical ({} rounds)",
+                    ra.rounds.len()
+                ),
+                Some(msg) => {
+                    println!("{msg}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => {
+            eprintln!(
+                "error: --report-from expects one file (render its run \
+                 report) or two (diff them)"
+            );
+            std::process::exit(2);
+        }
     }
 }
 
@@ -342,6 +427,39 @@ fn train(args: &Args) {
         other => panic!("unknown method {other:?}"),
     };
 
+    // --metrics-out: install the flight-recorder sink and stream the
+    // run-manifest header before the first round
+    let metrics_out = args.get("metrics-out");
+    if let Some(path) = metrics_out {
+        let rec = JsonlRecorder::create(path).unwrap_or_else(|e| {
+            eprintln!("error: cannot create {path}: {e}");
+            std::process::exit(2);
+        });
+        cluster.set_recorder(Box::new(rec));
+        let is_async = method == "fs" && args.bool("async-fs", false);
+        cluster.record_manifest(&RunManifest {
+            method: driver.name(),
+            nodes,
+            threads: cluster.threads,
+            examples: cluster.shards.iter().map(|s| s.n_examples()).sum(),
+            features: cluster.dim,
+            loss: loss.name().to_string(),
+            lam,
+            iters,
+            seed,
+            master: args.get_or("master", "auto").to_string(),
+            pipeline: args.bool("pipeline", false),
+            staleness: is_async.then(|| args.usize("staleness", 1)),
+            quorum: is_async.then(|| {
+                args.usize("quorum", nodes.saturating_sub(1).max(1))
+            }),
+            fault: args.get("fault").map(str::to_string),
+            fault_seed: args
+                .get("fault")
+                .map(|_| args.usize("fault-seed", 42) as u64),
+        });
+    }
+
     eprintln!(
         "running {} on {} nodes (loss={}, λ={lam}, s={epochs})",
         driver.name(),
@@ -374,6 +492,13 @@ fn train(args: &Args) {
         last.seconds,
         last.auprc
     );
+    if let Some(path) = metrics_out {
+        cluster.finish_recording();
+        // the same render `--report-from PATH` reproduces offline,
+        // byte-for-byte (tests/obs.rs pins the equality)
+        println!("\n{}", render_run_report(&run.trace, &run.ledger, run.f));
+        eprintln!("metrics written to {path}");
+    }
     if let Some(path) = args.get("trace") {
         run.trace.to_table(f_star).save(path).expect("write trace");
         eprintln!("trace written to {path}");

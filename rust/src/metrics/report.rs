@@ -3,9 +3,17 @@
 //! final metrics, safeguard counts, and (when a run carried a
 //! [`Ledger`]) the resilience story: async staleness/fallback counters
 //! plus the fault-layer accounting.
+//!
+//! Post-hoc: [`RecordedRun::from_jsonl`] reads a `--metrics-out`
+//! telemetry stream back and reproduces the in-process run report
+//! byte-for-byte ([`render_run_report`] is the single render path both
+//! sides share); [`diff_recorded`] compares two streams and names the
+//! first divergent round.
 
 use crate::cluster::Ledger;
-use crate::metrics::trace::Trace;
+use crate::metrics::trace::{Trace, TracePoint};
+use crate::obs::SCHEMA_VERSION;
+use crate::util::json::{self, Value};
 use std::fmt::Write as _;
 
 /// Comparison report over several method traces against a shared f*.
@@ -155,6 +163,202 @@ impl<'a> Report<'a> {
     }
 }
 
+/// The single-run report both the CLI (in-process, at the end of a
+/// `--metrics-out` run) and the offline reader
+/// ([`RecordedRun::report`]) render — one implementation, so the two
+/// are byte-identical on the same (trace, ledger, f*). The resilience
+/// table appears iff the ledger saw async rounds or fault activity.
+pub fn render_run_report(
+    trace: &Trace,
+    ledger: &Ledger,
+    f_star: f64,
+) -> String {
+    let traces = std::slice::from_ref(trace);
+    let mut report = Report::new(traces, f_star);
+    if ledger.async_rounds > 0 || ledger.has_fault_activity() {
+        report.ledgers = vec![(trace.label.clone(), ledger.clone())];
+    }
+    report.render("run")
+}
+
+/// A `--metrics-out` JSONL stream read back: the parsed manifest and
+/// round records, plus the [`Trace`] and resilience [`Ledger`] rebuilt
+/// from them (the trace from each record's trace-mirror fields, the
+/// ledger by replaying `record_async_round` and the fault events).
+pub struct RecordedRun {
+    /// parsed `kind:"manifest"` header
+    pub manifest: Value,
+    /// parsed `kind:"round"` records, in round order
+    pub rounds: Vec<Value>,
+    /// trace rebuilt bit-for-bit from the trace-mirror fields
+    pub trace: Trace,
+    /// resilience counters replayed from the records
+    pub ledger: Ledger,
+    /// the last recorded objective value (= the run's final f)
+    pub f_star: f64,
+}
+
+impl RecordedRun {
+    /// Parse and validate a telemetry stream: manifest first, matching
+    /// schema, then exactly one `round` record per outer round, in
+    /// order. Errors name the offending line (1-based).
+    pub fn from_jsonl(src: &str) -> Result<RecordedRun, String> {
+        let mut lines = src.lines().filter(|l| !l.trim().is_empty());
+        let first = lines
+            .next()
+            .ok_or_else(|| "empty stream: no manifest line".to_string())?;
+        let manifest =
+            json::parse(first).map_err(|e| format!("line 1: {e}"))?;
+        if manifest.get("kind").and_then(Value::as_str) != Some("manifest")
+        {
+            return Err(
+                "line 1: first record must have kind \"manifest\"".into()
+            );
+        }
+        let schema = manifest.get("schema").and_then(Value::as_usize);
+        if schema != Some(SCHEMA_VERSION as usize) {
+            return Err(format!(
+                "unsupported schema {schema:?} (this reader understands {SCHEMA_VERSION})"
+            ));
+        }
+        let label = manifest
+            .get("method")
+            .and_then(Value::as_str)
+            .unwrap_or("run")
+            .to_string();
+        let mut trace = Trace::new(label);
+        let mut ledger = Ledger::default();
+        let mut rounds: Vec<Value> = Vec::new();
+        let mut stale_buf: Vec<usize> = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let lineno = i + 2;
+            let v = json::parse(line)
+                .map_err(|e| format!("line {lineno}: {e}"))?;
+            if v.get("kind").and_then(Value::as_str) != Some("round") {
+                return Err(format!(
+                    "line {lineno}: expected kind \"round\""
+                ));
+            }
+            let round = v.get("round").and_then(Value::as_usize);
+            if round != Some(i) {
+                return Err(format!(
+                    "line {lineno}: round {round:?}, expected {i} \
+                     (one record per round, in order)"
+                ));
+            }
+            // null (the non-finite sentinel) reads back as NaN
+            let num = |key: &str| {
+                v.get(key).and_then(Value::as_f64).unwrap_or(f64::NAN)
+            };
+            trace.push(TracePoint {
+                iter: i,
+                f: num("f"),
+                gnorm: num("gnorm"),
+                comm_passes: num("passes"),
+                seconds: num("secs"),
+                auprc: num("auprc"),
+                safeguard_hits: v
+                    .get("sg_hits")
+                    .and_then(Value::as_usize)
+                    .unwrap_or(0),
+            });
+            // replay the ledger exactly as the drivers fed it: one
+            // record_async_round per quorum-path round ...
+            if v.get("async").and_then(Value::as_bool) == Some(true) {
+                stale_buf.clear();
+                if let Some(xs) = v.get("staleness").and_then(Value::as_arr)
+                {
+                    stale_buf.extend(xs.iter().filter_map(Value::as_usize));
+                }
+                let fell_back = v
+                    .get("fallback")
+                    .is_some_and(|f| !matches!(f, Value::Null));
+                ledger.record_async_round(&stale_buf, fell_back);
+            }
+            // ... one counter bump per applied fault event ...
+            if let Some(events) = v.get("faults").and_then(Value::as_arr) {
+                for ev in events {
+                    match ev.get("what").and_then(Value::as_str) {
+                        Some("crash") => ledger.crash_events += 1,
+                        Some("restart") => ledger.rejoin_rebases += 1,
+                        Some("degrade") => ledger.degrade_events += 1,
+                        Some("flap") => ledger.flap_events += 1,
+                        Some("drop") => ledger.lost_messages += 1,
+                        Some("retry") => ledger.retry_rounds += 1,
+                        _ => {}
+                    }
+                }
+            }
+            // ... and recovery seconds are recorded cumulative, so the
+            // last round's value is the run total
+            if let Some(rs) = v.get("recovery_s").and_then(Value::as_f64) {
+                ledger.recovery_seconds = rs;
+            }
+            rounds.push(v);
+        }
+        let f_star = trace
+            .last()
+            .map(|p| p.f)
+            .ok_or_else(|| "stream has no round records".to_string())?;
+        Ok(RecordedRun { manifest, rounds, trace, ledger, f_star })
+    }
+
+    /// The offline run report — byte-identical to what the recording
+    /// process printed ([`render_run_report`] on its own trace/ledger).
+    pub fn report(&self) -> String {
+        render_run_report(&self.trace, &self.ledger, self.f_star)
+    }
+}
+
+/// Keys whose values differ between two records, with both renderings.
+fn differing_fields(x: &Value, y: &Value) -> Vec<String> {
+    let (Value::Obj(mx), Value::Obj(my)) = (x, y) else {
+        return vec!["<record>".to_string()];
+    };
+    let mut keys: Vec<&String> = mx.keys().chain(my.keys()).collect();
+    keys.sort();
+    keys.dedup();
+    keys.into_iter()
+        .filter(|k| mx.get(*k) != my.get(*k))
+        .map(|k| {
+            let show = |m: &std::collections::BTreeMap<String, Value>| {
+                m.get(k).map_or("<absent>".to_string(), |v| v.to_json(0))
+            };
+            format!("{k}: {} vs {}", show(mx), show(my))
+        })
+        .collect()
+}
+
+/// Run-diff mode: `None` when the two streams describe identical runs,
+/// else a description of the first divergence — a manifest mismatch,
+/// the first divergent round (with the differing fields), or a length
+/// mismatch past the common prefix.
+pub fn diff_recorded(a: &RecordedRun, b: &RecordedRun) -> Option<String> {
+    if a.manifest != b.manifest {
+        return Some(format!(
+            "manifests differ: {}",
+            differing_fields(&a.manifest, &b.manifest).join("; ")
+        ));
+    }
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        if ra != rb {
+            return Some(format!(
+                "first divergent round: {i}\n  {}",
+                differing_fields(ra, rb).join("\n  ")
+            ));
+        }
+    }
+    if a.rounds.len() != b.rounds.len() {
+        return Some(format!(
+            "identical through round {}, then lengths differ: {} vs {} rounds",
+            a.rounds.len().min(b.rounds.len()).saturating_sub(1),
+            a.rounds.len(),
+            b.rounds.len()
+        ));
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +402,160 @@ mod tests {
         assert!(full.contains("## test run"));
         // no ledgers attached: the resilience section is omitted
         assert!(!full.contains("### resilience"));
+    }
+
+    /// The two-point async+fault fixture the golden and offline tests
+    /// share: hand-computable values, every table populated.
+    fn golden_fixture() -> (Trace, Ledger) {
+        let mut t = Trace::new("afs");
+        t.push(TracePoint {
+            iter: 0,
+            f: 1.5,
+            gnorm: 1.0,
+            comm_passes: 4.0,
+            seconds: 1.0,
+            auprc: f64::NAN,
+            safeguard_hits: 1,
+        });
+        t.push(TracePoint {
+            iter: 1,
+            f: 0.5,
+            gnorm: 0.5,
+            comm_passes: 8.0,
+            seconds: 1.5,
+            auprc: 0.75,
+            safeguard_hits: 0,
+        });
+        let mut ledger = Ledger {
+            crash_events: 1,
+            rejoin_rebases: 1,
+            recovery_seconds: 0.125,
+            lost_messages: 2,
+            retry_rounds: 3,
+            ..Ledger::default()
+        };
+        ledger.record_async_round(&[0, 0, 1], false);
+        ledger.record_async_round(&[0], true);
+        (t, ledger)
+    }
+
+    const GOLDEN_RUN_REPORT: &str = "\
+## run
+
+f* = 5.00000000e-1
+
+### passes to target gap
+
+| method | gap ≤ 1e-1 | gap ≤ 1e-2 | gap ≤ 1e-3 | gap ≤ 1e-4 |
+|---|---|---|---|---|
+| afs | 8 | 8 | 8 | 8 |
+
+### final state
+
+| method | iters | final gap | passes | sim-sec | auprc | safeguard hits |
+|---|---|---|---|---|---|---|
+| afs | 2 | 0.000e0 | 8 | 1.5 | 0.7500 | 1 |
+
+### resilience
+
+| method | async rounds | fallbacks | staleness | crashes | rejoins | recovery s | lost | retries | degrades | flaps |
+|---|---|---|---|---|---|---|---|---|---|---|
+| afs | 2 | 1 | s0:3 s1:1 | 1 | 1 | 0.125 | 2 | 3 | 0 | 0 |
+";
+
+    #[test]
+    fn golden_full_render_markdown_is_pinned() {
+        // pins the complete Report::render output (summary +
+        // resilience) for a seeded async+fault-shaped run — any render
+        // change must update this string consciously
+        let (trace, ledger) = golden_fixture();
+        let got = render_run_report(&trace, &ledger, 0.5);
+        assert_eq!(got, GOLDEN_RUN_REPORT);
+    }
+
+    /// The JSONL stream a recorded run of [`golden_fixture`] produces
+    /// (trimmed to the fields the reader consumes).
+    const GOLDEN_STREAM: &str = concat!(
+        "{\"kind\":\"manifest\",\"schema\":1,\"method\":\"afs\",\"nodes\":3}\n",
+        "{\"kind\":\"round\",\"round\":0,\"f\":1.5,\"gnorm\":1,\"auprc\":null,",
+        "\"passes\":4,\"secs\":1,\"sg_hits\":1,\"async\":true,",
+        "\"staleness\":[0,0,1],\"fallback\":null,",
+        "\"faults\":[{\"node\":1,\"what\":\"crash\"},{\"node\":1,\"what\":\"restart\"},",
+        "{\"node\":2,\"what\":\"drop\"},{\"node\":2,\"what\":\"drop\"},",
+        "{\"node\":0,\"what\":\"retry\"},{\"node\":0,\"what\":\"retry\"},",
+        "{\"node\":0,\"what\":\"retry\"}],\"recovery_s\":0.125}\n",
+        "{\"kind\":\"round\",\"round\":1,\"f\":0.5,\"gnorm\":0.5,\"auprc\":0.75,",
+        "\"passes\":8,\"secs\":1.5,\"sg_hits\":0,\"async\":true,",
+        "\"staleness\":[0],\"fallback\":\"safeguard\",\"recovery_s\":0.125}\n",
+    );
+
+    #[test]
+    fn from_jsonl_reproduces_the_in_process_report() {
+        let run = RecordedRun::from_jsonl(GOLDEN_STREAM).unwrap();
+        assert_eq!(run.rounds.len(), 2);
+        assert_eq!(run.trace.label, "afs");
+        assert_eq!(run.f_star, 0.5);
+        // the replayed ledger carries the fixture's counters ...
+        assert_eq!(run.ledger.async_rounds, 2);
+        assert_eq!(run.ledger.fallback_rounds, 1);
+        assert_eq!(run.ledger.staleness_hist, vec![3, 1]);
+        assert_eq!(run.ledger.crash_events, 1);
+        assert_eq!(run.ledger.lost_messages, 2);
+        assert_eq!(run.ledger.retry_rounds, 3);
+        // ... and the offline report is byte-identical to the
+        // in-process render of the same run
+        assert_eq!(run.report(), GOLDEN_RUN_REPORT);
+    }
+
+    #[test]
+    fn from_jsonl_rejects_malformed_streams() {
+        // no manifest first
+        let e = RecordedRun::from_jsonl(
+            "{\"kind\":\"round\",\"round\":0}\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("manifest"), "{e}");
+        // wrong schema
+        let e = RecordedRun::from_jsonl(
+            "{\"kind\":\"manifest\",\"schema\":99}\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("schema"), "{e}");
+        // out-of-order rounds
+        let e = RecordedRun::from_jsonl(concat!(
+            "{\"kind\":\"manifest\",\"schema\":1}\n",
+            "{\"kind\":\"round\",\"round\":1}\n",
+        ))
+        .unwrap_err();
+        assert!(e.contains("expected 0"), "{e}");
+        // manifest but zero rounds
+        let e = RecordedRun::from_jsonl(
+            "{\"kind\":\"manifest\",\"schema\":1}\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("no round records"), "{e}");
+    }
+
+    #[test]
+    fn diff_finds_first_divergent_round() {
+        let a = RecordedRun::from_jsonl(GOLDEN_STREAM).unwrap();
+        let b = RecordedRun::from_jsonl(GOLDEN_STREAM).unwrap();
+        assert_eq!(diff_recorded(&a, &b), None);
+        // perturb round 1's f
+        let perturbed = GOLDEN_STREAM.replace("\"f\":0.5", "\"f\":0.625");
+        let c = RecordedRun::from_jsonl(&perturbed).unwrap();
+        let msg = diff_recorded(&a, &c).unwrap();
+        assert!(msg.contains("first divergent round: 1"), "{msg}");
+        assert!(msg.contains("f: 0.5 vs 0.625"), "{msg}");
+        // a truncated stream diverges by length
+        let shorter: String = GOLDEN_STREAM
+            .lines()
+            .take(2)
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let d = RecordedRun::from_jsonl(&shorter).unwrap();
+        let msg = diff_recorded(&a, &d).unwrap();
+        assert!(msg.contains("lengths differ"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,262 @@
+//! JSONL telemetry sink: one line per record, manifest first.
+//!
+//! The round writer is hand-rolled over a reusable `String` buffer —
+//! after the first few rounds size it, a steady-state `round()` call
+//! performs **zero heap acquisitions** (pinned by the `audit`-feature
+//! test in `tests/obs.rs`): integer/float formatting goes through
+//! `core::fmt`'s stack buffers, the line buffer and the `BufWriter`'s
+//! fixed 8 KiB block are reused, and a flush is a plain syscall.
+//! Numbers are emitted via [`crate::util::json::write_num`], the exact
+//! same path `Value::Num` uses, so `util::json::parse` round-trips
+//! every float to identical bits and non-finite values (the auprc NaN
+//! sentinel) become `null`.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+
+use super::{Recorder, RoundRecord, RunManifest};
+use crate::util::json::write_num;
+
+/// Streams records as JSON Lines into any `io::Write` sink.
+pub struct JsonlRecorder<W: io::Write + Send> {
+    out: W,
+    buf: String,
+    failed: bool,
+}
+
+impl JsonlRecorder<BufWriter<File>> {
+    /// The `--metrics-out PATH` constructor.
+    pub fn create(
+        path: &str,
+    ) -> io::Result<JsonlRecorder<BufWriter<File>>> {
+        Ok(JsonlRecorder::new(BufWriter::new(File::create(path)?)))
+    }
+}
+
+impl<W: io::Write + Send> JsonlRecorder<W> {
+    pub fn new(out: W) -> JsonlRecorder<W> {
+        JsonlRecorder {
+            out,
+            buf: String::with_capacity(2048),
+            failed: false,
+        }
+    }
+
+    fn emit(&mut self) {
+        if self.failed {
+            return;
+        }
+        self.buf.push('\n');
+        if let Err(e) = self.out.write_all(self.buf.as_bytes()) {
+            // never fail the run over telemetry: warn once, go quiet
+            self.failed = true;
+            eprintln!(
+                "warning: metrics sink write failed ({e}); \
+                 recording disabled for the rest of the run"
+            );
+        }
+    }
+}
+
+impl<W: io::Write + Send> Recorder for JsonlRecorder<W> {
+    fn manifest(&mut self, m: &RunManifest) {
+        self.buf.clear();
+        let v = m.to_value().to_json(0);
+        self.buf.push_str(&v);
+        self.emit();
+    }
+
+    fn round(&mut self, rec: &RoundRecord) {
+        self.buf.clear();
+        write_round_line(&mut self.buf, rec);
+        self.emit();
+    }
+
+    fn close(&mut self) {
+        if !self.failed {
+            if let Err(e) = self.out.flush() {
+                eprintln!("warning: metrics sink flush failed ({e})");
+            }
+        }
+    }
+}
+
+fn write_usize_arr(buf: &mut String, xs: &[usize]) {
+    buf.push('[');
+    for (i, &x) in xs.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        let _ = write!(buf, "{x}");
+    }
+    buf.push(']');
+}
+
+fn write_f64_arr(buf: &mut String, xs: &[f64]) {
+    buf.push('[');
+    for (i, &x) in xs.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        write_num(buf, x);
+    }
+    buf.push(']');
+}
+
+/// Serialize one round record. Key order is fixed so two runs of the
+/// same build produce line-diffable streams; the reader is
+/// order-insensitive.
+fn write_round_line(buf: &mut String, r: &RoundRecord) {
+    buf.push_str("{\"kind\":\"round\",\"round\":");
+    let _ = write!(buf, "{}", r.round);
+    buf.push_str(",\"f\":");
+    write_num(buf, r.f);
+    buf.push_str(",\"gnorm\":");
+    write_num(buf, r.gnorm);
+    buf.push_str(",\"auprc\":");
+    write_num(buf, r.auprc);
+    buf.push_str(",\"passes\":");
+    write_num(buf, r.passes);
+    buf.push_str(",\"secs\":");
+    write_num(buf, r.secs);
+    buf.push_str(",\"sg_hits\":");
+    let _ = write!(buf, "{}", r.sg_hits);
+    buf.push_str(",\"sg_replaced\":");
+    write_usize_arr(buf, &r.sg_replaced);
+    buf.push_str(",\"combined_ok\":");
+    match r.combined_ok {
+        Some(true) => buf.push_str("true"),
+        Some(false) => buf.push_str("false"),
+        None => buf.push_str("null"),
+    }
+    buf.push_str(",\"fallback\":");
+    match r.fallback {
+        // static reason tokens: no escaping needed
+        Some(why) => {
+            buf.push('"');
+            buf.push_str(why);
+            buf.push('"');
+        }
+        None => buf.push_str("null"),
+    }
+    buf.push_str(",\"step\":");
+    match r.step {
+        Some(t) => write_num(buf, t),
+        None => buf.push_str("null"),
+    }
+    buf.push_str(",\"ls_evals\":");
+    match r.ls_evals {
+        Some(n) => {
+            let _ = write!(buf, "{n}");
+        }
+        None => buf.push_str("null"),
+    }
+    buf.push_str(",\"async\":");
+    buf.push_str(if r.is_async { "true" } else { "false" });
+    buf.push_str(",\"quorum\":");
+    write_usize_arr(buf, &r.quorum);
+    buf.push_str(",\"staleness\":");
+    write_usize_arr(buf, &r.staleness);
+    buf.push_str(",\"rebased\":");
+    let _ = write!(buf, "{}", r.rebased);
+    buf.push_str(",\"members\":");
+    write_usize_arr(buf, &r.members);
+    buf.push_str(",\"faults\":[");
+    for i in 0..r.fault_nodes.len() {
+        if i > 0 {
+            buf.push(',');
+        }
+        buf.push_str("{\"node\":");
+        let _ = write!(buf, "{}", r.fault_nodes[i]);
+        buf.push_str(",\"what\":\"");
+        buf.push_str(r.fault_whats[i]);
+        buf.push_str("\"}");
+    }
+    buf.push(']');
+    buf.push_str(",\"compact\":");
+    buf.push_str(if r.compact { "true" } else { "false" });
+    buf.push_str(",\"live_u\":");
+    let _ = write!(buf, "{}", r.live_u);
+    buf.push_str(",\"d_passes\":");
+    write_num(buf, r.d_passes);
+    buf.push_str(",\"d_bytes\":");
+    write_num(buf, r.d_bytes);
+    buf.push_str(",\"d_scalar\":");
+    let _ = write!(buf, "{}", r.d_scalar);
+    buf.push_str(",\"d_makespan\":");
+    write_num(buf, r.d_makespan);
+    buf.push_str(",\"d_level_bytes\":");
+    write_f64_arr(buf, &r.d_level_bytes);
+    buf.push_str(",\"recovery_s\":");
+    write_num(buf, r.recovery_s);
+    buf.push('}');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn round_line_is_valid_json_with_null_sentinels() {
+        let mut r = RoundRecord::with_capacity(4);
+        r.round = 3;
+        r.f = 0.5;
+        r.gnorm = 1.25e-3;
+        r.auprc = f64::NAN; // sentinel: test set absent
+        r.passes = 12.0;
+        r.secs = 3.5;
+        r.sg_hits = 1;
+        r.sg_replaced.push(2);
+        r.combined_ok = Some(false);
+        r.fallback = Some("safeguard");
+        r.is_async = true;
+        r.quorum.extend([0, 2, 3]);
+        r.staleness.extend([0, 1, 0]);
+        r.members.extend([0, 1, 2, 3]);
+        r.fault_nodes.push(1);
+        r.fault_whats.push("crash");
+        r.live_u = 100;
+        r.d_passes = 4.0;
+        r.d_level_bytes.push(2048.0);
+        let mut buf = String::new();
+        write_round_line(&mut buf, &r);
+        let v = json::parse(&buf).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("round"));
+        assert_eq!(v.get("round").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("auprc"), Some(&json::Value::Null));
+        assert_eq!(v.get("combined_ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("fallback").unwrap().as_str(), Some("safeguard"));
+        assert_eq!(v.get("step"), Some(&json::Value::Null));
+        assert_eq!(v.get("quorum").unwrap().as_arr().unwrap().len(), 3);
+        let faults = v.get("faults").unwrap().as_arr().unwrap();
+        assert_eq!(faults[0].get("what").unwrap().as_str(), Some("crash"));
+        // float fields round-trip to identical bits
+        assert_eq!(
+            v.get("gnorm").unwrap().as_f64().unwrap().to_bits(),
+            r.gnorm.to_bits()
+        );
+    }
+
+    #[test]
+    fn recorder_streams_manifest_then_rounds() {
+        let mut rec = JsonlRecorder::new(Vec::new());
+        rec.manifest(&RunManifest {
+            method: "fs".to_string(),
+            nodes: 2,
+            ..RunManifest::default()
+        });
+        let r = RoundRecord::with_capacity(2);
+        rec.round(&r);
+        rec.close();
+        let text = String::from_utf8(rec.out).unwrap();
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.is_empty()).collect();
+        assert_eq!(lines.len(), 2);
+        let m = json::parse(lines[0]).unwrap();
+        assert_eq!(m.get("kind").unwrap().as_str(), Some("manifest"));
+        let v = json::parse(lines[1]).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("round"));
+    }
+}

@@ -1,0 +1,398 @@
+//! Flight recorder: one typed [`RoundRecord`] per outer round, behind
+//! a zero-cost-when-off [`Recorder`] trait.
+//!
+//! Every driver (`fs`, `async-fs`, `param-mix`, `sqm`) threads a
+//! [`RoundObs`] through its outer loop: `begin()` snapshots the
+//! [`Ledger`](crate::cluster::Ledger)/[`Engine`](crate::cluster::Engine)
+//! baselines at the top of a round, the driver fills in its decisions
+//! (safeguard outcomes, combined-test verdict, fallback reason, step
+//! size, line-search trials, quorum composition, staleness, weather),
+//! and `commit()` computes the per-round *deltas* (comm bytes,
+//! makespan, per-level payload, fault events) and hands the record to
+//! the cluster's installed [`Recorder`] sink.
+//!
+//! Guarantees (pinned by `tests/obs.rs`):
+//!
+//! - **zero virtual cost**: recording only *reads* the ledger and the
+//!   engine; it never charges time, passes, or bytes;
+//! - **off path bit-identical**: with no recorder installed every hook
+//!   is an early-return on a cached `bool` — the run's arithmetic and
+//!   its trace are byte-for-byte the pre-recorder behavior;
+//! - **allocation-free steady state**: the record's vectors and the
+//!   JSONL sink's buffers are pre-sized and reused; after warm-up a
+//!   recorded round performs zero heap acquisitions (the `audit`
+//!   feature proves it).
+//!
+//! The stream starts with a [`RunManifest`] header record
+//! (`kind:"manifest"`), then one `kind:"round"` record per outer
+//! round. `metrics::report::RecordedRun` reads the stream back and
+//! reproduces the in-process markdown report byte-for-byte.
+
+pub mod jsonl;
+pub mod registry;
+
+pub use jsonl::JsonlRecorder;
+pub use registry::{Metric, MetricKind, Registry};
+
+use crate::cluster::Cluster;
+use crate::metrics::TracePoint;
+use crate::util::json::Value;
+
+/// Version of the JSONL record schema; bumped on any breaking field
+/// change so `from_jsonl` can refuse streams it cannot interpret.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// A telemetry sink. Implementations must not charge the virtual
+/// clock or the ledger — they only observe.
+pub trait Recorder: Send {
+    /// The run-manifest header; called exactly once, before any round.
+    fn manifest(&mut self, m: &RunManifest);
+    /// One record per outer round, in round order.
+    fn round(&mut self, rec: &RoundRecord);
+    /// Flush buffered output at end of run (default: no-op).
+    fn close(&mut self) {}
+}
+
+/// The stream header: enough config + seeds + dataset shape to
+/// interpret (and re-run) the recorded stream. Build info is
+/// deliberately git-describe-free — package name + version only, so
+/// records are reproducible from a tarball.
+#[derive(Clone, Debug, Default)]
+pub struct RunManifest {
+    pub method: String,
+    pub nodes: usize,
+    pub threads: usize,
+    pub examples: usize,
+    pub features: usize,
+    pub loss: String,
+    pub lam: f64,
+    pub iters: usize,
+    pub seed: u64,
+    pub master: String,
+    pub pipeline: bool,
+    pub staleness: Option<usize>,
+    pub quorum: Option<usize>,
+    pub fault: Option<String>,
+    pub fault_seed: Option<u64>,
+}
+
+impl RunManifest {
+    pub fn to_value(&self) -> Value {
+        fn opt_num(v: Option<u64>) -> Value {
+            v.map_or(Value::Null, |n| Value::Num(n as f64))
+        }
+        let fault = self
+            .fault
+            .clone()
+            .map_or(Value::Null, Value::Str);
+        Value::obj(vec![
+            ("kind", Value::Str("manifest".to_string())),
+            ("schema", Value::Num(SCHEMA_VERSION as f64)),
+            ("method", Value::Str(self.method.clone())),
+            ("nodes", Value::Num(self.nodes as f64)),
+            ("threads", Value::Num(self.threads as f64)),
+            ("examples", Value::Num(self.examples as f64)),
+            ("features", Value::Num(self.features as f64)),
+            ("loss", Value::Str(self.loss.clone())),
+            ("lam", Value::Num(self.lam)),
+            ("iters", Value::Num(self.iters as f64)),
+            ("seed", Value::Num(self.seed as f64)),
+            ("master", Value::Str(self.master.clone())),
+            ("pipeline", Value::Bool(self.pipeline)),
+            ("staleness", opt_num(self.staleness.map(|v| v as u64))),
+            ("quorum", opt_num(self.quorum.map(|v| v as u64))),
+            ("fault", fault),
+            ("fault_seed", opt_num(self.fault_seed)),
+            (
+                "build",
+                Value::obj(vec![
+                    (
+                        "pkg",
+                        Value::Str(env!("CARGO_PKG_NAME").to_string()),
+                    ),
+                    (
+                        "version",
+                        Value::Str(env!("CARGO_PKG_VERSION").to_string()),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// One outer round, fully typed. All `Vec` fields keep their capacity
+/// across rounds (see [`RoundRecord::clear`]); `Option` fields are
+/// `None` on rounds that never reached the corresponding decision
+/// (e.g. the final evaluation-only round before a stop).
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    // --- trace mirror (exactly the TracePoint of this round) ---
+    pub f: f64,
+    pub gnorm: f64,
+    pub auprc: f64,
+    pub passes: f64,
+    pub secs: f64,
+    pub sg_hits: usize,
+    // --- algorithm decisions ---
+    /// nodes whose hybrid the safeguard replaced with −gʳ this round
+    pub sg_replaced: Vec<usize>,
+    /// combined-direction safeguard verdict, when it was evaluated
+    pub combined_ok: Option<bool>,
+    /// why the round fell back: "empty-quorum" | "safeguard"
+    pub fallback: Option<&'static str>,
+    /// accepted line-search step size
+    pub step: Option<f64>,
+    /// strong-Wolfe trial evaluations this round
+    pub ls_evals: Option<usize>,
+    // --- async state ---
+    /// true iff this round ran the bounded-staleness quorum path
+    pub is_async: bool,
+    /// nodes whose contribution entered the quorum, node order
+    pub quorum: Vec<usize>,
+    /// per-contribution staleness, aligned with `quorum`
+    pub staleness: Vec<usize>,
+    /// rejoin re-bases charged this round (crash recovery)
+    pub rebased: usize,
+    // --- fleet weather ---
+    /// live membership this round
+    pub members: Vec<usize>,
+    /// fault events applied this round (nodes, aligned with whats)
+    pub fault_nodes: Vec<usize>,
+    /// "crash" | "restart" | "degrade" | "flap" | "retry" | "drop"
+    pub fault_whats: Vec<&'static str>,
+    // --- compact-master state ---
+    /// density-gate decision: master loop runs in |U| coordinates
+    pub compact: bool,
+    /// live union-support size (= d on the dense path)
+    pub live_u: usize,
+    // --- ledger/engine deltas over this round ---
+    pub d_passes: f64,
+    pub d_bytes: f64,
+    pub d_scalar: usize,
+    pub d_makespan: f64,
+    pub d_level_bytes: Vec<f64>,
+    /// cumulative recovery seconds (not a delta: the resilience table
+    /// wants the running total, and cumulative survives round loss)
+    pub recovery_s: f64,
+}
+
+impl RoundRecord {
+    pub fn with_capacity(nodes: usize) -> RoundRecord {
+        RoundRecord {
+            sg_replaced: Vec::with_capacity(nodes),
+            quorum: Vec::with_capacity(nodes),
+            staleness: Vec::with_capacity(nodes),
+            members: Vec::with_capacity(nodes),
+            fault_nodes: Vec::with_capacity(4 * nodes),
+            fault_whats: Vec::with_capacity(4 * nodes),
+            d_level_bytes: Vec::with_capacity(8),
+            ..RoundRecord::default()
+        }
+    }
+
+    /// Reset for the next round, preserving every `Vec`'s capacity.
+    pub fn clear(&mut self) {
+        let RoundRecord {
+            round,
+            f,
+            gnorm,
+            auprc,
+            passes,
+            secs,
+            sg_hits,
+            sg_replaced,
+            combined_ok,
+            fallback,
+            step,
+            ls_evals,
+            is_async,
+            quorum,
+            staleness,
+            rebased,
+            members,
+            fault_nodes,
+            fault_whats,
+            compact,
+            live_u,
+            d_passes,
+            d_bytes,
+            d_scalar,
+            d_makespan,
+            d_level_bytes,
+            recovery_s,
+        } = self;
+        *round = 0;
+        *f = 0.0;
+        *gnorm = 0.0;
+        *auprc = f64::NAN;
+        *passes = 0.0;
+        *secs = 0.0;
+        *sg_hits = 0;
+        sg_replaced.clear();
+        *combined_ok = None;
+        *fallback = None;
+        *step = None;
+        *ls_evals = None;
+        *is_async = false;
+        quorum.clear();
+        staleness.clear();
+        *rebased = 0;
+        members.clear();
+        fault_nodes.clear();
+        fault_whats.clear();
+        *compact = false;
+        *live_u = 0;
+        *d_passes = 0.0;
+        *d_bytes = 0.0;
+        *d_scalar = 0;
+        *d_makespan = 0.0;
+        d_level_bytes.clear();
+        *recovery_s = 0.0;
+    }
+}
+
+/// Driver-side helper: owns the in-flight [`RoundRecord`] plus the
+/// ledger/engine baselines, so instrumentation in a driver is three
+/// calls — `begin` / field fills / `commit` — each a no-op when no
+/// recorder is installed.
+pub struct RoundObs {
+    on: bool,
+    rec: RoundRecord,
+    base_passes: f64,
+    base_bytes: f64,
+    base_scalar: usize,
+    base_makespan: f64,
+    base_levels: Vec<f64>,
+    base_faults: usize,
+}
+
+impl RoundObs {
+    pub fn new(cluster: &Cluster) -> RoundObs {
+        let nodes = cluster.shards.len();
+        RoundObs {
+            on: cluster.is_recording(),
+            rec: RoundRecord::with_capacity(nodes),
+            base_passes: 0.0,
+            base_bytes: 0.0,
+            base_scalar: 0,
+            base_makespan: 0.0,
+            base_levels: Vec::with_capacity(8),
+            base_faults: 0,
+        }
+    }
+
+    /// True iff a recorder is installed — guard any per-round `Vec`
+    /// fills with this so the off path does no work at all.
+    pub fn on(&self) -> bool {
+        self.on
+    }
+
+    /// Snapshot baselines at the top of round `round` (before fault
+    /// weather is applied, so weather lands in this round's record).
+    pub fn begin(&mut self, cluster: &Cluster, round: usize) {
+        if !self.on {
+            return;
+        }
+        self.rec.clear();
+        self.rec.round = round;
+        let l = &cluster.ledger;
+        self.base_passes = l.comm_passes;
+        self.base_bytes = l.comm_bytes;
+        self.base_scalar = l.scalar_rounds;
+        self.base_makespan = cluster.engine.makespan();
+        self.base_levels.clear();
+        self.base_levels.extend_from_slice(&l.level_bytes);
+        self.base_faults = cluster.fault_log_len();
+    }
+
+    /// The in-flight record, for the driver to fill decision fields.
+    pub fn rec(&mut self) -> &mut RoundRecord {
+        &mut self.rec
+    }
+
+    /// Mirror the round's [`TracePoint`] so the offline reader can
+    /// rebuild the trace bit-for-bit.
+    pub fn trace_point(&mut self, p: &TracePoint) {
+        if !self.on {
+            return;
+        }
+        self.rec.f = p.f;
+        self.rec.gnorm = p.gnorm;
+        self.rec.auprc = p.auprc;
+        self.rec.passes = p.comm_passes;
+        self.rec.secs = p.seconds;
+        self.rec.sg_hits = p.safeguard_hits;
+    }
+
+    /// Compute the round's ledger/engine deltas + applied-fault slice
+    /// and emit the record through the cluster's sink. Call exactly
+    /// once per begun round — at the bottom of the loop body *and*
+    /// before every `break`, so the final evaluation-only round still
+    /// gets its record.
+    pub fn commit(&mut self, cluster: &mut Cluster) {
+        if !self.on {
+            return;
+        }
+        {
+            let l = &cluster.ledger;
+            self.rec.d_passes = l.comm_passes - self.base_passes;
+            self.rec.d_bytes = l.comm_bytes - self.base_bytes;
+            self.rec.d_scalar = l.scalar_rounds - self.base_scalar;
+            self.rec.d_makespan =
+                cluster.engine.makespan() - self.base_makespan;
+            self.rec.d_level_bytes.clear();
+            for (i, &b) in l.level_bytes.iter().enumerate() {
+                let b0 = self.base_levels.get(i).copied().unwrap_or(0.0);
+                self.rec.d_level_bytes.push(b - b0);
+            }
+            self.rec.recovery_s = l.recovery_seconds;
+        }
+        for i in self.base_faults..cluster.fault_log_len() {
+            if let Some((_, node, what)) = cluster.fault_log_entry(i) {
+                self.rec.fault_nodes.push(node);
+                self.rec.fault_whats.push(what);
+            }
+        }
+        cluster.record_round(&self.rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_record_clear_keeps_capacity() {
+        let mut r = RoundRecord::with_capacity(8);
+        for i in 0..8 {
+            r.quorum.push(i);
+            r.members.push(i);
+            r.sg_replaced.push(i);
+        }
+        r.step = Some(0.5);
+        r.fallback = Some("safeguard");
+        let cap = r.quorum.capacity();
+        r.clear();
+        assert!(r.quorum.is_empty());
+        assert!(r.members.is_empty());
+        assert_eq!(r.step, None);
+        assert_eq!(r.fallback, None);
+        assert!(r.auprc.is_nan());
+        assert_eq!(r.quorum.capacity(), cap);
+    }
+
+    #[test]
+    fn manifest_value_has_kind_and_schema() {
+        let m = RunManifest {
+            method: "afs".to_string(),
+            nodes: 4,
+            ..RunManifest::default()
+        };
+        let v = m.to_value();
+        let s = v.to_json(0);
+        assert!(s.contains("\"kind\": \"manifest\""), "{s}");
+        assert!(s.contains("\"schema\": 1"), "{s}");
+        assert!(s.contains("\"pkg\": \"psgd\""), "{s}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Ordered metrics registry: the one render path every telemetry
+//! surface publishes through.
+//!
+//! [`Ledger`](crate::cluster::Ledger), [`Engine`](crate::cluster::Engine)
+//! and the fault layer each expose a `publish(&self, &mut Registry)`
+//! that pushes named counters/gauges in a **fixed order**; the former
+//! bespoke `*_profile()` string renderers are now thin wrappers that
+//! publish into a registry and call [`Registry::render`]. The registry
+//! is `Vec`-indexed on purpose — no `HashMap` (pallas-lint
+//! `no-unordered-iteration` covers this module), so publish order *is*
+//! render order and two identical runs render identical strings.
+//!
+//! Registries are render-time objects: they allocate freely because
+//! they are built only when a human-readable profile or a report is
+//! requested, never inside a steady-state round.
+
+use std::fmt::Write as _;
+
+/// What a metric means — and how [`Registry::render`] formats it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// monotone integer count; rendered as `name 42`
+    Counter,
+    /// point-in-time float; rendered as `name 0.125s` (per-metric
+    /// precision + unit suffix)
+    Gauge,
+}
+
+/// One named metric. Histograms are published as a run of counters
+/// sharing a prefix (`s0`, `s1`, …) so the registry stays a flat,
+/// ordered `Vec`.
+#[derive(Clone, Debug)]
+pub struct Metric {
+    pub name: String,
+    pub kind: MetricKind,
+    pub value: f64,
+    /// render precision for gauges (ignored for counters)
+    pub decimals: usize,
+    /// render suffix for gauges, e.g. `"s"` or `"KB"`
+    pub unit: &'static str,
+}
+
+/// Ordered, `Vec`-indexed metric registry.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    items: Vec<Metric>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { items: Vec::new() }
+    }
+
+    pub fn counter(&mut self, name: impl Into<String>, v: u64) {
+        self.items.push(Metric {
+            name: name.into(),
+            kind: MetricKind::Counter,
+            value: v as f64,
+            decimals: 0,
+            unit: "",
+        });
+    }
+
+    pub fn gauge(
+        &mut self,
+        name: impl Into<String>,
+        v: f64,
+        decimals: usize,
+        unit: &'static str,
+    ) {
+        self.items.push(Metric {
+            name: name.into(),
+            kind: MetricKind::Gauge,
+            value: v,
+            decimals,
+            unit,
+        });
+    }
+
+    /// Publish a histogram as `prefix0 .. prefixN` counters (one per
+    /// bucket), keeping the registry flat and ordered.
+    pub fn histogram(&mut self, prefix: &str, counts: &[usize]) {
+        for (i, &n) in counts.iter().enumerate() {
+            self.counter(format!("{prefix}{i}"), n as u64);
+        }
+    }
+
+    /// Linear lookup by name (the registry is small and ordered; no
+    /// hashing anywhere near a render path).
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.items.iter().find(|m| m.name == name).map(|m| m.value)
+    }
+
+    pub fn items(&self) -> &[Metric] {
+        &self.items
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// THE render path: `name value` segments joined by `" | "`, in
+    /// publish order. Counters render as integers, gauges with their
+    /// declared precision and unit. An empty registry renders as `""`
+    /// (the quiet-profile contract the ledger tests pin).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (i, m) in self.items.iter().enumerate() {
+            if i > 0 {
+                out.push_str(" | ");
+            }
+            match m.kind {
+                MetricKind::Counter => {
+                    let _ = write!(out, "{} {}", m.name, m.value as u64);
+                }
+                MetricKind::Gauge => {
+                    let _ = write!(
+                        out,
+                        "{} {:.*}{}",
+                        m.name, m.decimals, m.value, m.unit
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_order_is_render_order() {
+        let mut reg = Registry::new();
+        reg.counter("crash", 2);
+        reg.gauge("recovery", 0.125, 3, "s");
+        reg.counter("lost", 3);
+        assert_eq!(reg.render(), "crash 2 | recovery 0.125s | lost 3");
+        assert_eq!(reg.get("crash"), Some(2.0));
+        assert_eq!(reg.get("recovery"), Some(0.125));
+        assert_eq!(reg.get("nope"), None);
+    }
+
+    #[test]
+    fn histogram_flattens_to_prefixed_counters() {
+        let mut reg = Registry::new();
+        reg.histogram("s", &[3, 1, 1]);
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.render(), "s0 3 | s1 1 | s2 1");
+    }
+
+    #[test]
+    fn empty_registry_renders_empty() {
+        let reg = Registry::new();
+        assert!(reg.is_empty());
+        assert_eq!(reg.render(), "");
+    }
+
+    #[test]
+    fn gauge_precision_and_unit() {
+        let mut reg = Registry::new();
+        reg.gauge("L0", 2.0, 1, "KB");
+        reg.gauge("L1", 0.25, 1, "KB");
+        assert_eq!(reg.render(), "L0 2.0KB | L1 0.2KB");
+    }
+}

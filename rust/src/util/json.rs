@@ -50,6 +50,20 @@ impl Value {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
     /// Serialize; `indent=0` → compact, else pretty with that step.
     pub fn to_json(&self, indent: usize) -> String {
         let mut out = String::new();
@@ -63,18 +77,7 @@ impl Value {
             Value::Bool(b) => {
                 out.push_str(if *b { "true" } else { "false" })
             }
-            Value::Num(x) => {
-                if x.is_finite() {
-                    if *x == x.trunc() && x.abs() < 1e15 {
-                        let _ = write!(out, "{}", *x as i64);
-                    } else {
-                        let _ = write!(out, "{x}");
-                    }
-                } else {
-                    // JSON has no Inf/NaN; emit null like serde_json.
-                    out.push_str("null");
-                }
-            }
+            Value::Num(x) => write_num(out, *x),
             Value::Str(s) => write_escaped(out, s),
             Value::Arr(xs) => {
                 write_seq(out, step, depth, '[', ']', xs.len(), |o, i| {
@@ -90,6 +93,25 @@ impl Value {
                 })
             }
         }
+    }
+}
+
+/// Append one JSON number — the exact emission `Value::Num` uses:
+/// integral values with |x| < 1e15 print as integers, other finite
+/// values via shortest-round-trip `Display`, and non-finite values
+/// (the `TracePoint::auprc` NaN sentinel) as `null`, since JSON has no
+/// Inf/NaN tokens. Public so the allocation-free JSONL round writer
+/// ([`crate::obs::JsonlRecorder`]) emits byte-identical numbers that
+/// [`parse`] round-trips to the same `f64` bits.
+pub fn write_num(out: &mut String, x: f64) {
+    if x.is_finite() {
+        if x == x.trunc() && x.abs() < 1e15 {
+            let _ = write!(out, "{}", x as i64);
+        } else {
+            let _ = write!(out, "{x}");
+        }
+    } else {
+        out.push_str("null");
     }
 }
 
@@ -380,5 +402,53 @@ mod tests {
         assert!(parse("{,}").is_err());
         assert!(parse("[1, 2").is_err());
         assert!(parse("12 34").is_err());
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null_and_round_trip() {
+        // JSON has no Inf/NaN tokens: emitting them raw would produce
+        // an unparseable document. The auprc NaN sentinel must come
+        // back as Null, not break the stream.
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = Value::Arr(vec![Value::Num(x), Value::Num(1.5)]);
+            let s = v.to_json(0);
+            assert!(!s.contains("NaN") && !s.contains("inf"), "{s}");
+            let back = parse(&s).unwrap();
+            assert_eq!(
+                back,
+                Value::Arr(vec![Value::Null, Value::Num(1.5)]),
+                "{s}"
+            );
+        }
+    }
+
+    #[test]
+    fn write_num_matches_value_num_byte_for_byte() {
+        for x in [
+            0.0,
+            -0.0,
+            1.0,
+            -17.0,
+            0.1,
+            1.25e-9,
+            9.9e14,
+            1.1e15,
+            f64::NAN,
+            f64::INFINITY,
+        ] {
+            let mut direct = String::new();
+            write_num(&mut direct, x);
+            assert_eq!(direct, Value::Num(x).to_json(0), "x={x}");
+        }
+    }
+
+    #[test]
+    fn finite_floats_round_trip_to_identical_bits() {
+        for x in [0.1, 1.0 / 3.0, 6.02214076e23, -2.5e-308, 42.0] {
+            let mut s = String::new();
+            write_num(&mut s, x);
+            let back = parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{s}");
+        }
     }
 }

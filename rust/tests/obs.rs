@@ -1,0 +1,267 @@
+//! Flight-recorder acceptance suite — the three guarantees
+//! `src/obs/mod.rs` documents:
+//!
+//! 1. **Off path bit-identical** — a run with no recorder installed
+//!    and a run streaming every round to a JSONL sink produce the
+//!    same iterates, trace, and ledger, bit for bit. Recording only
+//!    *reads*; it charges no virtual time, passes, or bytes.
+//! 2. **Offline replay is exact** — `RecordedRun::from_jsonl` over
+//!    the recorded stream reproduces the in-process
+//!    `render_run_report` markdown byte-for-byte, including the
+//!    resilience table of a seeded fault run.
+//! 3. **Allocation-free steady state** (`--features audit`) — after
+//!    warm-up, a recorded round performs zero heap acquisitions.
+
+use std::io;
+use std::sync::{Arc, Mutex};
+
+use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
+use psgd::algo::fs::{FsConfig, FsDriver};
+use psgd::algo::{Driver, StopRule};
+use psgd::cluster::{Cluster, CostModel, FaultPlan};
+use psgd::data::synth::SynthConfig;
+use psgd::metrics::report::{render_run_report, RecordedRun};
+use psgd::metrics::trace::Trace;
+use psgd::obs::{JsonlRecorder, RunManifest};
+use psgd::util::json;
+
+/// Same sparse-regime data the fault suite pins.
+fn make_cluster(nodes: usize, seed: u64) -> Cluster {
+    let data = SynthConfig {
+        n_examples: 400,
+        n_features: 2_000,
+        nnz_per_example: 5,
+        skew: 1.0,
+        ..SynthConfig::default()
+    }
+    .generate(seed);
+    let mut c = Cluster::partition(data, nodes, CostModel::free());
+    c.threads = 1;
+    c
+}
+
+fn fs_config() -> FsConfig {
+    FsConfig { lam: 0.5, epochs: 2, ..Default::default() }
+}
+
+fn async_config(nodes: usize) -> AsyncFsConfig {
+    AsyncFsConfig { fs: fs_config(), staleness: 2, quorum: nodes - 1 }
+}
+
+/// `io::Write` sink whose buffer outlives the recorder: the cluster
+/// owns the boxed recorder, so the test reads the stream back through
+/// this shared handle after `finish_recording()` drops it.
+#[derive(Clone)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    fn new() -> SharedBuf {
+        SharedBuf(Arc::new(Mutex::new(Vec::new())))
+    }
+
+    fn take_string(&self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+    }
+}
+
+impl io::Write for SharedBuf {
+    fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(b);
+        Ok(b.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+fn assert_traces_identical(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{what}: iteration counts");
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.f, q.f, "{what}: objective diverged at iter {}", p.iter);
+        assert_eq!(
+            p.comm_passes, q.comm_passes,
+            "{what}: pass accounting diverged at iter {}",
+            p.iter
+        );
+        assert_eq!(
+            p.seconds, q.seconds,
+            "{what}: simulated seconds diverged at iter {}",
+            p.iter
+        );
+        assert_eq!(
+            p.safeguard_hits, q.safeguard_hits,
+            "{what}: safeguard counts diverged at iter {}",
+            p.iter
+        );
+    }
+}
+
+#[test]
+fn recording_leaves_sync_fs_bit_identical() {
+    let nodes = 4;
+    let mut bare = make_cluster(nodes, 2);
+    let mut taped = make_cluster(nodes, 2);
+    taped.set_recorder(Box::new(JsonlRecorder::new(SharedBuf::new())));
+
+    let run_bare =
+        FsDriver::new(fs_config()).run(&mut bare, None, &StopRule::iters(8));
+    let run_taped =
+        FsDriver::new(fs_config()).run(&mut taped, None, &StopRule::iters(8));
+    taped.finish_recording();
+
+    assert_eq!(run_bare.w, run_taped.w, "recording perturbed the iterates");
+    assert_traces_identical(&run_bare.trace, &run_taped.trace, "sync FS");
+    assert_eq!(bare.ledger, taped.ledger, "recording charged the ledger");
+}
+
+#[test]
+fn recording_leaves_seeded_fault_async_fs_bit_identical() {
+    let nodes = 5;
+    let run = |record: bool| {
+        let mut cluster = make_cluster(nodes, 3);
+        cluster.set_fault_plan(FaultPlan::seeded(nodes, 1));
+        if record {
+            cluster
+                .set_recorder(Box::new(JsonlRecorder::new(SharedBuf::new())));
+        }
+        let run = AsyncFsDriver::new(async_config(nodes)).run(
+            &mut cluster,
+            None,
+            &StopRule::iters(20),
+        );
+        cluster.finish_recording();
+        (run, cluster.ledger.clone())
+    };
+
+    let (run_bare, ledger_bare) = run(false);
+    let (run_taped, ledger_taped) = run(true);
+
+    assert!(
+        ledger_bare.has_fault_activity(),
+        "seeded weather was a no-op; the test lost its teeth"
+    );
+    assert_eq!(run_bare.w, run_taped.w, "recording perturbed the iterates");
+    assert_traces_identical(&run_bare.trace, &run_taped.trace, "async FS");
+    assert_eq!(ledger_bare, ledger_taped, "recording charged the ledger");
+}
+
+#[test]
+fn recorded_stream_replays_the_in_process_report_byte_for_byte() {
+    let nodes = 5;
+    let mut cluster = make_cluster(nodes, 3);
+    cluster.set_fault_plan(FaultPlan::seeded(nodes, 1));
+    let sink = SharedBuf::new();
+    cluster.set_recorder(Box::new(JsonlRecorder::new(sink.clone())));
+    cluster.record_manifest(&RunManifest {
+        method: "afs".to_string(),
+        nodes,
+        threads: 1,
+        examples: 400,
+        features: 2_000,
+        loss: "logistic".to_string(),
+        lam: 0.5,
+        iters: 20,
+        seed: 3,
+        master: "auto".to_string(),
+        staleness: Some(2),
+        quorum: Some(nodes - 1),
+        fault: Some("seeded".to_string()),
+        fault_seed: Some(1),
+        ..RunManifest::default()
+    });
+
+    let run = AsyncFsDriver::new(async_config(nodes)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(20),
+    );
+    cluster.finish_recording();
+
+    let text = sink.take_string();
+    // schema sanity: manifest first, then one record per round in
+    // round order (from_jsonl enforces the ordering)
+    let first = json::parse(text.lines().next().unwrap()).unwrap();
+    assert_eq!(first.get("kind").unwrap().as_str(), Some("manifest"));
+    let recorded = RecordedRun::from_jsonl(&text).expect("stream must parse");
+    assert_eq!(
+        recorded.rounds.len(),
+        run.trace.points.len(),
+        "one round record per trace point"
+    );
+
+    // the acceptance bar: the offline report over the stream is the
+    // in-process report, byte for byte — trace, resilience counters,
+    // staleness histogram, recovery seconds, f* included
+    let offline = recorded.report();
+    let in_process = render_run_report(&run.trace, &run.ledger, run.f);
+    assert!(
+        run.ledger.has_fault_activity(),
+        "seeded weather was a no-op; the resilience table is empty"
+    );
+    assert_eq!(offline, in_process, "offline replay diverged");
+}
+
+/// Steady-state recording is allocation-free: after the line buffer is
+/// warmed, a `round()` call touches only reused storage and
+/// `core::fmt`'s stack buffers. The watch loop tolerates concurrent
+/// sibling tests (the counting allocator is process-global) by
+/// requiring *some* iteration to observe zero acquisitions.
+#[cfg(feature = "audit")]
+#[test]
+fn steady_state_round_recording_allocates_nothing() {
+    use psgd::audit::AllocWatch;
+    use psgd::obs::{Recorder, RoundRecord};
+
+    let mut rec = JsonlRecorder::new(io::sink());
+    rec.manifest(&RunManifest {
+        method: "afs".to_string(),
+        nodes: 8,
+        ..RunManifest::default()
+    });
+    let mut r = RoundRecord::with_capacity(8);
+    r.round = 7;
+    r.f = 0.517_328_114_2;
+    r.gnorm = 1.25e-3;
+    r.auprc = f64::NAN;
+    r.passes = 44.0;
+    r.secs = 3.5;
+    r.sg_hits = 2;
+    r.sg_replaced.extend([1, 5]);
+    r.combined_ok = Some(true);
+    r.step = Some(0.5);
+    r.ls_evals = Some(3);
+    r.is_async = true;
+    r.quorum.extend([0, 1, 2, 3, 5, 6, 7]);
+    r.staleness.extend([0, 1, 0, 0, 2, 0, 1]);
+    r.members.extend(0..8);
+    r.fault_nodes.push(4);
+    r.fault_whats.push("crash");
+    r.live_u = 1_793;
+    r.d_passes = 4.0;
+    r.d_bytes = 57_376.0;
+    r.d_scalar = 1;
+    r.d_makespan = 0.125;
+    r.d_level_bytes.extend([28_688.0, 14_344.0, 14_344.0]);
+    r.recovery_s = 0.25;
+
+    // warm-up: size the line buffer past the widest line we'll emit
+    for _ in 0..4 {
+        rec.round(&r);
+    }
+
+    let mut best = usize::MAX;
+    for _ in 0..2_000 {
+        let watch = AllocWatch::begin();
+        rec.round(&r);
+        best = best.min(watch.allocations());
+        if best == 0 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert_eq!(
+        best, 0,
+        "a warmed round() call made {best} heap acquisitions"
+    );
+}
