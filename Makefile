@@ -58,9 +58,14 @@ telemetry:
 # injection — every cell must reach the clean run's objective target,
 # record its scripted fault activity on the Ledger, and the replay
 # gate must reproduce one seed's fault timeline + iterate bitwise.
-# Writes BENCH_fault_tolerance.json for the artifact upload.
+# The speculation bench rides along: speculative lanes must strictly
+# beat plain async to the same ε on the straggler and chaos matrices,
+# the spec-off ledger must stay clean, and the adaptive (τ, q) trace
+# must replay bit-identically. Writes BENCH_fault_tolerance.json and
+# BENCH_speculation.json for the artifact upload.
 chaos:
 	cargo bench --bench fault_tolerance
+	cargo bench --bench speculation
 
 fmt-check:
 	cargo fmt --check

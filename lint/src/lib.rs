@@ -901,6 +901,29 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_controller_is_wall_clock_free() {
+        // the (τ, q) controller must stay a pure ledger function —
+        // seeded runs replay its decision trace bit-identically, so a
+        // wall clock in algo/adapt.rs would break the replay contract
+        let src = "let t = Instant::now();\n";
+        let hits = lint_source("algo/adapt.rs", src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].rule, "no-wall-clock");
+    }
+
+    #[test]
+    fn adaptive_controller_iterates_deterministically() {
+        // tuning decisions feed the quorum deadline: a HashMap-backed
+        // window statistic could flip (τ, q) between builds
+        let src = "let m: HashMap<usize, f64> = HashMap::new();\n";
+        let hits = lint_source("algo/adapt.rs", src);
+        assert!(
+            hits.iter().any(|f| f.rule == "no-unordered-iteration"),
+            "{hits:?}"
+        );
+    }
+
+    #[test]
     fn flight_recorder_is_wall_clock_free() {
         // recorded streams of one seed must line-diff equal: no
         // timestamps in the telemetry layer

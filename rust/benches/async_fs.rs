@@ -15,6 +15,7 @@
 //! writes `BENCH_async_fs.json` (uploaded by CI) so the perf
 //! trajectory is machine-readable.
 
+use psgd::algo::adapt::{Asynchrony, Quorum};
 use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::fs::{FsConfig, FsDriver};
 use psgd::algo::{Driver, RunResult, StopRule};
@@ -93,8 +94,11 @@ fn main() {
             profile,
             &AsyncFsDriver::new(AsyncFsConfig {
                 fs: fs_cfg(false),
-                staleness: TAU,
-                quorum: QUORUM,
+                policy: Asynchrony::Bounded {
+                    tau: TAU,
+                    quorum: Quorum::AtLeast(QUORUM),
+                },
+                ..Default::default()
             }),
             &stop,
         );

@@ -14,6 +14,7 @@
 //! replay gate holds. The run writes `BENCH_fault_tolerance.json`
 //! (uploaded by CI) so the resilience trajectory is machine-readable.
 
+use psgd::algo::adapt::{Asynchrony, Quorum};
 use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::fs::FsConfig;
 use psgd::algo::{Driver, RunResult, StopRule};
@@ -29,8 +30,11 @@ const SEEDS: [u64; 3] = [1, 2, 3];
 fn driver() -> AsyncFsDriver {
     AsyncFsDriver::new(AsyncFsConfig {
         fs: FsConfig { lam: 1.0, epochs: 2, ..Default::default() },
-        staleness: TAU,
-        quorum: NODES - 1,
+        policy: Asynchrony::Bounded {
+            tau: TAU,
+            quorum: Quorum::AtLeast(NODES - 1),
+        },
+        ..Default::default()
     })
 }
 

@@ -20,6 +20,7 @@
 
 use std::time::Instant;
 
+use psgd::algo::adapt::{Asynchrony, Quorum};
 use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::fs::{FsConfig, FsDriver, MasterMode};
 use psgd::algo::{Driver, RunResult, StopRule};
@@ -165,8 +166,8 @@ fn main() {
     let t0 = Instant::now();
     let async_run = AsyncFsDriver::new(AsyncFsConfig {
         fs: fs_cfg(MasterMode::Compact),
-        staleness: TAU,
-        quorum: NODES,
+        policy: Asynchrony::Bounded { tau: TAU, quorum: Quorum::All },
+        ..Default::default()
     })
     .run(&mut c_async, None, &StopRule::iters(2));
     let async_wall = t0.elapsed().as_secs_f64();

@@ -1,13 +1,15 @@
-//! Cluster-substrate ablation: tree vs ring reduction topology, and the
-//! straggler knob. The pass COUNT (the paper's metric) is topology-
-//! independent; modeled TIME is not — the ring amortizes bandwidth at
-//! large P while the tree pays log₂P full-size hops. Also quantifies
-//! how a 4× straggler on every 4th node stretches FS's compute phases.
+//! Cluster-substrate ablation: tree vs ring reduction topology, and
+//! straggler sensitivity via [`NodeProfile`]. The pass COUNT (the
+//! paper's metric) is topology-independent; modeled TIME is not — the
+//! ring amortizes bandwidth at large P while the tree pays log₂P
+//! full-size hops. Also quantifies how a slow node on every 4th slot
+//! stretches FS's compute phases.
 
 use psgd::algo::fs::{FsConfig, FsDriver};
 use psgd::algo::{Driver, StopRule};
 use psgd::bench::figure1::kdd_equivalent_cost;
 use psgd::cluster::cost::Topology;
+use psgd::cluster::engine::NodeProfile;
 use psgd::cluster::{Cluster, CostModel};
 use psgd::data::partition::Partition;
 use psgd::data::synth::SynthConfig;
@@ -52,14 +54,24 @@ fn main() {
     }
 
     println!("\n### straggler sensitivity (every 4th node slowed)");
-    println!("{:>10} {:>14}", "straggle", "sim-seconds");
-    for straggle in [0.0, 1.0, 3.0] {
-        let part = Partition::shuffled(data.n_examples(), 16, 3);
-        let cost = CostModel { straggle, ..kdd_equivalent_cost(1_000) };
-        let mut cluster = Cluster::partition_with(data.clone(), &part, cost);
+    println!("{:>10} {:>14}", "slowdown", "sim-seconds");
+    for slowdown in [0.0, 1.0, 3.0] {
+        let nodes = 16;
+        let part = Partition::shuffled(data.n_examples(), nodes, 3);
+        let mut cluster = Cluster::partition_with(
+            data.clone(),
+            &part,
+            kdd_equivalent_cost(1_000),
+        );
+        // every 4th node runs (1 + slowdown)× slower
+        cluster.set_profile(NodeProfile {
+            speed: (0..nodes)
+                .map(|p| if p % 4 == 0 { 1.0 + slowdown } else { 1.0 })
+                .collect(),
+        });
         let run = FsDriver::new(FsConfig { lam, epochs: 2, ..Default::default() })
             .run(&mut cluster, None, &StopRule::iters(10));
-        println!("{:>10.1} {:>14.1}", straggle, run.ledger.seconds());
+        println!("{:>10.1} {:>14.1}", slowdown, run.ledger.seconds());
     }
     println!(
         "\nreading: ring wins time at large P (bandwidth-optimal), the \

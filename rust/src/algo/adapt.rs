@@ -1,0 +1,389 @@
+//! First-class asynchrony policy + the self-tuning (τ, q) controller.
+//!
+//! Until this module landed, the async FS driver's schedule was
+//! configured through two raw fields (`staleness: usize`,
+//! `quorum: usize` with `usize::MAX` as a "wait for everyone"
+//! sentinel). [`Asynchrony`] replaces them with a typed policy the
+//! driver, the CLI, `util::validate` and the obs manifest all consume
+//! uniformly:
+//!
+//! - [`Asynchrony::Sync`] — the empty policy: τ = 0, quorum = P. The
+//!   async driver under it is bit-identical to the synchronous
+//!   [`FsDriver`](crate::algo::fs::FsDriver) (`tests/speculation.rs`
+//!   pins this, extending the PR-4 τ=0 ∧ q=P equivalence).
+//! - [`Asynchrony::Bounded`] — the PR-4 regime: a fixed staleness
+//!   bound τ and a [`Quorum`] (`All` kills the old `usize::MAX`
+//!   sentinel; `AtLeast(q)` is the partial quorum).
+//! - [`Asynchrony::Adaptive`] — (τ, q) start at `init` and a
+//!   [`Controller`] re-tunes them per round from the
+//!   [`Ledger`](crate::cluster::Ledger)'s staleness histogram and
+//!   fallback/fault counters, clamped inside [`TuneBounds`].
+//!
+//! **Determinism.** Every controller decision is a pure function of
+//! the ledger counters at the decision point — no wall clocks, no
+//! randomness, no iteration over unordered containers — so a seeded
+//! run replays its (τ, q) trajectory bit-identically
+//! ([`Ledger::tune_trace`](crate::cluster::Ledger::tune_trace) records
+//! it, `tests/speculation.rs` pins the replay).
+//!
+//! **The rules** (evaluated once per [`TUNE_WINDOW`] async rounds,
+//! over that window's ledger deltas):
+//!
+//! 1. fallback rate > [`FALLBACK_SHRINK_RATE`] → shrink τ by 1: the
+//!    safeguard keeps rejecting stale-contaminated quorums, so tighten
+//!    the staleness bound toward the certified synchronous regime.
+//! 2. else stale share > [`STALE_SHRINK_SHARE`] → shrink q by 1 (never
+//!    below `q_min`): most contributions arrive stale, i.e. the
+//!    straggler gap has widened past what the fresh deadline absorbs —
+//!    stop letting the slow tail gate the round.
+//! 3. else if the window saw fault events → hold: weather is moving,
+//!    don't chase it.
+//! 4. else (calm) → re-expand: τ toward `tau_max`, q toward the live
+//!    membership.
+
+use crate::cluster::Ledger;
+
+/// How many fresh (round-r) contributions the async master waits for
+/// before combining. Replaces the raw `usize` whose `usize::MAX` value
+/// meant "everyone".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quorum {
+    /// wait for every node's fresh solve (q = P)
+    All,
+    /// combine once q fresh solves have arrived (clamped to 1..=P at
+    /// run time)
+    AtLeast(usize),
+}
+
+impl Quorum {
+    /// The concrete quorum size against a cluster of `p` nodes.
+    pub fn resolve(&self, p: usize) -> usize {
+        match *self {
+            Quorum::All => p.max(1),
+            Quorum::AtLeast(q) => q.clamp(1, p.max(1)),
+        }
+    }
+}
+
+/// The clamp box the adaptive controller moves (τ, q) inside: τ never
+/// exceeds `tau_max`, q never drops below `q_min` (and never exceeds
+/// the live membership). `tests/speculation.rs` pins both bounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TuneBounds {
+    pub tau_max: usize,
+    pub q_min: usize,
+}
+
+impl Default for TuneBounds {
+    fn default() -> Self {
+        TuneBounds { tau_max: 4, q_min: 1 }
+    }
+}
+
+/// The asynchrony policy the async FS driver runs under — the one
+/// typed surface behind `--staleness`/`--quorum`/`--adaptive`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Asynchrony {
+    /// τ = 0, quorum = P: every round is exactly Algorithm 1's
+    /// synchronous round (bit-identical to `FsDriver`).
+    Sync,
+    /// Fixed bounded staleness — the PR-4 regime.
+    Bounded { tau: usize, quorum: Quorum },
+    /// (τ, q) start at `init` and the [`Controller`] re-tunes them per
+    /// round inside `bounds`.
+    Adaptive { init: (usize, usize), bounds: TuneBounds },
+}
+
+impl Default for Asynchrony {
+    fn default() -> Self {
+        Asynchrony::Bounded { tau: 1, quorum: Quorum::All }
+    }
+}
+
+impl Asynchrony {
+    /// The starting (τ, q) against a cluster of `p` nodes — already
+    /// clamped (q into 1..=p, and for the adaptive policy τ into
+    /// `..=tau_max`, q above `q_min`).
+    pub fn initial(&self, p: usize) -> (usize, usize) {
+        let p = p.max(1);
+        match *self {
+            Asynchrony::Sync => (0, p),
+            Asynchrony::Bounded { tau, quorum } => (tau, quorum.resolve(p)),
+            Asynchrony::Adaptive { init: (tau, q), bounds } => (
+                tau.min(bounds.tau_max),
+                q.clamp(bounds.q_min.min(p).max(1), p),
+            ),
+        }
+    }
+
+    /// The per-round tuner — `Some` only for the adaptive policy.
+    pub fn controller(&self, p: usize) -> Option<Controller> {
+        match *self {
+            Asynchrony::Adaptive { bounds, .. } => {
+                let (tau, q) = self.initial(p);
+                Some(Controller::new(tau, q, bounds))
+            }
+            _ => None,
+        }
+    }
+
+    /// Compact policy descriptor for driver names and the obs
+    /// manifest: `sync`, `t2-qall`, `t2-q3`, `adapt-t1.4-q4.1`
+    /// (init.bound on each axis).
+    pub fn tag(&self) -> String {
+        match *self {
+            Asynchrony::Sync => "sync".to_string(),
+            Asynchrony::Bounded { tau, quorum: Quorum::All } => {
+                format!("t{tau}-qall")
+            }
+            Asynchrony::Bounded { tau, quorum: Quorum::AtLeast(q) } => {
+                format!("t{tau}-q{q}")
+            }
+            Asynchrony::Adaptive { init: (tau, q), bounds } => {
+                format!(
+                    "adapt-t{tau}.{}-q{q}.{}",
+                    bounds.tau_max, bounds.q_min
+                )
+            }
+        }
+    }
+}
+
+/// Window length (in async combine rounds) between controller
+/// decisions: long enough that the fallback/staleness rates are more
+/// than one round's noise, short enough to track moving weather.
+pub const TUNE_WINDOW: usize = 4;
+
+/// Window fallback rate above which rule 1 shrinks τ.
+pub const FALLBACK_SHRINK_RATE: f64 = 0.25;
+
+/// Window stale-contribution share above which rule 2 shrinks q.
+pub const STALE_SHRINK_SHARE: f64 = 0.5;
+
+/// The ledger counters one decision window is measured against. All
+/// monotone, so window deltas are plain subtractions.
+#[derive(Clone, Copy, Debug, Default)]
+struct LedgerMark {
+    async_rounds: usize,
+    fallback_rounds: usize,
+    fresh_contribs: usize,
+    total_contribs: usize,
+    fault_events: usize,
+}
+
+impl LedgerMark {
+    fn take(l: &Ledger) -> LedgerMark {
+        LedgerMark {
+            async_rounds: l.async_rounds,
+            fallback_rounds: l.fallback_rounds,
+            fresh_contribs: l.staleness_hist.first().copied().unwrap_or(0),
+            total_contribs: l.staleness_hist.iter().sum(),
+            fault_events: l.crash_events
+                + l.rejoin_rebases
+                + l.lost_messages
+                + l.degrade_events
+                + l.flap_events,
+        }
+    }
+}
+
+/// The self-tuning (τ, q) state machine behind
+/// [`Asynchrony::Adaptive`]. Feed it the ledger once per round
+/// ([`Controller::observe`]); every [`TUNE_WINDOW`] async rounds it
+/// re-decides (τ, q) from that window's deltas by the module-doc
+/// rules. Decisions are pure functions of the ledger, so a seeded run
+/// replays them bit-identically.
+#[derive(Clone, Debug)]
+pub struct Controller {
+    tau: usize,
+    q: usize,
+    bounds: TuneBounds,
+    mark: LedgerMark,
+}
+
+impl Controller {
+    pub fn new(tau: usize, q: usize, bounds: TuneBounds) -> Controller {
+        Controller { tau, q, bounds, mark: LedgerMark::default() }
+    }
+
+    /// The current (τ, q).
+    pub fn current(&self) -> (usize, usize) {
+        (self.tau, self.q)
+    }
+
+    /// One per-round observation. Returns `Some((τ, q))` when a full
+    /// window has elapsed and a (possibly unchanged) decision was
+    /// taken, `None` mid-window. `p_alive` is the live membership —
+    /// the ceiling q re-expands toward and is clamped under.
+    pub fn observe(
+        &mut self,
+        ledger: &Ledger,
+        p_alive: usize,
+    ) -> Option<(usize, usize)> {
+        let now = LedgerMark::take(ledger);
+        let rounds = now.async_rounds - self.mark.async_rounds;
+        if rounds < TUNE_WINDOW {
+            return None;
+        }
+        let fallback_rate = (now.fallback_rounds - self.mark.fallback_rounds)
+            as f64
+            / rounds as f64;
+        let total = now.total_contribs - self.mark.total_contribs;
+        let fresh = now.fresh_contribs - self.mark.fresh_contribs;
+        let stale_share = if total == 0 {
+            0.0
+        } else {
+            1.0 - fresh as f64 / total as f64
+        };
+        let faults = now.fault_events - self.mark.fault_events;
+        self.mark = now;
+        if fallback_rate > FALLBACK_SHRINK_RATE {
+            self.tau = self.tau.saturating_sub(1);
+        } else if stale_share > STALE_SHRINK_SHARE {
+            self.q = self.q.saturating_sub(1);
+        } else if faults == 0 {
+            self.tau = (self.tau + 1).min(self.bounds.tau_max);
+            self.q += 1;
+        }
+        // rule 3 (faults in a calm-looking window) falls through to
+        // the clamp with (τ, q) held
+        let p_alive = p_alive.max(1);
+        self.q = self.q.clamp(self.bounds.q_min.min(p_alive), p_alive);
+        Some((self.tau, self.q))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger_with(
+        rounds: usize,
+        fallbacks: usize,
+        hist: Vec<usize>,
+        faults: usize,
+    ) -> Ledger {
+        Ledger {
+            async_rounds: rounds,
+            fallback_rounds: fallbacks,
+            staleness_hist: hist,
+            crash_events: faults,
+            ..Ledger::default()
+        }
+    }
+
+    #[test]
+    fn quorum_resolves_without_sentinels() {
+        assert_eq!(Quorum::All.resolve(8), 8);
+        assert_eq!(Quorum::AtLeast(3).resolve(8), 3);
+        // clamped into 1..=P
+        assert_eq!(Quorum::AtLeast(0).resolve(8), 1);
+        assert_eq!(Quorum::AtLeast(99).resolve(8), 8);
+        assert_eq!(Quorum::All.resolve(0), 1);
+    }
+
+    #[test]
+    fn policy_initial_and_tags() {
+        assert_eq!(Asynchrony::Sync.initial(6), (0, 6));
+        assert_eq!(Asynchrony::Sync.tag(), "sync");
+        let b = Asynchrony::Bounded { tau: 2, quorum: Quorum::AtLeast(4) };
+        assert_eq!(b.initial(6), (2, 4));
+        assert_eq!(b.tag(), "t2-q4");
+        assert_eq!(Asynchrony::default().tag(), "t1-qall");
+        let a = Asynchrony::Adaptive {
+            init: (9, 9),
+            bounds: TuneBounds { tau_max: 3, q_min: 2 },
+        };
+        // init is clamped into the bounds box at resolution time
+        assert_eq!(a.initial(6), (3, 6));
+        assert_eq!(a.tag(), "adapt-t9.3-q9.2");
+        assert!(Asynchrony::Sync.controller(6).is_none());
+        assert!(b.controller(6).is_none());
+        assert_eq!(a.controller(6).unwrap().current(), (3, 6));
+    }
+
+    #[test]
+    fn controller_holds_mid_window() {
+        let mut c = Controller::new(1, 4, TuneBounds::default());
+        let l = ledger_with(TUNE_WINDOW - 1, 0, vec![6], 0);
+        assert_eq!(c.observe(&l, 6), None);
+        assert_eq!(c.current(), (1, 4));
+    }
+
+    #[test]
+    fn fallback_spike_shrinks_tau() {
+        let mut c = Controller::new(2, 4, TuneBounds::default());
+        // 2 fallbacks in a 4-round window: rate 0.5 > 0.25
+        let l = ledger_with(TUNE_WINDOW, 2, vec![10, 2], 0);
+        assert_eq!(c.observe(&l, 6), Some((1, 4)));
+        // τ saturates at 0, never underflows
+        let l2 = ledger_with(2 * TUNE_WINDOW, 4, vec![20, 4], 0);
+        assert_eq!(c.observe(&l2, 6), Some((0, 4)));
+        let l3 = ledger_with(3 * TUNE_WINDOW, 6, vec![30, 6], 0);
+        assert_eq!(c.observe(&l3, 6), Some((0, 4)));
+    }
+
+    #[test]
+    fn stale_share_shrinks_quorum_to_q_min() {
+        let bounds = TuneBounds { tau_max: 4, q_min: 3 };
+        let mut c = Controller::new(2, 4, bounds);
+        // 1 fresh of 8 contributions: stale share 7/8 > 0.5
+        let l = ledger_with(TUNE_WINDOW, 0, vec![1, 3, 4], 0);
+        assert_eq!(c.observe(&l, 6), Some((2, 3)));
+        // clamped at q_min even if the share stays high
+        let l2 = ledger_with(2 * TUNE_WINDOW, 0, vec![2, 6, 8], 0);
+        assert_eq!(c.observe(&l2, 6), Some((2, 3)));
+    }
+
+    #[test]
+    fn calm_weather_re_expands_inside_bounds() {
+        let bounds = TuneBounds { tau_max: 3, q_min: 1 };
+        let mut c = Controller::new(0, 2, bounds);
+        for k in 1..=5usize {
+            // all-fresh, no fallback, no faults: pure calm
+            let l =
+                ledger_with(k * TUNE_WINDOW, 0, vec![6 * k * TUNE_WINDOW], 0);
+            let (tau, q) = c.observe(&l, 5).unwrap();
+            // τ caps at tau_max, q at the live membership
+            assert!(tau <= bounds.tau_max, "tau {tau} round {k}");
+            assert!(q <= 5, "q {q} round {k}");
+        }
+        assert_eq!(c.current(), (3, 5));
+    }
+
+    #[test]
+    fn fault_window_holds_and_quorum_tracks_membership() {
+        let mut c = Controller::new(1, 4, TuneBounds::default());
+        // calm rates but fault activity: rule 3 holds (τ, q) ...
+        let l = ledger_with(TUNE_WINDOW, 0, vec![12], 2);
+        assert_eq!(c.observe(&l, 6), Some((1, 4)));
+        // ... except that q always clamps under the live membership
+        let l2 = ledger_with(2 * TUNE_WINDOW, 0, vec![24], 4);
+        assert_eq!(c.observe(&l2, 3), Some((1, 3)));
+    }
+
+    #[test]
+    fn decisions_are_pure_ledger_functions() {
+        // identical ledger sequences ⇒ identical decision traces,
+        // regardless of when/where the controller runs
+        let feed = |c: &mut Controller| {
+            let mut trace = Vec::new();
+            for k in 1..=6usize {
+                let fall = if k % 2 == 0 { 2 * k } else { k };
+                let l = ledger_with(
+                    k * TUNE_WINDOW,
+                    fall,
+                    vec![3 * k, 2 * k, k],
+                    k / 3,
+                );
+                if let Some(d) = c.observe(&l, 6) {
+                    trace.push(d);
+                }
+            }
+            trace
+        };
+        let mut a = Controller::new(2, 5, TuneBounds::default());
+        let mut b = Controller::new(2, 5, TuneBounds::default());
+        assert_eq!(feed(&mut a), feed(&mut b));
+    }
+}

@@ -59,25 +59,65 @@
 //!   θ-cone descent or the certified synchronous one, and the
 //!   strong-Wolfe line search runs on it unchanged.
 //!
-//! **When async ≡ sync:** with τ = 0 and q = P only fresh solves are
-//! eligible and the deadline is the last of them, so every round is
-//! exactly Algorithm 1's — the driver produces *bit-identical*
-//! iterates to [`FsDriver`](crate::algo::fs::FsDriver)
+//! - **Speculative solver lanes** (`speculate: true`). Between
+//!   shipping its round-r solve and receiving the round-r commit, a
+//!   node's solver lane used to sit idle. Speculation lets it start
+//!   the round-(r+1) solve immediately on a *predicted* iterate — its
+//!   own uncombined hybrid applied to wʳ — reconciling via the same
+//!   affine re-basing above when the real commit lands. The
+//!   classification mirrors the correctness gate: when the node's
+//!   re-based round-r direction still sits inside the safeguard's θ
+//!   cone around −gʳ⁺¹ the prediction was sound and the fresh solve
+//!   keeps its early start on the virtual clock (a `spec_solve`
+//!   event — a free head start); otherwise the speculative window is
+//!   discarded as a `speculation_rebase` (charged to
+//!   [`Ledger::spec_rebase_seconds`](crate::cluster::Ledger::spec_rebase_seconds))
+//!   and the solve restarts at the commit, exactly the plain-async
+//!   schedule. Hit or miss, the solve's *arithmetic* is computed
+//!   against the true (wʳ⁺¹, gʳ⁺¹) reference and the safeguard still
+//!   gates the combined direction — speculation moves the schedule,
+//!   never the maths, so strong convergence is untouched and a
+//!   misprediction costs a resync, never correctness. With
+//!   `speculate: false` this block is dead code and the driver is
+//!   bit-identical to its pre-speculation self (`tests/speculation.rs`
+//!   pins it).
+//!
+//! - **Adaptive (τ, q).** Under [`Asynchrony::Adaptive`] a
+//!   [`Controller`](crate::algo::adapt::Controller) re-tunes the
+//!   staleness bound and quorum per round from ledger state (fallback
+//!   spikes shrink τ, a widening straggler gap shrinks q, calm
+//!   weather re-expands both inside the configured bounds) — every
+//!   decision a pure ledger function, so seeded runs replay their
+//!   [`Ledger::tune_trace`](crate::cluster::Ledger::tune_trace)
+//!   bit-identically. See [`crate::algo::adapt`] for the rules.
+//!
+//! **When async ≡ sync:** under [`Asynchrony::Sync`] (τ = 0, q = P)
+//! only fresh solves are eligible and the deadline is the last of
+//! them, so every round is exactly Algorithm 1's — the driver produces
+//! *bit-identical* iterates to [`FsDriver`](crate::algo::fs::FsDriver)
 //! (`tests/async_fs.rs` pins this). The win appears when q < P under
 //! heterogeneous profiles: rounds advance at the pace of the q-th
 //! node, the straggler contributes stale (≤ τ) directions when they
 //! arrive, and `benches/async_fs.rs` asserts the makespan-to-ε
 //! strictly beats the pipelined synchronous schedule on the straggler
-//! profile.
+//! profile. `benches/speculation.rs` extends the chain: speculative
+//! mode must strictly beat plain async by absolute virtual seconds on
+//! the straggler and seeded-chaos matrices.
 //!
 //! Per-round staleness lands in
 //! [`Ledger::staleness_hist`](crate::cluster::Ledger::staleness_hist) /
 //! [`Ledger::fallback_rounds`](crate::cluster::Ledger::fallback_rounds),
+//! speculation outcomes in
+//! [`Ledger::spec_hits`](crate::cluster::Ledger::spec_hits) /
+//! [`Ledger::spec_misses`](crate::cluster::Ledger::spec_misses),
 //! per-event staleness in the timeline
 //! export (`--trace-timeline`), and the CLI drives it with
-//! `psgd train --method fs --async-fs --staleness τ --quorum q`.
+//! `psgd train --method fs --async-fs --staleness τ --quorum q
+//! [--adaptive] [--speculate]`.
 
 use std::collections::VecDeque;
+
+use crate::algo::adapt::Asynchrony;
 
 use crate::algo::common::{global_value_grad_fleet, TestProbe};
 use crate::algo::fs::{
@@ -97,24 +137,25 @@ use crate::opt::linesearch::{strong_wolfe, MarginPhi, PhiLambda};
 #[derive(Clone, Debug)]
 pub struct AsyncFsConfig {
     pub fs: FsConfig,
-    /// τ — a contribution combined at round r must have been computed
-    /// against a reference (wʳ′, gʳ′) with r − r′ ≤ τ. 0 = fully
-    /// synchronous (with `quorum = P`, bit-identical to [`FsDriver`]).
+    /// The asynchrony policy: [`Asynchrony::Sync`] (bit-identical to
+    /// [`FsDriver`](crate::algo::fs::FsDriver)),
+    /// [`Asynchrony::Bounded`] (fixed τ + [`Quorum`]), or
+    /// [`Asynchrony::Adaptive`] (self-tuning (τ, q) inside bounds).
     ///
-    /// [`FsDriver`]: crate::algo::fs::FsDriver
-    pub staleness: usize,
-    /// q — the master combines as soon as q of the P nodes have an
-    /// eligible contribution (clamped to 1..=P at run time;
-    /// `usize::MAX` = wait for everyone).
-    pub quorum: usize,
+    /// [`Quorum`]: crate::algo::adapt::Quorum
+    pub policy: Asynchrony,
+    /// Speculative solver lanes: nodes start the next round's solve on
+    /// a predicted iterate instead of idling until the commit (see the
+    /// module docs). `false` keeps the exact pre-speculation schedule.
+    pub speculate: bool,
 }
 
 impl Default for AsyncFsConfig {
     fn default() -> Self {
         AsyncFsConfig {
             fs: FsConfig::default(),
-            staleness: 1,
-            quorum: usize::MAX,
+            policy: Asynchrony::default(),
+            speculate: false,
         }
     }
 }
@@ -170,14 +211,12 @@ fn lookup_ref(
 
 impl Driver for AsyncFsDriver {
     fn name(&self) -> String {
-        let q = if self.config.quorum == usize::MAX {
-            "all".to_string()
-        } else {
-            self.config.quorum.to_string()
-        };
+        let spec = if self.config.speculate { "-spec" } else { "" };
         format!(
-            "afs-t{}-q{}-{}",
-            self.config.staleness, q, self.config.fs.epochs
+            "afs-{}-{}{}",
+            self.config.policy.tag(),
+            self.config.fs.epochs,
+            spec
         )
     }
 
@@ -188,9 +227,13 @@ impl Driver for AsyncFsDriver {
         stop: &StopRule,
     ) -> RunResult {
         let c = &self.config.fs;
-        let tau = self.config.staleness;
         let p_nodes = cluster.n_nodes();
-        let q = self.config.quorum.clamp(1, p_nodes);
+        // the policy resolves to a starting (τ, q); the adaptive
+        // controller (when present) re-tunes the pair per round from
+        // ledger state — see crate::algo::adapt for the rules
+        let (mut tau, mut q) = self.config.policy.initial(p_nodes);
+        let mut controller = self.config.policy.controller(p_nodes);
+        let speculate = self.config.speculate;
         let dim = cluster.dim;
         // master frame: the union-support compact master shrinks every
         // master-side buffer — including the τ+1-deep re-basing ring —
@@ -252,6 +295,24 @@ impl Driver for AsyncFsDriver {
             let members = &weather.members;
             if obs.on() {
                 obs.rec().rebased = weather.restarted.len();
+            }
+
+            // --- adaptive policy: one pure-ledger observation per
+            // round; every full window re-decides (τ, q) and records
+            // the decision on the tune trace (seeded runs replay it
+            // bit-identically) ---
+            if let Some(ctrl) = controller.as_mut() {
+                if let Some(decision) =
+                    ctrl.observe(&cluster.ledger, members.len())
+                {
+                    (tau, q) = decision;
+                    cluster.ledger.tune_trace.push(decision);
+                }
+                if obs.on() {
+                    let rec = obs.rec();
+                    rec.ctrl_tau = Some(tau);
+                    rec.ctrl_q = Some(q);
+                }
             }
 
             // --- step 1: synchronous gradient allreduce at wʳ over
@@ -332,6 +393,42 @@ impl Driver for AsyncFsDriver {
                     fresh.push(p);
                 }
             }
+            // --- speculation: a fresh node whose round-(r−1) solve
+            // finished before this round's gradient landed has been
+            // speculating on its own predicted iterate (wʳ⁻¹ plus its
+            // uncombined hybrid) since that moment. Classify each such
+            // window now that the true (wʳ, gʳ) is known: the
+            // prediction was sound iff the node's re-based previous
+            // direction still sits inside the safeguard's θ cone
+            // around −gʳ — the same test that gates the combined
+            // direction. A hit keeps the early start on the virtual
+            // clock; a miss discards the window as a
+            // speculation_rebase. Timing only: the solve arithmetic
+            // below runs against the true reference either way, so
+            // speculation never perturbs the maths.
+            let spec: Vec<Option<(f64, bool)>> = lanes
+                .iter()
+                .enumerate()
+                .map(|(p, lane)| {
+                    if !speculate || !fresh.contains(&p) {
+                        return None;
+                    }
+                    let s = lane.latest.as_ref()?;
+                    if s.for_round + 1 != r || s.done >= t_round {
+                        return None;
+                    }
+                    // τ ≥ 1 here — a round-(r−1) solve survives the
+                    // staleness abort above only then — so the
+                    // (wʳ⁻¹, gʳ⁻¹) pair is still in the ring
+                    let (w_old, g_old) = lookup_ref(&history, r - 1);
+                    let mut dp = s.dir.to_dense(w_old, g_old);
+                    for ((vj, wo), wc) in dp.iter_mut().zip(w_old).zip(&w)
+                    {
+                        *vj += wo - wc;
+                    }
+                    Some((s.done, c.safeguard.accepts_combined(&g, &dp)))
+                })
+                .collect();
             let w_ref = &w;
             let g_ref = &g;
             let gp_ref = &grad_parts;
@@ -343,14 +440,61 @@ impl Driver for AsyncFsDriver {
             });
             let scale = cluster.cost.compute_scale;
             let mut max_dur = 0.0f64;
+            let (mut spec_hits_r, mut spec_misses_r) = (0usize, 0usize);
             for (&p, (dir, secs)) in fresh.iter().zip(solved) {
                 let dur = secs * scale * cluster.engine.profile.scale(p);
                 max_dur = max_dur.max(dur);
-                cluster
-                    .engine
-                    .solver_event("async_solve", p, t_round, t_round + dur);
+                let start = match spec[p] {
+                    // hit: a free head start — the solve is scheduled
+                    // from the moment the previous one finished, not
+                    // from the commit
+                    Some((s0, true)) => {
+                        spec_hits_r += 1;
+                        cluster
+                            .engine
+                            .solver_event("spec_solve", p, s0, s0 + dur);
+                        s0
+                    }
+                    // miss: the speculative window was wasted work;
+                    // the lane re-bases and the solve restarts at the
+                    // commit — exactly the plain-async schedule, so a
+                    // misprediction never loses to not speculating
+                    Some((s0, false)) => {
+                        spec_misses_r += 1;
+                        cluster.ledger.spec_rebase_seconds += t_round - s0;
+                        cluster.engine.solver_event(
+                            "speculation_rebase",
+                            p,
+                            s0,
+                            t_round,
+                        );
+                        cluster.engine.solver_event(
+                            "async_solve",
+                            p,
+                            t_round,
+                            t_round + dur,
+                        );
+                        t_round
+                    }
+                    None => {
+                        cluster.engine.solver_event(
+                            "async_solve",
+                            p,
+                            t_round,
+                            t_round + dur,
+                        );
+                        t_round
+                    }
+                };
                 lanes[p].inflight =
-                    Some(Solve { for_round: r, done: t_round + dur, dir });
+                    Some(Solve { for_round: r, done: start + dur, dir });
+            }
+            cluster.ledger.spec_hits += spec_hits_r;
+            cluster.ledger.spec_misses += spec_misses_r;
+            if obs.on() {
+                let rec = obs.rec();
+                rec.spec_hits = spec_hits_r;
+                rec.spec_misses = spec_misses_r;
             }
             // flat barrier-equivalent component; the schedule itself
             // lives on the solver lanes

@@ -15,7 +15,11 @@
 //!   arrival-ordered quorum of (possibly stale, re-based) hybrid
 //!   directions, with the safeguard as the correctness gate and a
 //!   synchronous-barrier fallback.
+//! - [`adapt`] — the typed [`adapt::Asynchrony`] policy the async
+//!   driver runs under (Sync / Bounded / Adaptive) and the
+//!   self-tuning (τ, q) controller driven by ledger state.
 
+pub mod adapt;
 pub mod async_fs;
 pub mod autoswitch;
 pub mod common;

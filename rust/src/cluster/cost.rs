@@ -32,15 +32,6 @@ pub struct CostModel {
     pub compute_scale: f64,
     /// physical reduction arrangement (time model only)
     pub topology: Topology,
-    /// DEPRECATED straggler knob, kept so existing configs/benches
-    /// still parse: node p's compute is scaled by
-    /// 1 + straggle·(p mod 4 == 0). At partition time the cluster
-    /// converts it into a seedable per-node
-    /// [`NodeProfile`](super::engine::NodeProfile)
-    /// (`NodeProfile::from_legacy_straggle`), which is what the event
-    /// engine actually consumes — set a profile directly
-    /// (`Cluster::set_profile`) instead of this.
-    pub straggle: f64,
 }
 
 impl Default for CostModel {
@@ -51,7 +42,6 @@ impl Default for CostModel {
             bytes_per_scalar: 8,
             compute_scale: 1.0,
             topology: Topology::Tree,
-            straggle: 0.0,
         }
     }
 }
@@ -65,7 +55,6 @@ impl CostModel {
             bytes_per_scalar: 8,
             compute_scale: 0.0,
             topology: Topology::Tree,
-            straggle: 0.0,
         }
     }
 
@@ -120,15 +109,6 @@ impl CostModel {
             }
         }
     }
-
-    /// Per-node compute multiplier under the DEPRECATED straggler
-    /// knob. Retained as a shim for old call sites; the cluster now
-    /// charges compute through the engine's
-    /// [`NodeProfile`](super::engine::NodeProfile).
-    pub fn node_compute_scale(&self, node: usize) -> f64 {
-        let extra = if node % 4 == 0 { self.straggle } else { 0.0 };
-        self.compute_scale * (1.0 + extra)
-    }
 }
 
 #[cfg(test)]
@@ -157,24 +137,6 @@ mod tests {
         assert!(c.traversal_seconds(1_000_000, 2) > 0.0);
         let ring = CostModel { topology: Topology::Ring, ..c };
         assert_eq!(ring.traversal_seconds(1_000_000, 1), 0.0);
-    }
-
-    #[test]
-    fn legacy_straggle_shim_matches_node_profile() {
-        // the deprecated knob and its NodeProfile replacement must
-        // agree node-for-node so old configs keep their exact timing
-        use crate::cluster::engine::NodeProfile;
-        let c = CostModel {
-            straggle: 2.0,
-            compute_scale: 1.5,
-            ..CostModel::default()
-        };
-        let prof = NodeProfile::from_legacy_straggle(8, 2.0);
-        for p in 0..8 {
-            let shim = c.node_compute_scale(p);
-            let engine = c.compute_scale * prof.scale(p);
-            assert!((shim - engine).abs() < 1e-15, "node {p}");
-        }
     }
 
     #[test]

@@ -57,12 +57,11 @@
 use crate::util::json::Value;
 use crate::util::rng::Rng;
 
-/// Per-node relative compute speed, replacing the old
-/// `CostModel::straggle` `p mod 4` hack. `speed[p]` multiplies node
-/// p's measured compute seconds: 1.0 = this machine's single core,
-/// 3.0 = a node three times slower. The global `CostModel::
-/// compute_scale` still applies on top (so `CostModel::free()` keeps
-/// costing nothing).
+/// Per-node relative compute speed — the one straggler/heterogeneity
+/// surface. `speed[p]` multiplies node p's measured compute seconds:
+/// 1.0 = this machine's single core, 3.0 = a node three times slower.
+/// The global `CostModel::compute_scale` still applies on top (so
+/// `CostModel::free()` keeps costing nothing).
 #[derive(Clone, Debug, PartialEq)]
 pub struct NodeProfile {
     pub speed: Vec<f64>,
@@ -92,18 +91,6 @@ impl NodeProfile {
             p.speed[node] = factor;
         }
         p
-    }
-
-    /// Deprecated shim for the old `CostModel::straggle` knob
-    /// (`1 + straggle·(p mod 4 == 0)`), so existing configs, benches
-    /// and tests keep their exact timing. New code should construct a
-    /// profile directly.
-    pub fn from_legacy_straggle(n: usize, straggle: f64) -> NodeProfile {
-        NodeProfile {
-            speed: (0..n)
-                .map(|p| if p % 4 == 0 { 1.0 + straggle } else { 1.0 })
-                .collect(),
-        }
     }
 
     /// Node p's speed multiplier (1.0 past the profile's end, so a
@@ -892,8 +879,6 @@ mod tests {
         assert_eq!(seeded, NodeProfile::seeded(8, 7, 1.5));
         assert!(seeded.speed.iter().all(|&s| (1.0..2.5).contains(&s)));
         assert!(!seeded.is_homogeneous());
-        let legacy = NodeProfile::from_legacy_straggle(6, 2.0);
-        assert_eq!(legacy.speed, vec![3.0, 1.0, 1.0, 1.0, 3.0, 1.0]);
     }
 
     #[test]

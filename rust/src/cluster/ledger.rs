@@ -73,6 +73,19 @@ pub struct Ledger {
     pub flap_events: usize,
     /// virtual seconds of rejoin state transfer on the critical path
     pub recovery_seconds: f64,
+    /// speculative solver lanes: solves whose predicted basis survived
+    /// the commit and kept their early start on the virtual clock
+    pub spec_hits: usize,
+    /// speculative solves whose prediction was discarded — the lane
+    /// re-based and restarted at the commit (plain-async timing)
+    pub spec_misses: usize,
+    /// virtual seconds of speculative work discarded by mispredictions
+    /// (the `speculation_rebase` spans; never on the critical path)
+    pub spec_rebase_seconds: f64,
+    /// adaptive asynchrony: the (τ, q) decision sequence the
+    /// controller took, in order — pure ledger functions, so a seeded
+    /// run replays this trace bit-identically
+    pub tune_trace: Vec<(usize, usize)>,
 }
 
 impl Ledger {
@@ -129,6 +142,7 @@ impl Ledger {
         reg.counter("scalar_rounds", self.scalar_rounds as u64);
         reg.gauge("seconds", self.seconds(), 3, "s");
         self.publish_staleness(reg);
+        self.publish_speculation(reg);
         self.publish_faults(reg);
     }
 
@@ -149,6 +163,34 @@ impl Ledger {
     pub fn staleness_profile(&self) -> String {
         let mut reg = Registry::new();
         self.publish_staleness(&mut reg);
+        reg.render()
+    }
+
+    /// Did speculation or the adaptive controller touch this run?
+    pub fn has_speculation_activity(&self) -> bool {
+        self.spec_hits + self.spec_misses + self.tune_trace.len() > 0
+    }
+
+    /// Publish the speculation/self-tuning counters. Publishes nothing
+    /// when neither speculative lanes nor the adaptive controller ran
+    /// (quiet profile).
+    pub fn publish_speculation(&self, reg: &mut Registry) {
+        if !self.has_speculation_activity() {
+            return;
+        }
+        reg.counter("spec_hit", self.spec_hits as u64);
+        reg.counter("spec_miss", self.spec_misses as u64);
+        reg.gauge("spec_rebase", self.spec_rebase_seconds, 3, "s");
+        reg.counter("tuned", self.tune_trace.len() as u64);
+    }
+
+    /// Speculation counters rendered for bench reports through the one
+    /// registry render path: "spec_hit 12 | spec_miss 2 |
+    /// spec_rebase 0.250s | tuned 3". Empty when the run saw neither
+    /// speculation nor tuning.
+    pub fn speculation_profile(&self) -> String {
+        let mut reg = Registry::new();
+        self.publish_speculation(&mut reg);
         reg.render()
     }
 
@@ -278,6 +320,29 @@ mod tests {
         l.publish_faults(&mut reg);
         assert_eq!(p, reg.render());
         assert_eq!(reg.get("crash"), Some(2.0));
+    }
+
+    #[test]
+    fn speculation_profile_renders_counters() {
+        let quiet = Ledger::default();
+        assert!(!quiet.has_speculation_activity());
+        assert_eq!(quiet.speculation_profile(), "");
+        let l = Ledger {
+            spec_hits: 12,
+            spec_misses: 2,
+            spec_rebase_seconds: 0.25,
+            tune_trace: vec![(2, 4), (1, 4), (2, 5)],
+            ..Ledger::default()
+        };
+        assert!(l.has_speculation_activity());
+        let p = l.speculation_profile();
+        assert!(p.starts_with("spec_hit 12 | spec_miss 2"), "{p}");
+        assert!(p.contains("spec_rebase 0.250s | tuned 3"), "{p}");
+        // the profile IS the registry render — one render path
+        let mut reg = Registry::new();
+        l.publish_speculation(&mut reg);
+        assert_eq!(p, reg.render());
+        assert_eq!(reg.get("spec_hit"), Some(12.0));
     }
 
     #[test]

@@ -156,13 +156,9 @@ impl Cluster {
             shard.upos = umap.positions_of(&shard.map);
         }
         let scratch = NodeScratch::pool(shards.len());
-        // the deprecated CostModel::straggle knob becomes a NodeProfile
-        // at partition time (straggle == 0 ⇒ homogeneous); replace it
-        // with Cluster::set_profile for seeded/straggler scenarios
-        let engine = Engine::new(NodeProfile::from_legacy_straggle(
-            shards.len(),
-            cost.straggle,
-        ));
+        // nodes start homogeneous; straggler/heterogeneous scenarios
+        // install a profile via Cluster::set_profile
+        let engine = Engine::new(NodeProfile::homogeneous(shards.len()));
         let alive = vec![true; engine.n_nodes()];
         Cluster {
             shards,

@@ -60,8 +60,8 @@
 //!
 //!   **Timing** is an event-driven schedule computed by
 //!   [`cluster::Engine`]: one virtual clock per node, scaled by a
-//!   seeded [`cluster::NodeProfile`] (which replaces the deprecated
-//!   `CostModel::straggle` knob); every phase — local solve, gradient
+//!   seeded [`cluster::NodeProfile`] (the one straggler/heterogeneity
+//!   surface); every phase — local solve, gradient
 //!   sweep, Hv product, each tree hop, scalar round — is a timed event,
 //!   and a reduction-tree parent hop starts at `max(children ready)`,
 //!   so in pipelined schedules fast subtrees hide slow ones.
@@ -226,9 +226,11 @@
 //!   step size and the strong-Wolfe trial count (`null` on rounds
 //!   that stopped before the decision);
 //! - async state: quorum composition, per-contribution staleness,
-//!   rejoin re-base count; fleet weather: live membership + the fault
-//!   events applied this round; compact-master state: density-gate
-//!   decision + live |U|;
+//!   rejoin re-base count, speculation outcomes (`spec_hits`/
+//!   `spec_misses`) and the (τ, q) in force under the adaptive policy
+//!   (`ctrl_tau`/`ctrl_q`, `null` otherwise); fleet weather: live
+//!   membership + the fault events applied this round; compact-master
+//!   state: density-gate decision + live |U|;
 //! - ledger/engine *deltas* over the round (`d_passes`, `d_bytes`,
 //!   `d_scalar`, `d_makespan`, `d_level_bytes`) and the cumulative
 //!   `recovery_s`.
@@ -259,6 +261,46 @@
 //! [`obs::Registry`] (counters/gauges/histograms) is the one render
 //! path behind every `*_profile()` string the ledger, engine and
 //! fault layer expose.
+//!
+//! ## Speculation & adaptive asynchrony
+//!
+//! Two layers on top of the bounded-staleness driver, both pure
+//! schedule/policy changes with the safeguard as the unchanged
+//! correctness gate ([`algo::adapt`] + [`algo::async_fs`]):
+//!
+//! **Speculative solver lanes** (`--speculate`). Between shipping its
+//! round-r solve and the round-r commit a solver lane is idle; with
+//! speculation on it starts the round-(r+1) solve early against a
+//! predicted iterate (its own uncombined hybrid applied to wʳ). At the
+//! commit the master reconciles the prediction through the same affine
+//! re-basing the stale quorum path uses, and the safeguard's cone test
+//! decides: a **hit** banks the head start on the virtual clock (the
+//! lane's solve is done earlier, so the arrival-ordered quorum
+//! deadline moves up); a **miss** is charged to the ledger as
+//! `speculation_rebase` wasted seconds and the solve restarts at the
+//! commit — exactly the plain async schedule, so speculation never
+//! loses time. The *maths never moves*: every combined direction is
+//! still computed against the true reference, so `--speculate` is
+//! bit-identical in iterates to the same run without it
+//! (`tests/speculation.rs` pins this; `benches/speculation.rs` gates
+//! the strict virtual-seconds win on the straggler and chaos
+//! matrices). Outcomes land on the [`cluster::Ledger`] (`spec_hits`,
+//! `spec_misses`, `spec_rebase_seconds`).
+//!
+//! **First-class asynchrony policy** ([`algo::adapt::Asynchrony`]).
+//! The driver's schedule is configured by a typed policy — `Sync`
+//! (≡ the synchronous driver, bit-identical), `Bounded{tau, quorum}`
+//! (the fixed regime; [`algo::adapt::Quorum::All`] retires the old
+//! `usize::MAX` sentinel), or `Adaptive{init, bounds}`
+//! (`--adaptive`): a deterministic [`algo::adapt::Controller`]
+//! re-decides (τ, q) every [`algo::adapt::TUNE_WINDOW`] async rounds
+//! from the ledger's own staleness histogram and fallback/fault
+//! counters — fallback spikes shrink τ, a widening straggler gap
+//! shrinks q, fault-active windows hold, calm windows re-expand toward
+//! `tau_max`/the live membership. Every decision is a pure function of
+//! ledger counters (no wall clock, no RNG — pallas-lint's scope covers
+//! the module), recorded on [`cluster::Ledger::tune_trace`], so seeded
+//! runs replay their (τ, q) trajectory bit-identically.
 //!
 //! ## Quickstart
 //!
@@ -293,6 +335,7 @@ pub mod util;
 
 /// Convenience re-exports for the common driver workflow.
 pub mod prelude {
+    pub use crate::algo::adapt::{Asynchrony, Quorum, TuneBounds};
     pub use crate::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
     pub use crate::algo::fs::{FsConfig, FsDriver};
     pub use crate::algo::hybrid::HybridDriver;

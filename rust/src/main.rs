@@ -10,6 +10,7 @@
 //! `train` accepts either `--data file.libsvm` or synthetic-generator
 //! knobs, and either CLI flags or `--config exp.toml` (CLI wins).
 
+use psgd::algo::adapt::{Asynchrony, Quorum, TuneBounds};
 use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::autoswitch::{AutoSwitchConfig, AutoSwitchDriver};
 use psgd::algo::fs::{FsConfig, FsDriver, InnerSolver, MasterMode};
@@ -74,7 +75,28 @@ COMMANDS
                                quorum is bit-identical to plain fs.
                [--staleness N] τ for --async-fs (default 1)
                [--quorum N]    quorum size q for --async-fs
-                               (default P−1, min 1)
+                               (default P−1, min 1; N ≥ P waits for
+                               everyone)
+               [--adaptive]    self-tuning asynchrony (--async-fs
+                               only): a deterministic controller
+                               re-tunes (τ, q) every few rounds from
+                               the run's own staleness/fallback/fault
+                               counters — fallback spikes shrink τ, a
+                               widening straggler gap shrinks q, calm
+                               weather re-expands both. --staleness/
+                               --quorum set the starting point.
+               [--tau-max N]   adaptive τ ceiling (default 4)
+               [--q-min N]     adaptive quorum floor (default 1)
+               [--speculate]   speculative solver lanes (--async-fs
+                               only): idle lanes start the next solve
+                               against a predicted iterate before the
+                               current round commits; a prediction the
+                               safeguard certifies banks the head
+                               start on the virtual clock, a miss is
+                               charged as speculation_rebase and the
+                               solve restarts at the commit — results
+                               are bit-identical either way (the
+                               schedule moves, the maths never does).
                [--straggler N:F]    node N runs F× slower (e.g. 0:3)
                [--profile-spread X] seeded heterogeneous node speeds
                                     1 + X·U[0,1)  [--profile-seed S]
@@ -272,7 +294,7 @@ fn load_data(args: &Args, cfg: &Config) -> Dataset {
 
 /// Build the per-node speed profile from `--straggler N:F` /
 /// `--profile-spread X [--profile-seed S]`; None keeps the default
-/// (homogeneous, or the deprecated `CostModel::straggle` shim).
+/// homogeneous profile.
 fn node_profile(args: &Args, nodes: usize) -> Option<NodeProfile> {
     let mut profile = None;
     let spread = args.f64("profile-spread", 0.0);
@@ -301,6 +323,28 @@ fn node_profile(args: &Args, nodes: usize) -> Option<NodeProfile> {
         profile = Some(p);
     }
     profile
+}
+
+/// Resolve `--staleness`/`--quorum`/`--adaptive [--tau-max --q-min]`
+/// into the typed [`Asynchrony`] policy the async driver and the obs
+/// manifest share.
+fn async_policy(args: &Args, nodes: usize) -> Asynchrony {
+    let tau = args.usize("staleness", 1);
+    let q = args.usize("quorum", nodes.saturating_sub(1).max(1));
+    if args.bool("adaptive", false) {
+        let d = TuneBounds::default();
+        Asynchrony::Adaptive {
+            init: (tau, q),
+            bounds: TuneBounds {
+                tau_max: args.usize("tau-max", d.tau_max),
+                q_min: args.usize("q-min", d.q_min),
+            },
+        }
+    } else {
+        let quorum =
+            if q >= nodes { Quorum::All } else { Quorum::AtLeast(q) };
+        Asynchrony::Bounded { tau, quorum }
+    }
 }
 
 fn train(args: &Args) {
@@ -389,9 +433,8 @@ fn train(args: &Args) {
         "fs" if args.bool("async-fs", false) => {
             Box::new(AsyncFsDriver::new(AsyncFsConfig {
                 fs: fs_config,
-                staleness: args.usize("staleness", 1),
-                quorum: args
-                    .usize("quorum", nodes.saturating_sub(1).max(1)),
+                policy: async_policy(args, nodes),
+                speculate: args.bool("speculate", false),
             }))
         }
         "fs" => Box::new(FsDriver::new(fs_config)),
@@ -453,6 +496,7 @@ fn train(args: &Args) {
             quorum: is_async.then(|| {
                 args.usize("quorum", nodes.saturating_sub(1).max(1))
             }),
+            policy: is_async.then(|| async_policy(args, nodes).tag()),
             fault: args.get("fault").map(str::to_string),
             fault_seed: args
                 .get("fault")

@@ -108,15 +108,16 @@ impl<'a> Report<'a> {
     }
 
     /// Markdown: the resilience counters each attached ledger carries —
-    /// async staleness histogram + fallbacks, and the fault accounting
+    /// async staleness histogram + fallbacks, the fault accounting
     /// (crashes, rejoins + recovery seconds, wire losses, retries,
-    /// degrades, flaps). Empty string when no ledger was attached.
+    /// degrades, flaps), and the speculation outcome (hits/misses).
+    /// Empty string when no ledger was attached.
     pub fn resilience_table(&self) -> String {
         if self.ledgers.is_empty() {
             return String::new();
         }
         let mut out = String::from(
-            "| method | async rounds | fallbacks | staleness | crashes | rejoins | recovery s | lost | retries | degrades | flaps |\n|---|---|---|---|---|---|---|---|---|---|---|\n",
+            "| method | async rounds | fallbacks | staleness | crashes | rejoins | recovery s | lost | retries | degrades | flaps | spec hits | spec misses |\n|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
         );
         for (label, l) in &self.ledgers {
             let hist = if l.staleness_hist.is_empty() {
@@ -131,7 +132,7 @@ impl<'a> Report<'a> {
             };
             let _ = writeln!(
                 out,
-                "| {} | {} | {} | {} | {} | {} | {:.3} | {} | {} | {} | {} |",
+                "| {} | {} | {} | {} | {} | {} | {:.3} | {} | {} | {} | {} | {} | {} |",
                 label,
                 l.async_rounds,
                 l.fallback_rounds,
@@ -143,6 +144,8 @@ impl<'a> Report<'a> {
                 l.retry_rounds,
                 l.degrade_events,
                 l.flap_events,
+                l.spec_hits,
+                l.spec_misses,
             );
         }
         out
@@ -175,7 +178,10 @@ pub fn render_run_report(
 ) -> String {
     let traces = std::slice::from_ref(trace);
     let mut report = Report::new(traces, f_star);
-    if ledger.async_rounds > 0 || ledger.has_fault_activity() {
+    if ledger.async_rounds > 0
+        || ledger.has_fault_activity()
+        || ledger.has_speculation_activity()
+    {
         report.ledgers = vec![(trace.label.clone(), ledger.clone())];
     }
     report.render("run")
@@ -294,6 +300,12 @@ impl RecordedRun {
             if let Some(rs) = v.get("recovery_s").and_then(Value::as_f64) {
                 ledger.recovery_seconds = rs;
             }
+            // speculation outcomes accumulate round by round (absent on
+            // pre-speculation streams → zero)
+            ledger.spec_hits +=
+                v.get("spec_hits").and_then(Value::as_usize).unwrap_or(0);
+            ledger.spec_misses +=
+                v.get("spec_misses").and_then(Value::as_usize).unwrap_or(0);
             rounds.push(v);
         }
         let f_star = trace
@@ -458,9 +470,9 @@ f* = 5.00000000e-1
 
 ### resilience
 
-| method | async rounds | fallbacks | staleness | crashes | rejoins | recovery s | lost | retries | degrades | flaps |
-|---|---|---|---|---|---|---|---|---|---|---|
-| afs | 2 | 1 | s0:3 s1:1 | 1 | 1 | 0.125 | 2 | 3 | 0 | 0 |
+| method | async rounds | fallbacks | staleness | crashes | rejoins | recovery s | lost | retries | degrades | flaps | spec hits | spec misses |
+|---|---|---|---|---|---|---|---|---|---|---|---|---|
+| afs | 2 | 1 | s0:3 s1:1 | 1 | 1 | 0.125 | 2 | 3 | 0 | 0 | 0 | 0 |
 ";
 
     #[test]
@@ -567,6 +579,8 @@ f* = 5.00000000e-1
             recovery_seconds: 0.125,
             lost_messages: 2,
             retry_rounds: 3,
+            spec_hits: 4,
+            spec_misses: 1,
             ..Ledger::default()
         };
         ledger.record_async_round(&[0, 0, 1], false);
@@ -574,7 +588,7 @@ f* = 5.00000000e-1
         let r = Report::new(&traces, 1.0)
             .with_ledgers(vec![("afs".to_string(), ledger)]);
         let t = r.resilience_table();
-        assert!(t.contains("| afs | 2 | 1 | s0:3 s1:1 | 1 | 1 | 0.125 | 2 | 3 | 0 | 0 |"), "{t}");
+        assert!(t.contains("| afs | 2 | 1 | s0:3 s1:1 | 1 | 1 | 0.125 | 2 | 3 | 0 | 0 | 4 | 1 |"), "{t}");
         let full = r.render("chaos run");
         assert!(full.contains("### resilience"), "{full}");
     }

@@ -190,6 +190,24 @@ fn write_round_line(buf: &mut String, r: &RoundRecord) {
     write_f64_arr(buf, &r.d_level_bytes);
     buf.push_str(",\"recovery_s\":");
     write_num(buf, r.recovery_s);
+    buf.push_str(",\"spec_hits\":");
+    let _ = write!(buf, "{}", r.spec_hits);
+    buf.push_str(",\"spec_misses\":");
+    let _ = write!(buf, "{}", r.spec_misses);
+    buf.push_str(",\"ctrl_tau\":");
+    match r.ctrl_tau {
+        Some(t) => {
+            let _ = write!(buf, "{t}");
+        }
+        None => buf.push_str("null"),
+    }
+    buf.push_str(",\"ctrl_q\":");
+    match r.ctrl_q {
+        Some(q) => {
+            let _ = write!(buf, "{q}");
+        }
+        None => buf.push_str("null"),
+    }
     buf.push('}');
 }
 
@@ -220,6 +238,9 @@ mod tests {
         r.live_u = 100;
         r.d_passes = 4.0;
         r.d_level_bytes.push(2048.0);
+        r.spec_hits = 2;
+        r.spec_misses = 1;
+        r.ctrl_tau = Some(3);
         let mut buf = String::new();
         write_round_line(&mut buf, &r);
         let v = json::parse(&buf).unwrap();
@@ -232,6 +253,10 @@ mod tests {
         assert_eq!(v.get("quorum").unwrap().as_arr().unwrap().len(), 3);
         let faults = v.get("faults").unwrap().as_arr().unwrap();
         assert_eq!(faults[0].get("what").unwrap().as_str(), Some("crash"));
+        assert_eq!(v.get("spec_hits").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("spec_misses").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("ctrl_tau").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("ctrl_q"), Some(&json::Value::Null));
         // float fields round-trip to identical bits
         assert_eq!(
             v.get("gnorm").unwrap().as_f64().unwrap().to_bits(),

@@ -72,6 +72,10 @@ pub struct RunManifest {
     pub pipeline: bool,
     pub staleness: Option<usize>,
     pub quorum: Option<usize>,
+    /// asynchrony policy tag ([`Asynchrony::tag`]
+    /// (crate::algo::adapt::Asynchrony::tag)), e.g. "t2-q3" or
+    /// "adapt-t1.4-q4.1"; `None` on synchronous methods
+    pub policy: Option<String>,
     pub fault: Option<String>,
     pub fault_seed: Option<u64>,
 }
@@ -83,6 +87,10 @@ impl RunManifest {
         }
         let fault = self
             .fault
+            .clone()
+            .map_or(Value::Null, Value::Str);
+        let policy = self
+            .policy
             .clone()
             .map_or(Value::Null, Value::Str);
         Value::obj(vec![
@@ -101,6 +109,7 @@ impl RunManifest {
             ("pipeline", Value::Bool(self.pipeline)),
             ("staleness", opt_num(self.staleness.map(|v| v as u64))),
             ("quorum", opt_num(self.quorum.map(|v| v as u64))),
+            ("policy", policy),
             ("fault", fault),
             ("fault_seed", opt_num(self.fault_seed)),
             (
@@ -154,6 +163,15 @@ pub struct RoundRecord {
     pub staleness: Vec<usize>,
     /// rejoin re-bases charged this round (crash recovery)
     pub rebased: usize,
+    /// speculative solves whose reconciled direction passed the
+    /// safeguard (head starts banked) this round
+    pub spec_hits: usize,
+    /// speculative solves rejected and restarted at the commit
+    pub spec_misses: usize,
+    /// staleness bound τ in force this round (adaptive policy only)
+    pub ctrl_tau: Option<usize>,
+    /// quorum size q in force this round (adaptive policy only)
+    pub ctrl_q: Option<usize>,
     // --- fleet weather ---
     /// live membership this round
     pub members: Vec<usize>,
@@ -210,6 +228,10 @@ impl RoundRecord {
             quorum,
             staleness,
             rebased,
+            spec_hits,
+            spec_misses,
+            ctrl_tau,
+            ctrl_q,
             members,
             fault_nodes,
             fault_whats,
@@ -238,6 +260,10 @@ impl RoundRecord {
         quorum.clear();
         staleness.clear();
         *rebased = 0;
+        *spec_hits = 0;
+        *spec_misses = 0;
+        *ctrl_tau = None;
+        *ctrl_q = None;
         members.clear();
         fault_nodes.clear();
         fault_whats.clear();
@@ -387,12 +413,14 @@ mod tests {
         let m = RunManifest {
             method: "afs".to_string(),
             nodes: 4,
+            policy: Some("t2-q3".to_string()),
             ..RunManifest::default()
         };
         let v = m.to_value();
         let s = v.to_json(0);
         assert!(s.contains("\"kind\": \"manifest\""), "{s}");
         assert!(s.contains("\"schema\": 1"), "{s}");
+        assert!(s.contains("\"policy\": \"t2-q3\""), "{s}");
         assert!(s.contains("\"pkg\": \"psgd\""), "{s}");
     }
 }

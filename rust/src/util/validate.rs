@@ -49,6 +49,53 @@ pub fn validate_train(args: &Args, nodes: usize) -> Result<(), String> {
         })?;
     }
 
+    let is_adaptive =
+        matches!(args.get("adaptive"), Some("true" | "1" | "yes"));
+    if is_adaptive && !is_async {
+        return Err(
+            "--adaptive only applies to --async-fs runs (method fs)"
+                .to_string(),
+        );
+    }
+    if let Some(t) = args.get("tau-max") {
+        if !is_adaptive {
+            return Err(
+                "--tau-max requires --adaptive (the self-tuning policy)"
+                    .to_string(),
+            );
+        }
+        t.parse::<usize>().map_err(|_| {
+            format!("--tau-max expects a non-negative integer, got {t:?}")
+        })?;
+    }
+    if let Some(q) = args.get("q-min") {
+        if !is_adaptive {
+            return Err(
+                "--q-min requires --adaptive (the self-tuning policy)"
+                    .to_string(),
+            );
+        }
+        let q: usize = q.parse().map_err(|_| {
+            format!("--q-min expects a positive integer, got {q:?}")
+        })?;
+        if q == 0 {
+            return Err("--q-min must be at least 1".to_string());
+        }
+        if q > nodes {
+            return Err(format!(
+                "--q-min {q} exceeds the cluster size (P = {nodes})"
+            ));
+        }
+    }
+    if matches!(args.get("speculate"), Some("true" | "1" | "yes"))
+        && !is_async
+    {
+        return Err(
+            "--speculate only applies to --async-fs runs (method fs)"
+                .to_string(),
+        );
+    }
+
     if let Some(spec) = args.get("straggler") {
         parse_straggler(spec, nodes)?;
     }
@@ -158,6 +205,35 @@ mod tests {
             .contains("positive integer"));
         assert!(err("train --async-fs --staleness -1", 4)
             .contains("non-negative"));
+    }
+
+    #[test]
+    fn speculation_and_adaptive_flags_require_async() {
+        let e = err("train --speculate", 4);
+        assert!(e.contains("--async-fs"), "{e}");
+        let e = err("train --adaptive", 4);
+        assert!(e.contains("--async-fs"), "{e}");
+        // tuning bounds require the adaptive policy itself
+        let e = err("train --async-fs --tau-max 4", 4);
+        assert!(e.contains("--adaptive"), "{e}");
+        let e = err("train --async-fs --q-min 2", 4);
+        assert!(e.contains("--adaptive"), "{e}");
+        // bound sanity
+        assert!(err("train --async-fs --adaptive --q-min 0", 4)
+            .contains("at least 1"));
+        assert!(err("train --async-fs --adaptive --q-min 9", 4)
+            .contains("exceeds the cluster size"));
+        assert!(err("train --async-fs --adaptive --tau-max x", 4)
+            .contains("non-negative"));
+        // the full adaptive + speculation flag set is accepted
+        assert!(validate_train(
+            &args(
+                "train --async-fs --adaptive --tau-max 4 --q-min 2 \
+                 --speculate"
+            ),
+            4
+        )
+        .is_ok());
     }
 
     #[test]

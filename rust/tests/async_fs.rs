@@ -16,6 +16,7 @@
 //!    least one round's combined direction fails sufficient descent
 //!    and falls back to the synchronous barrier direction.
 
+use psgd::algo::adapt::{Asynchrony, Quorum};
 use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::fs::{FsConfig, FsDriver};
 use psgd::algo::safeguard::Safeguard;
@@ -92,8 +93,8 @@ fn tau0_full_quorum_is_bit_identical_to_synchronous_fs() {
     );
     let run_a = AsyncFsDriver::new(AsyncFsConfig {
         fs: fs_config(),
-        staleness: 0,
-        quorum: nodes,
+        policy: Asynchrony::Bounded { tau: 0, quorum: Quorum::All },
+        ..Default::default()
     })
     .run(&mut asynch, None, &StopRule::iters(8));
 
@@ -136,8 +137,11 @@ fn stale_quorum_converges_under_straggler() {
         let fstar = f_star(&cluster, cfg.loss, cfg.lam);
         let run = AsyncFsDriver::new(AsyncFsConfig {
             fs: cfg,
-            staleness: tau,
-            quorum: nodes - 1,
+            policy: Asynchrony::Bounded {
+                tau,
+                quorum: Quorum::AtLeast(nodes - 1),
+            },
+            ..Default::default()
         })
         .run(&mut cluster, None, &StopRule::iters(60));
 
@@ -193,8 +197,8 @@ fn adversarial_split_fires_safeguard_fallback() {
             safeguard: Safeguard::from_degrees(5.0),
             ..Default::default()
         },
-        staleness: 3,
-        quorum: 1,
+        policy: Asynchrony::Bounded { tau: 3, quorum: Quorum::AtLeast(1) },
+        ..Default::default()
     })
     .run(&mut cluster, None, &StopRule::iters(15));
 
@@ -229,8 +233,11 @@ fn async_run_records_solver_lanes_and_staleness() {
     cluster.set_profile(NodeProfile::with_straggler(nodes, 0, 3.0));
     let _ = AsyncFsDriver::new(AsyncFsConfig {
         fs: fs_config(),
-        staleness: 2,
-        quorum: nodes - 1,
+        policy: Asynchrony::Bounded {
+            tau: 2,
+            quorum: Quorum::AtLeast(nodes - 1),
+        },
+        ..Default::default()
     })
     .run(&mut cluster, None, &StopRule::iters(6));
 

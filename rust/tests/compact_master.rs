@@ -18,6 +18,7 @@
 //! stale re-basing path is exercised on the compact master alone
 //! against the synchronous oracle's tolerance instead.
 
+use psgd::algo::adapt::{Asynchrony, Quorum};
 use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::fs::{FsConfig, FsDriver, InnerSolver, MasterMode};
 use psgd::algo::{Driver, RunResult, StopRule};
@@ -150,8 +151,11 @@ fn run_both(
             ),
             Some((tau, quorum)) => AsyncFsDriver::new(AsyncFsConfig {
                 fs: cfg,
-                staleness: tau,
-                quorum,
+                policy: Asynchrony::Bounded {
+                    tau,
+                    quorum: Quorum::AtLeast(quorum),
+                },
+                ..Default::default()
             })
             .run(&mut cluster, Some(&test), &StopRule::iters(iters)),
         };
@@ -240,8 +244,11 @@ fn compact_async_with_stale_quorum_still_converges() {
 
     let run = AsyncFsDriver::new(AsyncFsConfig {
         fs: fs_cfg(InnerSolver::Svrg, MasterMode::Compact),
-        staleness: 2,
-        quorum: nodes - 1,
+        policy: Asynchrony::Bounded {
+            tau: 2,
+            quorum: Quorum::AtLeast(nodes - 1),
+        },
+        ..Default::default()
     })
     .run(&mut cluster, None, &StopRule::iters(60));
 

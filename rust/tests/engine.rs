@@ -75,10 +75,9 @@ fn homogeneous_engine_reproduces_legacy_seconds_for_all_solvers() {
 
 #[test]
 fn heterogeneous_barrier_schedule_still_matches_flat_sum() {
-    // the per-node profile scales the barrier charge exactly like the
-    // legacy straggle knob did: a non-pipelined heterogeneous run is
-    // still the flat accumulator (odd node count exercises the
-    // odd-tail tree pairing too)
+    // the per-node profile scales the barrier charge uniformly: a
+    // non-pipelined heterogeneous run is still the flat accumulator
+    // (odd node count exercises the odd-tail tree pairing too)
     let mut cluster = make_cluster(6, 13, CostModel::default());
     cluster.set_profile(NodeProfile::seeded(6, 9, 2.0));
     let run = FsDriver::new(fs_config(InnerSolver::Svrg, false)).run(

@@ -20,6 +20,7 @@
 //!    crash landing mid-run each terminate through the partial
 //!    quorum + safeguard fallback, never a deadlock or panic.
 
+use psgd::algo::adapt::{Asynchrony, Quorum};
 use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::fs::{FsConfig, FsDriver};
 use psgd::algo::{Driver, StopRule};
@@ -67,7 +68,14 @@ fn fs_config() -> FsConfig {
 }
 
 fn async_config(staleness: usize, quorum: usize) -> AsyncFsConfig {
-    AsyncFsConfig { fs: fs_config(), staleness, quorum }
+    AsyncFsConfig {
+        fs: fs_config(),
+        policy: Asynchrony::Bounded {
+            tau: staleness,
+            quorum: Quorum::AtLeast(quorum),
+        },
+        ..Default::default()
+    }
 }
 
 /// Exact optimum of the stitched problem (the synchronous oracle).

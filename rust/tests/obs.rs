@@ -15,6 +15,7 @@
 use std::io;
 use std::sync::{Arc, Mutex};
 
+use psgd::algo::adapt::{Asynchrony, Quorum};
 use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::fs::{FsConfig, FsDriver};
 use psgd::algo::{Driver, StopRule};
@@ -45,7 +46,14 @@ fn fs_config() -> FsConfig {
 }
 
 fn async_config(nodes: usize) -> AsyncFsConfig {
-    AsyncFsConfig { fs: fs_config(), staleness: 2, quorum: nodes - 1 }
+    AsyncFsConfig {
+        fs: fs_config(),
+        policy: Asynchrony::Bounded {
+            tau: 2,
+            quorum: Quorum::AtLeast(nodes - 1),
+        },
+        ..Default::default()
+    }
 }
 
 /// `io::Write` sink whose buffer outlives the recorder: the cluster
@@ -166,6 +174,7 @@ fn recorded_stream_replays_the_in_process_report_byte_for_byte() {
         master: "auto".to_string(),
         staleness: Some(2),
         quorum: Some(nodes - 1),
+        policy: Some(async_config(nodes).policy.tag()),
         fault: Some("seeded".to_string()),
         fault_seed: Some(1),
         ..RunManifest::default()
@@ -244,6 +253,10 @@ fn steady_state_round_recording_allocates_nothing() {
     r.d_makespan = 0.125;
     r.d_level_bytes.extend([28_688.0, 14_344.0, 14_344.0]);
     r.recovery_s = 0.25;
+    r.spec_hits = 3;
+    r.spec_misses = 1;
+    r.ctrl_tau = Some(2);
+    r.ctrl_q = Some(6);
 
     // warm-up: size the line buffer past the widest line we'll emit
     for _ in 0..4 {

@@ -1,0 +1,245 @@
+//! Speculative solver lanes + self-tuning (τ, q) acceptance suite.
+//!
+//! The contract the speculation layer and the adaptive controller
+//! must keep:
+//!
+//! 1. **`Asynchrony::Sync` IS Algorithm 1** — the typed sync policy
+//!    reproduces the synchronous `FsDriver` run bit-identically, even
+//!    with `speculate: true` (τ = 0 leaves nothing to speculate on).
+//! 2. **Speculation is timing-only** — under a full quorum the
+//!    speculative run commits the same iterates, objective trace, and
+//!    pass accounting as the plain run, bit for bit; only the virtual
+//!    schedule (and the spec counters) may differ. `speculate: false`
+//!    leaves the ledger and timeline clean of speculation entirely.
+//! 3. **The controller is a pure ledger function** — two identical
+//!    seeded chaos runs replay the same `tune_trace` decision sequence
+//!    bit-identically, and every decision respects the configured
+//!    `TuneBounds` box and the live membership.
+//! 4. **Degenerate adaptive = fixed policy** — an `Adaptive` policy
+//!    whose bounds pin (τ, q) at its init commits the same run as the
+//!    equivalent `Bounded` policy.
+
+use psgd::algo::adapt::{Asynchrony, Quorum, TuneBounds};
+use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
+use psgd::algo::fs::{FsConfig, FsDriver};
+use psgd::algo::{Driver, RunResult, StopRule};
+use psgd::cluster::{Cluster, CostModel, FaultPlan, NodeProfile};
+use psgd::data::dataset::Dataset;
+use psgd::data::synth::SynthConfig;
+
+/// Same sparse-regime data the async suite pins.
+fn make_data(seed: u64) -> Dataset {
+    SynthConfig {
+        n_examples: 400,
+        n_features: 2_000,
+        nnz_per_example: 5,
+        skew: 1.0,
+        ..SynthConfig::default()
+    }
+    .generate(seed)
+}
+
+/// Modeled-time cluster: latency advances the virtual clock every
+/// round (so speculation windows open), while `compute_scale: 0`
+/// removes measured wall time from the schedule — every run is
+/// bit-deterministic, which is what the replay gates need.
+fn modeled_cluster(nodes: usize, seed: u64) -> Cluster {
+    let cost = CostModel { compute_scale: 0.0, ..CostModel::default() };
+    let mut c = Cluster::partition(make_data(seed), nodes, cost);
+    c.threads = 1;
+    c
+}
+
+fn fs_config() -> FsConfig {
+    FsConfig { lam: 0.5, epochs: 2, ..Default::default() }
+}
+
+fn run_async(
+    cluster: &mut Cluster,
+    policy: Asynchrony,
+    speculate: bool,
+    iters: usize,
+) -> RunResult {
+    AsyncFsDriver::new(AsyncFsConfig {
+        fs: fs_config(),
+        policy,
+        speculate,
+    })
+    .run(cluster, None, &StopRule::iters(iters))
+}
+
+fn assert_same_maths(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.w, b.w, "{what}: iterates diverged");
+    assert_eq!(
+        a.trace.points.len(),
+        b.trace.points.len(),
+        "{what}: outer iteration counts diverged"
+    );
+    for (p, q) in a.trace.points.iter().zip(&b.trace.points) {
+        assert_eq!(p.f, q.f, "{what}: objective diverged at iter {}", p.iter);
+        assert_eq!(
+            p.comm_passes, q.comm_passes,
+            "{what}: pass accounting diverged at iter {}",
+            p.iter
+        );
+        assert_eq!(
+            p.safeguard_hits, q.safeguard_hits,
+            "{what}: safeguard counts diverged at iter {}",
+            p.iter
+        );
+    }
+}
+
+#[test]
+fn sync_policy_is_bit_identical_to_synchronous_fs() {
+    let nodes = 4;
+    let mut sync = Cluster::partition(
+        make_data(2),
+        nodes,
+        CostModel::default(),
+    );
+    sync.threads = 1;
+    let mut asynch = Cluster::partition(
+        make_data(2),
+        nodes,
+        CostModel::default(),
+    );
+    asynch.threads = 1;
+    // heterogeneity must not matter: Sync resolves to τ=0, q=P, and
+    // the deadline is the last fresh solve — the synchronous barrier
+    let profile = NodeProfile::with_straggler(nodes, 0, 3.0);
+    sync.set_profile(profile.clone());
+    asynch.set_profile(profile);
+
+    assert_eq!(Asynchrony::Sync.tag(), "sync");
+    let run_s =
+        FsDriver::new(fs_config()).run(&mut sync, None, &StopRule::iters(8));
+    // speculate: true on purpose — τ=0 expires every round-(r−1) solve
+    // before it could seed a window, so the flag must be inert
+    let run_a = run_async(&mut asynch, Asynchrony::Sync, true, 8);
+
+    assert_same_maths(&run_s, &run_a, "sync policy");
+    assert_eq!(asynch.ledger.fallback_rounds, 0);
+    assert_eq!(
+        asynch.ledger.spec_hits + asynch.ledger.spec_misses,
+        0,
+        "τ=0 left a speculation window open"
+    );
+    assert!(asynch.ledger.tune_trace.is_empty(), "sync policy tuned");
+}
+
+#[test]
+fn speculation_is_timing_only_under_full_quorum() {
+    let nodes = 4;
+    let policy = Asynchrony::Bounded { tau: 2, quorum: Quorum::All };
+    let mut plain = modeled_cluster(nodes, 3);
+    let mut spec = modeled_cluster(nodes, 3);
+
+    let run_p = run_async(&mut plain, policy, false, 12);
+    let run_s = run_async(&mut spec, policy, true, 12);
+
+    // the maths is invariant: speculation only re-times the schedule
+    assert_same_maths(&run_p, &run_s, "speculate on/off");
+    assert_eq!(
+        plain.ledger.staleness_hist, spec.ledger.staleness_hist,
+        "speculation changed what the master combined"
+    );
+    // ...but the speculative run really speculated
+    let windows = spec.ledger.spec_hits + spec.ledger.spec_misses;
+    assert!(windows > 0, "no speculation window ever classified");
+    if spec.ledger.spec_hits > 0 {
+        assert!(
+            spec.engine.events().iter().any(|e| e.label == "spec_solve"),
+            "hits recorded but no spec_solve span on the timeline"
+        );
+    }
+    // the off path is clean: no counters, no spans, no rebase charge
+    assert_eq!(plain.ledger.spec_hits, 0);
+    assert_eq!(plain.ledger.spec_misses, 0);
+    assert_eq!(plain.ledger.spec_rebase_seconds, 0.0);
+    assert!(!plain.engine.events().iter().any(|e| {
+        e.label == "spec_solve" || e.label == "speculation_rebase"
+    }));
+}
+
+#[test]
+fn controller_trace_replays_bit_identically_under_seeded_chaos() {
+    let nodes = 5;
+    let policy = Asynchrony::Adaptive {
+        init: (1, nodes - 1),
+        bounds: TuneBounds { tau_max: 4, q_min: 1 },
+    };
+    let run = || {
+        let mut cluster = modeled_cluster(nodes, 3);
+        cluster.set_fault_plan(FaultPlan::seeded(nodes, 1));
+        let run = run_async(&mut cluster, policy, true, 24);
+        (run, cluster.ledger.clone())
+    };
+
+    let (run_a, ledger_a) = run();
+    let (run_b, ledger_b) = run();
+
+    assert!(
+        ledger_a.has_fault_activity(),
+        "seeded weather was a no-op; the replay gate lost its teeth"
+    );
+    assert!(
+        !ledger_a.tune_trace.is_empty(),
+        "24 rounds never completed a tuning window"
+    );
+    assert_eq!(run_a.w, run_b.w, "seeded replay diverged in the iterates");
+    assert_eq!(
+        ledger_a, ledger_b,
+        "seeded replay diverged in the ledger (tune_trace included)"
+    );
+}
+
+#[test]
+fn tuning_decisions_respect_the_bounds_box() {
+    let nodes = 5;
+    let bounds = TuneBounds { tau_max: 3, q_min: 2 };
+    let mut cluster = modeled_cluster(nodes, 3);
+    cluster.set_fault_plan(FaultPlan::seeded(nodes, 7));
+    let _ = run_async(
+        &mut cluster,
+        Asynchrony::Adaptive { init: (1, nodes - 1), bounds },
+        true,
+        24,
+    );
+
+    assert!(!cluster.ledger.tune_trace.is_empty());
+    for &(tau, q) in &cluster.ledger.tune_trace {
+        assert!(tau <= bounds.tau_max, "τ={tau} escaped tau_max");
+        assert!(q >= 1, "q collapsed to zero");
+        assert!(q <= nodes, "q={q} exceeded the cluster size");
+    }
+}
+
+#[test]
+fn degenerate_adaptive_matches_the_fixed_policy() {
+    let nodes = 4;
+    // bounds pin (τ, q) exactly at init: calm-weather growth is capped
+    // at tau_max=τ and clamped back to q=P, so every window re-decides
+    // the same point
+    let adaptive = Asynchrony::Adaptive {
+        init: (2, nodes),
+        bounds: TuneBounds { tau_max: 2, q_min: nodes },
+    };
+    let fixed = Asynchrony::Bounded { tau: 2, quorum: Quorum::All };
+    assert_eq!(adaptive.initial(nodes), fixed.initial(nodes));
+
+    let mut a = modeled_cluster(nodes, 5);
+    let mut b = modeled_cluster(nodes, 5);
+    let run_a = run_async(&mut a, adaptive, true, 16);
+    let run_b = run_async(&mut b, fixed, true, 16);
+
+    assert_same_maths(&run_a, &run_b, "degenerate adaptive");
+    assert!(
+        !a.ledger.tune_trace.is_empty(),
+        "16 rounds never completed a tuning window"
+    );
+    for &d in &a.ledger.tune_trace {
+        assert_eq!(d, (2, nodes), "pinned controller moved");
+    }
+    assert!(b.ledger.tune_trace.is_empty(), "fixed policy tuned");
+}
