@@ -61,11 +61,17 @@ telemetry:
 # The speculation bench rides along: speculative lanes must strictly
 # beat plain async to the same ε on the straggler and chaos matrices,
 # the spec-off ledger must stay clean, and the adaptive (τ, q) trace
-# must replay bit-identically. Writes BENCH_fault_tolerance.json and
-# BENCH_speculation.json for the artifact upload.
+# must replay bit-identically. The link_weather bench gates the
+# link-level story: uniform links bit-identical to none, retry/reroute
+# strictly beating waiting out dead links by absolute virtual seconds,
+# partitions healing through the certified fallback, and bitwise
+# link-seed replay. Writes BENCH_fault_tolerance.json,
+# BENCH_speculation.json and BENCH_link_weather.json for the artifact
+# upload.
 chaos:
 	cargo bench --bench fault_tolerance
 	cargo bench --bench speculation
+	cargo bench --bench link_weather
 
 fmt-check:
 	cargo fmt --check

@@ -582,11 +582,13 @@ impl<'a> FileLint<'a> {
         // faults.rs joins the list: a wall clock in the fault layer
         // would break the seeded-replay determinism contract; obs/
         // likewise — a timestamped telemetry record would make two
-        // runs of one seed line-diff unequal
+        // runs of one seed line-diff unequal; cost.rs carries the
+        // seeded link profile, under the same replay contract
         if !(self.in_algo()
             || self.relpath == "cluster/engine.rs"
             || self.relpath == "cluster/allreduce.rs"
             || self.relpath == "cluster/faults.rs"
+            || self.relpath == "cluster/cost.rs"
             || self.relpath.starts_with("obs/"))
         {
             return;
@@ -898,6 +900,22 @@ mod tests {
         let hits = lint_source("cluster/faults.rs", src);
         assert_eq!(hits.len(), 1, "{hits:?}");
         assert_eq!(hits[0].rule, "no-wall-clock");
+    }
+
+    #[test]
+    fn link_layer_is_wall_clock_free_and_ordered() {
+        // the seeded link profile shares the replay contract
+        let src = "let t = Instant::now();\n";
+        let hits = lint_source("cluster/cost.rs", src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].rule, "no-wall-clock");
+        // link-weather state feeds reductions: no unordered maps
+        let src = "let cut: HashSet<usize> = HashSet::new();\n";
+        let hits = lint_source("cluster/faults.rs", src);
+        assert!(
+            hits.iter().any(|h| h.rule == "no-unordered-iteration"),
+            "{hits:?}"
+        );
     }
 
     #[test]

@@ -32,13 +32,19 @@
 //! 1. fallback rate > [`FALLBACK_SHRINK_RATE`] → shrink τ by 1: the
 //!    safeguard keeps rejecting stale-contaminated quorums, so tighten
 //!    the staleness bound toward the certified synchronous regime.
-//! 2. else stale share > [`STALE_SHRINK_SHARE`] → shrink q by 1 (never
+//! 2. else the window saw link retry/reroute activity AND its payload
+//!    stall share (retry seconds over total wire seconds) exceeds
+//!    [`CONGEST_STALL_SHARE`] → **widen τ by 1 and shrink q by 1**:
+//!    the wire is congested, so tolerate staler directions (they're
+//!    late because of the links, not the maths) and stop waiting for
+//!    payloads that must cross the congested edges.
+//! 3. else stale share > [`STALE_SHRINK_SHARE`] → shrink q by 1 (never
 //!    below `q_min`): most contributions arrive stale, i.e. the
 //!    straggler gap has widened past what the fresh deadline absorbs —
 //!    stop letting the slow tail gate the round.
-//! 3. else if the window saw fault events → hold: weather is moving,
-//!    don't chase it.
-//! 4. else (calm) → re-expand: τ toward `tau_max`, q toward the live
+//! 4. else if the window saw fault events (node weather *or* link
+//!    weather) → hold: weather is moving, don't chase it.
+//! 5. else (calm) → re-expand: τ toward `tau_max`, q toward the live
 //!    membership.
 
 use crate::cluster::Ledger;
@@ -157,8 +163,13 @@ pub const TUNE_WINDOW: usize = 4;
 /// Window fallback rate above which rule 1 shrinks τ.
 pub const FALLBACK_SHRINK_RATE: f64 = 0.25;
 
-/// Window stale-contribution share above which rule 2 shrinks q.
+/// Window stale-contribution share above which rule 3 shrinks q.
 pub const STALE_SHRINK_SHARE: f64 = 0.5;
+
+/// Window payload-stall share (retry seconds over total wire seconds)
+/// above which, together with any link retry/reroute activity, rule 2
+/// treats the wire as congested and widens τ / shrinks q.
+pub const CONGEST_STALL_SHARE: f64 = 0.2;
 
 /// The ledger counters one decision window is measured against. All
 /// monotone, so window deltas are plain subtractions.
@@ -169,6 +180,9 @@ struct LedgerMark {
     fresh_contribs: usize,
     total_contribs: usize,
     fault_events: usize,
+    link_events: usize,
+    comm_seconds: f64,
+    retry_seconds: f64,
 }
 
 impl LedgerMark {
@@ -178,11 +192,20 @@ impl LedgerMark {
             fallback_rounds: l.fallback_rounds,
             fresh_contribs: l.staleness_hist.first().copied().unwrap_or(0),
             total_contribs: l.staleness_hist.iter().sum(),
+            // link weather counts as weather: a window with link
+            // activity never looks "calm" to rule 5
             fault_events: l.crash_events
                 + l.rejoin_rebases
                 + l.lost_messages
                 + l.degrade_events
-                + l.flap_events,
+                + l.flap_events
+                + l.link_retries
+                + l.reroutes
+                + l.congested_hops
+                + l.partition_events,
+            link_events: l.link_retries + l.reroutes,
+            comm_seconds: l.comm_seconds,
+            retry_seconds: l.retry_seconds,
         }
     }
 }
@@ -236,16 +259,31 @@ impl Controller {
             1.0 - fresh as f64 / total as f64
         };
         let faults = now.fault_events - self.mark.fault_events;
+        let link_events = now.link_events - self.mark.link_events;
+        let retry_delta = now.retry_seconds - self.mark.retry_seconds;
+        let wire_delta =
+            (now.comm_seconds - self.mark.comm_seconds) + retry_delta;
+        let stall_share = if wire_delta <= 0.0 {
+            0.0
+        } else {
+            retry_delta / wire_delta
+        };
         self.mark = now;
         if fallback_rate > FALLBACK_SHRINK_RATE {
             self.tau = self.tau.saturating_sub(1);
+        } else if link_events > 0 && stall_share > CONGEST_STALL_SHARE {
+            // congestion: the wire, not the maths, is late — widen the
+            // staleness bound and stop waiting for payloads that must
+            // cross the congested edges
+            self.tau = (self.tau + 1).min(self.bounds.tau_max);
+            self.q = self.q.saturating_sub(1);
         } else if stale_share > STALE_SHRINK_SHARE {
             self.q = self.q.saturating_sub(1);
         } else if faults == 0 {
             self.tau = (self.tau + 1).min(self.bounds.tau_max);
             self.q += 1;
         }
-        // rule 3 (faults in a calm-looking window) falls through to
+        // rule 4 (faults in a calm-looking window) falls through to
         // the clamp with (τ, q) held
         let p_alive = p_alive.max(1);
         self.q = self.q.clamp(self.bounds.q_min.min(p_alive), p_alive);
@@ -349,6 +387,33 @@ mod tests {
             assert!(q <= 5, "q {q} round {k}");
         }
         assert_eq!(c.current(), (3, 5));
+    }
+
+    #[test]
+    fn congested_window_widens_tau_and_shrinks_quorum() {
+        let mut c = Controller::new(1, 4, TuneBounds::default());
+        // retries present and half the wire time stalled on backoff
+        // rungs: rule 2 widens τ and sheds a quorum slot
+        let mut l = ledger_with(TUNE_WINDOW, 0, vec![12], 0);
+        l.link_retries = 6;
+        l.retry_seconds = 1.0;
+        l.comm_seconds = 1.0;
+        assert_eq!(c.observe(&l, 6), Some((2, 3)));
+        // link activity below the stall threshold only *holds*: it
+        // counts as weather (rule 4), so no calm re-expansion either
+        let mut l2 = ledger_with(2 * TUNE_WINDOW, 0, vec![24], 0);
+        l2.link_retries = 7;
+        l2.retry_seconds = 1.01;
+        l2.comm_seconds = 101.0;
+        assert_eq!(c.observe(&l2, 6), Some((2, 3)));
+        // τ stays inside tau_max under sustained congestion
+        let bounds = TuneBounds { tau_max: 2, q_min: 1 };
+        let mut c2 = Controller::new(2, 2, bounds);
+        let mut l3 = ledger_with(TUNE_WINDOW, 0, vec![12], 0);
+        l3.reroutes = 1;
+        l3.retry_seconds = 3.0;
+        l3.comm_seconds = 1.0;
+        assert_eq!(c2.observe(&l3, 6), Some((2, 1)));
     }
 
     #[test]

@@ -292,9 +292,21 @@ impl Driver for AsyncFsDriver {
                     margins[p].clear();
                 }
             }
+            for &p in &weather.healed {
+                // a healed partition component re-bases onto the
+                // current iterate (it never saw the partition-era
+                // commits) but KEEPS its solver lanes: a solve still
+                // within the staleness bound rejoins the quorum below,
+                // anything older was already expired by the τ check
+                cluster.rejoin_rebase(p, fdim);
+                if p < margins.len() {
+                    margins[p].clear();
+                }
+            }
             let members = &weather.members;
             if obs.on() {
-                obs.rec().rebased = weather.restarted.len();
+                obs.rec().rebased =
+                    weather.restarted.len() + weather.healed.len();
             }
 
             // --- adaptive policy: one pure-ledger observation per
@@ -685,7 +697,17 @@ impl Driver for AsyncFsDriver {
             // inside the θ cone around −gʳ or the round falls back to
             // the synchronous barrier direction ---
             let mut fell_back = false;
-            if contribs.is_empty() {
+            if weather.heal_resync {
+                // a master-isolating partition healed this round: the
+                // certified synchronous fallback resynchronizes the
+                // whole fleet on one iterate regardless of what the
+                // quorum produced — the PR-7 escape hatch, so no link
+                // state can leave the components disagreeing
+                fell_back = true;
+                if obs.on() {
+                    obs.rec().fallback = Some("partition-heal");
+                }
+            } else if contribs.is_empty() {
                 fell_back = true;
                 if obs.on() {
                     obs.rec().fallback = Some("empty-quorum");

@@ -111,6 +111,175 @@ impl CostModel {
     }
 }
 
+/// Nodes per rack in the seeded link profile: leaf tree levels merge
+/// inside the rack, levels ≥ `RACK_LEVELS` cross the top-of-rack
+/// uplink.
+pub const RACK_WIDTH: usize = 4;
+const RACK_LEVELS: usize = 2; // log2(RACK_WIDTH)
+const SALT_LINK: u64 = 0x11E5;
+
+/// Per-link multipliers over the reduction tree, replacing the single
+/// global wire of [`CostModel`]: an up-sweep hop at tree level `l`
+/// whose sending subtree is represented by node `s` is charged
+/// `base × uplink[s] × level[l]`. The identity profile (all 1.0)
+/// multiplies every hop by exactly 1.0, and the cluster's comm methods
+/// additionally *delegate structurally* to the pre-link code path when
+/// the profile is uniform and no link plan is installed — uniform
+/// runs stay bit-identical to the global-wire model by construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkProfile {
+    /// per-node uplink multiplier: the cost factor on every tree hop
+    /// whose *sender* (the child-side subtree representative) is this
+    /// node — a slow NIC or oversubscribed cable drags every merge the
+    /// node feeds
+    pub uplink: Vec<f64>,
+    /// per-tree-level multiplier, index 0 = leaf merges; missing
+    /// levels cost 1.0 — this is where top-of-rack oversubscription
+    /// lives
+    pub level: Vec<f64>,
+}
+
+impl LinkProfile {
+    /// The identity profile: every link at nominal speed.
+    pub fn uniform(nodes: usize) -> LinkProfile {
+        LinkProfile { uplink: vec![1.0; nodes], level: Vec::new() }
+    }
+
+    /// Does this profile change any hop at all?
+    pub fn is_uniform(&self) -> bool {
+        self.uplink.iter().all(|&m| m == 1.0)
+            && self.level.iter().all(|&m| m == 1.0)
+    }
+
+    /// Multiplier for the hop at tree `level` sent by node `sender`.
+    pub fn mult(&self, level: usize, sender: usize) -> f64 {
+        self.uplink.get(sender).copied().unwrap_or(1.0)
+            * self.level.get(level).copied().unwrap_or(1.0)
+    }
+
+    /// Mean hop multiplier — how ring segments, broadcasts and scalar
+    /// control rounds (paths without a per-edge schedule) scale under
+    /// this profile. Exactly 1.0 for the uniform profile.
+    pub fn mean_mult(&self) -> f64 {
+        let up = if self.uplink.is_empty() {
+            1.0
+        } else {
+            self.uplink.iter().sum::<f64>() / self.uplink.len() as f64
+        };
+        let lvl = if self.level.is_empty() {
+            1.0
+        } else {
+            self.level.iter().sum::<f64>() / self.level.len() as f64
+        };
+        up * lvl
+    }
+
+    /// Seeded heterogeneous fabric: racks of [`RACK_WIDTH`], one
+    /// hash-picked slow rack (uplinks ~2.5× with ±15% per-NIC jitter),
+    /// and 2× oversubscribed levels above the top-of-rack switch. Pure
+    /// in `(nodes, seed)` — the same seed always builds the same
+    /// fabric.
+    pub fn seeded(nodes: usize, seed: u64) -> LinkProfile {
+        use super::faults::mix;
+        let n_racks = nodes.div_ceil(RACK_WIDTH).max(1);
+        let slow_rack =
+            (mix(seed, 0, 0, SALT_LINK) % n_racks as u64) as usize;
+        let uplink = (0..nodes)
+            .map(|p| {
+                let base =
+                    if p / RACK_WIDTH == slow_rack { 2.5 } else { 1.0 };
+                let u = (mix(seed, p as u64, 1, SALT_LINK) >> 11) as f64
+                    / (1u64 << 53) as f64;
+                base * (0.85 + 0.3 * u)
+            })
+            .collect();
+        let depth = if nodes <= 1 {
+            0
+        } else {
+            (nodes.max(2) as f64).log2().ceil() as usize
+        };
+        let level = (0..depth)
+            .map(|l| if l >= RACK_LEVELS { 2.0 } else { 1.0 })
+            .collect();
+        LinkProfile { uplink, level }
+    }
+
+    /// Parse a comma-separated CLI link-profile script. Grammar (one
+    /// spec per item; `N` a node index < `nodes`, `F` a multiplier
+    /// > 0 written `2.5x`):
+    ///
+    /// - `uplink:N:Fx` — node `N`'s uplink costs ×F
+    /// - `level:L:Fx` — every hop at tree level `L` costs ×F
+    /// - `rack:I:Fx` — uplinks of rack `I` (nodes 4I..4I+4) cost ×F
+    ///
+    /// Returns a one-line error naming the offending spec otherwise.
+    pub fn parse(script: &str, nodes: usize) -> Result<LinkProfile, String> {
+        let mut out = LinkProfile::uniform(nodes);
+        let bad = |spec: &str, why: &str| {
+            format!("bad --link-profile spec {spec:?}: {why}")
+        };
+        for spec in script.split(',').map(str::trim).filter(|s| !s.is_empty())
+        {
+            let parts: Vec<&str> = spec.split(':').collect();
+            let [kind, idx, factor] = parts[..] else {
+                return Err(bad(spec, "want kind:index:Fx"));
+            };
+            let f = factor
+                .strip_suffix('x')
+                .ok_or_else(|| bad(spec, "multiplier must end in 'x'"))?
+                .parse::<f64>()
+                .map_err(|_| bad(spec, "bad multiplier"))?;
+            if !f.is_finite() || f <= 0.0 {
+                return Err(bad(spec, "multiplier must be finite and > 0"));
+            }
+            let i = idx
+                .parse::<usize>()
+                .map_err(|_| bad(spec, "index must be an integer"))?;
+            match kind {
+                "uplink" => {
+                    if i >= nodes {
+                        return Err(bad(
+                            spec,
+                            &format!("node {i} out of range (P = {nodes})"),
+                        ));
+                    }
+                    out.uplink[i] = f;
+                }
+                "level" => {
+                    if i >= 32 {
+                        return Err(bad(spec, "level out of range (< 32)"));
+                    }
+                    if out.level.len() <= i {
+                        out.level.resize(i + 1, 1.0);
+                    }
+                    out.level[i] = f;
+                }
+                "rack" => {
+                    if i * RACK_WIDTH >= nodes {
+                        return Err(bad(
+                            spec,
+                            &format!(
+                                "rack {i} out of range (P = {nodes})"
+                            ),
+                        ));
+                    }
+                    let hi = ((i + 1) * RACK_WIDTH).min(nodes);
+                    for slot in &mut out.uplink[i * RACK_WIDTH..hi] {
+                        *slot = f;
+                    }
+                }
+                _ => {
+                    return Err(bad(
+                        spec,
+                        "unknown link kind (uplink|level|rack)",
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +306,55 @@ mod tests {
         assert!(c.traversal_seconds(1_000_000, 2) > 0.0);
         let ring = CostModel { topology: Topology::Ring, ..c };
         assert_eq!(ring.traversal_seconds(1_000_000, 1), 0.0);
+    }
+
+    #[test]
+    fn uniform_link_profile_is_the_exact_identity() {
+        let lp = LinkProfile::uniform(6);
+        assert!(lp.is_uniform());
+        assert_eq!(lp.mult(0, 3), 1.0);
+        assert_eq!(lp.mult(7, 99), 1.0); // out-of-range defaults to 1.0
+        assert_eq!(lp.mean_mult(), 1.0);
+    }
+
+    #[test]
+    fn seeded_link_profile_is_deterministic_and_heterogeneous() {
+        let a = LinkProfile::seeded(8, 7);
+        assert_eq!(a, LinkProfile::seeded(8, 7));
+        assert_ne!(a, LinkProfile::seeded(8, 8));
+        assert!(!a.is_uniform());
+        assert_eq!(a.uplink.len(), 8);
+        // one slow rack: some uplink well above nominal
+        assert!(a.uplink.iter().cloned().fold(0.0, f64::max) > 2.0);
+        // top-of-rack levels oversubscribed
+        assert_eq!(a.level.last(), Some(&2.0));
+        for &m in a.uplink.iter().chain(&a.level) {
+            assert!(m.is_finite() && m > 0.0);
+        }
+    }
+
+    #[test]
+    fn link_profile_parses_and_range_checks() {
+        let lp =
+            LinkProfile::parse("uplink:2:3x,level:1:2x,rack:1:1.5x", 6)
+                .unwrap();
+        assert_eq!(lp.uplink[2], 3.0);
+        assert_eq!(lp.level[1], 2.0);
+        assert_eq!(lp.uplink[4], 1.5); // rack 1 = nodes 4..6 here
+        assert_eq!(lp.uplink[5], 1.5);
+        assert_eq!(lp.mult(1, 2), 6.0);
+        for s in [
+            "uplink:9:2x", // node out of range
+            "rack:2:2x",   // rack past the fleet (P = 6 → racks 0..1)
+            "level:40:2x", // level out of range
+            "uplink:1:2",  // multiplier missing 'x'
+            "uplink:1:0x", // zero multiplier
+            "tor:1:2x",    // unknown kind
+        ] {
+            let e = LinkProfile::parse(s, 6).unwrap_err();
+            assert!(e.starts_with("bad --link-profile spec"), "{s}: {e}");
+            assert!(!e.contains('\n'), "one-line error: {e}");
+        }
     }
 
     #[test]

@@ -139,6 +139,36 @@ pub struct Event {
     pub staleness: Option<usize>,
 }
 
+/// Cost of one scheduled tree hop under the link layer, decided by
+/// the cluster's per-edge closure (profile multipliers, congestion,
+/// and the timeout/retry/backoff ladder). The closure is pure in
+/// `(round, level, sender)` so one seed replays the same outcomes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HopOutcome {
+    /// total virtual seconds the hop occupies: base × multipliers,
+    /// plus any backoff ladder, plus the reroute detour when the edge
+    /// was abandoned
+    pub secs: f64,
+    /// the share of `secs` spent waiting on timeout/backoff rungs —
+    /// attributed to the ledger's `retry_seconds`, never to
+    /// `comm_seconds`
+    pub retry_secs: f64,
+    /// the edge died past the retry budget and the payload re-parented
+    /// one level up (the engine records a `reroute` span for it)
+    pub rerouted: bool,
+}
+
+/// Flat-component totals of one linked tree climb: per level, the
+/// slowest pair's cost split into its wire share and its
+/// timeout/backoff share — what the ledger charges to `comm_seconds`
+/// and `retry_seconds` respectively (the barrier-equivalent serial
+/// chain up the tree, link-weather edition).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkTotals {
+    pub comm_secs: f64,
+    pub retry_secs: f64,
+}
+
 /// Hard cap on recorded events so multi-thousand-round runs cannot
 /// grow memory without bound; past it only clocks advance and
 /// [`Engine::dropped_events`] counts the overflow.
@@ -465,6 +495,178 @@ impl Engine {
             level += 1;
         }
         ready.first().copied().unwrap_or(fallback)
+    }
+
+    /// Link-aware variant of [`Self::climb`]: every pair merge asks
+    /// the `link` closure what its hop costs, keyed by the tree level
+    /// and the *sending subtree's representative* (the right child's
+    /// leaf-level node — the physical uplink the merged payload rides;
+    /// the parent keeps the left child's representative, and an odd
+    /// tail carries its representative one level up untouched). With
+    /// the identity closure (`secs = base`) this reproduces
+    /// [`Self::climb`] exactly — `tests` pin that. Rerouted hops get
+    /// their own `reroute` span on the timeline, and `totals`
+    /// accumulates the per-level critical pair's wire/retry split.
+    fn climb_linked(
+        &mut self,
+        label: &'static str,
+        mut ready: Vec<f64>,
+        mut reps: Vec<usize>,
+        hops: &[f64],
+        link: &mut dyn FnMut(usize, usize, f64) -> HopOutcome,
+        totals: &mut LinkTotals,
+    ) -> f64 {
+        debug_assert_eq!(ready.len(), reps.len());
+        let fallback = self.control_clock;
+        let mut level = 0usize;
+        while ready.len() > 1 {
+            let base = hops.get(level).copied().unwrap_or(0.0);
+            let mut next = Vec::with_capacity(ready.len().div_ceil(2));
+            let mut next_reps = Vec::with_capacity(ready.len().div_ceil(2));
+            let mut start = f64::INFINITY;
+            let mut end = 0.0f64;
+            let mut crit = HopOutcome::default();
+            let mut i = 0usize;
+            while i < ready.len() {
+                if i + 1 < ready.len() {
+                    let sender = reps[i + 1];
+                    let out = link(level, sender, base);
+                    #[cfg(feature = "audit")]
+                    assert!(
+                        out.secs >= out.retry_secs && out.retry_secs >= 0.0,
+                        "bad link hop outcome at level {level}: {out:?}"
+                    );
+                    let s = ready[i].max(ready[i + 1]);
+                    let t = s + out.secs;
+                    if out.rerouted {
+                        self.push_event(Event {
+                            label: "reroute",
+                            node: Some(sender),
+                            level: Some(level),
+                            start: s,
+                            end: t,
+                            staleness: None,
+                        });
+                    }
+                    if out.secs > crit.secs {
+                        crit = out;
+                    }
+                    start = start.min(s);
+                    end = end.max(t);
+                    next.push(t);
+                    next_reps.push(reps[i]);
+                } else {
+                    // odd tail: joins the tree one level up, no hop
+                    next.push(ready[i]);
+                    next_reps.push(reps[i]);
+                }
+                i += 2;
+            }
+            if start.is_finite() {
+                self.push_event(Event {
+                    label,
+                    node: None,
+                    level: Some(level),
+                    start,
+                    end,
+                    staleness: None,
+                });
+            }
+            totals.comm_secs += crit.secs - crit.retry_secs;
+            totals.retry_secs += crit.retry_secs;
+            ready = next;
+            reps = next_reps;
+            level += 1;
+        }
+        ready.first().copied().unwrap_or(fallback)
+    }
+
+    /// Link-aware membership tree reduce: identical schedule semantics
+    /// to [`Self::tree_reduce_members`], but every pair merge is
+    /// costed by the `link` closure (see [`Self::climb_linked`]).
+    /// Returns the landing time plus the flat wire/retry split for the
+    /// ledger.
+    pub fn tree_reduce_linked_members(
+        &mut self,
+        label: &'static str,
+        hops: &[f64],
+        down: Option<(usize, f64)>,
+        lane: Lane,
+        members: &[usize],
+        link: &mut dyn FnMut(usize, usize, f64) -> HopOutcome,
+    ) -> (f64, LinkTotals) {
+        self.comm_marks += 1;
+        #[cfg(feature = "audit")]
+        let span0 = members
+            .iter()
+            .fold(self.control_clock, |a, &p| a.max(self.node_clock[p]));
+        let floor = self.control_clock;
+        let ready: Vec<f64> = members
+            .iter()
+            .map(|&p| self.node_clock[p].max(floor))
+            .collect();
+        let mut totals = LinkTotals::default();
+        let root = self.climb_linked(
+            label,
+            ready,
+            members.to_vec(),
+            hops,
+            link,
+            &mut totals,
+        );
+        let landed = self.descend(root, down);
+        #[cfg(feature = "audit")]
+        audit_clock_advances(span0, landed, "tree_reduce_linked");
+        self.control_clock = self.control_clock.max(landed);
+        if !(self.pipeline && lane == Lane::Control) {
+            for &p in members {
+                let c = &mut self.node_clock[p];
+                *c = (*c).max(landed);
+            }
+        }
+        (landed, totals)
+    }
+
+    /// Link-aware quorum reduction: identical schedule semantics to
+    /// [`Self::quorum_reduce_members`], with every pair merge costed
+    /// by the `link` closure keyed to the contributing node's uplink.
+    /// Returns the landing time plus the flat wire/retry split.
+    pub fn quorum_reduce_linked_members(
+        &mut self,
+        label: &'static str,
+        arrivals: &[(usize, f64, usize)],
+        hops: &[f64],
+        down: Option<(usize, f64)>,
+        members: &[usize],
+        link: &mut dyn FnMut(usize, usize, f64) -> HopOutcome,
+    ) -> (f64, LinkTotals) {
+        self.comm_marks += 1;
+        let floor = self.control_clock;
+        for &(node, ready, staleness) in arrivals {
+            self.push_event(Event {
+                label: "async_arrival",
+                node: Some(node),
+                level: None,
+                start: ready,
+                end: ready.max(floor),
+                staleness: Some(staleness),
+            });
+        }
+        let ready: Vec<f64> =
+            arrivals.iter().map(|&(_, t, _)| t.max(floor)).collect();
+        let reps: Vec<usize> = arrivals.iter().map(|&(n, _, _)| n).collect();
+        let mut totals = LinkTotals::default();
+        let root =
+            self.climb_linked(label, ready, reps, hops, link, &mut totals);
+        let landed = self.descend(root, down);
+        #[cfg(feature = "audit")]
+        audit_clock_advances(floor, landed, "quorum_reduce_linked");
+        self.control_clock = self.control_clock.max(landed);
+        for &p in members {
+            let c = &mut self.node_clock[p];
+            *c = (*c).max(landed);
+        }
+        (landed, totals)
     }
 
     /// Optional result broadcast below a combining-tree root.
@@ -1037,6 +1239,103 @@ mod tests {
             (e.makespan(), e.events().len(), e.comm_marks())
         };
         assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn linked_reduce_with_identity_closure_matches_legacy_exactly() {
+        let build = || {
+            let mut e = Engine::new(NodeProfile::with_straggler(5, 2, 3.0));
+            e.compute(1.0, &[1.0, 2.0, 1.0, 3.0, 2.0]);
+            e
+        };
+        let all: Vec<usize> = (0..5).collect();
+        let mut legacy = build();
+        let l_land = legacy.tree_reduce_members(
+            "reduce",
+            &[1.0, 0.5, 0.25],
+            Some((3, 0.5)),
+            Lane::Node,
+            &all,
+        );
+        let mut linked = build();
+        let mut ident = |_l: usize, _s: usize, base: f64| HopOutcome {
+            secs: base,
+            retry_secs: 0.0,
+            rerouted: false,
+        };
+        let (k_land, totals) = linked.tree_reduce_linked_members(
+            "reduce",
+            &[1.0, 0.5, 0.25],
+            Some((3, 0.5)),
+            Lane::Node,
+            &all,
+            &mut ident,
+        );
+        assert_eq!(l_land, k_land, "bitwise-identical landing");
+        assert_eq!(legacy.makespan(), linked.makespan());
+        assert_eq!(legacy.events().len(), linked.events().len());
+        assert_eq!(legacy.comm_marks(), linked.comm_marks());
+        // identity closure: flat wire = per-level hop chain, no retry
+        assert!((totals.comm_secs - 1.75).abs() < 1e-12);
+        assert_eq!(totals.retry_secs, 0.0);
+
+        // quorum variant too
+        let arrivals = [(0usize, 2.0, 0usize), (1, 5.0, 1), (2, 3.0, 0)];
+        let mut lq = build();
+        let a = lq.quorum_reduce_members(
+            "async_reduce",
+            &arrivals,
+            &[1.0, 1.0],
+            Some((2, 1.0)),
+            &all,
+        );
+        let mut kq = build();
+        let (b, _) = kq.quorum_reduce_linked_members(
+            "async_reduce",
+            &arrivals,
+            &[1.0, 1.0],
+            Some((2, 1.0)),
+            &all,
+            &mut ident,
+        );
+        assert_eq!(a, b);
+        assert_eq!(lq.makespan(), kq.makespan());
+        assert_eq!(lq.events().len(), kq.events().len());
+    }
+
+    #[test]
+    fn linked_reduce_records_reroutes_and_splits_retry_time() {
+        let mut e = Engine::new(NodeProfile::homogeneous(4));
+        e.compute(1.0, &[1.0; 4]);
+        // sender 3's level-0 uplink is dead: 0.5s of backoff then a
+        // reroute doubling the 1s hop; everything else at base cost
+        let mut link = |level: usize, sender: usize, base: f64| {
+            if level == 0 && sender == 3 {
+                HopOutcome { secs: 2.0 * base + 0.5, retry_secs: 0.5, rerouted: true }
+            } else {
+                HopOutcome { secs: base, retry_secs: 0.0, rerouted: false }
+            }
+        };
+        let (landed, totals) = e.tree_reduce_linked_members(
+            "reduce",
+            &[1.0, 1.0],
+            None,
+            Lane::Node,
+            &[0, 1, 2, 3],
+            &mut link,
+        );
+        // level 0: pair (2,3) takes 2.5s (crit), level 1 takes 1s
+        assert!((landed - 4.5).abs() < 1e-12, "landed {landed}");
+        assert!((totals.comm_secs - 3.0).abs() < 1e-12);
+        assert!((totals.retry_secs - 0.5).abs() < 1e-12);
+        let reroute = e
+            .events()
+            .iter()
+            .find(|ev| ev.label == "reroute")
+            .expect("reroute span recorded");
+        assert_eq!(reroute.node, Some(3));
+        assert_eq!(reroute.level, Some(0));
+        assert!((reroute.end - reroute.start - 2.5).abs() < 1e-12);
     }
 
     #[test]

@@ -54,6 +54,7 @@ pub struct AppliedFault {
     pub round: usize,
     pub node: usize,
     /// "crash" | "restart" | "degrade" | "flap" | "retry" | "drop"
+    /// — or, on the link log, "partition" | "heal"
     pub what: &'static str,
 }
 
@@ -73,6 +74,14 @@ pub struct RoundWeather {
     /// members whose contribution needed one retry: extra virtual
     /// seconds added to its quorum arrival
     pub delayed: Vec<(usize, f64)>,
+    /// nodes whose partition healed this round (driver re-bases them;
+    /// unlike `restarted`, their solver lanes survive — anything ≤ τ
+    /// stale rejoins the quorum, anything older was already expired)
+    pub healed: Vec<usize>,
+    /// a master-isolating partition healed this round: the driver must
+    /// route the round through the certified synchronous fallback so
+    /// the whole fleet resynchronizes on one iterate
+    pub heal_resync: bool,
 }
 
 impl RoundWeather {
@@ -86,11 +95,17 @@ const SALT_FLAP: u64 = 0xF1A9;
 const SALT_LOSS: u64 = 0x10E5;
 const SALT_RETRY: u64 = 0x9E7B;
 const SALT_GEN: u64 = 0x5EED;
+const SALT_CONGEST: u64 = 0xC0F3;
+const SALT_LINKFLAP: u64 = 0x1F1A;
+const SALT_ATTEMPTS: u64 = 0xA77E;
 
 /// SplitMix64 over a mix of the inputs: an order-independent,
 /// replayable hash — NOT a sequential stream, so fault decisions do
 /// not depend on how many other decisions were drawn before them.
-fn mix(seed: u64, a: u64, b: u64, salt: u64) -> u64 {
+/// `pub(crate)` so the link layer ([`LinkFaultPlan`],
+/// [`LinkProfile`](super::cost::LinkProfile)) draws from the same
+/// primitive.
+pub(crate) fn mix(seed: u64, a: u64, b: u64, salt: u64) -> u64 {
     let mut z = seed
         ^ a.wrapping_mul(0x9E37_79B9_7F4A_7C15)
         ^ b.wrapping_mul(0xBF58_476D_1CE4_E5B9)
@@ -375,6 +390,359 @@ impl FaultState {
     }
 }
 
+/// One scripted partition: the listed component is cut away from the
+/// master's component for rounds `from..until`. Node 0 can never be
+/// listed — the master's side is the reference frame, so "isolating
+/// the master" is expressed by cutting every *other* node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LinkPartition {
+    /// first round the cut is active
+    pub from: usize,
+    /// first round after the heal (exclusive)
+    pub until: usize,
+    /// the cut component, ascending, never containing node 0
+    pub nodes: Vec<usize>,
+}
+
+/// A seeded link-weather schedule over the reduction tree's edges.
+/// `Default` is the empty plan (clear wire) — installing it must leave
+/// every run bit-identical to no plan at all (`tests/faults.rs` pins
+/// this). Every probabilistic decision is a pure hash of
+/// `(seed, round, edge)` where an edge is `(tree level, sending
+/// subtree representative)` — one seed replays the identical weather
+/// regardless of evaluation order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkFaultPlan {
+    /// per-round per-edge probability the link is congested: its hop
+    /// cost multiplies by `congest_mult` for that round's window
+    pub congest_p: f64,
+    /// bandwidth-collapse factor on a congested edge
+    pub congest_mult: f64,
+    /// per-round per-edge probability the link flaps: the hop times
+    /// out and enters the retry/backoff ladder
+    pub flap_p: f64,
+    /// scripted partitions splitting the tree into components
+    pub partitions: Vec<LinkPartition>,
+    /// virtual seconds before a hop attempt is declared dead — the
+    /// base rung of the exponential-backoff ladder
+    pub timeout_s: f64,
+    /// failed attempts allowed before rerouting around the dead edge
+    pub retry_budget: u32,
+    /// diagnostic arm for the benches: disable the timeout discipline
+    /// and wait out a dead link's full flap window instead (strictly
+    /// slower; `benches/link_weather.rs` pins that)
+    pub no_retry: bool,
+    /// seed driving the congestion/flap coins
+    pub seed: u64,
+}
+
+impl Default for LinkFaultPlan {
+    fn default() -> Self {
+        LinkFaultPlan {
+            congest_p: 0.0,
+            congest_mult: 8.0,
+            flap_p: 0.0,
+            partitions: Vec::new(),
+            timeout_s: 2e-3,
+            retry_budget: 3,
+            no_retry: false,
+            seed: 0,
+        }
+    }
+}
+
+impl LinkFaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.congest_p <= 0.0
+            && self.flap_p <= 0.0
+            && self.partitions.is_empty()
+    }
+
+    /// Parse a comma-separated CLI link-fault script. Grammar (one
+    /// spec per item; node indices < `nodes`, node 0 never cut):
+    ///
+    /// - `congest:p=P` / `congest:p=P:Fx` — per-edge congestion
+    ///   probability, optional bandwidth-collapse factor (default 8x)
+    /// - `flap:p=P` — per-edge flap probability
+    /// - `part:A+B@rF..rU` — cut nodes {A, B, ...} away for rounds
+    ///   F..U (heals at U)
+    /// - `timeout:T` — hop deadline in virtual seconds
+    /// - `budget:K` — failed attempts before rerouting
+    /// - `noretry` — wait out dead links instead (bench arm)
+    ///
+    /// Returns a one-line error naming the offending spec otherwise.
+    pub fn parse(script: &str, nodes: usize) -> Result<LinkFaultPlan, String> {
+        let bad = |spec: &str, why: &str| {
+            format!("bad --link-fault spec {spec:?}: {why}")
+        };
+        let mut plan = LinkFaultPlan::default();
+        for spec in script.split(',').map(str::trim).filter(|s| !s.is_empty())
+        {
+            let mut parts = spec.split(':');
+            let kind = parts.next().unwrap_or("");
+            let rest: Vec<&str> = parts.collect();
+            match kind {
+                "congest" => {
+                    if rest.is_empty() || rest.len() > 2 {
+                        return Err(bad(spec, "want congest:p=P[:Fx]"));
+                    }
+                    plan.congest_p = parse_prob(spec, rest[0])
+                        .map_err(|_| bad(spec, "bad probability"))?;
+                    if let Some(fs) = rest.get(1) {
+                        let f = fs
+                            .strip_suffix('x')
+                            .ok_or_else(|| {
+                                bad(spec, "factor must end in 'x'")
+                            })?
+                            .parse::<f64>()
+                            .map_err(|_| bad(spec, "bad congest factor"))?;
+                        if !f.is_finite() || f < 1.0 {
+                            return Err(bad(
+                                spec,
+                                "congest factor must be ≥ 1",
+                            ));
+                        }
+                        plan.congest_mult = f;
+                    }
+                }
+                "flap" => {
+                    if rest.len() != 1 {
+                        return Err(bad(spec, "want flap:p=P"));
+                    }
+                    plan.flap_p = parse_prob(spec, rest[0])
+                        .map_err(|_| bad(spec, "bad probability"))?;
+                }
+                "part" => {
+                    if rest.len() != 1 {
+                        return Err(bad(spec, "want part:A+B@rF..rU"));
+                    }
+                    let (who, span) = rest[0]
+                        .split_once('@')
+                        .ok_or_else(|| bad(spec, "missing @rF..rU"))?;
+                    let (f, u) = span
+                        .split_once("..")
+                        .ok_or_else(|| bad(spec, "want @rF..rU"))?;
+                    let from = f
+                        .strip_prefix('r')
+                        .and_then(|s| s.parse::<usize>().ok())
+                        .ok_or_else(|| bad(spec, "bad from-round"))?;
+                    let until = u
+                        .strip_prefix('r')
+                        .and_then(|s| s.parse::<usize>().ok())
+                        .ok_or_else(|| bad(spec, "bad until-round"))?;
+                    if until <= from {
+                        return Err(bad(spec, "need from < until"));
+                    }
+                    let mut cut = Vec::new();
+                    for n in who.split('+') {
+                        let node = n.parse::<usize>().map_err(|_| {
+                            bad(spec, "cut nodes must be integers")
+                        })?;
+                        if node == 0 {
+                            return Err(bad(
+                                spec,
+                                "node 0 is the reference frame — cut the \
+                                 other side",
+                            ));
+                        }
+                        if node >= nodes {
+                            return Err(bad(
+                                spec,
+                                &format!(
+                                    "node {node} out of range (P = {nodes})"
+                                ),
+                            ));
+                        }
+                        cut.push(node);
+                    }
+                    cut.sort_unstable();
+                    cut.dedup();
+                    plan.partitions.push(LinkPartition {
+                        from,
+                        until,
+                        nodes: cut,
+                    });
+                }
+                "timeout" => {
+                    if rest.len() != 1 {
+                        return Err(bad(spec, "want timeout:T"));
+                    }
+                    let t = rest[0]
+                        .strip_suffix('s')
+                        .unwrap_or(rest[0])
+                        .parse::<f64>()
+                        .map_err(|_| bad(spec, "bad timeout"))?;
+                    if !t.is_finite() || t <= 0.0 {
+                        return Err(bad(spec, "timeout must be > 0"));
+                    }
+                    plan.timeout_s = t;
+                }
+                "budget" => {
+                    if rest.len() != 1 {
+                        return Err(bad(spec, "want budget:K"));
+                    }
+                    plan.retry_budget = rest[0]
+                        .parse::<u32>()
+                        .map_err(|_| bad(spec, "bad retry budget"))?;
+                    if plan.retry_budget == 0 || plan.retry_budget > 16 {
+                        return Err(bad(spec, "budget must be in 1..=16"));
+                    }
+                }
+                "noretry" => {
+                    if !rest.is_empty() {
+                        return Err(bad(spec, "noretry takes no arguments"));
+                    }
+                    plan.no_retry = true;
+                }
+                _ => {
+                    return Err(bad(
+                        spec,
+                        "unknown link fault kind \
+                         (congest|flap|part|timeout|budget|noretry)",
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Seeded link-weather generator: moderate congestion, a flappy
+    /// fabric, and one short partition of the last node. Round-indexed
+    /// and hash-driven, so the plan replays exactly.
+    pub fn seeded(nodes: usize, seed: u64) -> LinkFaultPlan {
+        if nodes < 2 {
+            return LinkFaultPlan { seed, ..LinkFaultPlan::default() };
+        }
+        LinkFaultPlan {
+            congest_p: 0.15,
+            congest_mult: 6.0,
+            flap_p: 0.1,
+            partitions: vec![LinkPartition {
+                from: 3,
+                until: 6,
+                nodes: vec![nodes - 1],
+            }],
+            seed,
+            ..LinkFaultPlan::default()
+        }
+    }
+
+    fn edge(level: usize, sender: usize) -> u64 {
+        ((level as u64) << 32) | sender as u64
+    }
+
+    /// Is the edge `(level, sender)` congested in round `r`?
+    pub fn congested(&self, r: usize, level: usize, sender: usize) -> bool {
+        if self.congest_p <= 0.0 {
+            return false;
+        }
+        let u = (mix(self.seed, r as u64, Self::edge(level, sender),
+                SALT_CONGEST)
+            >> 11) as f64
+            / (1u64 << 53) as f64;
+        u < self.congest_p
+    }
+
+    /// How many attempts on edge `(level, sender)` time out in round
+    /// `r` before the transfer would go through — 0 on a healthy
+    /// edge, up to `retry_budget + 2` on a flapping one (a draw past
+    /// the budget forces a reroute under the retry discipline).
+    pub fn failed_attempts(
+        &self,
+        r: usize,
+        level: usize,
+        sender: usize,
+    ) -> u32 {
+        if self.flap_p <= 0.0 {
+            return 0;
+        }
+        let e = Self::edge(level, sender);
+        let u = (mix(self.seed, r as u64, e, SALT_LINKFLAP) >> 11) as f64
+            / (1u64 << 53) as f64;
+        if u >= self.flap_p {
+            return 0;
+        }
+        1 + (mix(self.seed, r as u64, e, SALT_ATTEMPTS)
+            % (self.retry_budget as u64 + 2)) as u32
+    }
+
+    /// Union of the nodes cut away by every partition active at round
+    /// `r`, ascending and deduplicated.
+    pub fn cut_at(&self, r: usize) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .partitions
+            .iter()
+            .filter(|p| p.from <= r && r < p.until)
+            .flat_map(|p| p.nodes.iter().copied())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+/// Runtime state of a link plan: the current round (comm calls hash
+/// their edges against it), once-only partition start/heal firing,
+/// whether the active cut left the master alone, and the applied link
+/// event log ("partition"/"heal" entries, bit-comparable across
+/// replays).
+#[derive(Clone, Debug)]
+pub struct LinkFaultState {
+    pub plan: LinkFaultPlan,
+    /// current outer round, set by the driver's weather application
+    pub round: usize,
+    /// the active cut isolates the master: when it heals the driver
+    /// must force the certified synchronous resync
+    pub master_isolated: bool,
+    started: Vec<bool>,
+    healed: Vec<bool>,
+    /// every applied link event, in application order
+    pub log: Vec<AppliedFault>,
+}
+
+impl LinkFaultState {
+    pub fn new(plan: LinkFaultPlan) -> LinkFaultState {
+        let n = plan.partitions.len();
+        LinkFaultState {
+            plan,
+            round: 0,
+            master_isolated: false,
+            started: vec![false; n],
+            healed: vec![false; n],
+            log: Vec::new(),
+        }
+    }
+
+    /// Indices of partitions activating at round `r`; each fires once.
+    pub fn due_cuts(&mut self, r: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (i, p) in self.plan.partitions.iter().enumerate() {
+            if !self.started[i] && p.from <= r && r < p.until {
+                self.started[i] = true;
+                out.push(i);
+            }
+        }
+        out
+    }
+
+    /// Indices of partitions healing at round `r`; each fires once and
+    /// only after its activation actually fired.
+    pub fn due_heals(&mut self, r: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (i, p) in self.plan.partitions.iter().enumerate() {
+            if self.started[i] && !self.healed[i] && r >= p.until {
+                self.healed[i] = true;
+                out.push(i);
+            }
+        }
+        out
+    }
+
+    pub fn record(&mut self, round: usize, node: usize, what: &'static str) {
+        self.log.push(AppliedFault { round, node, what });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -440,6 +808,106 @@ mod tests {
         // and at p=0.5 both branches actually occur
         assert!((0..64).any(|r| a.flaps(r, 2)));
         assert!((0..64).any(|r| !a.flaps(r, 2)));
+    }
+
+    #[test]
+    fn link_plan_parses_the_full_grammar() {
+        let p = LinkFaultPlan::parse(
+            "congest:p=0.2:6x,flap:p=0.1,part:2+3@r3..r7,timeout:0.05,\
+             budget:2,noretry",
+            4,
+        )
+        .unwrap();
+        assert!((p.congest_p - 0.2).abs() < 1e-15);
+        assert_eq!(p.congest_mult, 6.0);
+        assert!((p.flap_p - 0.1).abs() < 1e-15);
+        assert_eq!(
+            p.partitions,
+            vec![LinkPartition { from: 3, until: 7, nodes: vec![2, 3] }]
+        );
+        assert_eq!(p.timeout_s, 0.05);
+        assert_eq!(p.retry_budget, 2);
+        assert!(p.no_retry);
+        assert!(!p.is_empty());
+        assert!(LinkFaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn link_plan_rejects_malformed_specs() {
+        for s in [
+            "part:9@r1..r3",      // node out of range
+            "part:0+1@r1..r3",    // node 0 is the reference frame
+            "part:1@r3..r3",      // empty window
+            "part:1@r3",          // missing span
+            "congest:0.2",        // probability missing p=
+            "flap:p=1.5",         // out of [0,1]
+            "congest:p=0.1:0.5x", // factor < 1
+            "timeout:-1",         // non-positive deadline
+            "budget:0",           // no attempts at all
+            "noretry:1",          // stray argument
+            "sever:1@r1..r2",     // unknown kind
+        ] {
+            let e = LinkFaultPlan::parse(s, 4).unwrap_err();
+            assert!(e.starts_with("bad --link-fault spec"), "{s}: {e}");
+            assert!(!e.contains('\n'), "one-line error: {e}");
+        }
+    }
+
+    #[test]
+    fn link_coins_are_pure_in_seed_round_edge() {
+        let a = LinkFaultPlan {
+            congest_p: 0.5,
+            flap_p: 0.5,
+            seed: 11,
+            ..LinkFaultPlan::default()
+        };
+        let b = a.clone();
+        for r in 0..64 {
+            assert_eq!(a.congested(r, 1, 2), b.congested(r, 1, 2));
+            assert_eq!(
+                a.failed_attempts(r, 0, 3),
+                b.failed_attempts(r, 0, 3)
+            );
+        }
+        // both branches occur, and attempt counts stay in range
+        assert!((0..64).any(|r| a.congested(r, 1, 2)));
+        assert!((0..64).any(|r| !a.congested(r, 1, 2)));
+        assert!((0..64).any(|r| a.failed_attempts(r, 0, 3) > 0));
+        assert!((0..64)
+            .all(|r| a.failed_attempts(r, 0, 3) <= a.retry_budget + 2));
+        // a different seed draws different weather somewhere
+        let c = LinkFaultPlan { seed: 12, ..a.clone() };
+        assert!((0..64).any(|r| a.congested(r, 1, 2) != c.congested(r, 1, 2)));
+    }
+
+    #[test]
+    fn partitions_cut_and_heal_once() {
+        let plan = LinkFaultPlan::parse("part:1+2@r2..r4", 4).unwrap();
+        assert_eq!(plan.cut_at(1), Vec::<usize>::new());
+        assert_eq!(plan.cut_at(2), vec![1, 2]);
+        assert_eq!(plan.cut_at(3), vec![1, 2]);
+        assert_eq!(plan.cut_at(4), Vec::<usize>::new());
+        let mut st = LinkFaultState::new(plan);
+        assert!(st.due_cuts(1).is_empty());
+        assert_eq!(st.due_cuts(2), vec![0]);
+        assert!(st.due_cuts(3).is_empty(), "fires once");
+        assert!(st.due_heals(3).is_empty());
+        assert_eq!(st.due_heals(4), vec![0]);
+        assert!(st.due_heals(5).is_empty(), "heals once");
+    }
+
+    #[test]
+    fn seeded_link_generator_is_deterministic_and_in_range() {
+        for seed in [1u64, 2, 3] {
+            let p = LinkFaultPlan::seeded(5, seed);
+            assert_eq!(p, LinkFaultPlan::seeded(5, seed));
+            assert!(!p.is_empty());
+            for part in &p.partitions {
+                assert!(part.nodes.iter().all(|&n| n > 0 && n < 5));
+                assert!(part.from < part.until);
+            }
+        }
+        assert!(LinkFaultPlan::seeded(1, 7).is_empty());
     }
 
     #[test]

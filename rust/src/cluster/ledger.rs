@@ -73,6 +73,20 @@ pub struct Ledger {
     pub flap_events: usize,
     /// virtual seconds of rejoin state transfer on the critical path
     pub recovery_seconds: f64,
+    /// virtual seconds spent on the link layer's timeout/backoff
+    /// ladders (per-level critical share) — deliberately NOT folded
+    /// into `comm_seconds`, so the wire share and the waiting-on-dead-
+    /// links share stay separately attributable
+    pub retry_seconds: f64,
+    /// link layer: hop attempts that timed out and were retried
+    pub link_retries: usize,
+    /// link layer: hops that exhausted the retry budget and re-parented
+    /// their subtree around the dead edge
+    pub reroutes: usize,
+    /// link layer: hops charged under a transient congestion window
+    pub congested_hops: usize,
+    /// link layer: partition activations applied to the membership
+    pub partition_events: usize,
     /// speculative solver lanes: solves whose predicted basis survived
     /// the commit and kept their early start on the virtual clock
     pub spec_hits: usize,
@@ -194,7 +208,7 @@ impl Ledger {
         reg.render()
     }
 
-    /// Did the fault layer touch this run at all?
+    /// Did the fault layer (node or link) touch this run at all?
     pub fn has_fault_activity(&self) -> bool {
         self.crash_events
             + self.rejoin_rebases
@@ -202,6 +216,10 @@ impl Ledger {
             + self.retry_rounds
             + self.degrade_events
             + self.flap_events
+            + self.link_retries
+            + self.reroutes
+            + self.congested_hops
+            + self.partition_events
             > 0
     }
 
@@ -218,12 +236,18 @@ impl Ledger {
         reg.counter("retry", self.retry_rounds as u64);
         reg.counter("degrade", self.degrade_events as u64);
         reg.counter("flap", self.flap_events as u64);
+        reg.gauge("retry_wait", self.retry_seconds, 3, "s");
+        reg.counter("link_retry", self.link_retries as u64);
+        reg.counter("reroute", self.reroutes as u64);
+        reg.counter("congested", self.congested_hops as u64);
+        reg.counter("partition", self.partition_events as u64);
     }
 
     /// Fault counters rendered for bench reports through the one
     /// registry render path: "crash 2 | rejoin 2 | recovery 0.125s |
-    /// lost 3 | retry 5 | degrade 1 | flap 4". Empty when the run saw
-    /// no fault activity.
+    /// lost 3 | retry 5 | degrade 1 | flap 4 | retry_wait 0.050s |
+    /// link_retry 6 | reroute 1 | congested 9 | partition 1". Empty
+    /// when the run saw no fault activity.
     pub fn fault_profile(&self) -> String {
         let mut reg = Registry::new();
         self.publish_faults(&mut reg);
@@ -320,6 +344,31 @@ mod tests {
         l.publish_faults(&mut reg);
         assert_eq!(p, reg.render());
         assert_eq!(reg.get("crash"), Some(2.0));
+    }
+
+    #[test]
+    fn link_counters_trip_fault_activity_and_render() {
+        // link-only weather must light the resilience surface even
+        // with zero node faults, and retry time stays a distinct
+        // counter (never folded into comm seconds)
+        let l = Ledger {
+            retry_seconds: 0.05,
+            link_retries: 6,
+            reroutes: 1,
+            congested_hops: 9,
+            partition_events: 1,
+            ..Ledger::default()
+        };
+        assert!(l.has_fault_activity());
+        assert_eq!(l.comm_seconds, 0.0);
+        let p = l.fault_profile();
+        assert!(p.contains("retry_wait 0.050s"), "{p}");
+        assert!(p.contains("link_retry 6 | reroute 1"), "{p}");
+        assert!(p.contains("congested 9 | partition 1"), "{p}");
+        let mut reg = Registry::new();
+        l.publish_faults(&mut reg);
+        assert_eq!(reg.get("reroute"), Some(1.0));
+        assert_eq!(reg.get("retry_wait"), Some(0.05));
     }
 
     #[test]

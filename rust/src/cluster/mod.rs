@@ -29,9 +29,12 @@ pub mod ledger;
 pub mod node;
 pub mod scratch;
 
-pub use cost::CostModel;
+pub use cost::{CostModel, LinkProfile};
 pub use engine::{Engine, NodeProfile};
-pub use faults::{FaultPlan, FaultState, RoundWeather};
+pub use faults::{
+    FaultPlan, FaultState, LinkFaultPlan, LinkFaultState, LinkPartition,
+    RoundWeather,
+};
 pub use ledger::Ledger;
 pub use node::Shard;
 pub use scratch::NodeScratch;
@@ -121,6 +124,15 @@ pub struct Cluster {
     /// when no plan is installed — and an installed *empty* plan
     /// behaves bit-identically to `None` (`tests/faults.rs` pins it)
     pub faults: Option<FaultState>,
+    /// per-link bandwidth/latency multipliers over the reduction tree
+    /// ([`cost::LinkProfile`]); `None` — and an installed *uniform*
+    /// profile — leaves every hop at the global [`CostModel`] cost
+    /// (`tests/faults.rs` pins the bit-identity)
+    pub links: Option<LinkProfile>,
+    /// seeded link-weather state ([`faults::LinkFaultState`]):
+    /// congestion/flap coins and partition windows on the tree edges;
+    /// `None` — and an installed *empty* plan — is the ideal wire
+    pub link_faults: Option<LinkFaultState>,
     /// flight-recorder sink (`--metrics-out`); `None` means recording
     /// is off and every `record_*` hook is an early-return — the off
     /// path is bit-identical (`tests/obs.rs` pins it). The recorder
@@ -171,6 +183,8 @@ impl Cluster {
             engine,
             alive,
             faults: None,
+            links: None,
+            link_faults: None,
             recorder: None,
         }
     }
@@ -197,6 +211,13 @@ impl Cluster {
                 .faults
                 .as_ref()
                 .map(|s| FaultState::new(s.plan.clone())),
+            // the wire's shape travels with the fork; its weather
+            // state restarts (nothing fired, empty link log)
+            links: self.links.clone(),
+            link_faults: self
+                .link_faults
+                .as_ref()
+                .map(|s| LinkFaultState::new(s.plan.clone())),
             // a fork is a new run: it does not inherit the sink
             recorder: None,
         }
@@ -253,6 +274,25 @@ impl Cluster {
             .map(|e| (e.round, e.node, e.what))
     }
 
+    /// Applied link-event log length (partitions/heals) — a *separate*
+    /// watermark from [`Self::fault_log_len`]: the two logs grow
+    /// independently within a round, so concatenated indexing would
+    /// break the per-round diffs. 0 without a link plan.
+    pub fn link_log_len(&self) -> usize {
+        self.link_faults.as_ref().map_or(0, |s| s.log.len())
+    }
+
+    /// One applied link-event log entry as `(round, node, what)`.
+    pub fn link_log_entry(
+        &self,
+        i: usize,
+    ) -> Option<(usize, usize, &'static str)> {
+        self.link_faults
+            .as_ref()
+            .and_then(|s| s.log.get(i))
+            .map(|e| (e.round, e.node, e.what))
+    }
+
     /// Install a per-node speed profile (resets the engine's clocks —
     /// call before running a method). Panics on a length mismatch.
     pub fn set_profile(&mut self, profile: NodeProfile) {
@@ -279,6 +319,49 @@ impl Cluster {
         self.faults = Some(FaultState::new(plan));
     }
 
+    /// Install a per-link cost profile (see [`cost::LinkProfile`]).
+    /// A uniform profile is structurally inert: every comm entry point
+    /// keeps the legacy single-cost code path. Panics on a length
+    /// mismatch, mirroring [`Self::set_profile`].
+    pub fn set_link_profile(&mut self, profile: LinkProfile) {
+        assert_eq!(
+            profile.uplink.len(),
+            self.n_nodes(),
+            "link profile length must match node count"
+        );
+        self.links = Some(profile);
+    }
+
+    /// Install a seeded link-weather plan (see
+    /// [`faults::LinkFaultPlan`]). An empty plan is structurally inert,
+    /// like an empty [`FaultPlan`].
+    pub fn set_link_fault_plan(&mut self, plan: LinkFaultPlan) {
+        self.link_faults = Some(LinkFaultState::new(plan));
+    }
+
+    /// Does any comm phase need the link layer at all? False for no
+    /// profile / a uniform profile AND no plan / an empty plan — the
+    /// gate behind the structural bit-identity guarantee: when it is
+    /// false every entry point runs the legacy code path verbatim.
+    pub fn link_active(&self) -> bool {
+        self.links.as_ref().is_some_and(|l| !l.is_uniform())
+            || self
+                .link_faults
+                .as_ref()
+                .is_some_and(|s| !s.plan.is_empty())
+    }
+
+    /// Mean link multiplier for acked fan-out paths (broadcasts, ring
+    /// segments, scalar rounds, rejoin unicasts): those carry no
+    /// per-edge retry discipline, so they scale by the profile's mean.
+    /// Exactly 1.0 for a uniform (or absent) profile.
+    fn link_mean_mult(&self) -> f64 {
+        if !self.link_active() {
+            return 1.0;
+        }
+        self.links.as_ref().map_or(1.0, |p| p.mean_mult())
+    }
+
     /// The currently-alive node ids, ascending.
     pub fn alive_nodes(&self) -> Vec<usize> {
         (0..self.n_nodes()).filter(|&p| self.alive[p]).collect()
@@ -295,7 +378,7 @@ impl Cluster {
     /// nothing — the zero-fault path.
     pub fn apply_fault_weather(&mut self, r: usize) -> RoundWeather {
         let n = self.n_nodes();
-        if self.faults.is_none() {
+        if self.faults.is_none() && self.link_faults.is_none() {
             return RoundWeather::clear(n);
         }
         let now = self.engine.makespan();
@@ -392,6 +475,72 @@ impl Cluster {
                 }
             }
         }
+        let mut members = members;
+        // link partitions: the cut component vanishes from the quorum's
+        // view exactly like a crashed member set — but the nodes are
+        // NOT dead: their solver lanes keep running, and on heal
+        // anything within the staleness bound rejoins the quorum. The
+        // script grammar guarantees node 0 (the master's component) is
+        // never cut, so the surviving frame always holds the reference
+        // iterate; if a cut would empty the round anyway (every other
+        // member crashed or flapped), the cut is ignored — no link
+        // state can hang a round.
+        let mut cut_now: Vec<usize> = Vec::new();
+        let mut healed_now: Vec<usize> = Vec::new();
+        let mut n_cuts = 0usize;
+        let mut active_cut: Vec<usize> = Vec::new();
+        if let Some(state) = self.link_faults.as_mut() {
+            state.round = r;
+            for i in state.due_cuts(r) {
+                n_cuts += 1;
+                let nodes = state.plan.partitions[i].nodes.clone();
+                for &p in &nodes {
+                    state.record(r, p, "partition");
+                    cut_now.push(p);
+                }
+            }
+            for i in state.due_heals(r) {
+                let nodes = state.plan.partitions[i].nodes.clone();
+                for &p in &nodes {
+                    state.record(r, p, "heal");
+                    healed_now.push(p);
+                }
+            }
+            if !healed_now.is_empty() && state.master_isolated {
+                // the cut that just healed had isolated the master:
+                // route this round through the certified synchronous
+                // fallback so the whole fleet resynchronizes
+                weather.heal_resync = true;
+                state.master_isolated = false;
+            }
+            active_cut = state.plan.cut_at(r);
+        }
+        self.ledger.partition_events += n_cuts;
+        for &p in &cut_now {
+            self.engine.fault_event("link_partition", p, now);
+        }
+        healed_now.sort_unstable();
+        healed_now.dedup();
+        healed_now.retain(|&p| self.alive[p]);
+        for &p in &healed_now {
+            self.engine.fault_event("link_heal", p, now);
+        }
+        weather.healed = healed_now;
+        if !active_cut.is_empty() {
+            let kept: Vec<usize> = members
+                .iter()
+                .copied()
+                .filter(|p| active_cut.binary_search(p).is_err())
+                .collect();
+            if !kept.is_empty() {
+                members = kept;
+            }
+            if members.len() == 1 && members[0] == 0 {
+                if let Some(state) = self.link_faults.as_mut() {
+                    state.master_isolated = true;
+                }
+            }
+        }
         weather.members = members;
         weather
     }
@@ -406,7 +555,9 @@ impl Cluster {
     pub fn rejoin_rebase(&mut self, node: usize, len: usize) {
         let now = self.engine.makespan();
         let bytes = (len * self.cost.bytes_per_scalar) as f64;
-        let secs = self.tree_depth() as f64 * self.cost.hop_seconds(bytes);
+        let secs = self.tree_depth() as f64
+            * self.cost.hop_seconds(bytes)
+            * self.link_mean_mult();
         self.ledger.comm_passes += 1.0;
         self.ledger.comm_bytes += bytes;
         self.ledger.comm_seconds += secs;
@@ -457,7 +608,24 @@ impl Cluster {
                         "recovery_seconds",
                         Value::Num(l.recovery_seconds),
                     ),
+                    ("retry_seconds", Value::Num(l.retry_seconds)),
                     ("alive", Value::Arr(alive)),
+                ]),
+            );
+            map.insert(
+                "link_events".to_string(),
+                Value::obj(vec![
+                    ("link_retries", Value::Num(l.link_retries as f64)),
+                    ("reroutes", Value::Num(l.reroutes as f64)),
+                    (
+                        "congested_hops",
+                        Value::Num(l.congested_hops as f64),
+                    ),
+                    (
+                        "partition_events",
+                        Value::Num(l.partition_events as f64),
+                    ),
+                    ("retry_seconds", Value::Num(l.retry_seconds)),
                 ]),
             );
         }
@@ -648,6 +816,143 @@ impl Cluster {
         self.sync_ledger();
     }
 
+    /// The one link-aware climb behind every reduce entry point when
+    /// [`Self::link_active`] is true: builds the per-hop outcome
+    /// closure (profile multiplier → congestion coin → timeout/retry
+    /// ladder → reroute past the budget), schedules the climb on the
+    /// engine (barrier-ordered, or arrival-ordered when `arrivals` is
+    /// given), and charges the ledger — the critical chain's wire
+    /// share to `comm_seconds`, its timeout/backoff share to the
+    /// distinct `retry_seconds`, plus the per-hop event counters. The
+    /// optional down-sweep hop is scaled by the mean link multiplier
+    /// (the fan-out is acked multicast: no per-edge retry discipline).
+    /// Returns the landing time.
+    fn linked_reduce(
+        &mut self,
+        label: &'static str,
+        arrivals: Option<&[(usize, f64, usize)]>,
+        hops: &[f64],
+        down: Option<(usize, f64)>,
+        ctrl: bool,
+        members: &[usize],
+    ) -> f64 {
+        let mean = self.links.as_ref().map_or(1.0, |p| p.mean_mult());
+        let down = down.map(|(d, h)| (d, h * mean));
+        let round = self.link_faults.as_ref().map_or(0, |s| s.round);
+        let links = &self.links;
+        let lf = &self.link_faults;
+        let ledger = &mut self.ledger;
+        let mut link = |level: usize,
+                        sender: usize,
+                        base: f64|
+         -> engine::HopOutcome {
+            let m = links.as_ref().map_or(1.0, |p| p.mult(level, sender));
+            let mut secs = base * m;
+            let mut retry_secs = 0.0;
+            let mut rerouted = false;
+            if let Some(state) = lf.as_ref() {
+                let plan = &state.plan;
+                if plan.congested(round, level, sender) {
+                    secs *= plan.congest_mult;
+                    ledger.congested_hops += 1;
+                }
+                let k = plan.failed_attempts(round, level, sender);
+                if k > 0 {
+                    if plan.no_retry {
+                        // the ablation arm: no deadline discipline, the
+                        // payload sits out the whole dead window until
+                        // the link recovers on its own
+                        let wait =
+                            plan.timeout_s * (1u64 << k) as f64;
+                        secs += wait;
+                        retry_secs = wait;
+                    } else if k <= plan.retry_budget {
+                        // exponential backoff: rungs t, 2t, 4t, … sum
+                        // to t·(2^k − 1) before the attempt that lands
+                        let back = plan.timeout_s
+                            * ((1u64 << k) as f64 - 1.0);
+                        secs += back;
+                        retry_secs = back;
+                        ledger.link_retries += k as usize;
+                    } else {
+                        // budget exhausted: abandon the edge and
+                        // re-parent one level up — the detour doubles
+                        // the wire time on top of the burned ladder
+                        let back = plan.timeout_s
+                            * ((1u64 << plan.retry_budget) as f64 - 1.0);
+                        secs = 2.0 * secs + back;
+                        retry_secs = back;
+                        rerouted = true;
+                        ledger.link_retries += plan.retry_budget as usize;
+                        ledger.reroutes += 1;
+                    }
+                }
+            }
+            engine::HopOutcome { secs, retry_secs, rerouted }
+        };
+        let (landed, totals) = match arrivals {
+            Some(arr) => self.engine.quorum_reduce_linked_members(
+                label, arr, hops, down, members, &mut link,
+            ),
+            None => self.engine.tree_reduce_linked_members(
+                label,
+                hops,
+                down,
+                Self::lane(ctrl),
+                members,
+                &mut link,
+            ),
+        };
+        self.ledger.comm_seconds += totals.comm_secs
+            + down.map_or(0.0, |(d, h)| d as f64 * h);
+        self.ledger.retry_seconds += totals.retry_secs;
+        self.sync_ledger();
+        landed
+    }
+
+    /// Linked analogue of [`Self::charge_vector_pass`] +
+    /// [`Self::engine_dense_traversal`] for the dense size-d reduce
+    /// entry points: per-hop outcomes on the Tree, the mean link
+    /// multiplier on the Ring (ring segments are acked pipelines — no
+    /// per-edge retry discipline; see lib.rs `## Network model`).
+    fn dense_linked_traversal(&mut self, all: bool, ctrl: bool) {
+        let passes = if all { 2usize } else { 1 };
+        #[cfg(feature = "audit")]
+        let marks = self.engine.comm_marks();
+        self.ledger.comm_passes += passes as f64;
+        self.ledger.comm_bytes +=
+            (passes * self.dim * self.cost.bytes_per_scalar) as f64;
+        match self.cost.topology {
+            cost::Topology::Tree => {
+                let depth = self.tree_depth() as usize;
+                let hop = if self.n_nodes() <= 1 {
+                    0.0
+                } else {
+                    self.cost.pass_seconds(self.dim)
+                };
+                let hops = vec![hop; depth];
+                let down = if all { Some((depth, hop)) } else { None };
+                let members: Vec<usize> = (0..self.n_nodes()).collect();
+                self.linked_reduce("reduce", None, &hops, down, ctrl, &members);
+            }
+            cost::Topology::Ring => {
+                let per = self
+                    .cost
+                    .traversal_seconds(self.dim, self.n_nodes())
+                    * self.link_mean_mult();
+                let secs = passes as f64 * per;
+                self.ledger.comm_seconds += secs;
+                self.engine.ring_traversal("ring", secs);
+                self.sync_ledger();
+            }
+        }
+        #[cfg(feature = "audit")]
+        assert!(
+            self.engine.comm_marks() > marks,
+            "linked traversal charged comm bytes with no engine event"
+        );
+    }
+
     /// Compute phase followed by a size-d vector reduce (summed in tree
     /// order) whose result the master keeps. Charges 1 pass.
     pub fn map_reduce_vec(
@@ -657,8 +962,12 @@ impl Cluster {
         let outs = self.map_each(f);
         let sum = allreduce::tree_sum(&outs);
         assert_reduced_finite("map_reduce_vec", &sum);
-        self.charge_vector_pass(1);
-        self.engine_dense_traversal(true, false, false);
+        if self.link_active() {
+            self.dense_linked_traversal(false, false);
+        } else {
+            self.charge_vector_pass(1);
+            self.engine_dense_traversal(true, false, false);
+        }
         sum
     }
 
@@ -672,8 +981,12 @@ impl Cluster {
         let outs = self.map_each(f);
         let sum = allreduce::tree_sum(&outs);
         assert_reduced_finite("map_allreduce_vec", &sum);
-        self.charge_vector_pass(2);
-        self.engine_dense_traversal(true, true, false);
+        if self.link_active() {
+            self.dense_linked_traversal(true, false);
+        } else {
+            self.charge_vector_pass(2);
+            self.engine_dense_traversal(true, true, false);
+        }
         sum
     }
 
@@ -705,6 +1018,10 @@ impl Cluster {
     ) -> Vec<f64> {
         let sum = allreduce::tree_sum(parts);
         assert_reduced_finite("reduce_parts", &sum);
+        if self.link_active() {
+            self.dense_linked_traversal(all, ctrl);
+            return sum;
+        }
         #[cfg(feature = "audit")]
         let marks = self.engine.comm_marks();
         self.charge_vector_pass(if all { 2 } else { 1 });
@@ -777,6 +1094,38 @@ impl Cluster {
         let (out, level_bytes) = allreduce::tree_sum_sparse(parts);
         #[cfg(any(debug_assertions, feature = "audit"))]
         assert_reduced_finite("reduce_parts_sparse", reduced_vals(&out));
+        if self.link_active() {
+            // link weather always runs the tree time model: a ring
+            // reduce-scatter has no per-edge hop to retry (mirrors the
+            // async quorum's rule)
+            let result_bytes = out.wire_bytes() as f64;
+            let hops: Vec<f64> = level_bytes
+                .iter()
+                .map(|&b| self.cost.hop_seconds(b as f64))
+                .collect();
+            let down = if all {
+                Some((
+                    self.tree_depth() as usize,
+                    self.cost.hop_seconds(result_bytes),
+                ))
+            } else {
+                None
+            };
+            self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
+            self.ledger.comm_bytes +=
+                if all { 2.0 * result_bytes } else { result_bytes };
+            self.ledger.record_sparse_levels(&level_bytes);
+            let members: Vec<usize> = (0..self.n_nodes()).collect();
+            self.linked_reduce(
+                "sparse_reduce",
+                None,
+                &hops,
+                down,
+                ctrl,
+                &members,
+            );
+            return out;
+        }
         #[cfg(feature = "audit")]
         let marks = self.engine.comm_marks();
         let result_bytes = out.wire_bytes() as f64;
@@ -883,20 +1232,32 @@ impl Cluster {
             .map(|&b| self.cost.hop_seconds(b as f64))
             .collect();
         let down_depth = self.tree_depth() as usize;
-        let mut secs: f64 = hops.iter().sum();
-        if all {
-            secs += down_depth as f64 * self.cost.hop_seconds(result_bytes);
-        }
-        self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
-        self.ledger.comm_seconds += secs;
-        self.ledger.comm_bytes +=
-            if all { 2.0 * result_bytes } else { result_bytes };
-        self.ledger.record_sparse_levels(&level_bytes);
         let down = if all {
             Some((down_depth, self.cost.hop_seconds(result_bytes)))
         } else {
             None
         };
+        self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
+        self.ledger.comm_bytes +=
+            if all { 2.0 * result_bytes } else { result_bytes };
+        self.ledger.record_sparse_levels(&level_bytes);
+        if self.link_active() {
+            let members: Vec<usize> = (0..self.n_nodes()).collect();
+            let landed = self.linked_reduce(
+                "async_reduce",
+                Some(arrivals),
+                &hops,
+                down,
+                false,
+                &members,
+            );
+            return (out, landed);
+        }
+        let mut secs: f64 = hops.iter().sum();
+        if all {
+            secs += down_depth as f64 * self.cost.hop_seconds(result_bytes);
+        }
+        self.ledger.comm_seconds += secs;
         let landed =
             self.engine.quorum_reduce("async_reduce", arrivals, &hops, down);
         self.sync_ledger();
@@ -916,7 +1277,16 @@ impl Cluster {
         debug_assert_eq!(parts.len(), arrivals.len());
         let sum = allreduce::tree_sum(parts);
         assert_reduced_finite("async_quorum_reduce", &sum);
-        self.charge_vector_pass(if all { 2 } else { 1 });
+        if self.link_active() {
+            // linked climbs charge their own (possibly retried) wire
+            // time; only the flat pass/byte accounting happens here
+            let passes = if all { 2usize } else { 1 };
+            self.ledger.comm_passes += passes as f64;
+            self.ledger.comm_bytes +=
+                (passes * self.dim * self.cost.bytes_per_scalar) as f64;
+        } else {
+            self.charge_vector_pass(if all { 2 } else { 1 });
+        }
         let hop = if self.n_nodes() <= 1 {
             0.0
         } else {
@@ -933,6 +1303,18 @@ impl Cluster {
         } else {
             None
         };
+        if self.link_active() {
+            let members: Vec<usize> = (0..self.n_nodes()).collect();
+            let landed = self.linked_reduce(
+                "async_reduce",
+                Some(arrivals),
+                &hops,
+                down,
+                false,
+                &members,
+            );
+            return (sum, landed);
+        }
         let landed =
             self.engine.quorum_reduce("async_reduce", arrivals, &hops, down);
         self.sync_ledger();
@@ -945,8 +1327,9 @@ impl Cluster {
     /// time, zero passes (footnote 5 counts size-d vectors).
     pub fn charge_scalar_round(&mut self, k: usize) {
         let depth = self.tree_depth() as usize;
-        let hop = self.cost.latency_s
-            + (k * 8) as f64 / self.cost.bandwidth_bytes_per_s;
+        let hop = (self.cost.latency_s
+            + (k * 8) as f64 / self.cost.bandwidth_bytes_per_s)
+            * self.link_mean_mult();
         self.ledger.comm_seconds += 2.0 * depth as f64 * hop;
         self.ledger.scalar_rounds += 1;
         // scalar rounds are control-plane by nature: in pipelined mode
@@ -985,6 +1368,10 @@ impl Cluster {
         let depth = self.tree_depth() as usize;
         #[cfg(feature = "audit")]
         let marks = self.engine.comm_marks();
+        // broadcasts are acked multicast fan-out: no per-edge retry
+        // discipline, the link layer contributes its mean multiplier
+        // (exactly 1.0 when inactive)
+        let lm = self.link_mean_mult();
         self.ledger.comm_passes += 1.0;
         self.ledger.comm_bytes += bytes;
         match self.cost.topology {
@@ -992,7 +1379,7 @@ impl Cluster {
                 let hop = if self.n_nodes() <= 1 {
                     0.0
                 } else {
-                    self.cost.hop_seconds(bytes)
+                    self.cost.hop_seconds(bytes) * lm
                 };
                 self.ledger.comm_seconds += depth as f64 * hop;
                 self.engine.broadcast(depth, hop);
@@ -1000,7 +1387,8 @@ impl Cluster {
             cost::Topology::Ring => {
                 let secs = self
                     .cost
-                    .ring_sparse_traversal_seconds(bytes, self.n_nodes());
+                    .ring_sparse_traversal_seconds(bytes, self.n_nodes())
+                    * lm;
                 self.ledger.comm_seconds += secs;
                 self.engine.ring_traversal("ring", secs);
             }
@@ -1214,12 +1602,16 @@ impl Cluster {
         };
         let passes = if all { 2.0 } else { 1.0 };
         self.ledger.comm_passes += passes;
-        self.ledger.comm_seconds +=
-            passes * depth as f64 * hop;
         self.ledger.comm_bytes +=
             passes * (self.dim * self.cost.bytes_per_scalar) as f64;
         let hops = vec![hop; depth];
         let down = if all { Some((depth, hop)) } else { None };
+        if self.link_active() {
+            self.linked_reduce("reduce", None, &hops, down, ctrl, members);
+            return sum;
+        }
+        self.ledger.comm_seconds +=
+            passes * depth as f64 * hop;
         self.engine.tree_reduce_members(
             "reduce",
             &hops,
@@ -1278,20 +1670,31 @@ impl Cluster {
             .map(|&b| self.cost.hop_seconds(b as f64))
             .collect();
         let down_depth = Self::subset_depth(members.len()) as usize;
-        let mut secs: f64 = hops.iter().sum();
-        if all {
-            secs += down_depth as f64 * self.cost.hop_seconds(result_bytes);
-        }
-        self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
-        self.ledger.comm_seconds += secs;
-        self.ledger.comm_bytes +=
-            if all { 2.0 * result_bytes } else { result_bytes };
-        self.ledger.record_sparse_levels(&level_bytes);
         let down = if all {
             Some((down_depth, self.cost.hop_seconds(result_bytes)))
         } else {
             None
         };
+        self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
+        self.ledger.comm_bytes +=
+            if all { 2.0 * result_bytes } else { result_bytes };
+        self.ledger.record_sparse_levels(&level_bytes);
+        if self.link_active() {
+            self.linked_reduce(
+                "sparse_reduce",
+                None,
+                &hops,
+                down,
+                ctrl,
+                members,
+            );
+            return out;
+        }
+        let mut secs: f64 = hops.iter().sum();
+        if all {
+            secs += down_depth as f64 * self.cost.hop_seconds(result_bytes);
+        }
+        self.ledger.comm_seconds += secs;
         self.engine.tree_reduce_members(
             "sparse_reduce",
             &hops,
@@ -1331,20 +1734,31 @@ impl Cluster {
             .map(|&b| self.cost.hop_seconds(b as f64))
             .collect();
         let down_depth = Self::subset_depth(members.len()) as usize;
-        let mut secs: f64 = hops.iter().sum();
-        if all {
-            secs += down_depth as f64 * self.cost.hop_seconds(result_bytes);
-        }
-        self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
-        self.ledger.comm_seconds += secs;
-        self.ledger.comm_bytes +=
-            if all { 2.0 * result_bytes } else { result_bytes };
-        self.ledger.record_sparse_levels(&level_bytes);
         let down = if all {
             Some((down_depth, self.cost.hop_seconds(result_bytes)))
         } else {
             None
         };
+        self.ledger.comm_passes += if all { 2.0 } else { 1.0 };
+        self.ledger.comm_bytes +=
+            if all { 2.0 * result_bytes } else { result_bytes };
+        self.ledger.record_sparse_levels(&level_bytes);
+        if self.link_active() {
+            let landed = self.linked_reduce(
+                "async_reduce",
+                Some(arrivals),
+                &hops,
+                down,
+                false,
+                members,
+            );
+            return (out, landed);
+        }
+        let mut secs: f64 = hops.iter().sum();
+        if all {
+            secs += down_depth as f64 * self.cost.hop_seconds(result_bytes);
+        }
+        self.ledger.comm_seconds += secs;
         let landed = self.engine.quorum_reduce_members(
             "async_reduce",
             arrivals,
@@ -1384,9 +1798,6 @@ impl Cluster {
         };
         let passes = if all { 2.0 } else { 1.0 };
         self.ledger.comm_passes += passes;
-        self.ledger.comm_seconds += passes
-            * Self::subset_depth(m) as f64
-            * hop;
         self.ledger.comm_bytes +=
             passes * (self.dim * self.cost.bytes_per_scalar) as f64;
         let hops = vec![hop; up_depth];
@@ -1395,6 +1806,20 @@ impl Cluster {
         } else {
             None
         };
+        if self.link_active() {
+            let landed = self.linked_reduce(
+                "async_reduce",
+                Some(arrivals),
+                &hops,
+                down,
+                false,
+                members,
+            );
+            return (sum, landed);
+        }
+        self.ledger.comm_seconds += passes
+            * Self::subset_depth(m) as f64
+            * hop;
         let landed = self.engine.quorum_reduce_members(
             "async_reduce",
             arrivals,
@@ -1418,8 +1843,9 @@ impl Cluster {
             return self.charge_scalar_round(k);
         }
         let depth = Self::subset_depth(members.len()) as usize;
-        let hop = self.cost.latency_s
-            + (k * 8) as f64 / self.cost.bandwidth_bytes_per_s;
+        let hop = (self.cost.latency_s
+            + (k * 8) as f64 / self.cost.bandwidth_bytes_per_s)
+            * self.link_mean_mult();
         self.ledger.comm_seconds += 2.0 * depth as f64 * hop;
         self.ledger.scalar_rounds += 1;
         self.engine.scalar_round_members(depth, hop, members);
@@ -1972,5 +2398,168 @@ mod tests {
             Some(Value::Arr(a)) => assert_eq!(a.len(), 3),
             other => panic!("alive not an array: {other:?}"),
         }
+        // the link-weather block rides along with its own schema
+        let le = v.get("link_events").expect("link_events block");
+        assert_eq!(le.get("link_retries").unwrap().as_usize(), Some(0));
+        assert_eq!(le.get("reroutes").unwrap().as_usize(), Some(0));
+        assert_eq!(le.get("congested_hops").unwrap().as_usize(), Some(0));
+        assert_eq!(le.get("partition_events").unwrap().as_usize(), Some(0));
+        assert_eq!(le.get("retry_seconds").unwrap().as_f64(), Some(0.0));
+        assert_eq!(r.get("retry_seconds").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn uniform_links_and_empty_plan_are_structurally_inert() {
+        // the bit-identity mechanism: with a uniform profile and an
+        // empty plan, link_active() is false and every comm entry
+        // point takes the legacy code path verbatim
+        let mut base = cluster(5);
+        let mut linked = cluster(5);
+        linked.set_link_profile(LinkProfile::uniform(5));
+        linked.set_link_fault_plan(LinkFaultPlan::default());
+        assert!(!linked.link_active());
+        let run = |c: &mut Cluster| {
+            c.broadcast_vec();
+            let _ = c.map_allreduce_vec(|_, _| vec![1.0; 30]);
+            let parts: Vec<SparseVec> = (0..5)
+                .map(|p| SparseVec::from_pairs(30, vec![(p as u32, 1.0)]))
+                .collect();
+            let _ = c.reduce_parts_sparse(&parts, true);
+            c.charge_scalar_round(3);
+            let w = c.apply_fault_weather(0);
+            assert_eq!(w.members, vec![0, 1, 2, 3, 4]);
+            assert!(!w.heal_resync);
+        };
+        run(&mut base);
+        run(&mut linked);
+        assert_eq!(base.ledger, linked.ledger);
+        assert_eq!(base.engine.makespan(), linked.engine.makespan());
+        assert_eq!(
+            base.engine.events().len(),
+            linked.engine.events().len()
+        );
+    }
+
+    #[test]
+    fn heterogeneous_links_stretch_reduces_and_split_retry_time() {
+        let mut slow = cluster(4);
+        // node 1's uplink runs at 1/3 speed
+        slow.set_link_profile(LinkProfile {
+            uplink: vec![1.0, 3.0, 1.0, 1.0],
+            level: Vec::new(),
+        });
+        assert!(slow.link_active());
+        let mut base = cluster(4);
+        let parts: Vec<Vec<f64>> = vec![vec![1.0; 30]; 4];
+        let a = slow.reduce_parts(&parts, true);
+        let b = base.reduce_parts(&parts, true);
+        // arithmetic is untouched; only the wire time stretches
+        assert_eq!(a, b);
+        assert!(
+            slow.ledger.comm_seconds > base.ledger.comm_seconds,
+            "slow {} vs base {}",
+            slow.ledger.comm_seconds,
+            base.ledger.comm_seconds
+        );
+        // pure profile skew: no retries, no retry time
+        assert_eq!(slow.ledger.retry_seconds, 0.0);
+        assert_eq!(slow.ledger.link_retries, 0);
+
+        // a flapping plan accrues the distinct retry counter
+        let mut flappy = cluster(4);
+        let plan = LinkFaultPlan {
+            flap_p: 1.0,
+            ..LinkFaultPlan::default()
+        };
+        flappy.set_link_fault_plan(plan);
+        let _ = flappy.reduce_parts(&parts, true);
+        assert!(flappy.ledger.link_retries > 0);
+        assert!(flappy.ledger.retry_seconds > 0.0);
+        assert!(flappy.ledger.has_fault_activity());
+        // retry time is NOT folded into comm time: the comm component
+        // alone stays at least the clean wire's
+        assert!(
+            flappy.ledger.comm_seconds >= base.ledger.comm_seconds
+        );
+    }
+
+    #[test]
+    fn partition_cuts_members_and_heals_with_resync() {
+        let mut c = cluster(4);
+        let plan = LinkFaultPlan {
+            partitions: vec![faults::LinkPartition {
+                from: 1,
+                until: 3,
+                nodes: vec![1, 2, 3],
+            }],
+            ..LinkFaultPlan::default()
+        };
+        c.set_link_fault_plan(plan);
+        // round 0: clear
+        let w = c.apply_fault_weather(0);
+        assert_eq!(w.members, vec![0, 1, 2, 3]);
+        // round 1: the cut fires — master alone in its component
+        let w = c.apply_fault_weather(1);
+        assert_eq!(w.members, vec![0]);
+        assert!(w.healed.is_empty());
+        assert_eq!(c.ledger.partition_events, 1);
+        assert!(c.link_faults.as_ref().unwrap().master_isolated);
+        // round 2: still cut, no double-fire
+        let w = c.apply_fault_weather(2);
+        assert_eq!(w.members, vec![0]);
+        assert_eq!(c.ledger.partition_events, 1);
+        // round 3: heal — everyone back, master-isolation forces the
+        // certified synchronous resync
+        let w = c.apply_fault_weather(3);
+        assert_eq!(w.members, vec![0, 1, 2, 3]);
+        assert_eq!(w.healed, vec![1, 2, 3]);
+        assert!(w.heal_resync);
+        assert!(!c.link_faults.as_ref().unwrap().master_isolated);
+        // round 4: clear again, heal fired once
+        let w = c.apply_fault_weather(4);
+        assert!(w.healed.is_empty());
+        assert!(!w.heal_resync);
+        // the link log replays the story on its own watermark
+        assert_eq!(c.link_log_len(), 6);
+        assert_eq!(c.link_log_entry(0), Some((1, 1, "partition")));
+        assert_eq!(c.link_log_entry(3), Some((3, 1, "heal")));
+        assert_eq!(c.fault_log_len(), 0);
+    }
+
+    #[test]
+    fn total_partition_of_survivors_never_empties_members() {
+        let mut c = cluster(3);
+        // crash node 0's peers' membership down to {0,2}, then cut 2:
+        // the cut would leave {0} — allowed (master frame). But if the
+        // whole non-crashed set were cut the cut is ignored.
+        let fp = FaultPlan::parse("crash:1@r1", 3).unwrap();
+        c.set_fault_plan(fp);
+        let plan = LinkFaultPlan {
+            partitions: vec![faults::LinkPartition {
+                from: 1,
+                until: 4,
+                nodes: vec![2],
+            }],
+            ..LinkFaultPlan::default()
+        };
+        c.set_link_fault_plan(plan);
+        let w = c.apply_fault_weather(1);
+        assert_eq!(w.members, vec![0]);
+        // now crash node 0 too (last survivor rule keeps one member);
+        // a cut of the only member is ignored rather than emptying
+        let mut c2 = cluster(2);
+        let plan2 = LinkFaultPlan {
+            partitions: vec![faults::LinkPartition {
+                from: 0,
+                until: 2,
+                nodes: vec![1],
+            }],
+            ..LinkFaultPlan::default()
+        };
+        c2.set_link_fault_plan(plan2);
+        let fp2 = FaultPlan::parse("crash:0@r0", 2).unwrap();
+        c2.set_fault_plan(fp2);
+        let w = c2.apply_fault_weather(0);
+        assert_eq!(w.members.len(), 1, "membership never empties");
     }
 }

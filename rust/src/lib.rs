@@ -162,8 +162,9 @@
 //!    master materializes full-d exactly once, into `RunResult::w`;
 //!    any other O(d) buffer silently re-densifies the O(|U|) loop.
 //! 2. **no-wall-clock** — `Instant`/`SystemTime` are banned in `algo/`,
-//!    `cluster/engine.rs`, `cluster/allreduce.rs`, `cluster/faults.rs`
-//!    and `obs/`: all timing flows through the engine's virtual
+//!    `cluster/engine.rs`, `cluster/allreduce.rs`, `cluster/faults.rs`,
+//!    `cluster/cost.rs` and `obs/`: all timing flows through the
+//!    engine's virtual
 //!    clocks so runs (and seeded fault replays, and recorded
 //!    telemetry streams) are reproducible.
 //!    (The measured-threading sites in `cluster/mod.rs` and
@@ -222,7 +223,8 @@
 //!   [`metrics::TracePoint`], so the trace rebuilds bit-for-bit;
 //! - algorithm decisions: per-node safeguard replacements
 //!   (`sg_replaced`), the combined-test verdict (`combined_ok`), the
-//!   fallback reason (`"empty-quorum"` | `"safeguard"`), the accepted
+//!   fallback reason (`"empty-quorum"` | `"safeguard"` |
+//!   `"partition-heal"`), the accepted
 //!   step size and the strong-Wolfe trial count (`null` on rounds
 //!   that stopped before the decision);
 //! - async state: quorum composition, per-contribution staleness,
@@ -232,8 +234,10 @@
 //!   membership + the fault events applied this round; compact-master
 //!   state: density-gate decision + live |U|;
 //! - ledger/engine *deltas* over the round (`d_passes`, `d_bytes`,
-//!   `d_scalar`, `d_makespan`, `d_level_bytes`) and the cumulative
-//!   `recovery_s`.
+//!   `d_scalar`, `d_makespan`, `d_level_bytes`), the cumulative
+//!   `recovery_s`/`retry_s`, and the round's link weather
+//!   (`link_retries`/`reroutes` deltas; partition/heal events ride
+//!   the applied-fault slice).
 //!
 //! Non-finite floats serialize as `null` (the auprc NaN sentinel);
 //! finite floats print shortest-round-trip, so
@@ -261,6 +265,51 @@
 //! [`obs::Registry`] (counters/gauges/histograms) is the one render
 //! path behind every `*_profile()` string the ledger, engine and
 //! fault layer expose.
+//!
+//! ## Network model
+//!
+//! Link-level weather on the reduction tree ([`cluster::LinkProfile`]
+//! + [`cluster::LinkFaultPlan`], CLI
+//! `--link-profile SCRIPT --link-fault SCRIPT --link-seed S`):
+//!
+//! **Link profile.** Grammar `uplink:N:Fx | level:L:Fx | rack:I:Fx`
+//! (comma-separated), or `seeded` (one slow rack + slow top levels),
+//! or `uniform`. Every tree hop in which node `N` sends at tree level
+//! `L` costs `base · uplink[N] · level[L]` virtual seconds; fan-out
+//! paths without per-edge hops (broadcast, ring segments, scalar
+//! rounds, rejoin unicasts) scale by the profile's mean multiplier.
+//! The uniform profile is exactly ×1.0 on every edge and the cluster
+//! takes the legacy code paths verbatim — bit-identical to no profile
+//! at all (`tests/faults.rs` pins it).
+//!
+//! **Timeout / retry / backoff** (`--link-fault`, async driver only).
+//! A hop that misses its `timeout:T` deadline retries with exponential
+//! backoff: `k` failed attempts cost `T·(2^k − 1)` extra, charged to
+//! the ledger's `retry_seconds` — never folded into comm seconds.
+//! Past `budget:K` attempts the sender reroutes around the dead edge —
+//! re-parented one level up, charged as a `reroute` span at twice the
+//! hop cost plus the exhausted backoff. `noretry` waits out the full
+//! dead window `T·2^k` instead (the bench's control arm — strictly
+//! worse). `congest:p=P[:Fx]` stretches a hop ×F; `flap:p=P` fails
+//! whole attempts; `part:A+B@rF..rU` cuts nodes out of the tree for
+//! rounds F..U — the quorum treats the cut set like crashed members
+//! (lanes kept; ≤τ-stale hybrids rejoin on heal), node 0 is the
+//! reference frame and cannot be cut, and a partition that isolates
+//! the master heals through the certified synchronous fallback
+//! (`"partition-heal"`) — no link state can hang a round. Every coin
+//! is a pure hash of `(seed, round, edge)`: one seed replays the
+//! identical weather, bit for bit.
+//!
+//! **Accounting & telemetry.** Distinct ledger counters:
+//! `retry_seconds`, `link_retries`, `reroutes`, `congested_hops`,
+//! `partition_events` (the resilience table renders `recovery s` and
+//! `retry s` side by side). The timeline JSON gains a `link_events`
+//! block with exactly those five fields; partition/heal events land
+//! on their own applied-link log (separate watermark from the node
+//! fault log). The adaptive controller reads the same counters: a
+//! congested window — link retry/reroute activity with a retry-stall
+//! share above 20% of wire time — widens τ and shrinks q
+//! ([`algo::adapt`] rule 2).
 //!
 //! ## Speculation & adaptive asynchrony
 //!

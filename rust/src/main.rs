@@ -19,7 +19,9 @@ use psgd::algo::param_mix::{ParamMixConfig, ParamMixDriver};
 use psgd::algo::safeguard::Safeguard;
 use psgd::algo::sqm::{CoreOpt, SqmConfig, SqmDriver};
 use psgd::algo::{Driver, StopRule};
-use psgd::cluster::{Cluster, CostModel, FaultPlan, NodeProfile};
+use psgd::cluster::{
+    Cluster, CostModel, FaultPlan, LinkFaultPlan, LinkProfile, NodeProfile,
+};
 use psgd::data::dataset::Dataset;
 use psgd::data::stats::DataStats;
 use psgd::data::synth::SynthConfig;
@@ -111,6 +113,30 @@ COMMANDS
                                          --fault flap:2:p=0.05
                [--fault-seed S]     seed for flap/loss coins and the
                                     `seeded` plan generator (default 42)
+               [--link-profile SCRIPT]  heterogeneous link speeds on the
+                                    reduction tree (any method):
+                                    uplink:N:Fx | level:L:Fx | rack:I:Fx
+                                    comma-separated — or `seeded` (one
+                                    slow rack + slow top levels) or
+                                    `uniform`. Every tree hop node N
+                                    sends at level L costs ×(uplink ×
+                                    level); a uniform profile is
+                                    bit-identical to no profile.
+               [--link-fault SCRIPT]    link weather on the tree
+                                    (--async-fs only): congest:p=P[:Fx]
+                                    flap:p=P | part:A+B@rF..rU |
+                                    timeout:T | budget:K | noretry — or
+                                    `seeded`. A hop that misses its
+                                    timeout retries with exponential
+                                    backoff; past `budget` attempts it
+                                    reroutes one level up. Partitioned
+                                    nodes drop from the quorum like
+                                    crashes; a partition isolating the
+                                    master heals through the certified
+                                    synchronous fallback.
+               [--link-seed S]      seed for link congest/flap coins and
+                                    the `seeded` profile/plan (default
+                                    42)
                [--trace-timeline out.json]  export the event engine's
                                             per-node schedule + the
                                             resilience counter block
@@ -399,6 +425,33 @@ fn train(args: &Args) {
         };
         cluster.set_fault_plan(plan);
     }
+    if let Some(spec) = args.get("link-profile") {
+        let lseed = args.usize("link-seed", 42) as u64;
+        let profile = match spec {
+            "seeded" => LinkProfile::seeded(nodes, lseed),
+            "uniform" => LinkProfile::uniform(nodes),
+            _ => LinkProfile::parse(spec, nodes).unwrap_or_else(|e| {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }),
+        };
+        cluster.set_link_profile(profile);
+    }
+    if let Some(spec) = args.get("link-fault") {
+        let lseed = args.usize("link-seed", 42) as u64;
+        let plan = if spec == "seeded" {
+            LinkFaultPlan::seeded(nodes, lseed)
+        } else {
+            let mut plan =
+                LinkFaultPlan::parse(spec, nodes).unwrap_or_else(|e| {
+                    eprintln!("error: {e}");
+                    std::process::exit(2);
+                });
+            plan.seed = lseed;
+            plan
+        };
+        cluster.set_link_fault_plan(plan);
+    }
 
     let method = args.get_or("method", "fs");
     let inner = match args.get_or("inner", "svrg") {
@@ -501,6 +554,11 @@ fn train(args: &Args) {
             fault_seed: args
                 .get("fault")
                 .map(|_| args.usize("fault-seed", 42) as u64),
+            link_profile: args.get("link-profile").map(str::to_string),
+            link_fault: args.get("link-fault").map(str::to_string),
+            link_seed: (args.has("link-profile")
+                || args.has("link-fault"))
+            .then(|| args.usize("link-seed", 42) as u64),
         });
     }
 

@@ -109,15 +109,19 @@ impl<'a> Report<'a> {
 
     /// Markdown: the resilience counters each attached ledger carries —
     /// async staleness histogram + fallbacks, the fault accounting
-    /// (crashes, rejoins + recovery seconds, wire losses, retries,
-    /// degrades, flaps), and the speculation outcome (hits/misses).
-    /// Empty string when no ledger was attached.
+    /// (crashes, rejoins + recovery seconds, link retry/backoff
+    /// seconds, wire losses, retries, degrades, flaps), and the
+    /// speculation outcome (hits/misses). Recovery and retry seconds
+    /// are separate columns on purpose: recovery is rejoin re-base
+    /// time, retry is link timeout/backoff/reroute time, and neither
+    /// is folded into comm seconds. Empty string when no ledger was
+    /// attached.
     pub fn resilience_table(&self) -> String {
         if self.ledgers.is_empty() {
             return String::new();
         }
         let mut out = String::from(
-            "| method | async rounds | fallbacks | staleness | crashes | rejoins | recovery s | lost | retries | degrades | flaps | spec hits | spec misses |\n|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
+            "| method | async rounds | fallbacks | staleness | crashes | rejoins | recovery s | retry s | lost | retries | degrades | flaps | spec hits | spec misses |\n|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
         );
         for (label, l) in &self.ledgers {
             let hist = if l.staleness_hist.is_empty() {
@@ -132,7 +136,7 @@ impl<'a> Report<'a> {
             };
             let _ = writeln!(
                 out,
-                "| {} | {} | {} | {} | {} | {} | {:.3} | {} | {} | {} | {} | {} | {} |",
+                "| {} | {} | {} | {} | {} | {} | {:.3} | {:.3} | {} | {} | {} | {} | {} | {} |",
                 label,
                 l.async_rounds,
                 l.fallback_rounds,
@@ -140,6 +144,7 @@ impl<'a> Report<'a> {
                 l.crash_events,
                 l.rejoin_rebases,
                 l.recovery_seconds,
+                l.retry_seconds,
                 l.lost_messages,
                 l.retry_rounds,
                 l.degrade_events,
@@ -291,15 +296,27 @@ impl RecordedRun {
                         Some("flap") => ledger.flap_events += 1,
                         Some("drop") => ledger.lost_messages += 1,
                         Some("retry") => ledger.retry_rounds += 1,
+                        Some("partition") => ledger.partition_events += 1,
                         _ => {}
                     }
                 }
             }
-            // ... and recovery seconds are recorded cumulative, so the
-            // last round's value is the run total
+            // ... and recovery/retry seconds are recorded cumulative,
+            // so the last round's value is the run total
             if let Some(rs) = v.get("recovery_s").and_then(Value::as_f64) {
                 ledger.recovery_seconds = rs;
             }
+            if let Some(rs) = v.get("retry_s").and_then(Value::as_f64) {
+                ledger.retry_seconds = rs;
+            }
+            // link retry/reroute counts are per-round deltas (absent on
+            // pre-link-weather streams → zero)
+            ledger.link_retries += v
+                .get("link_retries")
+                .and_then(Value::as_usize)
+                .unwrap_or(0);
+            ledger.reroutes +=
+                v.get("reroutes").and_then(Value::as_usize).unwrap_or(0);
             // speculation outcomes accumulate round by round (absent on
             // pre-speculation streams → zero)
             ledger.spec_hits +=
@@ -470,9 +487,9 @@ f* = 5.00000000e-1
 
 ### resilience
 
-| method | async rounds | fallbacks | staleness | crashes | rejoins | recovery s | lost | retries | degrades | flaps | spec hits | spec misses |
-|---|---|---|---|---|---|---|---|---|---|---|---|---|
-| afs | 2 | 1 | s0:3 s1:1 | 1 | 1 | 0.125 | 2 | 3 | 0 | 0 | 0 | 0 |
+| method | async rounds | fallbacks | staleness | crashes | rejoins | recovery s | retry s | lost | retries | degrades | flaps | spec hits | spec misses |
+|---|---|---|---|---|---|---|---|---|---|---|---|---|---|
+| afs | 2 | 1 | s0:3 s1:1 | 1 | 1 | 0.125 | 0.000 | 2 | 3 | 0 | 0 | 0 | 0 |
 ";
 
     #[test]
@@ -514,9 +531,37 @@ f* = 5.00000000e-1
         assert_eq!(run.ledger.crash_events, 1);
         assert_eq!(run.ledger.lost_messages, 2);
         assert_eq!(run.ledger.retry_rounds, 3);
+        // pre-link-weather streams (no retry_s/link keys) replay clean
+        assert_eq!(run.ledger.retry_seconds, 0.0);
+        assert_eq!(run.ledger.link_retries, 0);
+        assert_eq!(run.ledger.partition_events, 0);
         // ... and the offline report is byte-identical to the
         // in-process render of the same run
         assert_eq!(run.report(), GOLDEN_RUN_REPORT);
+    }
+
+    #[test]
+    fn from_jsonl_replays_link_weather_counters() {
+        let stream = concat!(
+            "{\"kind\":\"manifest\",\"schema\":1,\"method\":\"afs\"}\n",
+            "{\"kind\":\"round\",\"round\":0,\"f\":1.5,\"async\":true,",
+            "\"staleness\":[0],\"fallback\":null,",
+            "\"faults\":[{\"node\":2,\"what\":\"partition\"}],",
+            "\"retry_s\":0.125,\"link_retries\":3,\"reroutes\":1}\n",
+            "{\"kind\":\"round\",\"round\":1,\"f\":0.5,\"async\":true,",
+            "\"staleness\":[0],\"fallback\":null,",
+            "\"faults\":[{\"node\":2,\"what\":\"heal\"}],",
+            "\"retry_s\":0.5,\"link_retries\":2,\"reroutes\":0}\n",
+        );
+        let run = RecordedRun::from_jsonl(stream).unwrap();
+        // retry_s is cumulative → last round wins; counts accumulate
+        assert_eq!(run.ledger.retry_seconds, 0.5);
+        assert_eq!(run.ledger.link_retries, 5);
+        assert_eq!(run.ledger.reroutes, 1);
+        // a partition bumps the counter; its heal does not
+        assert_eq!(run.ledger.partition_events, 1);
+        let report = run.report();
+        assert!(report.contains("| 0.000 | 0.500 |"), "{report}");
     }
 
     #[test]
@@ -577,6 +622,7 @@ f* = 5.00000000e-1
             crash_events: 1,
             rejoin_rebases: 1,
             recovery_seconds: 0.125,
+            retry_seconds: 0.25,
             lost_messages: 2,
             retry_rounds: 3,
             spec_hits: 4,
@@ -588,7 +634,7 @@ f* = 5.00000000e-1
         let r = Report::new(&traces, 1.0)
             .with_ledgers(vec![("afs".to_string(), ledger)]);
         let t = r.resilience_table();
-        assert!(t.contains("| afs | 2 | 1 | s0:3 s1:1 | 1 | 1 | 0.125 | 2 | 3 | 0 | 0 | 4 | 1 |"), "{t}");
+        assert!(t.contains("| afs | 2 | 1 | s0:3 s1:1 | 1 | 1 | 0.125 | 0.250 | 2 | 3 | 0 | 0 | 4 | 1 |"), "{t}");
         let full = r.render("chaos run");
         assert!(full.contains("### resilience"), "{full}");
     }

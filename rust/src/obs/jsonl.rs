@@ -190,6 +190,12 @@ fn write_round_line(buf: &mut String, r: &RoundRecord) {
     write_f64_arr(buf, &r.d_level_bytes);
     buf.push_str(",\"recovery_s\":");
     write_num(buf, r.recovery_s);
+    buf.push_str(",\"retry_s\":");
+    write_num(buf, r.retry_s);
+    buf.push_str(",\"link_retries\":");
+    let _ = write!(buf, "{}", r.link_retries);
+    buf.push_str(",\"reroutes\":");
+    let _ = write!(buf, "{}", r.reroutes);
     buf.push_str(",\"spec_hits\":");
     let _ = write!(buf, "{}", r.spec_hits);
     buf.push_str(",\"spec_misses\":");
@@ -241,6 +247,9 @@ mod tests {
         r.spec_hits = 2;
         r.spec_misses = 1;
         r.ctrl_tau = Some(3);
+        r.retry_s = 0.25;
+        r.link_retries = 4;
+        r.reroutes = 1;
         let mut buf = String::new();
         write_round_line(&mut buf, &r);
         let v = json::parse(&buf).unwrap();
@@ -257,6 +266,9 @@ mod tests {
         assert_eq!(v.get("spec_misses").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("ctrl_tau").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("ctrl_q"), Some(&json::Value::Null));
+        assert_eq!(v.get("retry_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(v.get("link_retries").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("reroutes").unwrap().as_usize(), Some(1));
         // float fields round-trip to identical bits
         assert_eq!(
             v.get("gnorm").unwrap().as_f64().unwrap().to_bits(),

@@ -78,12 +78,21 @@ pub struct RunManifest {
     pub policy: Option<String>,
     pub fault: Option<String>,
     pub fault_seed: Option<u64>,
+    /// `--link-profile` script (or "seeded"); `None` = uniform links
+    pub link_profile: Option<String>,
+    /// `--link-fault` script (or "seeded"); `None` = no link weather
+    pub link_fault: Option<String>,
+    /// seed for seeded link profile/weather; `None` when both are off
+    pub link_seed: Option<u64>,
 }
 
 impl RunManifest {
     pub fn to_value(&self) -> Value {
         fn opt_num(v: Option<u64>) -> Value {
             v.map_or(Value::Null, |n| Value::Num(n as f64))
+        }
+        fn opt_str(v: &Option<String>) -> Value {
+            v.clone().map_or(Value::Null, Value::Str)
         }
         let fault = self
             .fault
@@ -112,6 +121,9 @@ impl RunManifest {
             ("policy", policy),
             ("fault", fault),
             ("fault_seed", opt_num(self.fault_seed)),
+            ("link_profile", opt_str(&self.link_profile)),
+            ("link_fault", opt_str(&self.link_fault)),
+            ("link_seed", opt_num(self.link_seed)),
             (
                 "build",
                 Value::obj(vec![
@@ -193,6 +205,13 @@ pub struct RoundRecord {
     /// cumulative recovery seconds (not a delta: the resilience table
     /// wants the running total, and cumulative survives round loss)
     pub recovery_s: f64,
+    /// cumulative retry/backoff seconds on tree links (same cumulative
+    /// convention as `recovery_s`)
+    pub retry_s: f64,
+    /// link-level retry attempts charged this round (window delta)
+    pub link_retries: usize,
+    /// hops rerouted around a dead edge this round (window delta)
+    pub reroutes: usize,
 }
 
 impl RoundRecord {
@@ -243,6 +262,9 @@ impl RoundRecord {
             d_makespan,
             d_level_bytes,
             recovery_s,
+            retry_s,
+            link_retries,
+            reroutes,
         } = self;
         *round = 0;
         *f = 0.0;
@@ -275,6 +297,9 @@ impl RoundRecord {
         *d_makespan = 0.0;
         d_level_bytes.clear();
         *recovery_s = 0.0;
+        *retry_s = 0.0;
+        *link_retries = 0;
+        *reroutes = 0;
     }
 }
 
@@ -291,6 +316,11 @@ pub struct RoundObs {
     base_makespan: f64,
     base_levels: Vec<f64>,
     base_faults: usize,
+    /// separate watermark for the link-event log — it grows
+    /// independently of the node-fault log within a round
+    base_link_faults: usize,
+    base_link_retries: usize,
+    base_reroutes: usize,
 }
 
 impl RoundObs {
@@ -305,6 +335,9 @@ impl RoundObs {
             base_makespan: 0.0,
             base_levels: Vec::with_capacity(8),
             base_faults: 0,
+            base_link_faults: 0,
+            base_link_retries: 0,
+            base_reroutes: 0,
         }
     }
 
@@ -330,6 +363,9 @@ impl RoundObs {
         self.base_levels.clear();
         self.base_levels.extend_from_slice(&l.level_bytes);
         self.base_faults = cluster.fault_log_len();
+        self.base_link_faults = cluster.link_log_len();
+        self.base_link_retries = l.link_retries;
+        self.base_reroutes = l.reroutes;
     }
 
     /// The in-flight record, for the driver to fill decision fields.
@@ -373,9 +409,21 @@ impl RoundObs {
                 self.rec.d_level_bytes.push(b - b0);
             }
             self.rec.recovery_s = l.recovery_seconds;
+            self.rec.retry_s = l.retry_seconds;
+            self.rec.link_retries =
+                l.link_retries - self.base_link_retries;
+            self.rec.reroutes = l.reroutes - self.base_reroutes;
         }
         for i in self.base_faults..cluster.fault_log_len() {
             if let Some((_, node, what)) = cluster.fault_log_entry(i) {
+                self.rec.fault_nodes.push(node);
+                self.rec.fault_whats.push(what);
+            }
+        }
+        // link events ("partition"/"heal") ride in the same applied-
+        // fault slice, diffed on their own watermark.
+        for i in self.base_link_faults..cluster.link_log_len() {
+            if let Some((_, node, what)) = cluster.link_log_entry(i) {
                 self.rec.fault_nodes.push(node);
                 self.rec.fault_whats.push(what);
             }
@@ -414,6 +462,7 @@ mod tests {
             method: "afs".to_string(),
             nodes: 4,
             policy: Some("t2-q3".to_string()),
+            link_fault: Some("congest:p=0.2".to_string()),
             ..RunManifest::default()
         };
         let v = m.to_value();
@@ -422,5 +471,7 @@ mod tests {
         assert!(s.contains("\"schema\": 1"), "{s}");
         assert!(s.contains("\"policy\": \"t2-q3\""), "{s}");
         assert!(s.contains("\"pkg\": \"psgd\""), "{s}");
+        assert!(s.contains("\"link_profile\": null"), "{s}");
+        assert!(s.contains("\"link_fault\": \"congest:p=0.2\""), "{s}");
     }
 }

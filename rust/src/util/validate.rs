@@ -7,7 +7,7 @@
 //! exits 2; the checks themselves are pure so every rejection is
 //! unit-testable.
 
-use crate::cluster::FaultPlan;
+use crate::cluster::{FaultPlan, LinkFaultPlan, LinkProfile};
 use crate::util::cli::Args;
 
 /// Validate the `train` flag set against the resolved node count.
@@ -130,6 +130,32 @@ pub fn validate_train(args: &Args, nodes: usize) -> Result<(), String> {
     if let Some(s) = args.get("fault-seed") {
         s.parse::<u64>().map_err(|_| {
             format!("--fault-seed expects an integer, got {s:?}")
+        })?;
+    }
+
+    // link weather: the profile shapes every method's tree hops, so it
+    // is method-agnostic; the fault plan needs the retrying/rerouting
+    // reduction paths, which only the async driver exercises.
+    if let Some(spec) = args.get("link-profile") {
+        if spec != "seeded" && spec != "uniform" {
+            LinkProfile::parse(spec, nodes)?;
+        }
+    }
+    if let Some(spec) = args.get("link-fault") {
+        if !is_async {
+            return Err(
+                "--link-fault requires --async-fs (the fault-tolerant \
+                 driver)"
+                    .to_string(),
+            );
+        }
+        if spec != "seeded" {
+            LinkFaultPlan::parse(spec, nodes)?;
+        }
+    }
+    if let Some(s) = args.get("link-seed") {
+        s.parse::<u64>().map_err(|_| {
+            format!("--link-seed expects an integer, got {s:?}")
         })?;
     }
 
@@ -280,6 +306,52 @@ mod tests {
         .is_ok());
         assert!(validate_train(
             &args("train --async-fs --fault seeded --fault-seed 7"),
+            4
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn link_profile_is_validated_on_any_method() {
+        // out-of-range node index: rejected with a one-line error
+        let e = err("train --link-profile uplink:9:2x", 4);
+        assert!(e.contains("bad --link-profile spec"), "{e}");
+        assert!(e.contains("out of range"), "{e}");
+        assert!(!e.contains('\n'), "one line: {e}");
+        // the profile shapes hops on every method — no async gate
+        assert!(validate_train(
+            &args("train --link-profile uplink:1:2.5x,level:2:2x"),
+            4
+        )
+        .is_ok());
+        assert!(validate_train(
+            &args("train --link-profile seeded --link-seed 7"),
+            4
+        )
+        .is_ok());
+        assert!(err("train --link-seed 1.5", 4)
+            .contains("expects an integer"));
+    }
+
+    #[test]
+    fn link_fault_requires_async_and_a_parsable_plan() {
+        let e = err("train --link-fault congest:p=0.2", 4);
+        assert!(e.contains("requires --async-fs"), "{e}");
+        // out-of-range partition node: rejected with a one-line error
+        let e = err("train --async-fs --link-fault part:9@r1..r3", 4);
+        assert!(e.contains("bad --link-fault spec"), "{e}");
+        assert!(e.contains("out of range"), "{e}");
+        assert!(!e.contains('\n'), "one line: {e}");
+        assert!(validate_train(
+            &args(
+                "train --async-fs --link-fault \
+                 congest:p=0.1:4x,part:2+3@r5..r8,timeout:0.01,budget:2"
+            ),
+            4
+        )
+        .is_ok());
+        assert!(validate_train(
+            &args("train --async-fs --link-fault seeded --link-seed 7"),
             4
         )
         .is_ok());

@@ -19,12 +19,22 @@
 //!    dead, every contribution lost on the wire, and a virtual-time
 //!    crash landing mid-run each terminate through the partial
 //!    quorum + safeguard fallback, never a deadlock or panic.
+//! 5. **Link weather** (`--link-profile`/`--link-fault`) — the
+//!    uniform profile + empty link plan are structurally inert
+//!    (bit-identical to no link state); one link seed replays the
+//!    identical weather; partitions drop nodes from the quorum like
+//!    crashes, a master-isolating partition heals through the
+//!    certified synchronous fallback, and retry/backoff time lands
+//!    in the distinct `retry_seconds` counter — no link state can
+//!    hang a round.
 
 use psgd::algo::adapt::{Asynchrony, Quorum};
 use psgd::algo::async_fs::{AsyncFsConfig, AsyncFsDriver};
 use psgd::algo::fs::{FsConfig, FsDriver};
 use psgd::algo::{Driver, StopRule};
-use psgd::cluster::{Cluster, CostModel, FaultPlan, NodeProfile};
+use psgd::cluster::{
+    Cluster, CostModel, FaultPlan, LinkFaultPlan, LinkProfile, NodeProfile,
+};
 use psgd::data::dataset::Dataset;
 use psgd::data::synth::SynthConfig;
 use psgd::loss::LossKind;
@@ -398,6 +408,273 @@ fn timeline_json_schema_carries_the_resilience_block() {
     assert_eq!(alive, nodes);
     let hist = r.get("staleness_hist").expect("staleness_hist missing");
     assert!(matches!(hist, json::Value::Arr(_)));
+}
+
+#[test]
+fn uniform_link_profile_and_empty_plan_are_bit_identical() {
+    // the PR-9 equivalence gate: a uniform profile plus the empty
+    // link-fault plan must leave both drivers byte-for-byte on the
+    // pre-link-weather code paths — iterates, trace, and full ledger
+    let nodes = 4;
+    let mut bare = make_cluster(nodes, 2);
+    let mut linked = make_cluster(nodes, 2);
+    linked.set_link_profile(LinkProfile::uniform(nodes));
+    linked.set_link_fault_plan(LinkFaultPlan::default());
+
+    let run_bare =
+        FsDriver::new(fs_config()).run(&mut bare, None, &StopRule::iters(8));
+    let run_linked = FsDriver::new(fs_config()).run(
+        &mut linked,
+        None,
+        &StopRule::iters(8),
+    );
+    assert_eq!(run_bare.w, run_linked.w, "sync iterates diverged");
+    assert_traces_identical(&run_bare.trace, &run_linked.trace, "sync FS");
+    assert_eq!(bare.ledger, linked.ledger, "sync ledgers diverged");
+
+    let mut bare = make_cluster(nodes, 2);
+    let mut linked = make_cluster(nodes, 2);
+    linked.set_link_profile(LinkProfile::uniform(nodes));
+    linked.set_link_fault_plan(LinkFaultPlan::default());
+    let run_bare = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut bare,
+        None,
+        &StopRule::iters(12),
+    );
+    let run_linked = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut linked,
+        None,
+        &StopRule::iters(12),
+    );
+    assert_eq!(run_bare.w, run_linked.w, "async iterates diverged");
+    assert_traces_identical(&run_bare.trace, &run_linked.trace, "async FS");
+    assert_eq!(bare.ledger, linked.ledger, "async ledgers diverged");
+    assert_eq!(linked.link_log_len(), 0, "empty plan applied link weather");
+}
+
+#[test]
+fn same_link_seed_replays_identical_weather_and_trace() {
+    let nodes = 5;
+    let script = "congest:p=0.3:4x,flap:p=0.4,part:3+4@r4..r7,timeout:0.001";
+    let run = |seed: u64| {
+        let mut cluster = make_cluster(nodes, 3);
+        let mut plan = LinkFaultPlan::parse(script, nodes).unwrap();
+        plan.seed = seed;
+        cluster.set_link_fault_plan(plan);
+        let run = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+            &mut cluster,
+            None,
+            &StopRule::iters(20),
+        );
+        let log: Vec<_> = (0..cluster.link_log_len())
+            .map(|i| cluster.link_log_entry(i).unwrap())
+            .collect();
+        (run, log, cluster.ledger.clone())
+    };
+
+    let (run_a, log_a, ledger_a) = run(9);
+    let (run_b, log_b, ledger_b) = run(9);
+    assert!(!log_a.is_empty(), "the partition never fired");
+    assert!(
+        ledger_a.link_retries > 0,
+        "p=0.4 flaps never cost a retry: {}",
+        ledger_a.fault_profile()
+    );
+    assert!(ledger_a.retry_seconds > 0.0, "retries charged no backoff");
+    assert_eq!(log_a, log_b, "link timelines diverged under one seed");
+    assert_eq!(run_a.w, run_b.w, "iterates diverged under one seed");
+    assert_traces_identical(&run_a.trace, &run_b.trace, "link replay");
+    assert_eq!(ledger_a, ledger_b, "ledgers diverged under one seed");
+
+    // a different seed re-rolls the congest/flap coins
+    let (_, _, ledger_c) = run(10);
+    assert_ne!(
+        ledger_a, ledger_c,
+        "link seed had no effect on the weather"
+    );
+}
+
+#[test]
+fn master_isolating_partition_heals_through_the_fallback() {
+    // part:1+2+3 strands the master with no peers: the quorum shrinks
+    // to the surviving member set like a crash, and the heal round
+    // must route through the certified synchronous fallback
+    // ("partition-heal") — never a hang, never a stale commit
+    let nodes = 4;
+    let mut cluster = make_cluster(nodes, 5);
+    cluster.set_link_fault_plan(
+        LinkFaultPlan::parse("part:1+2+3@r2..r5", nodes).unwrap(),
+    );
+
+    let run = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(12),
+    );
+
+    assert!(run.f.is_finite(), "master-isolating partition hung the run");
+    assert_eq!(cluster.ledger.partition_events, 1, "cut never applied");
+    // the heal re-bases every partitioned-away node ...
+    assert!(
+        cluster.ledger.rejoin_rebases >= 3,
+        "healed nodes never re-based: {}",
+        cluster.ledger.fault_profile()
+    );
+    // ... and the resync round fell back to the synchronous barrier
+    assert!(
+        cluster.ledger.fallback_rounds >= 1,
+        "partition heal skipped the certified fallback"
+    );
+    // descent survives the weather
+    let pts = &run.trace.points;
+    assert!(pts.last().unwrap().f < pts[0].f, "failed to descend");
+    // the link log replays the cut and the heal on its own watermark
+    let entries: Vec<_> = (0..cluster.link_log_len())
+        .map(|i| cluster.link_log_entry(i).unwrap())
+        .collect();
+    assert!(entries.iter().any(|e| e.2 == "partition"));
+    assert!(entries.iter().any(|e| e.2 == "heal"));
+    assert_eq!(cluster.fault_log_len(), 0, "node-fault log stayed clean");
+}
+
+#[test]
+fn partition_longer_than_tau_bounds_staleness_on_heal() {
+    // a partition lasting past τ rounds must not let pre-partition
+    // hybrids re-enter the quorum: staleness stays ≤ τ and the healed
+    // nodes re-base onto the current iterate instead
+    let nodes = 4;
+    let tau = 2;
+    let mut cluster = make_cluster(nodes, 7);
+    cluster.set_link_fault_plan(
+        LinkFaultPlan::parse("part:2+3@r2..r8", nodes).unwrap(),
+    );
+
+    let run = AsyncFsDriver::new(async_config(tau, 2)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(16),
+    );
+
+    assert!(run.f.is_finite());
+    assert!(
+        cluster.ledger.staleness_hist.len() <= tau + 1,
+        "a hybrid older than τ={tau} entered the quorum: hist {:?}",
+        cluster.ledger.staleness_hist
+    );
+    assert!(cluster.ledger.rejoin_rebases >= 2, "heal never re-based");
+}
+
+#[test]
+fn total_partition_with_total_wire_loss_terminates() {
+    // the worst corner: every peer partitioned away AND every
+    // surviving contribution lost on the wire — the empty quorum must
+    // route through the fallback each round, with monotone descent
+    let nodes = 4;
+    let mut cluster = make_cluster(nodes, 7);
+    cluster.set_fault_plan(FaultPlan::parse("loss:p=1", nodes).unwrap());
+    cluster.set_link_fault_plan(
+        LinkFaultPlan::parse("part:1+2+3@r1..r6", nodes).unwrap(),
+    );
+
+    let run = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(8),
+    );
+
+    assert!(run.f.is_finite(), "total partition hung the run");
+    assert!(
+        cluster.ledger.fallback_rounds >= 1,
+        "empty quorum failed to fall back"
+    );
+    for k in 1..run.trace.points.len() {
+        assert!(
+            run.trace.points[k].f <= run.trace.points[k - 1].f + 1e-10,
+            "f increased at iter {k} despite certified fallbacks"
+        );
+    }
+}
+
+#[test]
+fn heterogeneous_links_stretch_time_and_keep_the_maths() {
+    // a slow uplink changes only the virtual clock: iterates are
+    // bit-identical, makespan strictly grows, and retry/backoff time
+    // stays out of comm seconds. Modeled time (compute_scale 0) keeps
+    // the clocks — and therefore the quorum arrival order — exactly
+    // reproducible while comm still costs virtual seconds.
+    let nodes = 4;
+    let modeled = CostModel { compute_scale: 0.0, ..CostModel::default() };
+    let mut base = Cluster::partition(make_data(3), nodes, modeled);
+    base.threads = 1;
+    let mut skewed = Cluster::partition(make_data(3), nodes, modeled);
+    skewed.threads = 1;
+    skewed.set_link_profile(
+        LinkProfile::parse("uplink:1:3x,level:1:2x", nodes).unwrap(),
+    );
+
+    let run_base = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut base,
+        None,
+        &StopRule::iters(10),
+    );
+    let run_skewed = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut skewed,
+        None,
+        &StopRule::iters(10),
+    );
+
+    assert_eq!(run_base.w, run_skewed.w, "link speeds moved the maths");
+    assert!(
+        skewed.ledger.comm_seconds > base.ledger.comm_seconds,
+        "slow links charged no extra comm time"
+    );
+    assert_eq!(skewed.ledger.retry_seconds, 0.0, "no plan, no retries");
+    assert_eq!(
+        skewed.ledger.comm_passes, base.ledger.comm_passes,
+        "profile changed pass accounting"
+    );
+}
+
+#[test]
+fn timeline_json_carries_the_link_events_block() {
+    let nodes = 4;
+    let mut cluster = make_cluster(nodes, 17);
+    cluster.set_link_fault_plan(
+        LinkFaultPlan::parse(
+            "flap:p=0.5,congest:p=0.3,part:3@r2..r4,timeout:0.001",
+            nodes,
+        )
+        .unwrap(),
+    );
+    let _ = AsyncFsDriver::new(async_config(2, nodes - 1)).run(
+        &mut cluster,
+        None,
+        &StopRule::iters(10),
+    );
+
+    let text = cluster.timeline_json().to_json(0);
+    let v = json::parse(&text).expect("timeline JSON must parse");
+    let r = v.get("resilience").expect("resilience block missing");
+    assert!(r.get("retry_seconds").is_some(), "retry_seconds missing");
+    let le = v.get("link_events").expect("link_events block missing");
+    for key in [
+        "link_retries",
+        "reroutes",
+        "congested_hops",
+        "partition_events",
+        "retry_seconds",
+    ] {
+        assert!(le.get(key).is_some(), "link_events field {key} missing");
+    }
+    assert_eq!(
+        le.get("partition_events").and_then(|x| x.as_usize()),
+        Some(1),
+        "{text}"
+    );
+    assert!(
+        le.get("link_retries").and_then(|x| x.as_usize()).unwrap_or(0) > 0,
+        "p=0.5 flaps never retried: {text}"
+    );
 }
 
 #[test]

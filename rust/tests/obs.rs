@@ -253,6 +253,9 @@ fn steady_state_round_recording_allocates_nothing() {
     r.d_makespan = 0.125;
     r.d_level_bytes.extend([28_688.0, 14_344.0, 14_344.0]);
     r.recovery_s = 0.25;
+    r.retry_s = 0.125;
+    r.link_retries = 2;
+    r.reroutes = 1;
     r.spec_hits = 3;
     r.spec_misses = 1;
     r.ctrl_tau = Some(2);
